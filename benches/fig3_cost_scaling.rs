@@ -1,0 +1,64 @@
+//! Fig 3 reproduction: communication cost, single-client compute cost,
+//! and client memory footprint vs rank, for `W ∈ R^{512×512}`, s*=1, b=1.
+//!
+//! The paper's claim: costs drop by orders of magnitude below the
+//! amortization point r ≈ 200 (≈40% of full rank), and practical ranks
+//! sit far below it.
+//!
+//! Run: `cargo bench --bench fig3_cost_scaling`
+
+use fedlrt::costmodel::{comm_amortization_rank, costs, CostParams, Method};
+
+fn main() {
+    let n = 512;
+    let ranks: Vec<usize> = (0..=9).map(|k| 2usize.pow(k)).chain([200, 256, 400]).collect();
+
+    println!("Fig 3 — cost scaling vs rank (n={n}, s*=1, b=1)\n");
+    println!(
+        "{:>6} | {:>12} {:>12} {:>12} | {:>12} {:>12} | {:>12} {:>12}",
+        "r", "comm:FedLin", "comm:FeDLRT", "comm:full-vc",
+        "comp:FedLin", "comp:FeDLRT", "mem:FedLin", "mem:FeDLRT"
+    );
+    for &r in &ranks {
+        let p = CostParams { n, r, s_star: 1, b: 1 };
+        let lin = costs(Method::FedLin, p);
+        let lrt = costs(Method::FedLrtNoVc, p);
+        let lrtf = costs(Method::FedLrtFullVc, p);
+        println!(
+            "{:>6} | {:>12.3e} {:>12.3e} {:>12.3e} | {:>12.3e} {:>12.3e} | {:>12.3e} {:>12.3e}",
+            r,
+            lin.comm_cost,
+            lrt.comm_cost,
+            lrtf.comm_cost,
+            lin.client_compute,
+            lrt.client_compute,
+            lin.client_memory,
+            lrt.client_memory,
+        );
+    }
+
+    for (m, label) in [
+        (Method::FedLrtNoVc, "FeDLRT w/o vc"),
+        (Method::FedLrtSimplifiedVc, "FeDLRT simpl vc"),
+        (Method::FedLrtFullVc, "FeDLRT full vc"),
+    ] {
+        let am = comm_amortization_rank(m, Method::FedLin, n).unwrap();
+        println!(
+            "\n{label}: communication amortization point r = {am} ({:.0}% of full rank)",
+            100.0 * am as f64 / n as f64
+        );
+        // Paper: ≈200 for n=512, i.e. ~40%.
+        assert!(
+            (0.25..=0.60).contains(&(am as f64 / n as f64)),
+            "{label}: amortization point {am} outside the paper's ~40% ballpark"
+        );
+    }
+
+    // Orders-of-magnitude drop at practical ranks (r=16 → >10× saving).
+    let p16 = CostParams { n, r: 16, s_star: 1, b: 1 };
+    let saving =
+        costs(Method::FedLin, p16).comm_cost / costs(Method::FedLrtNoVc, p16).comm_cost;
+    println!("\nAt r=16: {saving:.0}× communication saving vs FedLin");
+    assert!(saving > 10.0);
+    println!("fig3_cost_scaling OK");
+}

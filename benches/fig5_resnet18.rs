@@ -1,0 +1,60 @@
+//! Fig 5 reproduction: ResNet18-head analogue on the synthetic CIFAR10
+//! substitute (DESIGN.md §Substitutions), three comparison rows:
+//!
+//!   top:    FeDLRT w/o variance correction  vs FedAvg
+//!   middle: FeDLRT full variance correction vs FedLin
+//!   bottom: FeDLRT simplified var. corr.    vs FedLin
+//!
+//! Each row sweeps client counts with s* = 240/C local iterations
+//! (scaled to 24/C in the default CPU run) and reports compression
+//! ratio, communication saving, and validation accuracy.
+//!
+//! Run: `cargo bench --bench fig5_resnet18`
+//! Paper-scale: `FEDLRT_BENCH_FULL=1 cargo bench --bench fig5_resnet18`
+
+use fedlrt::bench::full_scale;
+use fedlrt::coordinator::presets::vision_presets;
+use fedlrt::coordinator::VarCorrection;
+use fedlrt::nn::experiment::{assert_figure_shape, print_rows, run_vision_sweep};
+
+fn main() -> anyhow::Result<()> {
+    let full = full_scale();
+    let preset = vision_presets().into_iter().find(|p| p.figure == "fig5").unwrap();
+    let clients: Vec<usize> =
+        if full { vec![1, 2, 4, 8, 16, 32] } else { vec![1, 2, 4] };
+    println!(
+        "Fig 5 — {} / {} analogue ({} config, C sweep {:?})",
+        preset.paper_net, preset.paper_data, preset.model, clients
+    );
+
+    let rows_nvc = run_vision_sweep(&preset, &clients, VarCorrection::None, full, 5)?;
+    print_rows("row 1: FeDLRT w/o var-corr vs FedAvg", "fedavg acc", &rows_nvc);
+    assert_figure_shape(&rows_nvc, 10);
+
+    let rows_fvc = run_vision_sweep(&preset, &clients, VarCorrection::Full, full, 5)?;
+    print_rows("row 2: FeDLRT full var-corr vs FedLin", "fedlin acc", &rows_fvc);
+    assert_figure_shape(&rows_fvc, 10);
+
+    let rows_svc = run_vision_sweep(&preset, &clients, VarCorrection::Simplified, full, 5)?;
+    print_rows("row 3: FeDLRT simplified var-corr vs FedLin", "fedlin acc", &rows_svc);
+    assert_figure_shape(&rows_svc, 10);
+
+    // Paper's key qualitative claim: at the largest client count,
+    // variance correction recovers accuracy lost to client drift.
+    let last = clients.len() - 1;
+    let acc_nvc = rows_nvc[last].fedlrt_acc;
+    let acc_fvc = rows_fvc[last].fedlrt_acc;
+    println!(
+        "\nC={}: accuracy without vc {:.4}, with full vc {:.4} (paper: up to +12%)",
+        rows_nvc[last].clients, acc_nvc, acc_fvc
+    );
+    // The simplified variant should match the full one at lower cost.
+    let comm_s = rows_svc[last].fedlrt.total_comm_floats();
+    let comm_f = rows_fvc[last].fedlrt.total_comm_floats();
+    assert!(comm_s < comm_f, "simplified vc must communicate less than full vc");
+    println!(
+        "simplified vc comm {comm_s} floats < full vc {comm_f} floats ✓"
+    );
+    println!("\nfig5_resnet18 OK");
+    Ok(())
+}

@@ -1,0 +1,38 @@
+//! Fig 6 reproduction: AlexNet-head analogue, fixed s* = 100 local
+//! iterations (the data budget *grows* with C in this figure, unlike
+//! Figs 5/7/8), simplified variance correction vs FedLin.
+//!
+//! Paper's shape: FeDLRT mirrors FedLin's accuracy across C with
+//! 96–97% communication savings on the fully connected layers.
+//!
+//! Run: `cargo bench --bench fig6_alexnet`
+
+use fedlrt::bench::full_scale;
+use fedlrt::coordinator::presets::vision_presets;
+use fedlrt::coordinator::VarCorrection;
+use fedlrt::nn::experiment::{assert_figure_shape, print_rows, run_vision_sweep};
+
+fn main() -> anyhow::Result<()> {
+    let full = full_scale();
+    let preset = vision_presets().into_iter().find(|p| p.figure == "fig6").unwrap();
+    let clients: Vec<usize> = if full { vec![1, 2, 4, 8] } else { vec![1, 2, 4] };
+    println!(
+        "Fig 6 — {} / {} analogue ({} config, fixed s*, C sweep {:?})",
+        preset.paper_net, preset.paper_data, preset.model, clients
+    );
+
+    let rows = run_vision_sweep(&preset, &clients, VarCorrection::Simplified, full, 6)?;
+    print_rows("FeDLRT simplified var-corr vs FedLin", "fedlin acc", &rows);
+    assert_figure_shape(&rows, 10);
+
+    // Communication saving should be large and roughly constant in C
+    // (the paper reports 96–97% for the FC layers; our scaled model has
+    // a smaller dense:low-rank ratio, so the bar is lower but must hold
+    // across the sweep).
+    for w in rows.windows(2) {
+        let delta = (w[0].comm_saving - w[1].comm_saving).abs();
+        assert!(delta < 0.15, "comm saving should be ~constant in C: {delta}");
+    }
+    println!("\nfig6_alexnet OK");
+    Ok(())
+}

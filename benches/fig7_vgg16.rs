@@ -1,0 +1,43 @@
+//! Fig 7 reproduction: VGG16-head analogue (two low-rank FC layers),
+//! comparing the *uncorrected* row (FeDLRT vs FedAvg — accuracy drops as
+//! C grows) against the *simplified-variance-corrected* row (FeDLRT vs
+//! FedLin — the drop is mitigated).
+//!
+//! Run: `cargo bench --bench fig7_vgg16`
+
+use fedlrt::bench::full_scale;
+use fedlrt::coordinator::presets::vision_presets;
+use fedlrt::coordinator::VarCorrection;
+use fedlrt::nn::experiment::{assert_figure_shape, print_rows, run_vision_sweep};
+
+fn main() -> anyhow::Result<()> {
+    let full = full_scale();
+    let preset = vision_presets().into_iter().find(|p| p.figure == "fig7").unwrap();
+    let clients: Vec<usize> = if full { vec![1, 2, 4, 8, 16] } else { vec![1, 2, 4] };
+    println!(
+        "Fig 7 — {} / {} analogue ({} config, C sweep {:?})",
+        preset.paper_net, preset.paper_data, preset.model, clients
+    );
+
+    let rows_nvc = run_vision_sweep(&preset, &clients, VarCorrection::None, full, 7)?;
+    print_rows("row 1: FeDLRT w/o var-corr vs FedAvg", "fedavg acc", &rows_nvc);
+    assert_figure_shape(&rows_nvc, 10);
+
+    let rows_svc = run_vision_sweep(&preset, &clients, VarCorrection::Simplified, full, 7)?;
+    print_rows("row 2: FeDLRT simplified var-corr vs FedLin", "fedlin acc", &rows_svc);
+    assert_figure_shape(&rows_svc, 10);
+
+    // Shape: with variance correction, the large-C accuracy is at least
+    // as good as without (the paper's mitigation claim).
+    let last = clients.len() - 1;
+    println!(
+        "\nC={}: acc w/o vc {:.4} vs with vc {:.4}",
+        clients[last], rows_nvc[last].fedlrt_acc, rows_svc[last].fedlrt_acc
+    );
+    assert!(
+        rows_svc[last].fedlrt_acc >= rows_nvc[last].fedlrt_acc - 0.05,
+        "variance correction should not lose accuracy at large C"
+    );
+    println!("\nfig7_vgg16 OK");
+    Ok(())
+}

@@ -1,0 +1,35 @@
+//! Fig 8 reproduction: ViT analogue on the synthetic CIFAR100
+//! substitute — 100 classes, three low-rank core layers, Adam optimizer
+//! (Table 2), simplified variance correction vs FedLin.
+//!
+//! Paper's shape: FeDLRT tracks FedLin's accuracy with >55% average
+//! communication savings (transformers compress less gracefully, so
+//! savings are smaller than the CNN figures).
+//!
+//! Run: `cargo bench --bench fig8_vit`
+
+use fedlrt::bench::full_scale;
+use fedlrt::coordinator::presets::vision_presets;
+use fedlrt::coordinator::VarCorrection;
+use fedlrt::nn::experiment::{assert_figure_shape, print_rows, run_vision_sweep};
+
+fn main() -> anyhow::Result<()> {
+    let full = full_scale();
+    let preset = vision_presets().into_iter().find(|p| p.figure == "fig8").unwrap();
+    let clients: Vec<usize> = if full { vec![1, 2, 4, 8] } else { vec![1, 2] };
+    println!(
+        "Fig 8 — {} / {} analogue ({} config, Adam, C sweep {:?})",
+        preset.paper_net, preset.paper_data, preset.model, clients
+    );
+
+    let rows = run_vision_sweep(&preset, &clients, VarCorrection::Simplified, full, 8)?;
+    print_rows("FeDLRT simplified var-corr vs FedLin", "fedlin acc", &rows);
+    assert_figure_shape(&rows, 100);
+
+    let avg_saving: f64 =
+        rows.iter().map(|r| r.comm_saving).sum::<f64>() / rows.len() as f64;
+    println!("\naverage communication saving: {:.1}%", 100.0 * avg_saving);
+    assert!(avg_saving > 0.5, "paper reports >55% savings for ViT");
+    println!("\nfig8_vit OK");
+    Ok(())
+}

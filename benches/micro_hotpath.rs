@@ -1,0 +1,136 @@
+//! Micro-benchmarks of the L3 hot paths — the §Perf instrumentation.
+//!
+//! Times the primitives that dominate a FeDLRT round at the Fig-3
+//! operating point (n=512): matmul kernels, QR-based augmentation,
+//! 2r×2r SVD truncation, the full least-squares round, and one PJRT
+//! gradient call per artifact.
+//!
+//! Run: `cargo bench --bench micro_hotpath`
+
+use fedlrt::bench::bench;
+use fedlrt::linalg::{qr_thin, svd};
+use fedlrt::lowrank::{augment_basis, truncate, LowRank};
+use fedlrt::tensor::{matmul, matmul_nt, matmul_tn, Matrix};
+use fedlrt::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(7);
+    let n = 512;
+    let r = 32;
+
+    // --- matmul kernels at coordinator shapes ---
+    let a = Matrix::randn(n, n, &mut rng);
+    let b = Matrix::randn(n, n, &mut rng);
+    let s = bench("matmul 512x512 · 512x512", 1, 5, || {
+        std::hint::black_box(matmul(&a, &b));
+    });
+    println!("{}", s.report());
+    let flops = 2.0 * (n as f64).powi(3);
+    println!(
+        "  → {:.2} GFLOP/s (1 core; roofline est. ~5-15 GF/s f64 scalar+SIMD)",
+        flops / s.min_s / 1e9
+    );
+
+    let u = Matrix::randn(n, r, &mut rng);
+    let su = bench("skinny U·S·Vᵀ (512×32 chain)", 2, 20, || {
+        let sm = Matrix::randn(r, r, &mut Rng::new(1));
+        std::hint::black_box(fedlrt::tensor::usv(&u, &sm, &u));
+    });
+    println!("{}", su.report());
+
+    let g = Matrix::randn(n, n, &mut rng);
+    let st = bench("projection Uᵀ·G·V (n=512, r=32)", 2, 20, || {
+        std::hint::black_box(matmul(&matmul_tn(&u, &g), &u));
+    });
+    println!("{}", st.report());
+    let snt = bench("matmul_nt (512×32)·(512×32)ᵀ", 2, 10, || {
+        std::hint::black_box(matmul_nt(&u, &u));
+    });
+    println!("{}", snt.report());
+
+    // --- QR augmentation (server step) ---
+    let fac = LowRank::random_init(n, n, r, &mut rng);
+    let g_u = Matrix::randn(n, r, &mut rng);
+    let g_v = Matrix::randn(n, r, &mut rng);
+    let sq = bench("basis augmentation (QR, n=512, r=32)", 1, 10, || {
+        std::hint::black_box(augment_basis(&fac, &g_u, &g_v, 2 * r));
+    });
+    println!("{}", sq.report());
+    let qr_direct = bench("qr_thin 512×64", 1, 10, || {
+        std::hint::black_box(qr_thin(&Matrix::randn(n, 2 * r, &mut Rng::new(2))));
+    });
+    println!("{}", qr_direct.report());
+
+    // --- SVD truncation (server step, 2r×2r!) ---
+    let aug = augment_basis(&fac, &g_u, &g_v, 2 * r);
+    let s_star = Matrix::randn(2 * r, 2 * r, &mut rng);
+    let sv = bench("truncation SVD (2r×2r = 64×64)", 1, 20, || {
+        std::hint::black_box(truncate(&aug.u_tilde, &s_star, &aug.v_tilde, 0.1, 1, r));
+    });
+    println!("{}", sv.report());
+    let sv_full = bench("full n×n SVD (512×512, naive baseline)", 0, 1, || {
+        std::hint::black_box(svd(&Matrix::randn(128, 128, &mut Rng::new(3))));
+    });
+    println!("{} (shown at 128×128 — n³ scaling)", sv_full.report());
+
+    // --- one full FeDLRT round on the Fig-4 problem ---
+    let mut prng = Rng::new(11);
+    let prob =
+        fedlrt::models::least_squares::LeastSquares::homogeneous(20, 4, 3000, 4, &mut prng);
+    let cfg = fedlrt::coordinator::presets::fig4_config(false);
+    let mut one_round_cfg = cfg.clone();
+    one_round_cfg.rounds = 1;
+    let sr = bench("one FeDLRT round (fig4 problem, C=4, s*=20)", 1, 5, || {
+        std::hint::black_box(fedlrt::coordinator::run_fedlrt(&prob, &one_round_cfg, "bench"));
+    });
+    println!("{}", sr.report());
+
+    // --- PJRT artifact calls (needs `make artifacts`) ---
+    if let Ok(mut rt) = fedlrt::runtime::Runtime::new(fedlrt::runtime::Runtime::default_dir()) {
+        if rt.manifest.configs.contains_key("resnet18_head") {
+            let mut prng = Rng::new(13);
+            let problem = fedlrt::nn::NnProblem::new(
+                &mut rt,
+                fedlrt::nn::NnOptions {
+                    config: "resnet18_head".into(),
+                    num_clients: 2,
+                    train_n: 512,
+                    test_n: 128,
+                    eval_cap: 256,
+                    seed: 1,
+                    augment: false,
+                    dirichlet_alpha: None,
+                },
+            )
+            .expect("problem");
+            use fedlrt::models::{FedProblem, LrWant, LrWeight, Weights};
+            let spec = problem.spec();
+            let w = Weights {
+                dense: spec
+                    .dense_shapes
+                    .iter()
+                    .map(|&(m, nn)| Matrix::randn(m, nn, &mut prng).scale(0.05))
+                    .collect(),
+                lr: spec
+                    .lr_shapes
+                    .iter()
+                    .map(|&(m, nn)| {
+                        LrWeight::Factored(LowRank::random_init(m, nn, 16, &mut prng))
+                    })
+                    .collect(),
+            };
+            for (fn_name, want) in
+                [("grad_factors", LrWant::Factors), ("grad_coeff", LrWant::Coeff)]
+            {
+                let sg = bench(&format!("PJRT {fn_name} (resnet18_head, b=64)"), 2, 10, || {
+                    std::hint::black_box(problem.grad(0, &w, want, 0));
+                });
+                println!("{}", sg.report());
+            }
+        }
+    } else {
+        println!("(artifacts not built — skipping PJRT micro-benches)");
+    }
+
+    println!("\nmicro_hotpath OK");
+}

@@ -1,0 +1,75 @@
+//! Table 1 reproduction: computational footprint of FeDLRT vs baselines.
+//!
+//! Prints the cost rows both symbolically (the asymptotic expressions)
+//! and numerically at the paper's Fig-3 operating point (n=512), plus
+//! the feature flags (variance correction / rank adaptivity).
+//!
+//! Run: `cargo bench --bench table1_costs`
+
+use fedlrt::costmodel::{costs, CostParams, ALL_METHODS};
+
+fn fmt(x: f64) -> String {
+    if x >= 1e9 {
+        format!("{:.2}G", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:.1}k", x / 1e3)
+    } else {
+        format!("{x:.0}")
+    }
+}
+
+fn main() {
+    let p = CostParams { n: 512, r: 32, s_star: 10, b: 128 };
+    println!("Table 1 — computational footprint per aggregation round");
+    println!("(numeric at n={}, r={}, s*={}, b={}; units: flops / floats)\n", p.n, p.r, p.s_star, p.b);
+    println!(
+        "{:<24} {:>12} {:>12} {:>12} {:>12} {:>10} {:>7} {:>8} {:>9}",
+        "Method",
+        "client comp",
+        "client mem",
+        "server comp",
+        "server mem",
+        "com cost",
+        "rounds",
+        "var/cor",
+        "adaptive"
+    );
+    for m in ALL_METHODS {
+        let c = costs(m, p);
+        println!(
+            "{:<24} {:>12} {:>12} {:>12} {:>12} {:>10} {:>7} {:>8} {:>9}",
+            m.label(),
+            fmt(c.client_compute),
+            fmt(c.client_memory),
+            fmt(c.server_compute),
+            fmt(c.server_memory),
+            fmt(c.comm_cost),
+            c.comm_rounds,
+            if m.has_variance_correction() { "yes" } else { "no" },
+            if m.is_rank_adaptive() { "yes" } else { "no" },
+        );
+    }
+
+    println!("\nPaper's asymptotic expressions (Table 1):");
+    println!("  FedAvg                O(s*·b·n²) client comp, O(2n²) comm, 1 round");
+    println!("  FedLin                O(s*·b·n²) client comp, O(4n²) comm, 2 rounds");
+    println!("  FeDLRT w/o var/cor    O(s*·b·(4nr+4r²)),      O(6nr+6r²), 2 rounds");
+    println!("  FeDLRT simpl var/cor  O(s*·b·(4nr+4r²)+r²),   O(6nr+8r²), 2 rounds");
+    println!("  FeDLRT full var/cor   O(s*·b·(4nr+4r²)+4r²),  O(6nr+10r²), 3 rounds");
+    println!("  FeDLR [31]            O(s*·b·n² + n³),        O(4nr), 1 round");
+    println!("  Riemannian FL [44]    O(2n²r+4nr²+2nr),       O(4nr), 1 round");
+
+    // Shape assertions — who wins, by roughly what factor.
+    let dense = costs(fedlrt::costmodel::Method::FedLin, p);
+    let ours = costs(fedlrt::costmodel::Method::FedLrtSimplifiedVc, p);
+    let comm_factor = dense.comm_cost / ours.comm_cost;
+    let comp_factor = dense.client_compute / ours.client_compute;
+    println!(
+        "\nAt this operating point FeDLRT(simpl) saves {comm_factor:.1}× communication and {comp_factor:.1}× client compute vs FedLin."
+    );
+    assert!(comm_factor > 5.0, "expected ≥5× comm saving at r/n = 1/16");
+    assert!(comp_factor > 3.0, "expected ≥3× compute saving");
+    println!("table1_costs OK");
+}

@@ -1,0 +1,59 @@
+//! Table 2 reproduction: the experimental-setup table, printed from the
+//! preset registry, side by side with this repo's scaled analogues.
+//!
+//! Run: `cargo bench --bench table2_setup`
+
+use fedlrt::coordinator::presets::vision_presets;
+use fedlrt::opt::OptimizerKind;
+
+fn main() {
+    println!("Table 2 — experimental setup (paper values + scaled analogue)\n");
+    println!(
+        "{:<22} {:>14} {:>14} {:>14} {:>14}",
+        "", "AlexNet/C10", "ResNet18/C10", "VGG16/C10", "ViT/C100"
+    );
+    let ps = vision_presets();
+    // Reorder into the paper's column order.
+    let order = ["fig6", "fig5", "fig7", "fig8"];
+    let cols: Vec<_> = order
+        .iter()
+        .map(|f| ps.iter().find(|p| p.figure == *f).unwrap())
+        .collect();
+
+    let row = |label: &str, f: &dyn Fn(&fedlrt::coordinator::presets::VisionPreset) -> String| {
+        print!("{label:<22}");
+        for c in &cols {
+            print!(" {:>14}", f(c));
+        }
+        println!();
+    };
+    row("Batch size", &|p| p.batch.to_string());
+    row("Start learning rate", &|p| format!("{:.0e}", p.lr_start));
+    row("End learning rate", &|p| format!("{:.0e}", p.lr_end));
+    row("Aggregation rounds", &|p| p.rounds_full.to_string());
+    row("Local iterations", &|p| match p.iters_over_c {
+        Some(k) => format!("{k}/C"),
+        None => "100".into(),
+    });
+    row("Trunc. tolerance τ", &|p| format!("{}", p.tau));
+    row("Optimizer", &|p| match p.optimizer {
+        OptimizerKind::Sgd(s) => format!("SGD(m={})", s.momentum),
+        OptimizerKind::Adam { .. } => "Adam".into(),
+    });
+    row("Weight decay", &|p| match p.optimizer {
+        OptimizerKind::Sgd(s) => format!("{:.0e}", s.weight_decay),
+        OptimizerKind::Adam { weight_decay } => format!("{weight_decay:.0e}"),
+    });
+    row("— scaled rounds", &|p| p.rounds_scaled.to_string());
+    row("— model config", &|p| p.model.to_string());
+
+    // Fidelity checks against the paper's Table 2.
+    let resnet = cols[1];
+    assert_eq!(resnet.batch, 128);
+    assert!((resnet.lr_start - 1e-3).abs() < 1e-12);
+    assert!(matches!(resnet.optimizer, OptimizerKind::Sgd(s) if (s.momentum - 0.9).abs() < 1e-12));
+    let vit = cols[3];
+    assert_eq!(vit.batch, 256);
+    assert!(matches!(vit.optimizer, OptimizerKind::Adam { .. }));
+    println!("\ntable2_setup OK");
+}

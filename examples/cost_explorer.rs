@@ -1,0 +1,65 @@
+//! Interactive cost-model explorer: evaluate Table 1's expressions at
+//! any operating point and find the break-even ranks (Fig 3's
+//! amortization analysis) plus wall-clock estimates under a link model.
+//!
+//! Run: `cargo run --release --example cost_explorer -- --n 512 --r 32`
+
+use fedlrt::comm::LinkModel;
+use fedlrt::costmodel::{comm_amortization_rank, costs, CostParams, Method, ALL_METHODS};
+use fedlrt::util::cli::Cli;
+
+fn main() {
+    let args = Cli::new("cost_explorer", "Table 1 / Fig 3 cost model explorer")
+        .opt("n", "512", "layer dimension")
+        .opt("r", "32", "current rank")
+        .opt("iters", "10", "local iterations s*")
+        .opt("batch", "128", "mini-batch size")
+        .opt("mbps", "100", "link bandwidth (Mbit/s)")
+        .opt("latency-ms", "20", "link latency (ms)")
+        .parse_env();
+
+    let p = CostParams {
+        n: args.usize("n"),
+        r: args.usize("r"),
+        s_star: args.usize("iters"),
+        b: args.usize("batch"),
+    };
+    let link = LinkModel {
+        bandwidth: args.f64("mbps") * 1e6 / 8.0,
+        latency: args.f64("latency-ms") * 1e-3,
+    };
+
+    println!("operating point: n={}, r={}, s*={}, b={}\n", p.n, p.r, p.s_star, p.b);
+    println!(
+        "{:<24} {:>13} {:>13} {:>13} {:>10} {:>12}",
+        "method", "client flops", "server flops", "comm floats", "rounds", "est. time/rd"
+    );
+    for m in ALL_METHODS {
+        let c = costs(m, p);
+        let bytes = (c.comm_cost * 4.0) as u64;
+        let t = link.transfer_time(bytes) + link.latency * c.comm_rounds as f64;
+        println!(
+            "{:<24} {:>13.3e} {:>13.3e} {:>13.3e} {:>10} {:>10.1}ms",
+            m.label(),
+            c.client_compute,
+            c.server_compute,
+            c.comm_cost,
+            c.comm_rounds,
+            t * 1e3,
+        );
+    }
+
+    println!("\ncommunication break-even rank vs FedLin (Fig 3 amortization):");
+    for m in [Method::FedLrtNoVc, Method::FedLrtSimplifiedVc, Method::FedLrtFullVc] {
+        match comm_amortization_rank(m, Method::FedLin, p.n) {
+            Some(r) => println!(
+                "  {:<24} r < {}  ({:.0}% of full rank)",
+                m.label(),
+                r,
+                100.0 * r as f64 / p.n as f64
+            ),
+            None => println!("  {:<24} never amortizes at n={}", m.label(), p.n),
+        }
+    }
+    println!("\ncost_explorer OK");
+}

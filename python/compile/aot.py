@@ -1,0 +1,142 @@
+"""AOT pipeline: lower every model function to HLO text artifacts.
+
+Python runs ONCE, at build time (`make artifacts`); the Rust coordinator
+loads the emitted `artifacts/*.hlo.txt` through PJRT and never calls back
+into Python. HLO **text** is the interchange format — jax ≥ 0.5 emits
+HloModuleProtos with 64-bit instruction ids that xla_extension 0.5.1
+rejects, while the text parser reassigns ids (see
+/opt/xla-example/README.md).
+
+Emits, per model config:
+    artifacts/<config>.<fn>.hlo.txt     fn ∈ {grad_factors, grad_coeff,
+                                              grad_dense, eval_factors,
+                                              eval_dense}
+    artifacts/manifest.json             shapes + parameter order + outputs
+
+Usage: python -m compile.aot --out ../artifacts [--configs a,b,...]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+FUNCTIONS = ("grad_factors", "grad_coeff", "grad_dense", "eval_factors", "eval_dense")
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def example_args(cfg: M.ModelConfig, factored: bool, batch: int):
+    spec = cfg.param_spec_factored() if factored else cfg.param_spec_dense()
+    args = [jax.ShapeDtypeStruct(shape, jnp.float32) for _, shape in spec]
+    args.append(jax.ShapeDtypeStruct((batch, cfg.d_in), jnp.float32))
+    args.append(jax.ShapeDtypeStruct((batch,), jnp.int32))
+    return args
+
+
+def build_fn(cfg: M.ModelConfig, fn_name: str):
+    if fn_name == "grad_factors":
+        return M.make_grad_factors(cfg), True, cfg.batch
+    if fn_name == "grad_coeff":
+        return M.make_grad_coeff(cfg), True, cfg.batch
+    if fn_name == "grad_dense":
+        return M.make_grad_dense(cfg), False, cfg.batch
+    if fn_name == "eval_factors":
+        return M.make_eval(cfg, factored=True), True, cfg.eval_batch
+    if fn_name == "eval_dense":
+        return M.make_eval(cfg, factored=False), False, cfg.eval_batch
+    raise ValueError(fn_name)
+
+
+def output_spec(cfg: M.ModelConfig, fn_name: str):
+    """Names+shapes of each tuple element the artifact returns."""
+    fspec = cfg.param_spec_factored()
+    dspec = cfg.param_spec_dense()
+    if fn_name == "grad_factors":
+        return [("loss", [])] + [(f"g:{n}", list(s)) for n, s in fspec]
+    if fn_name == "grad_coeff":
+        kept = [(n, s) for n, s in fspec if not n.endswith((".u", ".v"))]
+        return [("loss", [])] + [(f"g:{n}", list(s)) for n, s in kept]
+    if fn_name == "grad_dense":
+        return [("loss", [])] + [(f"g:{n}", list(s)) for n, s in dspec]
+    if fn_name in ("eval_factors", "eval_dense"):
+        return [("loss_sum", []), ("correct", [])]
+    raise ValueError(fn_name)
+
+
+def lower_config(cfg: M.ModelConfig, out_dir: str, manifest: dict) -> None:
+    entry = {
+        "d_in": cfg.d_in,
+        "backbone": list(cfg.backbone),
+        "n_core": cfg.n_core,
+        "num_lr": cfg.num_lr,
+        "classes": cfg.classes,
+        "r_pad": cfg.r_pad,
+        "batch": cfg.batch,
+        "eval_batch": cfg.eval_batch,
+        "params_factored": [
+            {"name": n, "shape": list(s)} for n, s in cfg.param_spec_factored()
+        ],
+        "params_dense": [
+            {"name": n, "shape": list(s)} for n, s in cfg.param_spec_dense()
+        ],
+        "functions": {},
+        "outputs": {},
+    }
+    for fn_name in FUNCTIONS:
+        fn, factored, batch = build_fn(cfg, fn_name)
+        args = example_args(cfg, factored, batch)
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{cfg.name}.{fn_name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entry["functions"][fn_name] = fname
+        entry["outputs"][fn_name] = [
+            {"name": n, "shape": s} for n, s in output_spec(cfg, fn_name)
+        ]
+        print(f"  {fname}: {len(text) / 1e3:.0f} kB, {len(args)} args")
+    manifest["configs"][cfg.name] = entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--configs",
+        default=",".join(M.CONFIGS),
+        help="comma-separated subset of model configs",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    # Merge into an existing manifest so `--configs subset` re-lowers
+    # only what changed without orphaning the other configs' entries.
+    manifest_path = os.path.join(args.out, "manifest.json")
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+    else:
+        manifest = {"version": 1, "configs": {}}
+    for name in args.configs.split(","):
+        cfg = M.CONFIGS[name]
+        print(f"lowering {name} …")
+        lower_config(cfg, args.out, manifest)
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {args.out}/manifest.json ({len(manifest['configs'])} configs)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,211 @@
+"""Pallas kernels for the FeDLRT compute hot-spot (L1).
+
+The client-side cost of FeDLRT is dominated by two primitives:
+
+* the factored layer forward ``y = x · U · S · Vᵀ`` (eq. 7/8 inner loop),
+* the Galerkin projection ``G_S̃ = Ũᵀ G Ṽ`` (eq. 5 coefficient dynamics).
+
+Both are written as Pallas kernels below, plus a fused VJP kernel for the
+backward pass, and wrapped in a ``jax.custom_vjp`` so the L2 model
+differentiates *through our kernels* rather than through generic autodiff.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the kernels tile the batch
+dimension with ``BlockSpec`` while keeping the basis panels ``U, V ∈
+R^{n×R}`` and the coefficient block ``S ∈ R^{R×R}`` fully VMEM-resident —
+for the paper's largest head (n=512, R=2·r_max=128) that is
+2·512·128·4 B + 128²·4 B ≈ 0.57 MiB, far under the ~16 MiB VMEM budget,
+so the only HBM traffic per grid step is one batch tile in and one out.
+The matmul chain is MXU-shaped: every contraction has an operand with
+≥128 columns when R = 128.
+
+CPU execution uses ``interpret=True`` (the CPU PJRT plugin cannot run
+Mosaic custom-calls); the grid/BlockSpec structure is identical.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Batch-tile size. 128 divides every batch size the AOT pipeline emits
+# and matches the MXU sublane tiling on real TPUs.
+DEFAULT_BLOCK_B = 128
+
+
+def _pick_block(batch: int) -> int:
+    """Largest power-of-two tile ≤ DEFAULT_BLOCK_B dividing ``batch``."""
+    b = min(DEFAULT_BLOCK_B, batch)
+    while batch % b != 0:
+        b //= 2
+    return max(b, 1)
+
+
+# ---------------------------------------------------------------------------
+# Forward kernel: y = x @ U @ S @ V.T, batch-tiled.
+# ---------------------------------------------------------------------------
+
+
+def _lowrank_fwd_kernel(x_ref, u_ref, s_ref, v_ref, o_ref):
+    x = x_ref[...]
+    # Skinny chain: (B×m)·(m×R) → (B×R)·(R×R) → (B×R)·(R×n).
+    xu = jnp.dot(x, u_ref[...], preferred_element_type=jnp.float32)
+    xus = jnp.dot(xu, s_ref[...], preferred_element_type=jnp.float32)
+    y = jnp.dot(xus, v_ref[...].T, preferred_element_type=jnp.float32)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def lowrank_apply_kernel(x, u, s, v, *, interpret=True):
+    """Pallas forward: ``x @ U @ S @ Vᵀ`` with batch-tiled grid."""
+    batch, m = x.shape
+    n, r = v.shape
+    assert u.shape == (m, r) and s.shape == (r, r)
+    bb = _pick_block(batch)
+    grid = (batch // bb,)
+    return pl.pallas_call(
+        _lowrank_fwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, m), lambda i: (i, 0)),  # stream batch tiles
+            pl.BlockSpec((m, r), lambda i: (0, 0)),   # U resident
+            pl.BlockSpec((r, r), lambda i: (0, 0)),   # S resident
+            pl.BlockSpec((n, r), lambda i: (0, 0)),   # V resident
+        ],
+        out_specs=pl.BlockSpec((bb, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, n), x.dtype),
+        interpret=interpret,
+    )(x, u, s, v)
+
+
+# ---------------------------------------------------------------------------
+# Projection kernel: G_S = A.T @ G @ B  (A: k×p, G: k×q, B: q×r → p×r).
+# Grid over the contraction dim k so arbitrarily large batches stream
+# through VMEM; the p×r accumulator stays resident.
+# ---------------------------------------------------------------------------
+
+
+def _gram_project_kernel(a_ref, g_ref, b_ref, o_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    atg = jnp.dot(a_ref[...].T, g_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] += jnp.dot(atg, b_ref[...], preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def gram_project_kernel(a, g, b, *, interpret=True):
+    """Pallas projection ``Aᵀ G B`` — the ∇_S̃ computation."""
+    k, p = a.shape
+    k2, q = g.shape
+    q2, r = b.shape
+    assert k == k2 and q == q2
+    bb = _pick_block(k)
+    grid = (k // bb,)
+    return pl.pallas_call(
+        _gram_project_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, p), lambda i: (i, 0)),
+            pl.BlockSpec((bb, q), lambda i: (i, 0)),
+            pl.BlockSpec((q, r), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((p, r), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, r), a.dtype),
+        interpret=interpret,
+    )(a, g, b)
+
+
+# ---------------------------------------------------------------------------
+# Fused backward kernel: all four cotangents in one pass over the batch.
+# dx accumulates per batch tile (disjoint tiles); dU/dS/dV accumulate
+# across the whole grid in resident VMEM blocks.
+# ---------------------------------------------------------------------------
+
+
+def _lowrank_bwd_kernel(x_ref, u_ref, s_ref, v_ref, dy_ref, dx_ref, du_ref, ds_ref, dv_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        du_ref[...] = jnp.zeros_like(du_ref)
+        ds_ref[...] = jnp.zeros_like(ds_ref)
+        dv_ref[...] = jnp.zeros_like(dv_ref)
+
+    x = x_ref[...]
+    dy = dy_ref[...]
+    u = u_ref[...]
+    s = s_ref[...]
+    v = v_ref[...]
+    dyv = jnp.dot(dy, v, preferred_element_type=jnp.float32)       # B×R
+    xu = jnp.dot(x, u, preferred_element_type=jnp.float32)         # B×R
+    dyvst = jnp.dot(dyv, s.T, preferred_element_type=jnp.float32)  # B×R
+    dx_ref[...] = jnp.dot(dyvst, u.T, preferred_element_type=jnp.float32).astype(dx_ref.dtype)
+    du_ref[...] += jnp.dot(x.T, dyvst, preferred_element_type=jnp.float32).astype(du_ref.dtype)
+    ds_ref[...] += jnp.dot(xu.T, dyv, preferred_element_type=jnp.float32).astype(ds_ref.dtype)
+    dv_ref[...] += jnp.dot(dy.T, jnp.dot(xu, s, preferred_element_type=jnp.float32),
+                           preferred_element_type=jnp.float32).astype(dv_ref.dtype)
+
+
+def lowrank_vjp_kernel(x, u, s, v, dy, *, interpret=True):
+    """Fused backward: returns ``(dx, dU, dS, dV)``."""
+    batch, m = x.shape
+    n, r = v.shape
+    bb = _pick_block(batch)
+    grid = (batch // bb,)
+    out_shapes = (
+        jax.ShapeDtypeStruct((batch, m), x.dtype),
+        jax.ShapeDtypeStruct((m, r), u.dtype),
+        jax.ShapeDtypeStruct((r, r), s.dtype),
+        jax.ShapeDtypeStruct((n, r), v.dtype),
+    )
+    return pl.pallas_call(
+        _lowrank_bwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, m), lambda i: (i, 0)),
+            pl.BlockSpec((m, r), lambda i: (0, 0)),
+            pl.BlockSpec((r, r), lambda i: (0, 0)),
+            pl.BlockSpec((n, r), lambda i: (0, 0)),
+            pl.BlockSpec((bb, n), lambda i: (i, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((bb, m), lambda i: (i, 0)),
+            pl.BlockSpec((m, r), lambda i: (0, 0)),
+            pl.BlockSpec((r, r), lambda i: (0, 0)),
+            pl.BlockSpec((n, r), lambda i: (0, 0)),
+        ),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(x, u, s, v, dy)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable wrapper: the L2 model calls this; JAX autodiff uses our
+# fused backward kernel instead of tracing through the forward.
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def lowrank_layer(x, u, s, v):
+    """Differentiable factored layer ``x @ U S Vᵀ`` backed by Pallas."""
+    return lowrank_apply_kernel(x, u, s, v)
+
+
+def _lowrank_layer_fwd(x, u, s, v):
+    return lowrank_apply_kernel(x, u, s, v), (x, u, s, v)
+
+
+def _lowrank_layer_bwd(resid, dy):
+    x, u, s, v = resid
+    return lowrank_vjp_kernel(x, u, s, v, dy)
+
+
+lowrank_layer.defvjp(_lowrank_layer_fwd, _lowrank_layer_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def coeff_gradient(u, g, v):
+    """Jitted ∇_S̃ projection ``Ũᵀ G Ṽ`` via the Pallas kernel."""
+    return gram_project_kernel(u, g, v)

@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has a reference implementation here;
+`python/tests/test_kernel.py` sweeps shapes/dtypes with hypothesis and
+asserts allclose between kernel and oracle. The oracles are also what the
+L2 model would use if Pallas were unavailable — they define the
+mathematical contract:
+
+    lowrank_apply(x, U, S, V) = x @ U @ S @ V.T        (factored layer fwd)
+    gram_project(A, G, B)     = A.T @ G @ B            (coefficient-gradient
+                                                        projection, eq. 5 S-step)
+"""
+
+import jax.numpy as jnp
+
+
+def lowrank_apply(x, u, s, v):
+    """Factored low-rank layer forward: ``x @ (U S Vᵀ)``.
+
+    Association order ``((x·U)·S)·Vᵀ`` keeps every intermediate skinny
+    (batch×r), which is the client-compute argument of Table 1.
+    """
+    return ((x @ u) @ s) @ v.T
+
+
+def gram_project(a, g, b):
+    """Galerkin projection ``Aᵀ G B`` (with A=U, B=V this is ∇_S̃)."""
+    return (a.T @ g) @ b
+
+
+def lowrank_vjp(x, u, s, v, dy):
+    """Reference cotangents of ``lowrank_apply`` wrt (x, u, s, v).
+
+    dx = ((dy·V)·Sᵀ)·Uᵀ
+    dU = xᵀ·(dy·V·Sᵀ)
+    dS = (x·U)ᵀ·(dy·V)
+    dV = dyᵀ·(x·U·S)
+    """
+    dyv = dy @ v
+    xu = x @ u
+    dx = (dyv @ s.T) @ u.T
+    du = x.T @ (dyv @ s.T)
+    ds = xu.T @ dyv
+    dv = dy.T @ (xu @ s)
+    return dx, du, ds, dv

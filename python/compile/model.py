@@ -1,0 +1,412 @@
+"""L2 — JAX model definitions for the §4.2 vision benchmarks.
+
+A configurable classifier whose fully connected core layers are low-rank
+factored ``U S Vᵀ`` (the paper trains the FC head of ResNet18 / AlexNet /
+VGG16 / ViT with FeDLRT; the convolutional features are emulated by a
+trainable dense backbone — see DESIGN.md §Substitutions):
+
+    h = relu(x @ W_b + b_b)            for each backbone layer
+    h = relu(h + lowrank(h) + bias)    for each low-rank core layer
+    logits = h @ W_h + b_h
+
+``lowrank`` runs through the Pallas kernels (L1) via
+:func:`compile.kernels.lowrank.lowrank_layer`, so the AOT-lowered HLO
+contains our kernels on the hot path, with the fused Pallas VJP on the
+backward pass.
+
+Exported functions per model configuration (all shapes static; the
+dynamic-rank scheme zero-pads factors to ``r_pad`` — padding is exact,
+see DESIGN.md §Static-shape AOT):
+
+* ``grad_factors``  — loss + grads for every parameter, factored layers
+  producing ``(G_U, G_S, G_V)`` (Algorithm 1 line 3).
+* ``grad_coeff``    — loss + grads for dense params and ``G_S̃`` only
+  (Algorithm 1 line 9 / the eq. 7-8 inner loop).
+* ``grad_dense``    — FedAvg/FedLin baseline: core layers as dense ``W``.
+* ``eval_factors`` / ``eval_dense`` — summed loss + correct-prediction
+  count on an evaluation batch.
+
+Parameter order is fixed and recorded in the AOT manifest; the Rust
+runtime flattens/unflattens by that record.
+"""
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.lowrank import lowrank_layer
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Static description of one model variant (one AOT artifact set)."""
+
+    name: str
+    d_in: int
+    backbone: Tuple[int, ...]  # dense widths; last must equal n_core
+    n_core: int
+    num_lr: int
+    classes: int
+    r_pad: int  # padded factor rank (= 2 × coordinator max_rank)
+    batch: int
+    eval_batch: int
+    # Optional convolutional stem: inputs are images (h, w, c_in) and a
+    # stride-2 3×3 conv with `conv_channels` filters runs before the
+    # dense backbone (closer to the paper's CNN bodies). The kernel is
+    # carried as a 2-D (9·c_in, conv_channels) parameter so the Rust
+    # coordinator stays matrix-only; the model reshapes internally.
+    conv_channels: int = 0
+    img_hw: Tuple[int, int, int] = (8, 8, 3)
+    # Transformer mode (the paper's ViT benchmark trains every 512×512
+    # attention weight matrix with FeDLRT): the input splits into
+    # `num_patches` tokens, the backbone embeds each token to `n_core`,
+    # and the low-rank layers are consumed in groups of four per
+    # attention block — (W_q, W_k, W_v, W_o), each n_core×n_core,
+    # `attn_heads` heads — followed by mean-pooling into the head.
+    attention: bool = False
+    attn_heads: int = 2
+    num_patches: int = 16
+
+    def __post_init__(self):
+        assert self.backbone[-1] == self.n_core, "backbone must end at n_core"
+        assert self.batch % 2 == 0 and self.eval_batch % 2 == 0
+        if self.conv_channels:
+            h, w, c = self.img_hw
+            assert h * w * c == self.d_in, "img_hw must flatten to d_in"
+        if self.attention:
+            assert self.d_in % self.num_patches == 0, "patches must tile d_in"
+            assert self.num_lr % 4 == 0, "attention consumes lr layers in groups of 4"
+            assert self.n_core % self.attn_heads == 0
+
+    def conv_flat_dim(self) -> int:
+        """Flattened feature dim after the stride-2 conv stem."""
+        h, w, _ = self.img_hw
+        return (h // 2) * (w // 2) * self.conv_channels
+
+    # ---- parameter templates ------------------------------------------------
+
+    def _stem_spec(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        if not self.conv_channels:
+            return []
+        _, _, c_in = self.img_hw
+        return [
+            ("conv0.w", (9 * c_in, self.conv_channels)),
+            ("conv0.b", (1, self.conv_channels)),
+        ]
+
+    def _backbone_input(self) -> int:
+        if self.attention:
+            return self.d_in // self.num_patches  # per-token dim
+        return self.conv_flat_dim() if self.conv_channels else self.d_in
+
+    def param_spec_factored(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        """(name, shape) in exact argument order — factored variant."""
+        spec = self._stem_spec()
+        prev = self._backbone_input()
+        for i, w in enumerate(self.backbone):
+            spec.append((f"backbone{i}.w", (prev, w)))
+            spec.append((f"backbone{i}.b", (1, w)))
+            prev = w
+        for l in range(self.num_lr):
+            n, r = self.n_core, self.r_pad
+            spec.append((f"lr{l}.u", (n, r)))
+            spec.append((f"lr{l}.s", (r, r)))
+            spec.append((f"lr{l}.v", (n, r)))
+            spec.append((f"lr{l}.b", (1, n)))
+        spec.append(("head.w", (self.n_core, self.classes)))
+        spec.append(("head.b", (1, self.classes)))
+        return spec
+
+    def param_spec_dense(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        """(name, shape) in argument order — dense-baseline variant."""
+        spec = self._stem_spec()
+        prev = self._backbone_input()
+        for i, w in enumerate(self.backbone):
+            spec.append((f"backbone{i}.w", (prev, w)))
+            spec.append((f"backbone{i}.b", (1, w)))
+            prev = w
+        for l in range(self.num_lr):
+            n = self.n_core
+            spec.append((f"lr{l}.w", (n, n)))
+            spec.append((f"lr{l}.b", (1, n)))
+        spec.append(("head.w", (self.n_core, self.classes)))
+        spec.append(("head.b", (1, self.classes)))
+        return spec
+
+    def init_params(self, key, factored: bool = True):
+        """He-scaled random parameters (tests / python-side sanity)."""
+        spec = self.param_spec_factored() if factored else self.param_spec_dense()
+        params = []
+        for name, shape in spec:
+            key, sub = jax.random.split(key)
+            if name.endswith(".b"):
+                params.append(jnp.zeros(shape, jnp.float32))
+            elif name.endswith(".s"):
+                # Diagonal, descending, only the top-left r_pad/2 block
+                # active — mimics the coordinator's initialization.
+                r = shape[0]
+                diag = jnp.where(
+                    jnp.arange(r) < r // 2,
+                    1.0 / (1.0 + jnp.arange(r, dtype=jnp.float32)),
+                    0.0,
+                ) / jnp.sqrt(self.n_core)
+                params.append(jnp.diag(diag).astype(jnp.float32))
+            elif name.endswith((".u", ".v")):
+                n, r = shape
+                q, _ = jnp.linalg.qr(jax.random.normal(sub, (n, r), jnp.float32))
+                active = jnp.where(jnp.arange(r) < r // 2, 1.0, 0.0)
+                params.append((q * active[None, :]).astype(jnp.float32))
+            else:
+                fan_in = shape[0]
+                params.append(
+                    jax.random.normal(sub, shape, jnp.float32)
+                    * jnp.sqrt(2.0 / fan_in)
+                )
+        return params
+
+
+# ---------------------------------------------------------------------------
+# Forward passes.
+# ---------------------------------------------------------------------------
+
+
+def _split(cfg: ModelConfig, params, factored: bool):
+    """Split the flat param list into (stem, backbone, core, head)."""
+    i = 0
+    stem = None
+    if cfg.conv_channels:
+        stem = (params[0], params[1])
+        i = 2
+    backbone = []
+    for _ in cfg.backbone:
+        backbone.append((params[i], params[i + 1]))
+        i += 2
+    core = []
+    per = 4 if factored else 2
+    for _ in range(cfg.num_lr):
+        core.append(tuple(params[i : i + per]))
+        i += per
+    head = (params[i], params[i + 1])
+    assert i + 2 == len(params), f"param count mismatch: {i + 2} vs {len(params)}"
+    return stem, backbone, core, head
+
+
+def _apply_stem(cfg: ModelConfig, stem, x):
+    """Stride-2 3×3 conv stem (NHWC) + relu + flatten."""
+    if stem is None:
+        return x
+    w2d, b = stem
+    h_dim, w_dim, c_in = cfg.img_hw
+    kernel = w2d.reshape(3, 3, c_in, cfg.conv_channels)
+    img = x.reshape(-1, h_dim, w_dim, c_in)
+    out = jax.lax.conv_general_dilated(
+        img,
+        kernel,
+        window_strides=(2, 2),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    out = jax.nn.relu(out + b.reshape(1, 1, 1, -1))
+    return out.reshape(out.shape[0], -1)
+
+
+def _attention_block(cfg: ModelConfig, tokens, wq, wk, wv, wo):
+    """Multi-head self-attention over tokens, projections given as
+    callables mapping (B·T, n) → (B·T, n) (low-rank or dense)."""
+    b, t, n = tokens.shape
+    heads = cfg.attn_heads
+    dh = n // heads
+    flat = tokens.reshape(b * t, n)
+
+    def split_heads(z):
+        return z.reshape(b, t, heads, dh).transpose(0, 2, 1, 3)  # B,H,T,dh
+
+    q = split_heads(wq(flat))
+    k = split_heads(wk(flat))
+    v = split_heads(wv(flat))
+    scores = jnp.einsum("bhtd,bhsd->bhts", q, k) / jnp.sqrt(float(dh))
+    attn = jax.nn.softmax(scores, axis=-1)
+    mixed = jnp.einsum("bhts,bhsd->bhtd", attn, v)
+    mixed = mixed.transpose(0, 2, 1, 3).reshape(b * t, n)
+    out = wo(mixed).reshape(b, t, n)
+    return tokens + out  # residual
+
+
+def _forward_attention(cfg: ModelConfig, backbone, core, head, x, proj):
+    """Shared transformer path; `proj(layer)` builds the projection fn."""
+    bsz = x.shape[0]
+    p_dim = cfg.d_in // cfg.num_patches
+    tokens = x.reshape(bsz, cfg.num_patches, p_dim)
+    # Per-token embedding through the dense backbone.
+    flat = tokens.reshape(bsz * cfg.num_patches, p_dim)
+    h = flat
+    for w, b in backbone:
+        h = jax.nn.relu(h @ w + b)
+    tokens = h.reshape(bsz, cfg.num_patches, cfg.n_core)
+    # Attention blocks: 4 low-rank layers each (W_q, W_k, W_v, W_o).
+    for blk in range(len(core) // 4):
+        fns = [proj(core[4 * blk + i]) for i in range(4)]
+        tokens = _attention_block(cfg, tokens, *fns)
+    pooled = tokens.mean(axis=1)
+    w, b = head
+    return pooled @ w + b
+
+
+def forward_factored(cfg: ModelConfig, params, x):
+    stem, backbone, core, head = _split(cfg, params, factored=True)
+    if cfg.attention:
+        def proj(layer):
+            u, s, v, b = layer
+            return lambda z: lowrank_layer(z, u, s, v) + b
+        return _forward_attention(cfg, backbone, core, head, x, proj)
+    h = _apply_stem(cfg, stem, x)
+    for w, b in backbone:
+        h = jax.nn.relu(h @ w + b)
+    for u, s, v, b in core:
+        # Residual keeps gradient flow alive at very low rank.
+        h = jax.nn.relu(h + lowrank_layer(h, u, s, v) + b)
+    w, b = head
+    return h @ w + b
+
+
+def forward_dense(cfg: ModelConfig, params, x):
+    stem, backbone, core, head = _split(cfg, params, factored=False)
+    if cfg.attention:
+        def proj(layer):
+            w, b = layer
+            return lambda z: z @ w + b
+        return _forward_attention(cfg, backbone, core, head, x, proj)
+    h = _apply_stem(cfg, stem, x)
+    for w, b in backbone:
+        h = jax.nn.relu(h @ w + b)
+    for w, b in core:
+        h = jax.nn.relu(h + h @ w + b)
+    w, b = head
+    return h @ w + b
+
+
+def _ce_loss(logits, y):
+    """Mean softmax cross-entropy; ``y`` int32 labels."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - picked)
+
+
+# ---------------------------------------------------------------------------
+# Exported functions (one AOT artifact each).
+# ---------------------------------------------------------------------------
+
+
+def make_grad_factors(cfg: ModelConfig):
+    """(params…, x, y) → (loss, *grads) — all parameters, factored."""
+
+    def fn(*args):
+        params, x, y = list(args[:-2]), args[-2], args[-1]
+
+        def loss_fn(ps):
+            return _ce_loss(forward_factored(cfg, ps, x), y)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        return (loss, *grads)
+
+    return fn
+
+
+def make_grad_coeff(cfg: ModelConfig):
+    """(params…, x, y) → (loss, *grads-without-U/V) — the inner loop.
+
+    U and V are constants here (the shared augmented bases); only dense
+    parameters and the coefficient matrices S̃ receive gradients, which is
+    exactly the client-compute saving of Table 1.
+    """
+    spec = cfg.param_spec_factored()
+    diff_idx = [i for i, (name, _) in enumerate(spec) if not name.endswith((".u", ".v"))]
+
+    def fn(*args):
+        params, x, y = list(args[:-2]), args[-2], args[-1]
+        diff = [params[i] for i in diff_idx]
+
+        def loss_fn(dps):
+            full = list(params)
+            for slot, val in zip(diff_idx, dps):
+                full[slot] = val
+            return _ce_loss(forward_factored(cfg, full, x), y)
+
+        loss, grads = jax.value_and_grad(loss_fn)(diff)
+        return (loss, *grads)
+
+    return fn
+
+
+def make_grad_dense(cfg: ModelConfig):
+    """(params…, x, y) → (loss, *grads) — dense baseline."""
+
+    def fn(*args):
+        params, x, y = list(args[:-2]), args[-2], args[-1]
+
+        def loss_fn(ps):
+            return _ce_loss(forward_dense(cfg, ps, x), y)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        return (loss, *grads)
+
+    return fn
+
+
+def make_eval(cfg: ModelConfig, factored: bool):
+    """(params…, x, y) → (summed loss, correct count) on an eval batch."""
+    fwd = forward_factored if factored else forward_dense
+
+    def fn(*args):
+        params, x, y = list(args[:-2]), args[-2], args[-1]
+        logits = fwd(cfg, params, x)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+        loss_sum = jnp.sum(logz - picked)
+        correct = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+        return (loss_sum, correct)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Model registry — the experiment configurations of Table 2, scaled for a
+# CPU-only testbed (DESIGN.md §Substitutions). Layer *structure* mirrors
+# the paper's heads: ResNet18 has a single FC layer; AlexNet/VGG16 have
+# multi-layer FC heads; the ViT variant is wider and 100-class.
+# ---------------------------------------------------------------------------
+
+CONFIGS = {
+    "test_tiny": ModelConfig(
+        name="test_tiny", d_in=12, backbone=(16,), n_core=16, num_lr=1,
+        classes=4, r_pad=8, batch=16, eval_batch=32,
+    ),
+    "resnet18_conv": ModelConfig(
+        name="resnet18_conv", d_in=192, backbone=(256,), n_core=256, num_lr=1,
+        classes=10, r_pad=64, batch=64, eval_batch=256,
+        conv_channels=16, img_hw=(8, 8, 3),
+    ),
+    "resnet18_head": ModelConfig(
+        name="resnet18_head", d_in=192, backbone=(256,), n_core=256, num_lr=1,
+        classes=10, r_pad=64, batch=64, eval_batch=256,
+    ),
+    "alexnet_head": ModelConfig(
+        name="alexnet_head", d_in=192, backbone=(256,), n_core=256, num_lr=2,
+        classes=10, r_pad=64, batch=64, eval_batch=256,
+    ),
+    "vgg16_head": ModelConfig(
+        name="vgg16_head", d_in=192, backbone=(512,), n_core=512, num_lr=2,
+        classes=10, r_pad=64, batch=64, eval_batch=256,
+    ),
+    "vit_attn": ModelConfig(
+        name="vit_attn", d_in=192, backbone=(256,), n_core=256, num_lr=4,
+        classes=100, r_pad=64, batch=64, eval_batch=256,
+        attention=True, attn_heads=2, num_patches=16,
+    ),
+    "vit_head": ModelConfig(
+        name="vit_head", d_in=192, backbone=(512,), n_core=512, num_lr=3,
+        classes=100, r_pad=64, batch=64, eval_batch=256,
+    ),
+}

@@ -1,0 +1,94 @@
+"""AOT pipeline tests: manifest ↔ lowering consistency.
+
+Verifies the contract the Rust runtime depends on: parameter order,
+output tuple layout, and the HLO text's entry-computation signature.
+Artifact-file checks are skipped until `make artifacts` has run.
+"""
+
+import json
+import os
+import re
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile import model as M
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+HAVE_ARTIFACTS = os.path.exists(os.path.join(ARTIFACTS, "manifest.json"))
+
+CFG = M.CONFIGS["test_tiny"]
+
+
+class TestSpecs:
+    def test_output_spec_matches_function_arity(self):
+        """output_spec must agree with what each function returns."""
+        params = CFG.init_params(jax.random.PRNGKey(0), factored=True)
+        dparams = CFG.init_params(jax.random.PRNGKey(0), factored=False)
+        import numpy as np
+
+        rng = np.random.default_rng(0)
+        for fn_name in aot.FUNCTIONS:
+            fn, factored, batch = aot.build_fn(CFG, fn_name)
+            ps = params if factored else dparams
+            x = jnp.asarray(rng.normal(size=(batch, CFG.d_in)), jnp.float32)
+            y = jnp.asarray(rng.integers(0, CFG.classes, size=batch), jnp.int32)
+            out = fn(*ps, x, y)
+            spec = aot.output_spec(CFG, fn_name)
+            assert len(out) == len(spec), fn_name
+            for val, (name, shape) in zip(out, spec):
+                assert list(val.shape) == shape, f"{fn_name}/{name}"
+
+    def test_param_specs_cover_all_functions(self):
+        for cfg in M.CONFIGS.values():
+            fspec = cfg.param_spec_factored()
+            dspec = cfg.param_spec_dense()
+            # factored has 4 tensors per lr layer, dense has 2.
+            assert len(fspec) - len(dspec) == 2 * cfg.num_lr
+            # Shapes are positive.
+            for _, shape in fspec + dspec:
+                assert all(d > 0 for d in shape)
+
+    def test_example_args_shapes(self):
+        args = aot.example_args(CFG, factored=True, batch=CFG.batch)
+        # params + x + y
+        assert len(args) == len(CFG.param_spec_factored()) + 2
+        assert args[-2].shape == (CFG.batch, CFG.d_in)
+        assert args[-1].dtype == jnp.int32
+
+
+@pytest.mark.skipif(not HAVE_ARTIFACTS, reason="run `make artifacts` first")
+class TestEmittedArtifacts:
+    def manifest(self):
+        with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_manifest_lists_all_functions_and_files_exist(self):
+        m = self.manifest()
+        assert "test_tiny" in m["configs"]
+        for name, entry in m["configs"].items():
+            for fn_name in aot.FUNCTIONS:
+                assert fn_name in entry["functions"], (name, fn_name)
+                path = os.path.join(ARTIFACTS, entry["functions"][fn_name])
+                assert os.path.exists(path), path
+
+    def test_hlo_entry_signature_matches_manifest(self):
+        m = self.manifest()
+        entry = m["configs"]["test_tiny"]
+        path = os.path.join(ARTIFACTS, entry["functions"]["grad_coeff"])
+        text = open(path).read()
+        # The ENTRY computation must declare #params + 2 parameter
+        # instructions (HLO text lists them as `= ty[] parameter(i)`).
+        want_args = len(entry["params_factored"]) + 2
+        entry_body = text[text.index("ENTRY") :]
+        params = set(re.findall(r"parameter\((\d+)\)", entry_body))
+        assert len(params) == want_args, f"{sorted(params)} vs {want_args}"
+
+    def test_manifest_shapes_match_model(self):
+        m = self.manifest()
+        entry = m["configs"]["test_tiny"]
+        spec = {s["name"]: s["shape"] for s in entry["params_factored"]}
+        for name, shape in CFG.param_spec_factored():
+            assert spec[name] == list(shape), name

@@ -1,0 +1,148 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes and value scales; every kernel output must match
+the reference to f32 accumulation accuracy. This is the CORE correctness
+signal for the compute layer — if these pass, the HLO artifacts contain
+correct kernels.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lowrank as K
+from compile.kernels import ref
+
+# Tolerance for f32 matmul-chain accumulation differences.
+TOL = dict(rtol=2e-4, atol=2e-4)
+
+
+def rand(rng, *shape, dtype=np.float32, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape) * scale, dtype)
+
+
+dims = st.integers(min_value=1, max_value=24)
+batches = st.sampled_from([1, 2, 4, 8, 16, 64, 96, 128, 256])
+scales = st.sampled_from([1e-3, 1.0, 1e3])
+
+
+class TestLowrankApply:
+    @settings(max_examples=40, deadline=None)
+    @given(b=batches, m=dims, n=dims, r=dims, scale=scales, seed=st.integers(0, 2**31))
+    def test_matches_ref(self, b, m, n, r, scale, seed):
+        rng = np.random.default_rng(seed)
+        x = rand(rng, b, m, scale=scale)
+        u = rand(rng, m, r)
+        s = rand(rng, r, r)
+        v = rand(rng, n, r)
+        got = K.lowrank_apply_kernel(x, u, s, v)
+        want = ref.lowrank_apply(x, u, s, v)
+        # f32 accumulation order differs between the tiled kernel and the
+        # reference chain; tolerance scales with the contraction length.
+        tol = 2e-4 * max(1.0, float(np.sqrt(r)))
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=5 * tol, atol=tol * scale
+        )
+
+    def test_odd_batch_falls_back_to_unit_block(self):
+        rng = np.random.default_rng(0)
+        x = rand(rng, 7, 5)  # 7 is prime — exercises block=1
+        u, s, v = rand(rng, 5, 3), rand(rng, 3, 3), rand(rng, 4, 3)
+        got = K.lowrank_apply_kernel(x, u, s, v)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(ref.lowrank_apply(x, u, s, v)), **TOL
+        )
+
+    def test_zero_padded_rank_is_exact(self):
+        """Padding factors with zero columns must not change the output —
+        the static-shape AOT contract (DESIGN.md)."""
+        rng = np.random.default_rng(1)
+        x = rand(rng, 32, 10)
+        u, s, v = rand(rng, 10, 3), rand(rng, 3, 3), rand(rng, 12, 3)
+        up = jnp.pad(u, ((0, 0), (0, 5)))
+        sp = jnp.pad(s, ((0, 5), (0, 5)))
+        vp = jnp.pad(v, ((0, 0), (0, 5)))
+        a = K.lowrank_apply_kernel(x, u, s, v)
+        b = K.lowrank_apply_kernel(x, up, sp, vp)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-6)
+
+
+class TestGramProject:
+    @settings(max_examples=40, deadline=None)
+    @given(k=batches, p=dims, q=dims, r=dims, seed=st.integers(0, 2**31))
+    def test_matches_ref(self, k, p, q, r, seed):
+        rng = np.random.default_rng(seed)
+        a = rand(rng, k, p)
+        g = rand(rng, k, q)
+        b = rand(rng, q, r)
+        got = K.gram_project_kernel(a, g, b)
+        want = ref.gram_project(a, g, b)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+    def test_projection_of_basis_gradient(self):
+        """With orthonormal U, V: gram_project(U, U @ C @ V.T, V) == C."""
+        rng = np.random.default_rng(2)
+        u, _ = np.linalg.qr(rng.normal(size=(20, 4)))
+        v, _ = np.linalg.qr(rng.normal(size=(18, 4)))
+        c = rng.normal(size=(4, 4)).astype(np.float32)
+        g = jnp.asarray(u @ c @ v.T, jnp.float32)
+        got = K.gram_project_kernel(
+            jnp.asarray(u, jnp.float32), g, jnp.asarray(v, jnp.float32)
+        )
+        np.testing.assert_allclose(np.asarray(got), c, rtol=1e-4, atol=1e-4)
+
+
+class TestVjp:
+    @settings(max_examples=25, deadline=None)
+    @given(b=st.sampled_from([2, 8, 64, 128]), m=dims, n=dims, r=dims,
+           seed=st.integers(0, 2**31))
+    def test_fused_bwd_matches_ref(self, b, m, n, r, seed):
+        rng = np.random.default_rng(seed)
+        x = rand(rng, b, m)
+        u, s, v = rand(rng, m, r), rand(rng, r, r), rand(rng, n, r)
+        dy = rand(rng, b, n)
+        got = K.lowrank_vjp_kernel(x, u, s, v, dy)
+        want = ref.lowrank_vjp(x, u, s, v, dy)
+        for g, w, name in zip(got, want, ["dx", "du", "ds", "dv"]):
+            np.testing.assert_allclose(
+                np.asarray(g), np.asarray(w), err_msg=name, **TOL
+            )
+
+    def test_custom_vjp_equals_autodiff_of_ref(self):
+        """jax.grad through the Pallas layer == jax.grad through jnp ref."""
+        rng = np.random.default_rng(3)
+        x = rand(rng, 16, 9)
+        u, s, v = rand(rng, 9, 4), rand(rng, 4, 4), rand(rng, 11, 4)
+
+        def loss_kernel(s_, u_, v_):
+            return jnp.sum(jnp.tanh(K.lowrank_layer(x, u_, s_, v_)))
+
+        def loss_ref(s_, u_, v_):
+            return jnp.sum(jnp.tanh(ref.lowrank_apply(x, u_, s_, v_)))
+
+        for argnum in range(3):
+            gk = jax.grad(loss_kernel, argnums=argnum)(s, u, v)
+            gr = jax.grad(loss_ref, argnums=argnum)(s, u, v)
+            np.testing.assert_allclose(
+                np.asarray(gk), np.asarray(gr), err_msg=f"arg{argnum}", **TOL
+            )
+
+
+class TestDtypes:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_forward_dtype_support(self, dtype):
+        rng = np.random.default_rng(4)
+        x = jnp.asarray(rng.normal(size=(8, 6)), dtype)
+        u = jnp.asarray(rng.normal(size=(6, 2)), dtype)
+        s = jnp.asarray(rng.normal(size=(2, 2)), dtype)
+        v = jnp.asarray(rng.normal(size=(5, 2)), dtype)
+        got = K.lowrank_apply_kernel(x, u, s, v)
+        want = ref.lowrank_apply(
+            *(t.astype(jnp.float32) for t in (x, u, s, v))
+        )
+        tol = 1e-4 if dtype == jnp.float32 else 5e-2
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want), rtol=tol, atol=tol
+        )

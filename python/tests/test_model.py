@@ -1,0 +1,271 @@
+"""L2 correctness: model functions, gradient consistency, padding.
+
+Verifies the exported functions the AOT pipeline lowers:
+* forward shapes and finiteness for every registered config,
+* grad_factors == autodiff of a kernel-free reference forward,
+* grad_coeff outputs equal the corresponding subset of grad_factors,
+* dense and factored forwards agree when W = U S Vᵀ,
+* rank zero-padding leaves every gradient block exactly consistent.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels import ref
+
+CFG = M.CONFIGS["test_tiny"]
+
+
+def data(cfg, batch, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(batch, cfg.d_in)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, cfg.classes, size=batch), jnp.int32)
+    return x, y
+
+
+def forward_factored_ref(cfg, params, x):
+    """Kernel-free forward (jnp only) for autodiff cross-checks."""
+    stem, backbone, core, head = M._split(cfg, params, factored=True)
+    h = M._apply_stem(cfg, stem, x)
+    for w, b in backbone:
+        h = jax.nn.relu(h @ w + b)
+    for u, s, v, b in core:
+        h = jax.nn.relu(h + ref.lowrank_apply(h, u, s, v) + b)
+    w, b = head
+    return h @ w + b
+
+
+class TestForward:
+    @pytest.mark.parametrize("name", list(M.CONFIGS))
+    def test_shapes_and_finite(self, name):
+        cfg = M.CONFIGS[name]
+        params = cfg.init_params(jax.random.PRNGKey(0), factored=True)
+        x, _ = data(cfg, cfg.batch, seed=1)
+        logits = M.forward_factored(cfg, params, x)
+        assert logits.shape == (cfg.batch, cfg.classes)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def test_factored_equals_dense_when_w_matches(self):
+        cfg = CFG
+        fparams = cfg.init_params(jax.random.PRNGKey(1), factored=True)
+        # Build dense params with W = U S Vᵀ.
+        dparams = []
+        i = 0
+        for _ in cfg.backbone:
+            dparams += [fparams[i], fparams[i + 1]]
+            i += 2
+        for _ in range(cfg.num_lr):
+            u, s, v, b = fparams[i : i + 4]
+            dparams += [u @ s @ v.T, b]
+            i += 4
+        dparams += [fparams[i], fparams[i + 1]]
+        x, _ = data(cfg, cfg.batch, seed=2)
+        lf = M.forward_factored(cfg, fparams, x)
+        ld = M.forward_dense(cfg, dparams, x)
+        np.testing.assert_allclose(np.asarray(lf), np.asarray(ld), rtol=1e-4, atol=1e-4)
+
+
+class TestGradients:
+    def test_grad_factors_matches_reference_autodiff(self):
+        cfg = CFG
+        params = cfg.init_params(jax.random.PRNGKey(2), factored=True)
+        x, y = data(cfg, cfg.batch, seed=3)
+        out = M.make_grad_factors(cfg)(*params, x, y)
+        loss, grads = out[0], out[1:]
+
+        def ref_loss(ps):
+            return M._ce_loss(forward_factored_ref(cfg, ps, x), y)
+
+        want_loss, want_grads = jax.value_and_grad(ref_loss)(list(params))
+        np.testing.assert_allclose(float(loss), float(want_loss), rtol=1e-5)
+        spec = cfg.param_spec_factored()
+        for g, w, (name, _) in zip(grads, want_grads, spec):
+            np.testing.assert_allclose(
+                np.asarray(g), np.asarray(w), rtol=3e-4, atol=3e-4, err_msg=name
+            )
+
+    def test_grad_coeff_is_subset_of_grad_factors(self):
+        cfg = CFG
+        params = cfg.init_params(jax.random.PRNGKey(3), factored=True)
+        x, y = data(cfg, cfg.batch, seed=4)
+        full = M.make_grad_factors(cfg)(*params, x, y)
+        coeff = M.make_grad_coeff(cfg)(*params, x, y)
+        np.testing.assert_allclose(float(full[0]), float(coeff[0]), rtol=1e-6)
+        spec = cfg.param_spec_factored()
+        kept = [i for i, (n, _) in enumerate(spec) if not n.endswith((".u", ".v"))]
+        for out_i, full_i in enumerate(kept):
+            np.testing.assert_allclose(
+                np.asarray(coeff[1 + out_i]),
+                np.asarray(full[1 + full_i]),
+                rtol=1e-5,
+                atol=1e-6,
+                err_msg=spec[full_i][0],
+            )
+
+    def test_padded_rank_gradients_zero_in_padding(self):
+        """Zero basis columns ⇒ exactly zero gradient blocks there — the
+        invariant that makes static-shape AOT exact (DESIGN.md)."""
+        cfg = CFG
+        params = cfg.init_params(jax.random.PRNGKey(4), factored=True)
+        x, y = data(cfg, cfg.batch, seed=5)
+        out = M.make_grad_factors(cfg)(*params, x, y)
+        grads = out[1:]
+        spec = cfg.param_spec_factored()
+        r_half = cfg.r_pad // 2  # init activates only the first half
+        for g, (name, _) in zip(grads, spec):
+            g = np.asarray(g)
+            if name.endswith(".s"):
+                # Padded rows AND columns of G_S must vanish.
+                assert np.abs(g[r_half:, :]).max() == 0.0, name
+                assert np.abs(g[:, r_half:]).max() == 0.0, name
+            elif name.endswith((".u", ".v")):
+                # G_U = G V Sᵀ: zero S-columns ⇒ zero grad columns.
+                assert np.abs(g[:, r_half:]).max() == 0.0, name
+
+    def test_grad_dense_matches_autodiff(self):
+        cfg = CFG
+        params = cfg.init_params(jax.random.PRNGKey(5), factored=False)
+        x, y = data(cfg, cfg.batch, seed=6)
+        out = M.make_grad_dense(cfg)(*params, x, y)
+
+        def loss_fn(ps):
+            return M._ce_loss(M.forward_dense(cfg, ps, x), y)
+
+        want_loss, want = jax.value_and_grad(loss_fn)(list(params))
+        np.testing.assert_allclose(float(out[0]), float(want_loss), rtol=1e-6)
+        for g, w in zip(out[1:], want):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-5, atol=1e-6)
+
+
+class TestEval:
+    def test_eval_counts(self):
+        cfg = CFG
+        params = cfg.init_params(jax.random.PRNGKey(6), factored=True)
+        x, y = data(cfg, cfg.eval_batch, seed=7)
+        loss_sum, correct = M.make_eval(cfg, factored=True)(*params, x, y)
+        assert loss_sum > 0
+        assert 0 <= float(correct) <= cfg.eval_batch
+        # Cross-check against explicit argmax.
+        logits = M.forward_factored(cfg, params, x)
+        want = float(jnp.sum((jnp.argmax(logits, -1) == y).astype(jnp.float32)))
+        assert float(correct) == want
+
+    def test_perfect_model_gets_everything_right(self):
+        cfg = CFG
+        params = cfg.init_params(jax.random.PRNGKey(7), factored=True)
+        x, _ = data(cfg, cfg.eval_batch, seed=8)
+        logits = M.forward_factored(cfg, params, x)
+        y_self = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        _, correct = M.make_eval(cfg, factored=True)(*params, x, y_self)
+        assert float(correct) == cfg.eval_batch
+
+
+class TestConvStem:
+    def test_conv_config_shapes_and_grads(self):
+        cfg = M.CONFIGS["resnet18_conv"]
+        assert cfg.conv_flat_dim() == 4 * 4 * 16 == 256
+        params = cfg.init_params(jax.random.PRNGKey(9), factored=True)
+        x, y = data(cfg, cfg.batch, seed=10)
+        logits = M.forward_factored(cfg, params, x)
+        assert logits.shape == (cfg.batch, cfg.classes)
+        out = M.make_grad_factors(cfg)(*params, x, y)
+        spec = cfg.param_spec_factored()
+        assert spec[0][0] == "conv0.w"
+        # Conv kernel gradient exists, is finite, and matches autodiff of
+        # an explicit conv reference.
+        g_conv = np.asarray(out[1])
+        assert g_conv.shape == (27, 16)
+        assert np.isfinite(g_conv).all()
+
+        def ref_loss(w2d):
+            ps = list(params)
+            ps[0] = w2d
+            return M._ce_loss(M.forward_factored(cfg, ps, x), y)
+
+        want = jax.grad(ref_loss)(params[0])
+        np.testing.assert_allclose(g_conv, np.asarray(want), rtol=3e-4, atol=3e-4)
+
+    def test_conv_changes_output(self):
+        cfg = M.CONFIGS["resnet18_conv"]
+        params = cfg.init_params(jax.random.PRNGKey(11), factored=True)
+        x, _ = data(cfg, cfg.batch, seed=12)
+        base = M.forward_factored(cfg, params, x)
+        ps = list(params)
+        ps[0] = ps[0] + 0.5
+        moved = M.forward_factored(cfg, ps, x)
+        assert float(jnp.abs(base - moved).max()) > 1e-3
+
+
+class TestAttention:
+    def test_attention_forward_and_grads(self):
+        cfg = M.CONFIGS["vit_attn"]
+        params = cfg.init_params(jax.random.PRNGKey(13), factored=True)
+        x, y = data(cfg, cfg.batch, seed=14)
+        logits = M.forward_factored(cfg, params, x)
+        assert logits.shape == (cfg.batch, cfg.classes)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+        out = M.make_grad_factors(cfg)(*params, x, y)
+        # All four attention matrices receive gradients.
+        spec = cfg.param_spec_factored()
+        s_idx = [i for i, (n, _) in enumerate(spec) if n.endswith(".s")]
+        assert len(s_idx) == 4
+        for i in s_idx:
+            g = np.asarray(out[1 + i])
+            assert np.isfinite(g).all()
+            assert np.abs(g).max() > 0, spec[i][0]
+
+    def test_attention_is_permutation_sensitive(self):
+        # Mean-pooled single-block attention IS permutation-invariant in
+        # tokens only if embeddings are identical; with distinct tokens
+        # swapping two tokens changes intermediate attn but pooled output
+        # stays close — instead verify attention actually mixes tokens:
+        # zeroing one patch must change the logits.
+        cfg = M.CONFIGS["vit_attn"]
+        params = cfg.init_params(jax.random.PRNGKey(15), factored=True)
+        x, _ = data(cfg, cfg.batch, seed=16)
+        base = M.forward_factored(cfg, params, x)
+        p_dim = cfg.d_in // cfg.num_patches
+        x2 = x.at[:, :p_dim].set(0.0)
+        moved = M.forward_factored(cfg, params, x2)
+        assert float(jnp.abs(base - moved).max()) > 1e-4
+
+    def test_attention_dense_factored_agree(self):
+        cfg = M.CONFIGS["vit_attn"]
+        fparams = cfg.init_params(jax.random.PRNGKey(17), factored=True)
+        dparams = []
+        i = 0
+        for _ in cfg.backbone:
+            dparams += [fparams[i], fparams[i + 1]]
+            i += 2
+        for _ in range(cfg.num_lr):
+            u, s, v, b = fparams[i : i + 4]
+            dparams += [u @ s @ v.T, b]
+            i += 4
+        dparams += [fparams[i], fparams[i + 1]]
+        x, _ = data(cfg, cfg.batch, seed=18)
+        lf = M.forward_factored(cfg, fparams, x)
+        ld = M.forward_dense(cfg, dparams, x)
+        np.testing.assert_allclose(np.asarray(lf), np.asarray(ld), rtol=2e-3, atol=2e-3)
+
+
+class TestTraining:
+    def test_sgd_on_coeff_reduces_loss(self):
+        """A few S̃-only SGD steps (the FeDLRT client inner loop) must
+        reduce the training loss — end-to-end sanity of the L1+L2 stack."""
+        cfg = CFG
+        params = cfg.init_params(jax.random.PRNGKey(8), factored=True)
+        x, y = data(cfg, cfg.batch, seed=9)
+        grad_coeff = M.make_grad_coeff(cfg)
+        spec = cfg.param_spec_factored()
+        kept = [i for i, (n, _) in enumerate(spec) if not n.endswith((".u", ".v"))]
+        losses = []
+        ps = list(params)
+        for _ in range(25):
+            out = grad_coeff(*ps, x, y)
+            losses.append(float(out[0]))
+            for out_i, pi in enumerate(kept):
+                ps[pi] = ps[pi] - 0.05 * out[1 + out_i]
+        assert losses[-1] < losses[0] * 0.8, losses[:3] + losses[-3:]

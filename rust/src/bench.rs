@@ -1,0 +1,76 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets use `harness = false` and drive experiments via
+//! this module: warmup, repeated timing, and robust statistics.
+
+use crate::util::{mean, median, stddev, Stopwatch};
+
+/// Timing statistics of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub stddev_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchStats {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} {:>10.3} ms/iter (median {:.3}, min {:.3}, ±{:.3}, n={})",
+            self.name,
+            self.mean_s * 1e3,
+            self.median_s * 1e3,
+            self.min_s * 1e3,
+            self.stddev_s * 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Time `f` with `warmup` throwaway runs then `iters` measured runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let w = Stopwatch::start();
+        f();
+        times.push(w.elapsed_s());
+    }
+    BenchStats {
+        name: name.to_string(),
+        iters: times.len(),
+        mean_s: mean(&times),
+        median_s: median(&times),
+        stddev_s: stddev(&times),
+        min_s: times.iter().cloned().fold(f64::INFINITY, f64::min),
+    }
+}
+
+/// True when FEDLRT_BENCH_FULL=1 — run paper-scale parameters.
+pub fn full_scale() -> bool {
+    std::env::var("FEDLRT_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_sane_stats() {
+        let s = bench("noop-ish", 1, 5, || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            std::hint::black_box(acc);
+        });
+        assert_eq!(s.iters, 5);
+        assert!(s.mean_s >= 0.0 && s.min_s <= s.mean_s + 1e-12);
+        assert!(s.report().contains("noop-ish"));
+    }
+}

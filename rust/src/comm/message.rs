@@ -1,0 +1,57 @@
+//! Protocol payload descriptors.
+//!
+//! The coordinator describes every transfer with a [`Payload`] so the
+//! network layer can count floats-on-the-wire exactly. The variants map
+//! one-to-one onto the messages of Algorithms 1/3/4/5:
+//!
+//! | Algorithm step | Payload |
+//! |---|---|
+//! | broadcast {Uᵗ,Vᵗ,Sᵗ} | two `Matrix{n,r}` + `CoeffDiag(r)` |
+//! | aggregate {G_U, G_V} | two `Matrix{n,r}` |
+//! | broadcast {Ū, V̄} | two `Matrix{n,a}` |
+//! | aggregate / broadcast G_S̃ | `Matrix{2r,2r}` |
+//! | aggregate S̃_c^{s*} | `Matrix{2r,2r}` |
+//! | FedAvg/FedLin dense W, G_W | `Matrix{n,n}` |
+
+/// Size descriptor of one message.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Payload {
+    /// A dense matrix of the given shape.
+    Matrix { rows: usize, cols: usize },
+    /// A diagonal coefficient matrix (only the diagonal is sent —
+    /// after truncation `S = Σ` is diagonal, Algorithm 1 line 18).
+    CoeffDiag(usize),
+    /// A raw float count (scalars, metadata treated as float-equivalent).
+    Floats(u64),
+    /// A batch of payloads sent together in one message.
+    Batch2(&'static str, u64, u64),
+}
+
+impl Payload {
+    /// Number of floats on the wire.
+    pub fn floats(&self) -> u64 {
+        match *self {
+            Payload::Matrix { rows, cols } => (rows * cols) as u64,
+            Payload::CoeffDiag(r) => r as u64,
+            Payload::Floats(n) => n,
+            Payload::Batch2(_, a, b) => a + b,
+        }
+    }
+
+    pub fn matrix(rows: usize, cols: usize) -> Payload {
+        Payload::Matrix { rows, cols }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes() {
+        assert_eq!(Payload::matrix(512, 16).floats(), 8192);
+        assert_eq!(Payload::CoeffDiag(16).floats(), 16);
+        assert_eq!(Payload::Floats(7).floats(), 7);
+        assert_eq!(Payload::Batch2("x", 3, 4).floats(), 7);
+    }
+}

@@ -1,0 +1,223 @@
+//! Simulated federated network with exact communication accounting.
+//!
+//! The paper's evaluation reports *communication cost* — floats on the
+//! wire per aggregation round (Table 1, Fig 3) and cumulative savings
+//! (Figs 5–8). This module is the substrate that measures it: every
+//! server↔client transfer in the coordinator goes through [`Network`],
+//! which records message sizes per round and per direction and can
+//! convert volumes to wall-clock estimates under a bandwidth/latency
+//! model (used for the Fig 3 cost curves).
+
+pub mod message;
+
+pub use message::Payload;
+
+/// Bandwidth/latency model of one server↔client link.
+///
+/// Defaults approximate a WAN edge-client uplink: 100 Mbit/s, 20 ms RTT —
+/// the regime the paper's "communication is the bottleneck" motivation
+/// assumes. The cost curves only depend on it through a monotone scaling.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkModel {
+    /// Bytes per second.
+    pub bandwidth: f64,
+    /// Per-message latency in seconds.
+    pub latency: f64,
+}
+
+impl Default for LinkModel {
+    fn default() -> Self {
+        LinkModel { bandwidth: 100e6 / 8.0, latency: 20e-3 }
+    }
+}
+
+impl LinkModel {
+    /// Transfer time of `bytes` over this link.
+    pub fn transfer_time(&self, bytes: u64) -> f64 {
+        self.latency + bytes as f64 / self.bandwidth
+    }
+}
+
+/// Communication record of a single aggregation round.
+#[derive(Debug, Clone, Default)]
+pub struct RoundComm {
+    /// Floats broadcast server→clients (counted once — broadcast).
+    pub broadcast_floats: u64,
+    /// Floats uplinked clients→server (counted per client).
+    pub aggregate_floats: u64,
+    /// Number of communication *rounds* (synchronous round trips),
+    /// the paper's "Com. Rounds" column of Table 1.
+    pub round_trips: u64,
+    /// Per-message log (direction, label, floats) for debugging.
+    pub log: Vec<(Direction, &'static str, u64)>,
+}
+
+/// Message direction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    /// Server → all clients.
+    Broadcast,
+    /// Client → server (aggregated).
+    Aggregate,
+}
+
+impl RoundComm {
+    /// Total floats on the wire this round (broadcast counted once,
+    /// uplink counted per client — matches Table 1's per-client cost
+    /// when divided by C).
+    pub fn total_floats(&self) -> u64 {
+        self.broadcast_floats + self.aggregate_floats
+    }
+
+    /// Per-client download+upload volume in floats: what one edge device
+    /// pays (broadcast counted once per client, uplink its own share).
+    pub fn per_client_floats(&self, num_clients: usize) -> f64 {
+        self.broadcast_floats as f64 + self.aggregate_floats as f64 / num_clients as f64
+    }
+
+    /// Floats attributable to messages whose label satisfies `pred` —
+    /// used to separate compressed-layer traffic from dense-parameter
+    /// traffic (the paper's footnote-6 accounting).
+    pub fn floats_matching(&self, mut pred: impl FnMut(&str) -> bool) -> u64 {
+        self.log.iter().filter(|(_, label, _)| pred(label)).map(|(_, _, f)| f).sum()
+    }
+}
+
+/// The simulated network: records all traffic of a training run.
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub num_clients: usize,
+    /// Clients participating in the current round (≤ num_clients);
+    /// aggregation volume scales with this.
+    pub active_clients: usize,
+    pub link: LinkModel,
+    current: RoundComm,
+    /// Completed rounds.
+    pub rounds: Vec<RoundComm>,
+    /// Bytes per float on the wire (4 = f32, what deployments send).
+    pub bytes_per_float: u64,
+}
+
+impl Network {
+    pub fn new(num_clients: usize) -> Network {
+        Network {
+            num_clients,
+            active_clients: num_clients,
+            link: LinkModel::default(),
+            current: RoundComm::default(),
+            rounds: Vec::new(),
+            bytes_per_float: 4,
+        }
+    }
+
+    /// Record a server→clients broadcast of `payload`.
+    pub fn broadcast(&mut self, label: &'static str, payload: &Payload) {
+        let f = payload.floats();
+        self.current.broadcast_floats += f;
+        self.current.log.push((Direction::Broadcast, label, f));
+    }
+
+    /// Set the number of participating clients for this round.
+    pub fn set_active_clients(&mut self, n: usize) {
+        self.active_clients = n.clamp(1, self.num_clients);
+    }
+
+    /// Record a clients→server aggregation where *each participating*
+    /// client uploads a message of `payload`'s size.
+    pub fn aggregate(&mut self, label: &'static str, payload: &Payload) {
+        let f = payload.floats() * self.active_clients as u64;
+        self.current.aggregate_floats += f;
+        self.current.log.push((Direction::Aggregate, label, f));
+    }
+
+    /// Mark the end of one synchronous round trip (broadcast+aggregate
+    /// pair). Table 1 counts these as "Com. Rounds".
+    pub fn end_round_trip(&mut self) {
+        self.current.round_trips += 1;
+    }
+
+    /// Close the current aggregation round and start a new record.
+    pub fn end_round(&mut self) -> &RoundComm {
+        let done = std::mem::take(&mut self.current);
+        self.rounds.push(done);
+        self.rounds.last().unwrap()
+    }
+
+    /// Cumulative floats over all completed rounds.
+    pub fn total_floats(&self) -> u64 {
+        self.rounds.iter().map(|r| r.total_floats()).sum()
+    }
+
+    /// Cumulative per-client floats (download + own upload share).
+    pub fn per_client_floats(&self) -> f64 {
+        self.rounds.iter().map(|r| r.per_client_floats(self.num_clients)).sum()
+    }
+
+    /// Wall-clock estimate of all communication under the link model.
+    /// Each round trip costs latency; volume is serialized per direction
+    /// (server link is the bottleneck for aggregation).
+    pub fn estimated_comm_time(&self) -> f64 {
+        self.rounds
+            .iter()
+            .map(|r| {
+                let bytes_down = r.broadcast_floats * self.bytes_per_float;
+                let bytes_up = r.aggregate_floats * self.bytes_per_float;
+                self.link.transfer_time(bytes_down)
+                    + self.link.transfer_time(bytes_up)
+                    + self.link.latency * r.round_trips as f64
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accounting_broadcast_vs_aggregate() {
+        let mut net = Network::new(4);
+        net.broadcast("factors", &Payload::Matrix { rows: 10, cols: 3 });
+        net.aggregate("grads", &Payload::Matrix { rows: 10, cols: 3 });
+        net.end_round_trip();
+        let round = net.end_round();
+        assert_eq!(round.broadcast_floats, 30);
+        assert_eq!(round.aggregate_floats, 30 * 4);
+        assert_eq!(round.round_trips, 1);
+        assert_eq!(round.total_floats(), 30 + 120);
+        assert!((round.per_client_floats(4) - (30.0 + 30.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn multi_round_totals() {
+        let mut net = Network::new(2);
+        for _ in 0..3 {
+            net.broadcast("w", &Payload::Floats(100));
+            net.aggregate("w", &Payload::Floats(100));
+            net.end_round_trip();
+            net.end_round();
+        }
+        assert_eq!(net.rounds.len(), 3);
+        assert_eq!(net.total_floats(), 3 * (100 + 200));
+    }
+
+    #[test]
+    fn link_time_monotone_in_bytes() {
+        let link = LinkModel::default();
+        assert!(link.transfer_time(1000) < link.transfer_time(1_000_000));
+        assert!(link.transfer_time(0) >= link.latency);
+    }
+
+    #[test]
+    fn comm_time_positive_and_scales() {
+        let mut a = Network::new(4);
+        a.broadcast("x", &Payload::Floats(1_000_000));
+        a.end_round_trip();
+        a.end_round();
+        let mut b = Network::new(4);
+        b.broadcast("x", &Payload::Floats(1_000));
+        b.end_round_trip();
+        b.end_round();
+        assert!(a.estimated_comm_time() > b.estimated_comm_time());
+    }
+}

@@ -1,0 +1,146 @@
+//! Training configuration shared by all federated algorithms.
+
+use crate::opt::{LrSchedule, OptimizerKind, SgdConfig};
+use crate::util::json::Json;
+
+/// Variance-correction mode for FeDLRT (§3.1) and FedLin.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VarCorrection {
+    /// No correction — FedAvg-style local iterations (eq. 7).
+    None,
+    /// Full correction on the augmented coefficients (eq. 8, Algorithm 1
+    /// with var_cor = true; costs a third communication round).
+    Full,
+    /// Simplified correction on the non-augmented block only (eq. 9,
+    /// Algorithm 5; folds into the basis-gradient round — two rounds).
+    Simplified,
+}
+
+impl VarCorrection {
+    pub fn label(&self) -> &'static str {
+        match self {
+            VarCorrection::None => "no_vc",
+            VarCorrection::Full => "full_vc",
+            VarCorrection::Simplified => "simpl_vc",
+        }
+    }
+}
+
+/// Low-rank behaviour of FeDLRT.
+#[derive(Debug, Clone, Copy)]
+pub struct RankConfig {
+    /// Initial rank `r` of every low-rank layer.
+    pub initial_rank: usize,
+    /// Hard cap on the rank *after truncation*; augmentation may touch
+    /// `2·max_rank` transiently. Keeps static AOT shapes valid.
+    pub max_rank: usize,
+    /// Relative truncation tolerance `τ` (ϑ = τ‖S̃*‖, §4.1).
+    pub tau: f64,
+}
+
+impl Default for RankConfig {
+    fn default() -> Self {
+        RankConfig { initial_rank: 8, max_rank: 32, tau: 0.01 }
+    }
+}
+
+/// Complete configuration of a federated training run.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Aggregation rounds `T`.
+    pub rounds: usize,
+    /// Local iterations `s*` per round.
+    pub local_iters: usize,
+    /// Learning-rate schedule (per aggregation round).
+    pub lr: LrSchedule,
+    /// Client optimizer (SGD+momentum or Adam; Table 2).
+    pub opt: OptimizerKind,
+    /// Variance correction mode.
+    pub var_correction: VarCorrection,
+    /// Low-rank settings (ignored by dense baselines).
+    pub rank: RankConfig,
+    /// RNG seed (weights init + any stochasticity).
+    pub seed: u64,
+    /// Evaluate global loss every `eval_every` rounds (1 = every round).
+    pub eval_every: usize,
+    /// Fraction of clients sampled per round (client selection, à la
+    /// [26, 6, 29]); 1.0 = full participation (the paper's analysis
+    /// setting). Sampled deterministically from `seed` per round.
+    pub participation: f64,
+    /// Straggler model: client `c` runs `s*·(1 − jitter·u_{t,c})` local
+    /// iterations (u uniform per round/client). 0.0 = the paper's
+    /// uniform `s*`; footnote 3 notes the analysis extends to
+    /// client-dependent counts.
+    pub straggler_jitter: f64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            rounds: 100,
+            local_iters: 10,
+            lr: LrSchedule::Constant(1e-3),
+            opt: OptimizerKind::Sgd(SgdConfig::default()),
+            var_correction: VarCorrection::Full,
+            rank: RankConfig::default(),
+            seed: 0,
+            eval_every: 1,
+            participation: 1.0,
+            straggler_jitter: 0.0,
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("rounds", self.rounds)
+            .set("local_iters", self.local_iters)
+            .set("var_correction", self.var_correction.label())
+            .set("initial_rank", self.rank.initial_rank)
+            .set("max_rank", self.rank.max_rank)
+            .set("tau", self.rank.tau)
+            .set("seed", self.seed)
+            .set("participation", self.participation)
+            .set("straggler_jitter", self.straggler_jitter);
+        match self.opt {
+            OptimizerKind::Sgd(sgd) => {
+                o.set("optimizer", "sgd")
+                    .set("momentum", sgd.momentum)
+                    .set("weight_decay", sgd.weight_decay);
+            }
+            OptimizerKind::Adam { weight_decay } => {
+                o.set("optimizer", "adam").set("weight_decay", weight_decay);
+            }
+        }
+        match self.lr {
+            LrSchedule::Constant(l) => {
+                o.set("lr", l);
+            }
+            LrSchedule::Cosine { start, end, total } => {
+                o.set("lr_start", start).set("lr_end", end).set("lr_total", total);
+            }
+        }
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels() {
+        assert_eq!(VarCorrection::None.label(), "no_vc");
+        assert_eq!(VarCorrection::Full.label(), "full_vc");
+        assert_eq!(VarCorrection::Simplified.label(), "simpl_vc");
+    }
+
+    #[test]
+    fn config_json_echo() {
+        let cfg = TrainConfig::default();
+        let j = cfg.to_json();
+        assert_eq!(j.usize_or("rounds", 0), 100);
+        assert_eq!(j.str_or("var_correction", ""), "full_vc");
+    }
+}

@@ -1,0 +1,27 @@
+//! The federated coordinator — the paper's system contribution (L3).
+//!
+//! Round engines for every algorithm in the paper:
+//!
+//! | Module | Algorithm | Paper |
+//! |---|---|---|
+//! | [`fedlrt`] | FeDLRT, all three variance-correction modes | Alg 1 / Alg 5 / eq. 7 |
+//! | [`dense_baselines`] | FedAvg, FedLin | Alg 3 / Alg 4 |
+//! | [`fedlrt_naive`] | per-client-basis low-rank FL | Alg 6 |
+//!
+//! All engines are generic over [`crate::models::FedProblem`], route
+//! every transfer through [`crate::comm::Network`] for exact
+//! communication accounting, and emit [`crate::metrics::RunRecord`]s.
+
+pub mod config;
+pub mod dense_baselines;
+pub mod fedlr;
+pub mod fedlrt;
+pub mod fedlrt_naive;
+pub mod presets;
+pub mod sampling;
+
+pub use config::{RankConfig, TrainConfig, VarCorrection};
+pub use dense_baselines::{run_dense, DenseAlgo};
+pub use fedlr::run_fedlr;
+pub use fedlrt::run_fedlrt;
+pub use fedlrt_naive::run_fedlrt_naive;

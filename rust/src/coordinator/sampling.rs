@@ -1,0 +1,94 @@
+//! Client sampling and straggler modelling.
+//!
+//! The paper analyses full participation with a uniform `s*` and notes
+//! (footnote 3) that the analysis extends to client-dependent local
+//! iteration counts; partial participation is the standard production
+//! relaxation [26, 6, 29]. Both are deterministic functions of
+//! `(seed, round)` so runs stay reproducible.
+
+use crate::util::rng::Rng;
+
+use super::config::TrainConfig;
+
+/// The clients participating in round `t`: a uniformly random subset of
+/// size `max(1, ⌈fraction·C⌉)`, sorted for deterministic iteration.
+pub fn sample_active(c_num: usize, fraction: f64, seed: u64, round: usize) -> Vec<usize> {
+    let take = ((fraction * c_num as f64).ceil() as usize).clamp(1, c_num);
+    if take == c_num {
+        return (0..c_num).collect();
+    }
+    let mut rng = Rng::new(seed ^ 0x5E1E_C700).split(round as u64);
+    let mut perm = rng.permutation(c_num);
+    perm.truncate(take);
+    perm.sort_unstable();
+    perm
+}
+
+/// Local iterations for client `c` in round `t` under the straggler
+/// model: `s*·(1 − jitter·u)` with `u ~ U[0,1)` per (round, client).
+pub fn local_iters_for(cfg: &TrainConfig, round: usize, client: usize) -> usize {
+    if cfg.straggler_jitter <= 0.0 {
+        return cfg.local_iters;
+    }
+    let mut rng =
+        Rng::new(cfg.seed ^ 0x57A6_6000).split((round as u64) << 20 | client as u64);
+    let u = rng.uniform();
+    let scaled = cfg.local_iters as f64 * (1.0 - cfg.straggler_jitter.clamp(0.0, 1.0) * u);
+    (scaled.round() as usize).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_participation_returns_everyone() {
+        assert_eq!(sample_active(5, 1.0, 1, 3), vec![0, 1, 2, 3, 4]);
+        assert_eq!(sample_active(5, 2.0, 1, 3), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn partial_participation_sizes_and_determinism() {
+        let a = sample_active(10, 0.3, 7, 2);
+        let b = sample_active(10, 0.3, 7, 2);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 3);
+        assert!(a.windows(2).all(|w| w[0] < w[1]));
+        // Different rounds sample different subsets (almost surely).
+        let c = sample_active(10, 0.3, 7, 3);
+        assert_ne!(a, c);
+        // Never empty.
+        assert_eq!(sample_active(10, 0.0, 7, 0).len(), 1);
+    }
+
+    #[test]
+    fn all_clients_eventually_selected() {
+        let mut seen = vec![false; 8];
+        for t in 0..200 {
+            for c in sample_active(8, 0.25, 9, t) {
+                seen[c] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "{seen:?}");
+    }
+
+    #[test]
+    fn straggler_iters_bounded_and_deterministic() {
+        let cfg = TrainConfig {
+            local_iters: 20,
+            straggler_jitter: 0.5,
+            seed: 3,
+            ..TrainConfig::default()
+        };
+        for t in 0..10 {
+            for c in 0..6 {
+                let a = local_iters_for(&cfg, t, c);
+                assert_eq!(a, local_iters_for(&cfg, t, c));
+                assert!((10..=20).contains(&a), "iters {a}");
+            }
+        }
+        // jitter 0 → exact s*.
+        let none = TrainConfig { local_iters: 20, ..TrainConfig::default() };
+        assert_eq!(local_iters_for(&none, 0, 0), 20);
+    }
+}

@@ -1,0 +1,246 @@
+//! Analytic compute / memory / communication cost model (Table 1, Fig 3).
+//!
+//! Closed-form per-round costs for one `n×n` layer at rank `r`, `s*`
+//! local iterations, batch `b` — exactly the asymptotic expressions of
+//! Table 1, evaluated numerically for the Fig 3 scaling curves. Leading
+//! constants follow the paper's own accounting (e.g. FedAvg client
+//! compute `s*·b·n²`, FeDLRT client compute `s*·b·(4nr + 4r²)`).
+
+/// The methods compared in Table 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    FedAvg,
+    FedLin,
+    FedLrtNoVc,
+    FedLrtSimplifiedVc,
+    FedLrtFullVc,
+    /// FeDLR [31]: client factorizes the full matrix (n³ SVD), server
+    /// reconstructs; communication is factor-sized.
+    FedLr,
+    /// Riemannian FL [44]: client works on the full matrix with manifold
+    /// retractions; factor-sized communication.
+    RiemannianFl,
+}
+
+pub const ALL_METHODS: [Method; 7] = [
+    Method::FedAvg,
+    Method::FedLin,
+    Method::FedLrtNoVc,
+    Method::FedLrtSimplifiedVc,
+    Method::FedLrtFullVc,
+    Method::FedLr,
+    Method::RiemannianFl,
+];
+
+impl Method {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Method::FedAvg => "FedAvg",
+            Method::FedLin => "FedLin",
+            Method::FedLrtNoVc => "FeDLRT w/o var-cor",
+            Method::FedLrtSimplifiedVc => "FeDLRT simpl. var-cor",
+            Method::FedLrtFullVc => "FeDLRT full var-cor",
+            Method::FedLr => "FeDLR [31]",
+            Method::RiemannianFl => "Riemannian FL [44]",
+        }
+    }
+
+    pub fn is_low_rank(&self) -> bool {
+        !matches!(self, Method::FedAvg | Method::FedLin)
+    }
+
+    pub fn has_variance_correction(&self) -> bool {
+        matches!(
+            self,
+            Method::FedLin | Method::FedLrtSimplifiedVc | Method::FedLrtFullVc
+        )
+    }
+
+    pub fn is_rank_adaptive(&self) -> bool {
+        matches!(
+            self,
+            Method::FedLrtNoVc
+                | Method::FedLrtSimplifiedVc
+                | Method::FedLrtFullVc
+                | Method::FedLr
+                | Method::RiemannianFl
+        )
+    }
+}
+
+/// Problem-size parameters of the cost model.
+#[derive(Debug, Clone, Copy)]
+pub struct CostParams {
+    /// Layer dimension (`W ∈ R^{n×n}`).
+    pub n: usize,
+    /// Current rank.
+    pub r: usize,
+    /// Local iterations per round.
+    pub s_star: usize,
+    /// Mini-batch size.
+    pub b: usize,
+}
+
+/// Per-round costs of one method (floats / flops, per Table 1 rows).
+#[derive(Debug, Clone, Copy)]
+pub struct Costs {
+    /// Client compute (flops).
+    pub client_compute: f64,
+    /// Client memory (floats).
+    pub client_memory: f64,
+    /// Server compute (flops).
+    pub server_compute: f64,
+    /// Server memory (floats).
+    pub server_memory: f64,
+    /// Communication volume per round (floats, down+up per client).
+    pub comm_cost: f64,
+    /// Synchronous communication rounds.
+    pub comm_rounds: u32,
+}
+
+/// Evaluate Table 1's cost expressions.
+pub fn costs(method: Method, p: CostParams) -> Costs {
+    let n = p.n as f64;
+    let r = p.r as f64;
+    let s = p.s_star as f64;
+    let b = p.b as f64;
+    match method {
+        Method::FedAvg => Costs {
+            client_compute: s * b * n * n,
+            client_memory: 2.0 * n * n,
+            server_compute: n * n,
+            server_memory: 2.0 * n * n,
+            comm_cost: 2.0 * n * n,
+            comm_rounds: 1,
+        },
+        Method::FedLin => Costs {
+            client_compute: s * b * n * n,
+            client_memory: 2.0 * n * n,
+            server_compute: n * n,
+            server_memory: 2.0 * n * n,
+            comm_cost: 4.0 * n * n,
+            comm_rounds: 2,
+        },
+        Method::FedLrtNoVc => Costs {
+            client_compute: s * b * (4.0 * n * r + 4.0 * r * r),
+            client_memory: 4.0 * (n * r + 2.0 * r * r),
+            server_compute: 2.0 * n * r + (8.0 + 4.0 * n) * r * r + 8.0 * r * r * r,
+            server_memory: 2.0 * n * r + 4.0 * r * r,
+            comm_cost: 6.0 * n * r + 6.0 * r * r,
+            comm_rounds: 2,
+        },
+        Method::FedLrtSimplifiedVc => Costs {
+            client_compute: s * b * (4.0 * n * r + 4.0 * r * r) + r * r,
+            client_memory: 4.0 * (n * r + 2.0 * r * r),
+            server_compute: 2.0 * n * r + (8.0 + 4.0 * n) * r * r + 8.0 * r * r * r,
+            server_memory: 2.0 * n * r + 4.0 * r * r,
+            comm_cost: 6.0 * n * r + 8.0 * r * r,
+            comm_rounds: 2,
+        },
+        Method::FedLrtFullVc => Costs {
+            client_compute: s * b * (4.0 * n * r + 4.0 * r * r) + 4.0 * r * r,
+            client_memory: 4.0 * (n * r + 2.0 * r * r),
+            server_compute: 2.0 * n * r + (8.0 + 4.0 * n) * r * r + 8.0 * r * r * r,
+            server_memory: 2.0 * n * r + 4.0 * r * r,
+            comm_cost: 6.0 * n * r + 10.0 * r * r,
+            comm_rounds: 3,
+        },
+        Method::FedLr => Costs {
+            client_compute: s * b * n * n + n * n * n, // full grad + n³ SVD
+            client_memory: 2.0 * n * n,
+            server_compute: n * n + n * n * n, // reconstruct + full SVD
+            server_memory: 4.0 * n * r,
+            comm_cost: 4.0 * n * r,
+            comm_rounds: 1,
+        },
+        Method::RiemannianFl => Costs {
+            client_compute: 2.0 * n * n * r + 4.0 * n * r * r + 2.0 * n * r,
+            client_memory: 2.0 * n * n,
+            server_compute: 2.0 * n * r + n * n * r,
+            server_memory: 4.0 * n * r,
+            comm_cost: 4.0 * n * r,
+            comm_rounds: 1,
+        },
+    }
+}
+
+/// The rank below which FeDLRT's communication beats the dense method's
+/// (the "amortization point" of Fig 3): smallest integer `r` with
+/// `comm(FeDLRT, r) < comm(dense)`. Returns `None` if never.
+pub fn comm_amortization_rank(method: Method, dense: Method, n: usize) -> Option<usize> {
+    // Fig 3's statement is about where costs *cross* as r grows, so we
+    // look for the largest r that still wins, scanning from full rank.
+    let base = costs(dense, CostParams { n, r: 0, s_star: 1, b: 1 }).comm_cost;
+    let mut last_win = None;
+    for r in 1..=n {
+        let c = costs(method, CostParams { n, r, s_star: 1, b: 1 }).comm_cost;
+        if c < base {
+            last_win = Some(r);
+        }
+    }
+    last_win
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const P: CostParams = CostParams { n: 512, r: 32, s_star: 1, b: 1 };
+
+    #[test]
+    fn lowrank_methods_cheaper_at_small_rank() {
+        let dense = costs(Method::FedLin, P);
+        for m in [Method::FedLrtNoVc, Method::FedLrtSimplifiedVc, Method::FedLrtFullVc] {
+            let c = costs(m, P);
+            assert!(c.comm_cost < dense.comm_cost, "{}", m.label());
+            assert!(c.client_compute < dense.client_compute, "{}", m.label());
+            assert!(c.client_memory < dense.client_memory, "{}", m.label());
+        }
+    }
+
+    #[test]
+    fn fedlrt_server_scales_linearly_in_n() {
+        // Table 1's headline: FeDLRT is the only low-rank scheme whose
+        // *server* compute is O(n) (the SVD is 2r×2r, not n×n).
+        let c1 = costs(Method::FedLrtFullVc, CostParams { n: 512, ..P });
+        let c2 = costs(Method::FedLrtFullVc, CostParams { n: 1024, ..P });
+        let ratio = c2.server_compute / c1.server_compute;
+        assert!(ratio < 2.2, "server compute ratio {ratio} not ~linear");
+        // Whereas FeDLR's server cost is cubic.
+        let d1 = costs(Method::FedLr, CostParams { n: 512, ..P });
+        let d2 = costs(Method::FedLr, CostParams { n: 1024, ..P });
+        assert!(d2.server_compute / d1.server_compute > 6.0);
+    }
+
+    #[test]
+    fn variance_correction_ordering() {
+        let no = costs(Method::FedLrtNoVc, P).comm_cost;
+        let simpl = costs(Method::FedLrtSimplifiedVc, P).comm_cost;
+        let full = costs(Method::FedLrtFullVc, P).comm_cost;
+        assert!(no < simpl && simpl < full);
+        assert_eq!(costs(Method::FedLrtFullVc, P).comm_rounds, 3);
+        assert_eq!(costs(Method::FedLrtSimplifiedVc, P).comm_rounds, 2);
+    }
+
+    #[test]
+    fn amortization_point_near_40_percent_of_n512() {
+        // Fig 3: "costs drop by orders of magnitude after the
+        // amortization point of r ≈ 200, which is 40% of full rank" for
+        // n=512 (communication, FeDLRT vs FedLin).
+        let r = comm_amortization_rank(Method::FedLrtNoVc, Method::FedLin, 512)
+            .expect("should amortize");
+        assert!(
+            (150..=300).contains(&r),
+            "amortization rank {r} outside Fig 3's ~200 ballpark"
+        );
+    }
+
+    #[test]
+    fn table_flags() {
+        assert!(!Method::FedAvg.is_low_rank());
+        assert!(Method::FedLin.has_variance_correction());
+        assert!(!Method::FedAvg.is_rank_adaptive());
+        assert!(Method::FedLrtFullVc.is_rank_adaptive());
+        assert_eq!(ALL_METHODS.len(), 7);
+    }
+}

@@ -1,0 +1,14 @@
+//! Datasets and client partitioners.
+//!
+//! The paper's vision benchmarks use CIFAR10/CIFAR100; this environment
+//! has no network access and a CPU-only budget, so [`vision`] provides a
+//! synthetic teacher-generated classification dataset with the same
+//! federated structure (shardable, label-skewable, augmentable). See
+//! DESIGN.md §Substitutions for why this preserves the paper's
+//! measurements.
+
+pub mod partition;
+pub mod vision;
+
+pub use partition::{dirichlet_partition, uniform_partition};
+pub use vision::VisionDataset;

@@ -1,0 +1,166 @@
+//! Client partitioners: how the global dataset is split across clients.
+//!
+//! * [`uniform_partition`] — the paper's §4.2 setup ("training data is
+//!   equally partitioned across clients"), iid shards.
+//! * [`dirichlet_partition`] — label-skew heterogeneity à la common FL
+//!   benchmarks (smaller α ⇒ more skew); used by the heterogeneity
+//!   ablations beyond the paper's main figures.
+
+use crate::util::rng::Rng;
+
+/// Shuffle indices and split into `c` equal shards (remainder dropped so
+/// all clients hold the same count, matching the paper's uniform setup).
+pub fn uniform_partition(n: usize, c: usize, rng: &mut Rng) -> Vec<Vec<usize>> {
+    assert!(c >= 1 && n >= c, "need at least one sample per client");
+    let mut idx = rng.permutation(n);
+    let per = n / c;
+    idx.truncate(per * c);
+    idx.chunks(per).map(|ch| ch.to_vec()).collect()
+}
+
+/// Label-skewed partition: for each class, split its samples across
+/// clients with Dirichlet(α) proportions. Guarantees every client ends
+/// up with at least `min_per_client` samples by round-robin top-up.
+pub fn dirichlet_partition(
+    labels: &[i32],
+    classes: usize,
+    c: usize,
+    alpha: f64,
+    min_per_client: usize,
+    rng: &mut Rng,
+) -> Vec<Vec<usize>> {
+    assert!(c >= 1 && alpha > 0.0);
+    let mut shards: Vec<Vec<usize>> = vec![Vec::new(); c];
+    for class in 0..classes {
+        let mut members: Vec<usize> =
+            (0..labels.len()).filter(|&i| labels[i] as usize == class).collect();
+        rng.shuffle(&mut members);
+        // Dirichlet(α,…,α) via normalized Gamma(α) draws.
+        let props: Vec<f64> = {
+            let g: Vec<f64> = (0..c).map(|_| gamma_sample(alpha, rng)).collect();
+            let total: f64 = g.iter().sum::<f64>().max(1e-300);
+            g.iter().map(|x| x / total).collect()
+        };
+        // Cut points over the member list.
+        let mut start = 0usize;
+        for (k, p) in props.iter().enumerate() {
+            let take = if k + 1 == c {
+                members.len() - start
+            } else {
+                ((p * members.len() as f64).round() as usize).min(members.len() - start)
+            };
+            shards[k].extend_from_slice(&members[start..start + take]);
+            start += take;
+        }
+    }
+    // Top-up starved clients from the fattest shard.
+    loop {
+        let (min_i, min_len) =
+            shards.iter().enumerate().map(|(i, s)| (i, s.len())).min_by_key(|&(_, l)| l).unwrap();
+        if min_len >= min_per_client {
+            break;
+        }
+        let (max_i, _) =
+            shards.iter().enumerate().map(|(i, s)| (i, s.len())).max_by_key(|&(_, l)| l).unwrap();
+        if max_i == min_i || shards[max_i].len() <= min_per_client {
+            break;
+        }
+        let moved = shards[max_i].pop().unwrap();
+        shards[min_i].push(moved);
+    }
+    shards
+}
+
+/// Marsaglia–Tsang gamma sampling (with α<1 boost).
+fn gamma_sample(alpha: f64, rng: &mut Rng) -> f64 {
+    if alpha < 1.0 {
+        // Boost: Gamma(α) = Gamma(α+1) · U^{1/α}.
+        let u = rng.uniform().max(1e-300);
+        return gamma_sample(alpha + 1.0, rng) * u.powf(1.0 / alpha);
+    }
+    let d = alpha - 1.0 / 3.0;
+    let c = 1.0 / (9.0 * d).sqrt();
+    loop {
+        let x = rng.normal();
+        let v = (1.0 + c * x).powi(3);
+        if v <= 0.0 {
+            continue;
+        }
+        let u = rng.uniform().max(1e-300);
+        if u.ln() < 0.5 * x * x + d - d * v + d * v.ln() {
+            return d * v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_shards_are_disjoint_and_equal() {
+        let mut rng = Rng::new(21);
+        let shards = uniform_partition(103, 4, &mut rng);
+        assert_eq!(shards.len(), 4);
+        let mut all: Vec<usize> = shards.iter().flatten().copied().collect();
+        assert_eq!(all.len(), 100); // 103 → 25×4
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), 100, "shards overlap");
+        for s in &shards {
+            assert_eq!(s.len(), 25);
+        }
+    }
+
+    #[test]
+    fn dirichlet_low_alpha_skews_labels() {
+        let mut rng = Rng::new(23);
+        // 4 classes, balanced labels.
+        let labels: Vec<i32> = (0..400).map(|i| (i % 4) as i32).collect();
+        let skewed = dirichlet_partition(&labels, 4, 4, 0.1, 10, &mut rng);
+        let fair = dirichlet_partition(&labels, 4, 4, 100.0, 10, &mut rng);
+        // Measure skew: per client, max class share.
+        let skew = |shards: &Vec<Vec<usize>>| -> f64 {
+            shards
+                .iter()
+                .map(|s| {
+                    let mut h = [0usize; 4];
+                    for &i in s {
+                        h[labels[i] as usize] += 1;
+                    }
+                    *h.iter().max().unwrap() as f64 / s.len().max(1) as f64
+                })
+                .sum::<f64>()
+                / shards.len() as f64
+        };
+        assert!(skew(&skewed) > skew(&fair) + 0.1, "{} vs {}", skew(&skewed), skew(&fair));
+        // Everyone keeps the minimum.
+        for s in &skewed {
+            assert!(s.len() >= 10);
+        }
+    }
+
+    #[test]
+    fn dirichlet_partition_covers_everything_once() {
+        let mut rng = Rng::new(29);
+        let labels: Vec<i32> = (0..300).map(|i| (i % 3) as i32).collect();
+        let shards = dirichlet_partition(&labels, 3, 5, 0.5, 5, &mut rng);
+        let mut all: Vec<usize> = shards.iter().flatten().copied().collect();
+        all.sort_unstable();
+        let n = all.len();
+        all.dedup();
+        assert_eq!(all.len(), n, "duplicated indices");
+        assert_eq!(n, 300);
+    }
+
+    #[test]
+    fn gamma_sampler_mean() {
+        let mut rng = Rng::new(31);
+        for &alpha in &[0.3, 1.0, 4.0] {
+            let n = 4000;
+            let mean: f64 =
+                (0..n).map(|_| gamma_sample(alpha, &mut rng)).sum::<f64>() / n as f64;
+            assert!((mean - alpha).abs() < 0.15 * alpha.max(1.0), "α={alpha}: mean {mean}");
+        }
+    }
+}

@@ -1,0 +1,37 @@
+//! # FeDLRT — Federated Dynamical Low-Rank Training
+//!
+//! Production-quality reproduction of *"Federated Dynamical Low-Rank
+//! Training with Global Loss Convergence Guarantees"* (Schotthöfer &
+//! Laiu, ORNL, 2024).
+//!
+//! The library is a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the federated coordinator: server/client
+//!   protocol with exact communication accounting, basis augmentation
+//!   (QR), rank-adaptive truncation (SVD), full/simplified variance
+//!   correction, plus the FedAvg / FedLin / naive-low-rank baselines.
+//! * **L2 (`python/compile/model.py`)** — JAX low-rank network
+//!   forward/backward, AOT-lowered to HLO text artifacts at build time.
+//! * **L1 (`python/compile/kernels/`)** — Pallas kernels for the low-rank
+//!   matmul chain and coefficient-gradient projection.
+//!
+//! Python never runs at training time; the [`runtime`] module loads the
+//! AOT artifacts through PJRT and serves them to the coordinator.
+//!
+//! See `DESIGN.md` for the system inventory and experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod bench;
+pub mod comm;
+pub mod coordinator;
+pub mod costmodel;
+pub mod data;
+pub mod linalg;
+pub mod lowrank;
+pub mod metrics;
+pub mod models;
+pub mod nn;
+pub mod opt;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

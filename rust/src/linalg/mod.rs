@@ -1,0 +1,14 @@
+//! Numerical linear algebra substrate: Householder QR and one-sided
+//! Jacobi SVD, built from scratch (no LAPACK in this environment).
+//!
+//! These are the two "GPU-unfriendly" primitives the paper deliberately
+//! places on the server (§3: "all GPU unfriendly parts of the low-rank
+//! scheme, i.e., SVD and QR decomposition … are performed on the
+//! server"): QR powers the basis augmentation, SVD the rank-adaptive
+//! compression.
+
+pub mod qr;
+pub mod svd;
+
+pub use qr::{orthonormality_error, orthonormalize, qr_thin, random_orthonormal};
+pub use svd::{numerical_rank, spectral_norm, svd, Svd};

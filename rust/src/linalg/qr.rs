@@ -1,0 +1,219 @@
+//! Thin (economy) QR factorization via Householder reflections.
+//!
+//! The server-side basis augmentation of FeDLRT (Algorithm 1, line 5 /
+//! eq. 6) orthonormalizes `[U | G_U] ∈ R^{n×2r}`; the paper deliberately
+//! places this "GPU-unfriendly" step on the server. This is the LAPACK
+//! `geqrf`+`orgqr` pair specialized for tall-skinny inputs: Householder
+//! is backward-stable (unlike classical Gram–Schmidt) which matters
+//! because `[U | G_U]` is ill-conditioned whenever the basis gradient is
+//! nearly inside span(U) — exactly the near-stationary regime FeDLRT
+//! converges into.
+
+use crate::tensor::Matrix;
+
+/// Economy QR: returns `(Q, R)` with `Q ∈ R^{m×k}`, `R ∈ R^{k×k}`,
+/// `k = min(m, n)`, `A = Q·R`, `QᵀQ = I`.
+pub fn qr_thin(a: &Matrix) -> (Matrix, Matrix) {
+    let (m, n) = a.shape();
+    let k = m.min(n);
+    let mut r = a.clone(); // workspace: becomes R in the upper triangle
+    // Householder vectors, stored column by column (v[j] has length m-j).
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(k);
+
+    for j in 0..k {
+        // Build the Householder vector for column j (rows j..m).
+        let mut v: Vec<f64> = (j..m).map(|i| r[(i, j)]).collect();
+        let alpha = {
+            let norm = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+            if v[0] >= 0.0 {
+                -norm
+            } else {
+                norm
+            }
+        };
+        if alpha == 0.0 {
+            // Zero column: identity reflector (keep a zero v to stay in sync).
+            vs.push(vec![0.0; m - j]);
+            continue;
+        }
+        v[0] -= alpha;
+        let vnorm2 = v.iter().map(|x| x * x).sum::<f64>();
+        if vnorm2 == 0.0 {
+            vs.push(vec![0.0; m - j]);
+            continue;
+        }
+        // Apply H = I − 2 v vᵀ / (vᵀv) to the trailing block of R.
+        // Two row-major passes (dots, then update) instead of per-column
+        // strided walks — R is row-major, so this streams cache lines.
+        let scale = 2.0 / vnorm2;
+        let mut dots = vec![0.0; n - j];
+        for (idx, vi) in v.iter().enumerate() {
+            let row = &r.row(j + idx)[j..];
+            for (d, &x) in dots.iter_mut().zip(row) {
+                *d += vi * x;
+            }
+        }
+        for d in dots.iter_mut() {
+            *d *= scale;
+        }
+        for (idx, vi) in v.iter().enumerate() {
+            let row = &mut r.row_mut(j + idx)[j..];
+            for (x, &d) in row.iter_mut().zip(&dots) {
+                *x -= d * vi;
+            }
+        }
+        vs.push(v);
+    }
+
+    // Extract the k×n upper-triangular R, then keep the k×k head.
+    let mut r_out = Matrix::zeros(k, n);
+    for i in 0..k {
+        for j in i..n {
+            r_out[(i, j)] = r[(i, j)];
+        }
+    }
+    let r_out = if n > k { r_out.first_cols(k) } else { r_out };
+
+    // Accumulate Q = H_0 H_1 … H_{k-1} · [I_k; 0] by applying reflectors
+    // in reverse to the identity-embedded matrix.
+    let mut q = Matrix::zeros(m, k);
+    for i in 0..k {
+        q[(i, i)] = 1.0;
+    }
+    for j in (0..k).rev() {
+        let v = &vs[j];
+        let vnorm2 = v.iter().map(|x| x * x).sum::<f64>();
+        if vnorm2 == 0.0 {
+            continue;
+        }
+        let scale = 2.0 / vnorm2;
+        let mut dots = vec![0.0; k];
+        for (idx, vi) in v.iter().enumerate() {
+            let row = q.row(j + idx);
+            for (d, &x) in dots.iter_mut().zip(row) {
+                *d += vi * x;
+            }
+        }
+        for d in dots.iter_mut() {
+            *d *= scale;
+        }
+        for (idx, vi) in v.iter().enumerate() {
+            let row = q.row_mut(j + idx);
+            for (x, &d) in row.iter_mut().zip(&dots) {
+                *x -= d * vi;
+            }
+        }
+    }
+
+    (q, r_out)
+}
+
+/// Orthonormalize the columns of `a` (just the Q factor).
+pub fn orthonormalize(a: &Matrix) -> Matrix {
+    qr_thin(a).0
+}
+
+/// Max deviation of `QᵀQ` from the identity — orthonormality diagnostic.
+pub fn orthonormality_error(q: &Matrix) -> f64 {
+    let qtq = crate::tensor::matmul_tn(q, q);
+    let k = qtq.rows();
+    let mut err = 0.0f64;
+    for i in 0..k {
+        for j in 0..k {
+            let want = if i == j { 1.0 } else { 0.0 };
+            err = err.max((qtq[(i, j)] - want).abs());
+        }
+    }
+    err
+}
+
+/// Random matrix with orthonormal columns (QR of a Gaussian).
+pub fn random_orthonormal(m: usize, k: usize, rng: &mut crate::util::rng::Rng) -> Matrix {
+    orthonormalize(&Matrix::randn(m, k, rng))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::matmul;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn qr_reconstructs_and_is_orthonormal() {
+        let mut rng = Rng::new(101);
+        for &(m, n) in &[(5, 3), (20, 4), (16, 16), (7, 9), (64, 8)] {
+            let a = Matrix::randn(m, n, &mut rng);
+            let (q, r) = qr_thin(&a);
+            let k = m.min(n);
+            assert_eq!(q.shape(), (m, k));
+            assert_eq!(r.shape(), (k, k));
+            assert!(orthonormality_error(&q) < 1e-10, "({m},{n})");
+            if n <= m {
+                let qr = matmul(&q, &r);
+                assert!(qr.sub(&a).max_abs() < 1e-10, "({m},{n}) reconstruction");
+            }
+        }
+    }
+
+    #[test]
+    fn r_is_upper_triangular() {
+        let mut rng = Rng::new(103);
+        let a = Matrix::randn(12, 5, &mut rng);
+        let (_, r) = qr_thin(&a);
+        for i in 0..5 {
+            for j in 0..i {
+                assert_eq!(r[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn rank_deficient_input_stays_orthonormal() {
+        // [U | G] with G ∈ span(U) — the near-stationary FeDLRT case.
+        let mut rng = Rng::new(107);
+        let u = random_orthonormal(30, 4, &mut rng);
+        let coeffs = Matrix::randn(4, 4, &mut rng);
+        let g = matmul(&u, &coeffs); // inside span(U)
+        let aug = u.hcat(&g);
+        let (q, _) = qr_thin(&aug);
+        assert!(orthonormality_error(&q) < 1e-9);
+        // First 4 columns must reproduce U exactly up to sign.
+        for j in 0..4 {
+            let dot: f64 = (0..30).map(|i| q[(i, j)] * u[(i, j)]).sum();
+            assert!((dot.abs() - 1.0).abs() < 1e-9, "col {j} changed");
+        }
+    }
+
+    #[test]
+    fn zero_matrix_qr() {
+        let a = Matrix::zeros(6, 3);
+        let (q, r) = qr_thin(&a);
+        assert_eq!(q.shape(), (6, 3));
+        assert!(r.max_abs() == 0.0);
+    }
+
+    #[test]
+    fn prop_qr_invariants() {
+        prop::check(
+            "qr: QᵀQ=I and QR=A",
+            24,
+            |rng, size| {
+                let m = size + rng.below(size + 4);
+                let n = 1 + rng.below(size.min(m).max(1));
+                Matrix::randn(m.max(n), n, rng)
+            },
+            |a| {
+                let (q, r) = qr_thin(a);
+                if orthonormality_error(&q) > 1e-9 {
+                    return Err("Q not orthonormal".into());
+                }
+                let diff = matmul(&q, &r).sub(a).max_abs();
+                if diff > 1e-9 * (1.0 + a.max_abs()) {
+                    return Err(format!("QR != A (diff {diff})"));
+                }
+                Ok(())
+            },
+        );
+    }
+}

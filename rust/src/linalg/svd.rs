@@ -1,0 +1,360 @@
+//! Singular value decomposition via one-sided Jacobi rotations.
+//!
+//! FeDLRT's automatic compression (Algorithm 1, line 16) computes the SVD
+//! of the aggregated coefficient matrix `S̃* ∈ R^{2r×2r}` — deliberately
+//! *small*: the paper's key cost argument (§3.3) is that the server never
+//! factorizes an `n×n` matrix. One-sided Jacobi is the right tool here:
+//! simple, backward-stable, and it computes small singular values to high
+//! relative accuracy, which matters because the truncation rule compares
+//! the tail `‖[σ_{r₁+1}…σ_{2r}]‖₂` against the threshold `ϑ`.
+//!
+//! The same routine also serves the *naive* baselines (Algorithm 6 and
+//! the FeDLR-style server reconstruction) that do need larger SVDs — at
+//! their true `O(n³)` cost, which our cost accounting reports.
+
+use crate::tensor::Matrix;
+
+/// Result of a singular value decomposition `A = U · diag(σ) · Vᵀ`.
+#[derive(Debug, Clone)]
+pub struct Svd {
+    /// Left singular vectors, `m×k`.
+    pub u: Matrix,
+    /// Singular values, descending, length `k = min(m,n)`.
+    pub sigma: Vec<f64>,
+    /// Right singular vectors, `n×k`.
+    pub v: Matrix,
+}
+
+/// Compute the thin SVD of `a` by one-sided Jacobi.
+pub fn svd(a: &Matrix) -> Svd {
+    let (m, n) = a.shape();
+    if m >= n {
+        svd_tall(a)
+    } else {
+        // A = U Σ Vᵀ  ⟺  Aᵀ = V Σ Uᵀ.
+        let s = svd_tall(&a.t());
+        Svd { u: s.v, sigma: s.sigma, v: s.u }
+    }
+}
+
+/// One-sided Jacobi on a tall (m ≥ n) matrix.
+///
+/// Performance: the working matrix is stored *transposed* (`wt` rows are
+/// A's columns, `vt` rows are V's columns) so every Jacobi rotation
+/// streams two contiguous rows instead of two stride-`n` columns —
+/// a large constant-factor win on the 2r×2r truncation SVD that runs
+/// every aggregation round.
+fn svd_tall(a: &Matrix) -> Svd {
+    let (m, n) = a.shape();
+    debug_assert!(m >= n);
+    let mut wt = a.t(); // n×m: row j == column j of A
+    let mut vt = Matrix::eye(n); // row j == column j of V
+
+    let scale = a.max_abs();
+    if scale == 0.0 {
+        // Zero matrix: U = any orthonormal completion, σ = 0.
+        let mut u = Matrix::zeros(m, n);
+        for i in 0..n {
+            u[(i, i)] = 1.0;
+        }
+        return Svd { u, sigma: vec![0.0; n], v: vt };
+    }
+
+    let eps = 1e-15 * scale * scale * (n as f64);
+    let max_sweeps = 60;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // Gram entries for the (p,q) pair — contiguous rows.
+                let (mut app, mut aqq, mut apq) = (0.0, 0.0, 0.0);
+                {
+                    let wp = wt.row(p);
+                    let wq = wt.row(q);
+                    for (a, b) in wp.iter().zip(wq) {
+                        app += a * a;
+                        aqq += b * b;
+                        apq += a * b;
+                    }
+                }
+                off = off.max(apq.abs());
+                if apq.abs() <= eps {
+                    continue;
+                }
+                // Jacobi rotation annihilating the off-diagonal entry.
+                let zeta = (aqq - app) / (2.0 * apq);
+                let t = zeta.signum() / (zeta.abs() + (1.0 + zeta * zeta).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                rotate_rows(&mut wt, p, q, c, s);
+                rotate_rows(&mut vt, p, q, c, s);
+            }
+        }
+        if off <= eps {
+            break;
+        }
+    }
+
+    // Singular values = row norms of Wᵀ; U columns = normalized rows.
+    let mut order: Vec<usize> = (0..n).collect();
+    let norms: Vec<f64> =
+        (0..n).map(|j| wt.row(j).iter().map(|x| x * x).sum::<f64>().sqrt()).collect();
+    order.sort_by(|&i, &j| norms[j].partial_cmp(&norms[i]).unwrap());
+
+    let mut u = Matrix::zeros(m, n);
+    let mut vv = Matrix::zeros(n, n);
+    let mut sigma = vec![0.0; n];
+    for (new_j, &old_j) in order.iter().enumerate() {
+        sigma[new_j] = norms[old_j];
+        if norms[old_j] > 0.0 {
+            let inv = 1.0 / norms[old_j];
+            for (i, &x) in wt.row(old_j).iter().enumerate() {
+                u[(i, new_j)] = x * inv;
+            }
+        } else {
+            // Null direction: produce some unit vector orthogonal enough;
+            // only reached for exactly rank-deficient inputs.
+            u[(new_j.min(m - 1), new_j)] = 1.0;
+        }
+        for (i, &x) in vt.row(old_j).iter().enumerate() {
+            vv[(i, new_j)] = x;
+        }
+    }
+
+    Svd { u, sigma, v: vv }
+}
+
+/// In-place Givens rotation of rows `p` and `q`:
+/// `(row_p, row_q) ← (c·row_p − s·row_q, s·row_p + c·row_q)`.
+#[inline]
+fn rotate_rows(m: &mut Matrix, p: usize, q: usize, c: f64, s: f64) {
+    let cols = m.cols();
+    let data = m.data_mut();
+    let (lo, hi) = if p < q { (p, q) } else { (q, p) };
+    let (head, tail) = data.split_at_mut(hi * cols);
+    let row_lo = &mut head[lo * cols..lo * cols + cols];
+    let row_hi = &mut tail[..cols];
+    // (p, q) may have been swapped; adjust rotation signs accordingly.
+    if p < q {
+        for (a, b) in row_lo.iter_mut().zip(row_hi.iter_mut()) {
+            let (x, y) = (*a, *b);
+            *a = c * x - s * y;
+            *b = s * x + c * y;
+        }
+    } else {
+        for (b, a) in row_lo.iter_mut().zip(row_hi.iter_mut()) {
+            let (x, y) = (*a, *b);
+            *a = c * x - s * y;
+            *b = s * x + c * y;
+        }
+    }
+}
+
+impl Svd {
+    /// Reconstruct `U · diag(σ) · Vᵀ`.
+    pub fn reconstruct(&self) -> Matrix {
+        let us = {
+            let mut us = self.u.clone();
+            for j in 0..self.sigma.len() {
+                for i in 0..us.rows() {
+                    us[(i, j)] *= self.sigma[j];
+                }
+            }
+            us
+        };
+        crate::tensor::matmul_nt(&us, &self.v)
+    }
+
+    /// Smallest `r₁` with tail energy `‖[σ_{r₁+1},…]‖₂ < ϑ`, clamped to
+    /// at least 1 (FeDLRT never truncates to an empty factorization).
+    ///
+    /// This is exactly the paper's rank-selection rule
+    /// (§"Automatic compression via rank truncation").
+    pub fn rank_for_tolerance(&self, theta: f64) -> usize {
+        let k = self.sigma.len();
+        // tail2[j] = Σ_{i≥j} σ_i² — scan from the back.
+        let mut tail2 = 0.0;
+        let mut r1 = k;
+        for j in (0..k).rev() {
+            let t = tail2 + self.sigma[j] * self.sigma[j];
+            if t.sqrt() < theta {
+                tail2 = t;
+                r1 = j;
+            } else {
+                break;
+            }
+        }
+        r1.max(1)
+    }
+
+    /// Truncate to rank `r`: `(U_r, σ_r, V_r)`.
+    pub fn truncate(&self, r: usize) -> (Matrix, Vec<f64>, Matrix) {
+        let r = r.min(self.sigma.len());
+        (self.u.first_cols(r), self.sigma[..r].to_vec(), self.v.first_cols(r))
+    }
+}
+
+/// Solve `A x = b` in the least-squares sense via the SVD pseudo-inverse,
+/// dropping singular values below `rcond · σ₁`.
+pub fn pinv_solve(a: &Matrix, b: &[f64], rcond: f64) -> Vec<f64> {
+    assert_eq!(a.rows(), b.len(), "pinv_solve: dims");
+    let dec = svd(a);
+    let s1 = dec.sigma.first().copied().unwrap_or(0.0);
+    let k = dec.sigma.len();
+    // y = Σ (uᵢᵀ b / σᵢ) vᵢ
+    let mut x = vec![0.0; a.cols()];
+    for j in 0..k {
+        if dec.sigma[j] <= rcond * s1 || dec.sigma[j] == 0.0 {
+            continue;
+        }
+        let mut utb = 0.0;
+        for i in 0..a.rows() {
+            utb += dec.u[(i, j)] * b[i];
+        }
+        let coef = utb / dec.sigma[j];
+        for i in 0..a.cols() {
+            x[i] += coef * dec.v[(i, j)];
+        }
+    }
+    x
+}
+
+/// Spectral norm (largest singular value) — used in diagnostics.
+pub fn spectral_norm(a: &Matrix) -> f64 {
+    svd(a).sigma.first().copied().unwrap_or(0.0)
+}
+
+/// Numerical rank at tolerance `tol·σ₁`.
+pub fn numerical_rank(a: &Matrix, tol: f64) -> usize {
+    let s = svd(a);
+    let s1 = s.sigma.first().copied().unwrap_or(0.0);
+    if s1 == 0.0 {
+        return 0;
+    }
+    s.sigma.iter().filter(|&&x| x > tol * s1).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::qr::orthonormality_error;
+    use crate::tensor::matmul;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn svd_reconstructs_random() {
+        let mut rng = Rng::new(201);
+        for &(m, n) in &[(4, 4), (10, 3), (3, 10), (16, 16), (25, 8)] {
+            let a = Matrix::randn(m, n, &mut rng);
+            let s = svd(&a);
+            let diff = s.reconstruct().sub(&a).max_abs();
+            assert!(diff < 1e-9, "({m},{n}): diff {diff}");
+            assert!(orthonormality_error(&s.u) < 1e-9, "U ({m},{n})");
+            assert!(orthonormality_error(&s.v) < 1e-9, "V ({m},{n})");
+            for w in s.sigma.windows(2) {
+                assert!(w[0] >= w[1], "σ not sorted");
+            }
+        }
+    }
+
+    #[test]
+    fn known_singular_values() {
+        // diag(3, 2, 1) with orthogonal factors.
+        let mut rng = Rng::new(203);
+        let q1 = crate::linalg::qr::random_orthonormal(6, 3, &mut rng);
+        let q2 = crate::linalg::qr::random_orthonormal(5, 3, &mut rng);
+        let d = Matrix::diag(&[3.0, 2.0, 1.0]);
+        let a = crate::tensor::matmul_nt(&matmul(&q1, &d), &q2);
+        let s = svd(&a);
+        assert!((s.sigma[0] - 3.0).abs() < 1e-9);
+        assert!((s.sigma[1] - 2.0).abs() < 1e-9);
+        assert!((s.sigma[2] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn low_rank_matrix_detected() {
+        let mut rng = Rng::new(207);
+        let u = Matrix::randn(20, 4, &mut rng);
+        let v = Matrix::randn(15, 4, &mut rng);
+        let a = crate::tensor::matmul_nt(&u, &v);
+        assert_eq!(numerical_rank(&a, 1e-10), 4);
+        let s = svd(&a);
+        // σ₅… ≈ 0
+        for &x in &s.sigma[4..] {
+            assert!(x < 1e-9 * s.sigma[0]);
+        }
+    }
+
+    #[test]
+    fn rank_for_tolerance_rule() {
+        let s = Svd {
+            u: Matrix::eye(4),
+            sigma: vec![10.0, 1.0, 0.1, 0.01],
+            v: Matrix::eye(4),
+        };
+        // tail [0.01] -> norm 0.01 < 0.05 => r=3; tail [0.1,0.01] ≈ 0.1005 > 0.05
+        assert_eq!(s.rank_for_tolerance(0.05), 3);
+        // huge tolerance clamps at 1
+        assert_eq!(s.rank_for_tolerance(1e9), 1);
+        // zero tolerance keeps everything
+        assert_eq!(s.rank_for_tolerance(0.0), 4);
+    }
+
+    #[test]
+    fn truncation_error_bounded_by_tail() {
+        let mut rng = Rng::new(211);
+        let a = Matrix::randn(12, 12, &mut rng);
+        let s = svd(&a);
+        for r in 1..12 {
+            let (u, sig, v) = s.truncate(r);
+            let approx = crate::tensor::matmul_nt(
+                &matmul(&u, &Matrix::diag(&sig)),
+                &v,
+            );
+            let err = approx.sub(&a).fro_norm();
+            let tail: f64 = s.sigma[r..].iter().map(|x| x * x).sum::<f64>().sqrt();
+            assert!((err - tail).abs() < 1e-8, "r={r}: err {err} vs tail {tail}");
+        }
+    }
+
+    #[test]
+    fn zero_matrix_svd() {
+        let s = svd(&Matrix::zeros(5, 3));
+        assert_eq!(s.sigma, vec![0.0; 3]);
+        assert!(s.reconstruct().max_abs() == 0.0);
+    }
+
+    #[test]
+    fn prop_svd_invariants() {
+        prop::check(
+            "svd: UΣVᵀ=A, orthonormal factors, sorted σ",
+            16,
+            |rng, size| {
+                let m = 1 + rng.below(size + 2);
+                let n = 1 + rng.below(size + 2);
+                Matrix::randn(m, n, rng)
+            },
+            |a| {
+                let s = svd(a);
+                let scale = 1.0 + a.max_abs();
+                if s.reconstruct().sub(a).max_abs() > 1e-8 * scale {
+                    return Err("UΣVᵀ != A".into());
+                }
+                if orthonormality_error(&s.u) > 1e-8 {
+                    return Err("U not orthonormal".into());
+                }
+                if orthonormality_error(&s.v) > 1e-8 {
+                    return Err("V not orthonormal".into());
+                }
+                if s.sigma.windows(2).any(|w| w[0] < w[1]) {
+                    return Err("σ not sorted".into());
+                }
+                if s.sigma.iter().any(|&x| x < 0.0) {
+                    return Err("negative σ".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,225 @@
+//! Server-side basis augmentation (Algorithm 1 lines 4–6, eq. 6).
+//!
+//! Given the current bases `U, V` and the aggregated basis gradients
+//! `G_U = mean_c ∇_U L_c`, `G_V = mean_c ∇_V L_c`, the server computes
+//!
+//! ```text
+//! [U | Ū] R = qr([U | G_U]),    [V | V̄] R = qr([V | G_V])
+//! ```
+//!
+//! and broadcasts only the *new* halves `Ū, V̄` (the clients already hold
+//! `U, V`). By Lemma 2 this choice of augmentation directions is
+//! consistent with the basis-update step of the augmented BUG splitting
+//! scheme (K/L steps integrated with one explicit-Euler step), which is
+//! what gives the robust-integrator guarantee of Theorem 5.
+//!
+//! By Lemma 1, because the QR of `[U | G_U]` leaves the first `r` columns
+//! equal to `U`, the projected coefficients need no communication at all:
+//! `S̃ = Ũᵀ U S Vᵀ Ṽ = [[S, 0], [0, 0]]`.
+
+use crate::linalg::qr_thin;
+use crate::tensor::Matrix;
+
+use super::factorization::LowRank;
+
+/// Result of augmenting one basis pair.
+#[derive(Debug, Clone)]
+pub struct AugmentedBasis {
+    /// Full augmented basis `Ũ = [U | Ū] ∈ R^{m×(r+a)}`.
+    pub u_tilde: Matrix,
+    /// Full augmented basis `Ṽ = [V | V̄] ∈ R^{n×(r+a)}`.
+    pub v_tilde: Matrix,
+    /// New directions `Ū` (what actually gets broadcast).
+    pub u_bar: Matrix,
+    /// New directions `V̄`.
+    pub v_bar: Matrix,
+    /// Augmented coefficients `S̃ = [[S,0],[0,0]]` (assembled locally on
+    /// clients; kept here for the server's own bookkeeping).
+    pub s_tilde: Matrix,
+    /// Rank before augmentation.
+    pub r_old: usize,
+}
+
+impl AugmentedBasis {
+    /// Augmented rank `r + a` (a = r unless capped).
+    pub fn rank(&self) -> usize {
+        self.u_tilde.cols()
+    }
+
+    /// View as a LowRank factorization (Ũ S̃ Ṽᵀ).
+    pub fn as_factorization(&self) -> LowRank {
+        LowRank { u: self.u_tilde.clone(), s: self.s_tilde.clone(), v: self.v_tilde.clone() }
+    }
+}
+
+/// Augment `(U, V)` with aggregated basis gradients `(g_u, g_v)`.
+///
+/// `max_rank` caps the augmented rank (static-shape AOT interop and
+/// memory budget); the augmentation adds `a = min(r, max_rank - r)` new
+/// directions. The paper's un-capped scheme is `max_rank = 2r`.
+///
+/// Implementation detail: we orthonormalize `(I - U Uᵀ) G_U` against `U`
+/// rather than re-running QR on `[U | G_U]`. This is algebraically the
+/// same subspace (Lemma 1 shows the QR leaves the leading `r` columns
+/// equal to `U`) but keeps the existing basis *bit-identical*, which the
+/// "broadcast only `Ū`" optimization relies on.
+pub fn augment_basis(fac: &LowRank, g_u: &Matrix, g_v: &Matrix, max_rank: usize) -> AugmentedBasis {
+    let r = fac.rank();
+    let a = r.min(max_rank.saturating_sub(r));
+    assert!(a > 0 || max_rank <= r, "augmentation with zero budget");
+
+    let u_bar = new_directions(&fac.u, g_u, a);
+    let v_bar = new_directions(&fac.v, g_v, a);
+
+    let u_tilde = fac.u.hcat(&u_bar);
+    let v_tilde = fac.v.hcat(&v_bar);
+    // Lemma 1: S̃ = [[S, 0], [0, 0]].
+    let s_tilde = fac.s.embed(r + a, r + a);
+
+    AugmentedBasis { u_tilde, v_tilde, u_bar, v_bar, s_tilde, r_old: r }
+}
+
+/// Orthonormal directions spanning `(I − B Bᵀ) G`, truncated/padded to
+/// exactly `a` columns.
+fn new_directions(basis: &Matrix, g: &Matrix, a: usize) -> Matrix {
+    let m = basis.rows();
+    if a == 0 {
+        return Matrix::zeros(m, 0);
+    }
+    // Project out the existing span: G_perp = G − B (Bᵀ G).
+    let btg = crate::tensor::matmul_tn(basis, g);
+    let bbg = crate::tensor::matmul(basis, &btg);
+    let mut g_perp = g.sub(&bbg);
+    // Second projection pass (re-orthogonalization) for stability when
+    // G is nearly inside span(B) — the near-stationary regime.
+    let btg2 = crate::tensor::matmul_tn(basis, &g_perp);
+    let bbg2 = crate::tensor::matmul(basis, &btg2);
+    g_perp = g_perp.sub(&bbg2);
+
+    let (q, r_fac) = qr_thin(&g_perp);
+    // Drop numerically-null directions (zero diagonal in R): replacing
+    // them with junk columns would pollute the augmented basis.
+    let tol = 1e-12 * (1.0 + g.max_abs()) * (m as f64).sqrt();
+    let mut cols = Vec::new();
+    for j in 0..q.cols().min(a) {
+        if r_fac[(j, j)].abs() > tol {
+            cols.push(j);
+        }
+    }
+    let mut out = Matrix::zeros(m, a);
+    for (dst, &src) in cols.iter().enumerate() {
+        for i in 0..m {
+            out[(i, dst)] = q[(i, src)];
+        }
+    }
+    // Remaining columns stay zero — harmless padding: zero basis columns
+    // contribute zero gradients and are removed at truncation.
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::orthonormality_error;
+    use crate::tensor::{matmul, matmul_tn};
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn setup(m: usize, n: usize, r: usize, seed: u64) -> (LowRank, Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        let fac = LowRank::random_init(m, n, r, &mut rng);
+        let g_u = Matrix::randn(m, r, &mut rng);
+        let g_v = Matrix::randn(n, r, &mut rng);
+        (fac, g_u, g_v)
+    }
+
+    #[test]
+    fn augmented_basis_is_orthonormal_and_keeps_u() {
+        let (fac, g_u, g_v) = setup(20, 18, 4, 401);
+        let aug = augment_basis(&fac, &g_u, &g_v, 8);
+        assert_eq!(aug.rank(), 8);
+        assert!(orthonormality_error(&aug.u_tilde) < 1e-9);
+        assert!(orthonormality_error(&aug.v_tilde) < 1e-9);
+        // Leading r columns bit-identical to U, V.
+        assert_eq!(aug.u_tilde.first_cols(4), fac.u);
+        assert_eq!(aug.v_tilde.first_cols(4), fac.v);
+    }
+
+    #[test]
+    fn augmented_span_contains_gradient() {
+        let (fac, g_u, g_v) = setup(16, 16, 3, 403);
+        let aug = augment_basis(&fac, &g_u, &g_v, 6);
+        // G_U must lie in span(Ũ): ‖(I − Ũ Ũᵀ) G_U‖ ≈ 0.
+        let proj = matmul(&aug.u_tilde, &matmul_tn(&aug.u_tilde, &g_u));
+        assert!(g_u.sub(&proj).max_abs() < 1e-9);
+        let proj_v = matmul(&aug.v_tilde, &matmul_tn(&aug.v_tilde, &g_v));
+        assert!(g_v.sub(&proj_v).max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn lemma1_structured_coefficients() {
+        let (fac, g_u, g_v) = setup(12, 12, 3, 407);
+        let aug = augment_basis(&fac, &g_u, &g_v, 6);
+        // S̃ = Ũᵀ (U S Vᵀ) Ṽ must equal [[S,0],[0,0]] — Lemma 1.
+        let w = fac.to_dense();
+        let s_tilde_explicit = matmul(&matmul_tn(&aug.u_tilde, &w), &aug.v_tilde);
+        assert!(s_tilde_explicit.sub(&aug.s_tilde).max_abs() < 1e-9);
+        // And the augmented factorization represents the same matrix.
+        assert!(aug.as_factorization().to_dense().sub(&w).max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn gradient_inside_span_yields_zero_directions() {
+        // G_U ∈ span(U): augmentation adds only (numerically) zero columns.
+        let mut rng = Rng::new(409);
+        let fac = LowRank::random_init(15, 15, 4, &mut rng);
+        let coef = Matrix::randn(4, 4, &mut rng);
+        let g_u = matmul(&fac.u, &coef);
+        let g_v = matmul(&fac.v, &coef);
+        let aug = augment_basis(&fac, &g_u, &g_v, 8);
+        assert!(aug.u_bar.max_abs() < 1e-8, "u_bar should be ~0");
+        assert!(aug.v_bar.max_abs() < 1e-8);
+        // Still orthonormal in the nonzero part; dense matrix unchanged.
+        assert!(aug.as_factorization().to_dense().sub(&fac.to_dense()).max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn rank_cap_respected() {
+        let (fac, g_u, g_v) = setup(20, 20, 4, 411);
+        let aug = augment_basis(&fac, &g_u, &g_v, 6); // cap below 2r
+        assert_eq!(aug.rank(), 6);
+        assert!(orthonormality_error(&aug.u_tilde) < 1e-9);
+    }
+
+    #[test]
+    fn prop_augmentation_invariants() {
+        prop::check(
+            "augment: orthonormal, contains old span, Lemma 1",
+            10,
+            |rng, size| {
+                let r = 1 + rng.below(size.min(4) + 1);
+                let m = (2 * r + 2) + rng.below(8);
+                let n = (2 * r + 2) + rng.below(8);
+                let fac = LowRank::random_init(m, n, r, rng);
+                let g_u = Matrix::randn(m, r, rng);
+                let g_v = Matrix::randn(n, r, rng);
+                (fac, g_u, g_v)
+            },
+            |(fac, g_u, g_v)| {
+                let aug = augment_basis(fac, g_u, g_v, 2 * fac.rank());
+                if orthonormality_error(&aug.u_tilde) > 1e-8 {
+                    return Err("Ũ not orthonormal".into());
+                }
+                if orthonormality_error(&aug.v_tilde) > 1e-8 {
+                    return Err("Ṽ not orthonormal".into());
+                }
+                let w = fac.to_dense();
+                let diff = aug.as_factorization().to_dense().sub(&w).max_abs();
+                if diff > 1e-8 * (1.0 + w.max_abs()) {
+                    return Err(format!("augmentation changed W (diff {diff})"));
+                }
+                Ok(())
+            },
+        );
+    }
+}

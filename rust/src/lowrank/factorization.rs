@@ -1,0 +1,229 @@
+//! The low-rank factorization `W_r = U S Vᵀ ∈ M_r`.
+
+use crate::linalg::{orthonormality_error, random_orthonormal, svd};
+use crate::tensor::{matmul, usv, Matrix};
+use crate::util::rng::Rng;
+
+/// A rank-`r` factorization `W = U S Vᵀ` with orthonormal bases
+/// `U ∈ R^{m×r}`, `V ∈ R^{n×r}` and coefficients `S ∈ R^{r×r}`.
+///
+/// Invariants maintained by FeDLRT across rounds (checked by
+/// [`LowRank::validate`]):
+/// * `UᵀU = VᵀV = I_r`,
+/// * after truncation, `S = diag(σ₁…σ_r)` is full-rank diagonal.
+#[derive(Debug, Clone)]
+pub struct LowRank {
+    pub u: Matrix,
+    pub s: Matrix,
+    pub v: Matrix,
+}
+
+impl LowRank {
+    /// Random initial factorization with orthonormal bases and diagonal
+    /// full-rank `S` (the paper's initialization: `U¹, V¹` orthonormal,
+    /// `S¹` full rank).
+    pub fn random_init(m: usize, n: usize, r: usize, rng: &mut Rng) -> LowRank {
+        assert!(r >= 1 && r <= m.min(n), "rank {r} out of range for {m}x{n}");
+        let u = random_orthonormal(m, r, rng);
+        let v = random_orthonormal(n, r, rng);
+        // Diagonal, strictly positive, descending — mimics post-truncation
+        // state so round 1 behaves like any other round.
+        let diag: Vec<f64> = (0..r).map(|i| 1.0 / (1.0 + i as f64)).collect();
+        let s = Matrix::diag(&diag);
+        LowRank { u, s, v }
+    }
+
+    /// Best rank-`r` approximation of a dense matrix (truncated SVD).
+    pub fn from_dense(w: &Matrix, r: usize) -> LowRank {
+        let dec = svd(w);
+        let (u, sig, v) = dec.truncate(r);
+        LowRank { u, s: Matrix::diag(&sig), v }
+    }
+
+    /// Current rank (number of basis columns).
+    pub fn rank(&self) -> usize {
+        self.s.rows()
+    }
+
+    /// Row dimension of the represented matrix.
+    pub fn m(&self) -> usize {
+        self.u.rows()
+    }
+
+    /// Column dimension of the represented matrix.
+    pub fn n(&self) -> usize {
+        self.v.rows()
+    }
+
+    /// Reconstruct the dense `W = U S Vᵀ` (test/diagnostic use — the
+    /// production algorithm never materializes this, per §3.3).
+    pub fn to_dense(&self) -> Matrix {
+        usv(&self.u, &self.s, &self.v)
+    }
+
+    /// Frobenius norm of the represented matrix, computed at `O(r²)`
+    /// cost via orthonormality: `‖U S Vᵀ‖_F = ‖S‖_F`.
+    pub fn fro_norm(&self) -> f64 {
+        self.s.fro_norm()
+    }
+
+    /// Number of parameters held by the factors.
+    pub fn param_count(&self) -> usize {
+        let r = self.rank();
+        self.m() * r + r * r + self.n() * r
+    }
+
+    /// Compression ratio versus the dense `m×n` matrix.
+    pub fn compression_ratio(&self) -> f64 {
+        (self.m() * self.n()) as f64 / self.param_count() as f64
+    }
+
+    /// Validate the structural invariants; returns the worst violation.
+    pub fn validate(&self) -> f64 {
+        let eu = orthonormality_error(&self.u);
+        let ev = orthonormality_error(&self.v);
+        eu.max(ev)
+    }
+
+    /// Zero-pad factors to rank `r_max` (static-shape AOT interop; see
+    /// DESIGN.md §Static-shape AOT with dynamic rank). Columns ≥ rank are
+    /// zero, `S` active block top-left.
+    pub fn pad_to(&self, r_max: usize) -> LowRank {
+        assert!(r_max >= self.rank());
+        LowRank {
+            u: self.u.hcat(&Matrix::zeros(self.m(), r_max - self.rank())),
+            s: self.s.embed(r_max, r_max),
+            v: self.v.hcat(&Matrix::zeros(self.n(), r_max - self.rank())),
+        }
+    }
+
+    /// Inverse of [`pad_to`]: keep the leading `r` columns/block.
+    pub fn unpad(&self, r: usize) -> LowRank {
+        assert!(r <= self.rank());
+        LowRank {
+            u: self.u.first_cols(r),
+            s: self.s.block(r, r),
+            v: self.v.first_cols(r),
+        }
+    }
+
+    /// Evaluate the bilinear form `p(x)ᵀ W p(y)` at `O(nr)` cost without
+    /// forming `W` — the least-squares model's forward pass.
+    pub fn bilinear(&self, px: &[f64], py: &[f64]) -> f64 {
+        // a = Uᵀ px ∈ R^r, b = Vᵀ py ∈ R^r, result = aᵀ S b.
+        let r = self.rank();
+        let mut a = vec![0.0; r];
+        let mut b = vec![0.0; r];
+        for i in 0..self.m() {
+            let pxi = px[i];
+            if pxi != 0.0 {
+                let row = self.u.row(i);
+                for j in 0..r {
+                    a[j] += pxi * row[j];
+                }
+            }
+        }
+        for i in 0..self.n() {
+            let pyi = py[i];
+            if pyi != 0.0 {
+                let row = self.v.row(i);
+                for j in 0..r {
+                    b[j] += pyi * row[j];
+                }
+            }
+        }
+        let sb = crate::tensor::matvec(&self.s, &b);
+        a.iter().zip(&sb).map(|(x, y)| x * y).sum()
+    }
+}
+
+/// Project a dense gradient onto the coefficient space: `Uᵀ G V`
+/// (the Riemannian/Galerkin coefficient gradient, eq. 5 for S).
+pub fn project_coeff_grad(u: &Matrix, g: &Matrix, v: &Matrix) -> Matrix {
+    let ug = crate::tensor::matmul_tn(u, g); // r×n
+    matmul(&ug, v) // r×r (r×n · n×r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_init_invariants() {
+        let mut rng = Rng::new(301);
+        let f = LowRank::random_init(20, 15, 4, &mut rng);
+        assert!(f.validate() < 1e-10);
+        assert_eq!(f.rank(), 4);
+        // S diagonal full-rank
+        for i in 0..4 {
+            assert!(f.s[(i, i)] > 0.0);
+            for j in 0..4 {
+                if i != j {
+                    assert_eq!(f.s[(i, j)], 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fro_norm_matches_dense() {
+        let mut rng = Rng::new(303);
+        let f = LowRank::random_init(12, 12, 3, &mut rng);
+        assert!((f.fro_norm() - f.to_dense().fro_norm()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn from_dense_best_approximation() {
+        let mut rng = Rng::new(307);
+        // Exactly rank-3 matrix recovered exactly.
+        let a = LowRank::random_init(10, 10, 3, &mut rng).to_dense();
+        let f = LowRank::from_dense(&a, 3);
+        assert!(f.to_dense().sub(&a).max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn pad_unpad_roundtrip() {
+        let mut rng = Rng::new(311);
+        let f = LowRank::random_init(8, 9, 2, &mut rng);
+        let padded = f.pad_to(5);
+        assert_eq!(padded.rank(), 5);
+        // Padding is exact: same dense matrix.
+        assert!(padded.to_dense().sub(&f.to_dense()).max_abs() < 1e-12);
+        let back = padded.unpad(2);
+        assert!(back.to_dense().sub(&f.to_dense()).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn bilinear_matches_dense() {
+        let mut rng = Rng::new(313);
+        let f = LowRank::random_init(7, 6, 3, &mut rng);
+        let px = rng.normal_vec(7);
+        let py = rng.normal_vec(6);
+        let dense = f.to_dense();
+        let want: f64 = (0..7)
+            .map(|i| px[i] * (0..6).map(|j| dense[(i, j)] * py[j]).sum::<f64>())
+            .sum();
+        assert!((f.bilinear(&px, &py) - want).abs() < 1e-10);
+    }
+
+    #[test]
+    fn project_coeff_grad_matches_explicit() {
+        let mut rng = Rng::new(317);
+        let u = random_orthonormal(9, 3, &mut rng);
+        let v = random_orthonormal(8, 3, &mut rng);
+        let g = Matrix::randn(9, 8, &mut rng);
+        let proj = project_coeff_grad(&u, &g, &v);
+        let want = matmul(&crate::tensor::matmul_tn(&u, &g), &v);
+        assert!(proj.sub(&want).max_abs() < 1e-12);
+        assert_eq!(proj.shape(), (3, 3));
+    }
+
+    #[test]
+    fn compression_ratio() {
+        let mut rng = Rng::new(319);
+        let f = LowRank::random_init(512, 512, 16, &mut rng);
+        let dense = 512.0 * 512.0;
+        let fac = (512 * 16 + 16 * 16 + 512 * 16) as f64;
+        assert!((f.compression_ratio() - dense / fac).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,14 @@
+//! Dynamical low-rank factorization algebra.
+//!
+//! Implements the DLRA/BUG-splitting machinery of §3: the factorization
+//! type [`LowRank`], server-side basis augmentation (eq. 6, Lemma 2),
+//! Lemma-1 structured assembly of the augmented coefficients, and the
+//! SVD-based automatic compression (rank truncation).
+
+pub mod augment;
+pub mod factorization;
+pub mod truncate;
+
+pub use augment::{augment_basis, AugmentedBasis};
+pub use factorization::LowRank;
+pub use truncate::{truncate, TruncationResult};

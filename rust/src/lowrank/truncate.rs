@@ -1,0 +1,182 @@
+//! Automatic compression via rank truncation (Algorithm 1 lines 16–18).
+//!
+//! After aggregation, the server holds `S̃* = mean_c S̃_c^{s*}` on the
+//! *shared* augmented bases — so, unlike other federated low-rank schemes
+//! (eq. 10 discussion), the SVD needed to re-compress is only `2r×2r`:
+//!
+//! ```text
+//! P_{r₁}, Σ_{r₁}, Q_{r₁} = svd(S̃*)   with  ‖[σ_{r₁+1}…σ_{2r}]‖₂ < ϑ
+//! U^{t+1} = Ũ P_{r₁},  V^{t+1} = Ṽ Q_{r₁},  S^{t+1} = Σ_{r₁}
+//! ```
+//!
+//! This keeps `S` full-rank diagonal (required by the robust-splitting
+//! consistency, Appendix D) and bounds the compression error by `ϑ`,
+//! which is exactly the `+Lϑ` term in Theorems 2–4.
+
+use crate::linalg::svd;
+use crate::tensor::{matmul, Matrix};
+
+use super::factorization::LowRank;
+
+/// Outcome of a truncation step.
+#[derive(Debug, Clone)]
+pub struct TruncationResult {
+    /// The compressed factorization (rank `r₁`).
+    pub fac: LowRank,
+    /// Discarded tail energy `‖[σ_{r₁+1}…]‖₂` (≤ ϑ by construction).
+    pub discarded: f64,
+    /// All singular values of `S̃*` (diagnostics / Fig 4 rank plots).
+    pub sigma: Vec<f64>,
+}
+
+/// Truncate the aggregated augmented state `(Ũ, S̃*, Ṽ)`.
+///
+/// * `theta` — absolute singular-value tail threshold `ϑ`. The paper uses
+///   the relative rule `ϑ = τ‖S̃*‖₂`; callers compute that (see
+///   [`relative_threshold`]).
+/// * `min_rank` / `max_rank` — clamp the new rank (max_rank enforces the
+///   static-shape cap; min_rank ≥ 1 keeps the factorization non-empty).
+pub fn truncate(
+    u_tilde: &Matrix,
+    s_star: &Matrix,
+    v_tilde: &Matrix,
+    theta: f64,
+    min_rank: usize,
+    max_rank: usize,
+) -> TruncationResult {
+    let dec = svd(s_star);
+    let r1 = dec.rank_for_tolerance(theta).clamp(min_rank.max(1), max_rank);
+    let (p, sig, q) = dec.truncate(r1);
+    let discarded = dec.sigma[r1..].iter().map(|x| x * x).sum::<f64>().sqrt();
+
+    // Project the bases: U' = Ũ P, V' = Ṽ Q — still orthonormal because
+    // P, Q have orthonormal columns.
+    let u_new = matmul(u_tilde, &p);
+    let v_new = matmul(v_tilde, &q);
+    let fac = LowRank { u: u_new, s: Matrix::diag(&sig), v: v_new };
+
+    TruncationResult { fac, discarded, sigma: dec.sigma }
+}
+
+/// The paper's relative threshold rule `ϑ = τ‖S̃*‖` (Frobenius norm, as
+/// used in the numerical section: `ϑ = τ‖S̃*‖` with τ=0.1 / 0.01).
+pub fn relative_threshold(s_star: &Matrix, tau: f64) -> f64 {
+    tau * s_star.fro_norm()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lowrank::augment::augment_basis;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    /// Build an augmented state whose S̃* has a known spectrum.
+    fn augmented_state(
+        m: usize,
+        r2: usize,
+        sigma: &[f64],
+        seed: u64,
+    ) -> (Matrix, Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        let u_tilde = crate::linalg::random_orthonormal(m, r2, &mut rng);
+        let v_tilde = crate::linalg::random_orthonormal(m, r2, &mut rng);
+        // S* with prescribed singular values via random rotations.
+        let p = crate::linalg::random_orthonormal(r2, r2, &mut rng);
+        let q = crate::linalg::random_orthonormal(r2, r2, &mut rng);
+        let s_star = crate::tensor::matmul_nt(&matmul(&p, &Matrix::diag(sigma)), &q);
+        (u_tilde, s_star, v_tilde)
+    }
+
+    #[test]
+    fn truncation_discards_small_tail_only() {
+        let sigma = [5.0, 2.0, 1e-6, 1e-8];
+        let (u, s, v) = augmented_state(20, 4, &sigma, 501);
+        let res = truncate(&u, &s, &v, 1e-3, 1, 4);
+        assert_eq!(res.fac.rank(), 2);
+        assert!(res.discarded < 1e-3);
+        assert!(res.fac.validate() < 1e-9);
+        // Reconstruction error equals the tail.
+        let dense_before = crate::tensor::usv(&u, &s, &v);
+        let err = res.fac.to_dense().sub(&dense_before).fro_norm();
+        assert!((err - res.discarded).abs() < 1e-8);
+    }
+
+    #[test]
+    fn new_s_is_full_rank_diagonal() {
+        let sigma = [3.0, 1.0, 0.5, 1e-9];
+        let (u, s, v) = augmented_state(16, 4, &sigma, 503);
+        let res = truncate(&u, &s, &v, 1e-4, 1, 4);
+        let r1 = res.fac.rank();
+        for i in 0..r1 {
+            assert!(res.fac.s[(i, i)] > 0.0, "S must stay full rank");
+            for j in 0..r1 {
+                if i != j {
+                    assert_eq!(res.fac.s[(i, j)], 0.0, "S must be diagonal");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn min_and_max_rank_clamps() {
+        let sigma = [1.0, 1e-12, 1e-13, 1e-14];
+        let (u, s, v) = augmented_state(12, 4, &sigma, 507);
+        // Even with a huge threshold the rank stays ≥ 2 when asked.
+        let res = truncate(&u, &s, &v, 1e9, 2, 4);
+        assert_eq!(res.fac.rank(), 2);
+        // And a zero threshold keeps everything but respects max_rank.
+        let res2 = truncate(&u, &s, &v, 0.0, 1, 3);
+        assert_eq!(res2.fac.rank(), 3);
+    }
+
+    #[test]
+    fn relative_threshold_rule() {
+        let s = Matrix::diag(&[3.0, 4.0]); // ‖S‖_F = 5
+        assert!((relative_threshold(&s, 0.1) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn augment_then_truncate_is_identity_when_nothing_learned() {
+        // If clients do nothing (S̃* = S̃), truncation must recover the
+        // original factorization's matrix (possibly rotated factors).
+        let mut rng = Rng::new(509);
+        let fac = LowRank::random_init(18, 18, 3, &mut rng);
+        let g_u = Matrix::randn(18, 3, &mut rng);
+        let g_v = Matrix::randn(18, 3, &mut rng);
+        let aug = augment_basis(&fac, &g_u, &g_v, 6);
+        let res = truncate(&aug.u_tilde, &aug.s_tilde, &aug.v_tilde, 1e-10, 1, 6);
+        assert!(res.fac.to_dense().sub(&fac.to_dense()).max_abs() < 1e-8);
+        assert_eq!(res.fac.rank(), 3);
+    }
+
+    #[test]
+    fn prop_truncation_error_bounded_by_theta() {
+        prop::check(
+            "truncate: ‖W_trunc − W‖ ≤ ϑ, orthonormal output",
+            8,
+            |rng, size| {
+                let r2 = 2 * (1 + rng.below(size.min(3) + 1));
+                let m = r2 + 4 + rng.below(10);
+                let sigma: Vec<f64> =
+                    (0..r2).map(|i| 10f64.powi(-(i as i32)) * (1.0 + rng.uniform())).collect();
+                let (u, s, v) = augmented_state(m, r2, &sigma, rng.next_u64());
+                let theta = rng.uniform_in(1e-6, 1.0);
+                (u, s, v, theta)
+            },
+            |(u, s, v, theta)| {
+                let res = truncate(u, s, v, *theta, 1, s.rows());
+                let before = crate::tensor::usv(u, s, v);
+                let err = res.fac.to_dense().sub(&before).fro_norm();
+                // err == discarded tail ≤ ϑ (unless min_rank clamp, r1=1 keeps σ₁)
+                if err > *theta + 1e-9 {
+                    return Err(format!("truncation error {err} > ϑ {theta}"));
+                }
+                if res.fac.validate() > 1e-8 {
+                    return Err("output bases not orthonormal".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,271 @@
+//! `fedlrt` — the command-line launcher for federated dynamical
+//! low-rank training.
+//!
+//! Subcommands:
+//!
+//! * `train` — federated NN training through the PJRT artifacts
+//!   (the §4.2 vision benchmarks; requires `make artifacts`).
+//! * `lsq`   — the §4.1 convex least-squares experiments (pure Rust).
+//! * `costs` — Table 1 / Fig 3 cost model at a chosen operating point.
+//! * `info`  — runtime + artifact inventory.
+//!
+//! Examples:
+//! ```text
+//! fedlrt lsq --mode homogeneous --clients 8
+//! fedlrt train --model resnet18_head --clients 4 --rounds 40 --vc full
+//! fedlrt costs --n 512 --r 32
+//! fedlrt info
+//! ```
+
+use anyhow::Result;
+use fedlrt::coordinator::{
+    run_dense, run_fedlrt, DenseAlgo, RankConfig, TrainConfig, VarCorrection,
+};
+use fedlrt::models::least_squares::LeastSquares;
+use fedlrt::nn::{NnOptions, NnProblem};
+use fedlrt::opt::{LrSchedule, OptimizerKind, SgdConfig};
+use fedlrt::runtime::Runtime;
+use fedlrt::util::cli::Cli;
+use fedlrt::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let (sub, rest) = match raw.split_first() {
+        Some((s, rest)) if !s.starts_with("--") => (s.as_str(), rest.to_vec()),
+        _ => {
+            eprintln!(
+                "usage: fedlrt <train|lsq|costs|info> [options]   (--help per subcommand)"
+            );
+            std::process::exit(2);
+        }
+    };
+    match sub {
+        "train" => cmd_train(&rest),
+        "lsq" => cmd_lsq(&rest),
+        "costs" => cmd_costs(&rest),
+        "info" => cmd_info(),
+        other => {
+            eprintln!("unknown subcommand '{other}' (expected train|lsq|costs|info)");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn parse_vc(s: &str) -> VarCorrection {
+    match s {
+        "none" => VarCorrection::None,
+        "full" => VarCorrection::Full,
+        "simplified" | "simpl" => VarCorrection::Simplified,
+        other => {
+            eprintln!("unknown --vc '{other}' (none|simplified|full)");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_train(rest: &[String]) -> Result<()> {
+    let cli = Cli::new("fedlrt train", "federated NN training via PJRT artifacts")
+        .opt("model", "resnet18_head", "artifact config name")
+        .opt("algo", "fedlrt", "fedlrt|fedavg|fedlin")
+        .opt("vc", "simplified", "variance correction (fedlrt): none|simplified|full")
+        .opt("clients", "4", "number of clients")
+        .opt("rounds", "40", "aggregation rounds")
+        .opt("iters", "8", "local iterations per round")
+        .opt("lr", "0.05", "start learning rate (cosine to 1%)")
+        .opt("rank", "16", "initial rank")
+        .opt("max-rank", "32", "rank cap")
+        .opt("tau", "0.01", "truncation tolerance τ")
+        .opt("momentum", "0.9", "SGD momentum")
+        .opt("train-n", "4096", "training samples")
+        .opt("seed", "0", "random seed")
+        .opt("alpha", "0", "Dirichlet label-skew α (0 = uniform shards)")
+        .opt("participation", "1.0", "fraction of clients sampled per round")
+        .opt("out", "results/train.jsonl", "JSONL output path");
+    let a = cli.parse(rest).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2)
+    });
+
+    let mut rt = Runtime::new(Runtime::default_dir())?;
+    let alpha = a.f64("alpha");
+    let problem = NnProblem::new(
+        &mut rt,
+        NnOptions {
+            config: a.str("model").to_string(),
+            num_clients: a.usize("clients"),
+            train_n: a.usize("train-n"),
+            test_n: 1024,
+            eval_cap: 1024,
+            seed: a.u64("seed"),
+            augment: true,
+            dirichlet_alpha: if alpha > 0.0 { Some(alpha) } else { None },
+        },
+    )?;
+    let rounds = a.usize("rounds");
+    let cfg = TrainConfig {
+        rounds,
+        local_iters: a.usize("iters"),
+        lr: LrSchedule::Cosine { start: a.f64("lr"), end: a.f64("lr") * 0.01, total: rounds },
+        opt: OptimizerKind::Sgd(SgdConfig { momentum: a.f64("momentum"), weight_decay: 1e-4 }),
+        var_correction: parse_vc(a.str("vc")),
+        rank: RankConfig {
+            initial_rank: a.usize("rank"),
+            max_rank: a.usize("max-rank").min(problem.max_rank()),
+            tau: a.f64("tau"),
+        },
+        seed: a.u64("seed"),
+        eval_every: (rounds / 10).max(1),
+        participation: a.f64("participation"),
+        straggler_jitter: 0.0,
+    };
+    let rec = match a.str("algo") {
+        "fedlrt" => run_fedlrt(&problem, &cfg, "cli_train"),
+        "fedavg" => run_dense(&problem, &cfg, DenseAlgo::FedAvg, "cli_train"),
+        "fedlin" => run_dense(&problem, &cfg, DenseAlgo::FedLin, "cli_train"),
+        other => {
+            eprintln!("unknown --algo '{other}'");
+            std::process::exit(2);
+        }
+    };
+    for r in &rec.rounds {
+        if let Some(acc) = r.eval_metric {
+            println!(
+                "round {:>4}: loss {:<10.5} rank {:?} acc {:.4}",
+                r.round, r.global_loss, r.ranks, acc
+            );
+        }
+    }
+    println!(
+        "final loss {:.5}, acc {:.4}, comm {:.2} Mfloats",
+        rec.final_loss(),
+        rec.final_metric().unwrap_or(f64::NAN),
+        rec.total_comm_floats() as f64 / 1e6
+    );
+    rec.append_jsonl(std::path::Path::new(a.str("out")))?;
+    Ok(())
+}
+
+fn cmd_lsq(rest: &[String]) -> Result<()> {
+    let cli = Cli::new("fedlrt lsq", "convex least-squares experiments (§4.1)")
+        .opt("mode", "homogeneous", "homogeneous|heterogeneous")
+        .opt("algo", "fedlrt", "fedlrt|fedavg|fedlin")
+        .opt("vc", "simplified", "variance correction: none|simplified|full")
+        .opt("n", "20", "matrix dimension")
+        .opt("target-rank", "4", "target rank (homogeneous)")
+        .opt("clients", "4", "number of clients")
+        .opt("points", "4000", "total data points")
+        .opt("rounds", "100", "aggregation rounds")
+        .opt("iters", "20", "local iterations")
+        .opt("lr", "0.005", "learning rate")
+        .opt("tau", "0.1", "truncation tolerance")
+        .opt("seed", "0", "random seed");
+    let a = cli.parse(rest).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2)
+    });
+
+    let mut rng = Rng::new(a.u64("seed"));
+    let problem = match a.str("mode") {
+        "heterogeneous" => LeastSquares::heterogeneous(
+            a.usize("n"),
+            a.usize("points"),
+            a.usize("clients"),
+            &mut rng,
+        ),
+        _ => LeastSquares::homogeneous(
+            a.usize("n"),
+            a.usize("target-rank"),
+            a.usize("points"),
+            a.usize("clients"),
+            &mut rng,
+        ),
+    };
+    let cfg = TrainConfig {
+        rounds: a.usize("rounds"),
+        local_iters: a.usize("iters"),
+        lr: LrSchedule::Constant(a.f64("lr")),
+        var_correction: parse_vc(a.str("vc")),
+        rank: RankConfig {
+            initial_rank: (a.usize("n") / 2).min(8),
+            max_rank: a.usize("n") / 2,
+            tau: a.f64("tau"),
+        },
+        seed: a.u64("seed"),
+        ..TrainConfig::default()
+    };
+    let rec = match a.str("algo") {
+        "fedavg" => run_dense(&problem, &cfg, DenseAlgo::FedAvg, "cli_lsq"),
+        "fedlin" => run_dense(&problem, &cfg, DenseAlgo::FedLin, "cli_lsq"),
+        _ => run_fedlrt(&problem, &cfg, "cli_lsq"),
+    };
+    for r in rec.rounds.iter().step_by((cfg.rounds / 10).max(1)) {
+        println!(
+            "round {:>4}: loss {:<12.4e} rank {:?} dist {:.4e}",
+            r.round,
+            r.global_loss,
+            r.ranks,
+            r.dist_to_opt.unwrap_or(f64::NAN)
+        );
+    }
+    println!(
+        "final loss {:.4e} (L* = {:.4e}), rank {}, comm {} floats",
+        rec.final_loss(),
+        problem.min_loss(),
+        rec.final_rank(),
+        rec.total_comm_floats()
+    );
+    Ok(())
+}
+
+fn cmd_costs(rest: &[String]) -> Result<()> {
+    let cli = Cli::new("fedlrt costs", "Table 1 cost model")
+        .opt("n", "512", "layer dimension")
+        .opt("r", "32", "rank")
+        .opt("iters", "10", "local iterations")
+        .opt("batch", "128", "batch size");
+    let a = cli.parse(rest).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2)
+    });
+    let p = fedlrt::costmodel::CostParams {
+        n: a.usize("n"),
+        r: a.usize("r"),
+        s_star: a.usize("iters"),
+        b: a.usize("batch"),
+    };
+    println!(
+        "{:<24} {:>14} {:>14} {:>12} {:>7}",
+        "method", "client flops", "server flops", "comm", "rounds"
+    );
+    for m in fedlrt::costmodel::ALL_METHODS {
+        let c = fedlrt::costmodel::costs(m, p);
+        println!(
+            "{:<24} {:>14.3e} {:>14.3e} {:>12.3e} {:>7}",
+            m.label(),
+            c.client_compute,
+            c.server_compute,
+            c.comm_cost,
+            c.comm_rounds
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("fedlrt — Federated Dynamical Low-Rank Training (Schotthöfer & Laiu, 2024)");
+    match Runtime::new(Runtime::default_dir()) {
+        Ok(rt) => {
+            println!("PJRT platform: {}", rt.platform());
+            println!("artifacts at:  {:?}", Runtime::default_dir());
+            println!("model configs:");
+            for (name, e) in &rt.manifest.configs {
+                println!(
+                    "  {:<16} d_in={:<4} core={}x{} ×{}  classes={:<4} r_pad={} batch={}",
+                    name, e.d_in, e.n_core, e.n_core, e.num_lr, e.classes, e.r_pad, e.batch
+                );
+            }
+        }
+        Err(e) => println!("artifacts not available ({e}); run `make artifacts`"),
+    }
+    Ok(())
+}

@@ -1,0 +1,203 @@
+//! Training metrics: per-round records and JSON-lines export.
+//!
+//! Every experiment emits a [`RunRecord`] — the raw material for the
+//! figure/table reproductions in `benches/` and for EXPERIMENTS.md.
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// Metrics of one aggregation round.
+#[derive(Debug, Clone)]
+pub struct RoundMetrics {
+    pub round: usize,
+    /// Global loss after the round (full-data).
+    pub global_loss: f64,
+    /// Rank(s) of the low-rank layer(s) after truncation.
+    pub ranks: Vec<usize>,
+    /// Floats on the wire this round (total).
+    pub comm_floats: u64,
+    /// Floats attributable to the low-rank (compressed) layers only —
+    /// the paper's footnote-6 accounting for the comm-saving figures.
+    pub comm_floats_lr: u64,
+    /// Per-client floats (download + own upload).
+    pub comm_floats_per_client: f64,
+    /// Distance to the known optimum, if the problem has one.
+    pub dist_to_opt: Option<f64>,
+    /// Validation metric (accuracy), if the problem has one.
+    pub eval_metric: Option<f64>,
+    /// Wall-clock seconds spent in this round (client compute simulated
+    /// serially; see DESIGN.md §Substitutions).
+    pub wall_s: f64,
+}
+
+/// A full training run.
+#[derive(Debug, Clone)]
+pub struct RunRecord {
+    /// Algorithm label, e.g. "fedlrt_full_vc".
+    pub algorithm: String,
+    /// Experiment label, e.g. "fig4_homogeneous".
+    pub experiment: String,
+    pub num_clients: usize,
+    pub seed: u64,
+    pub rounds: Vec<RoundMetrics>,
+    /// Free-form config echo.
+    pub config: Json,
+}
+
+impl RunRecord {
+    pub fn new(algorithm: &str, experiment: &str, num_clients: usize, seed: u64) -> RunRecord {
+        RunRecord {
+            algorithm: algorithm.to_string(),
+            experiment: experiment.to_string(),
+            num_clients,
+            seed,
+            rounds: Vec::new(),
+            config: Json::obj(),
+        }
+    }
+
+    pub fn final_loss(&self) -> f64 {
+        self.rounds.last().map(|r| r.global_loss).unwrap_or(f64::NAN)
+    }
+
+    pub fn final_rank(&self) -> usize {
+        self.rounds.last().and_then(|r| r.ranks.first().copied()).unwrap_or(0)
+    }
+
+    pub fn final_metric(&self) -> Option<f64> {
+        self.rounds.last().and_then(|r| r.eval_metric)
+    }
+
+    /// Cumulative communication volume (floats).
+    pub fn total_comm_floats(&self) -> u64 {
+        self.rounds.iter().map(|r| r.comm_floats).sum()
+    }
+
+    /// Cumulative compressed-layer communication volume (floats).
+    pub fn total_comm_floats_lr(&self) -> u64 {
+        self.rounds.iter().map(|r| r.comm_floats_lr).sum()
+    }
+
+    /// First round at which the loss drops below `eps` (rounds-to-ε).
+    pub fn rounds_to_loss(&self, eps: f64) -> Option<usize> {
+        self.rounds.iter().find(|r| r.global_loss <= eps).map(|r| r.round)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("algorithm", self.algorithm.as_str())
+            .set("experiment", self.experiment.as_str())
+            .set("num_clients", self.num_clients)
+            .set("seed", self.seed)
+            .set("config", self.config.clone());
+        let rounds: Vec<Json> = self
+            .rounds
+            .iter()
+            .map(|r| {
+                let mut ro = Json::obj();
+                ro.set("round", r.round)
+                    .set("loss", r.global_loss)
+                    .set("ranks", Json::Arr(r.ranks.iter().map(|&x| Json::Num(x as f64)).collect()))
+                    .set("comm_floats", r.comm_floats)
+                    .set("comm_floats_lr", r.comm_floats_lr)
+                    .set("comm_floats_per_client", r.comm_floats_per_client)
+                    .set("wall_s", r.wall_s);
+                if let Some(d) = r.dist_to_opt {
+                    ro.set("dist_to_opt", d);
+                }
+                if let Some(m) = r.eval_metric {
+                    ro.set("eval", m);
+                }
+                ro
+            })
+            .collect();
+        o.set("rounds", Json::Arr(rounds));
+        o
+    }
+
+    /// Append as one JSON line to `path` (creates parents).
+    pub fn append_jsonl(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        writeln!(f, "{}", self.to_json().to_string_compact())
+    }
+}
+
+/// Median trajectory across seeds: per-round medians of loss / rank /
+/// distance (the paper reports medians over 20 random initializations).
+pub fn median_trajectory(runs: &[RunRecord]) -> Vec<(usize, f64, f64, Option<f64>)> {
+    if runs.is_empty() {
+        return vec![];
+    }
+    let num_rounds = runs.iter().map(|r| r.rounds.len()).min().unwrap_or(0);
+    (0..num_rounds)
+        .map(|t| {
+            let losses: Vec<f64> = runs.iter().map(|r| r.rounds[t].global_loss).collect();
+            let ranks: Vec<f64> =
+                runs.iter().map(|r| r.rounds[t].ranks.first().copied().unwrap_or(0) as f64).collect();
+            let dists: Vec<f64> =
+                runs.iter().filter_map(|r| r.rounds[t].dist_to_opt).collect();
+            let d = if dists.len() == runs.len() {
+                Some(crate::util::median(&dists))
+            } else {
+                None
+            };
+            (t, crate::util::median(&losses), crate::util::median(&ranks), d)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(losses: &[f64]) -> RunRecord {
+        let mut r = RunRecord::new("a", "e", 2, 0);
+        for (i, &l) in losses.iter().enumerate() {
+            r.rounds.push(RoundMetrics {
+                round: i,
+                global_loss: l,
+                ranks: vec![4],
+                comm_floats: 100,
+                comm_floats_lr: 60,
+                comm_floats_per_client: 50.0,
+                dist_to_opt: Some(l.sqrt()),
+                eval_metric: None,
+                wall_s: 0.0,
+            });
+        }
+        r
+    }
+
+    #[test]
+    fn accessors() {
+        let r = record(&[1.0, 0.1, 0.01]);
+        assert_eq!(r.final_loss(), 0.01);
+        assert_eq!(r.final_rank(), 4);
+        assert_eq!(r.total_comm_floats(), 300);
+        assert_eq!(r.rounds_to_loss(0.5), Some(1));
+        assert_eq!(r.rounds_to_loss(1e-9), None);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let r = record(&[1.0, 0.5]);
+        let j = r.to_json();
+        let parsed = crate::util::json::parse(&j.to_string_compact()).unwrap();
+        assert_eq!(parsed.get("algorithm").unwrap().as_str().unwrap(), "a");
+        assert_eq!(parsed.get("rounds").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn median_trajectory_medians() {
+        let runs = vec![record(&[1.0, 0.4]), record(&[3.0, 0.6]), record(&[2.0, 0.5])];
+        let traj = median_trajectory(&runs);
+        assert_eq!(traj.len(), 2);
+        assert_eq!(traj[0].1, 2.0);
+        assert_eq!(traj[1].1, 0.5);
+    }
+}

@@ -1,0 +1,202 @@
+//! Weight checkpointing: save/load [`Weights`] as JSON.
+//!
+//! A deployment needs to persist the trained factorization (and resume
+//! federated training after a server restart). The format is the
+//! in-tree JSON with shape-tagged tensors; factored layers store
+//! `U, S, V` separately so the low-rank structure survives the
+//! round trip bit-for-bit (f64 values serialized exactly via their
+//! bit patterns in hex).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::lowrank::LowRank;
+use crate::tensor::Matrix;
+use crate::util::json::{parse, Json};
+
+use super::{LrWeight, Weights};
+
+fn matrix_to_json(m: &Matrix) -> Json {
+    let mut o = Json::obj();
+    o.set("rows", m.rows()).set("cols", m.cols());
+    // Exact f64 round-trip: hex bit patterns (JSON numbers would lose
+    // the guarantee through decimal formatting).
+    let hex: String = m.data().iter().map(|x| format!("{:016x}", x.to_bits())).collect();
+    o.set("data_hex", hex);
+    o
+}
+
+fn matrix_from_json(j: &Json) -> Result<Matrix> {
+    let rows = j.get("rows").and_then(|x| x.as_usize()).ok_or_else(|| anyhow!("rows"))?;
+    let cols = j.get("cols").and_then(|x| x.as_usize()).ok_or_else(|| anyhow!("cols"))?;
+    let hex = j.get("data_hex").and_then(|x| x.as_str()).ok_or_else(|| anyhow!("data_hex"))?;
+    if hex.len() != rows * cols * 16 {
+        return Err(anyhow!("checkpoint data length mismatch"));
+    }
+    let data: Result<Vec<f64>> = (0..rows * cols)
+        .map(|i| {
+            let chunk = &hex[i * 16..(i + 1) * 16];
+            u64::from_str_radix(chunk, 16)
+                .map(f64::from_bits)
+                .map_err(|e| anyhow!("bad hex at {i}: {e}"))
+        })
+        .collect();
+    Ok(Matrix::from_vec(rows, cols, data?))
+}
+
+/// Serialize weights to a JSON value.
+pub fn weights_to_json(w: &Weights) -> Json {
+    let mut o = Json::obj();
+    o.set("format", "fedlrt-checkpoint-v1");
+    o.set("dense", Json::Arr(w.dense.iter().map(matrix_to_json).collect()));
+    let lr: Vec<Json> = w
+        .lr
+        .iter()
+        .map(|lw| {
+            let mut e = Json::obj();
+            match lw {
+                LrWeight::Dense(m) => {
+                    e.set("kind", "dense").set("w", matrix_to_json(m));
+                }
+                LrWeight::Factored(f) => {
+                    e.set("kind", "factored")
+                        .set("u", matrix_to_json(&f.u))
+                        .set("s", matrix_to_json(&f.s))
+                        .set("v", matrix_to_json(&f.v));
+                }
+            }
+            e
+        })
+        .collect();
+    o.set("lr", Json::Arr(lr));
+    o
+}
+
+/// Deserialize weights from a JSON value.
+pub fn weights_from_json(j: &Json) -> Result<Weights> {
+    if j.str_or("format", "") != "fedlrt-checkpoint-v1" {
+        return Err(anyhow!("not a fedlrt checkpoint (missing format tag)"));
+    }
+    let dense = j
+        .get("dense")
+        .and_then(|x| x.as_arr())
+        .ok_or_else(|| anyhow!("missing dense"))?
+        .iter()
+        .map(matrix_from_json)
+        .collect::<Result<Vec<_>>>()?;
+    let lr = j
+        .get("lr")
+        .and_then(|x| x.as_arr())
+        .ok_or_else(|| anyhow!("missing lr"))?
+        .iter()
+        .map(|e| -> Result<LrWeight> {
+            match e.str_or("kind", "") {
+                "dense" => Ok(LrWeight::Dense(matrix_from_json(
+                    e.get("w").ok_or_else(|| anyhow!("missing w"))?,
+                )?)),
+                "factored" => {
+                    let u = matrix_from_json(e.get("u").ok_or_else(|| anyhow!("missing u"))?)?;
+                    let s = matrix_from_json(e.get("s").ok_or_else(|| anyhow!("missing s"))?)?;
+                    let v = matrix_from_json(e.get("v").ok_or_else(|| anyhow!("missing v"))?)?;
+                    if u.cols() != s.rows() || v.cols() != s.cols() {
+                        return Err(anyhow!("inconsistent factor shapes"));
+                    }
+                    Ok(LrWeight::Factored(LowRank { u, s, v }))
+                }
+                other => Err(anyhow!("unknown lr weight kind '{other}'")),
+            }
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(Weights { dense, lr })
+}
+
+/// Save to a file (pretty-printed).
+pub fn save(w: &Weights, path: &Path) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, weights_to_json(w).to_string_pretty())
+        .with_context(|| format!("writing checkpoint {path:?}"))
+}
+
+/// Load from a file.
+pub fn load(path: &Path) -> Result<Weights> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading checkpoint {path:?}"))?;
+    let j = parse(&text).map_err(|e| anyhow!("checkpoint parse: {e}"))?;
+    weights_from_json(&j)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sample_weights(seed: u64) -> Weights {
+        let mut rng = Rng::new(seed);
+        Weights {
+            dense: vec![Matrix::randn(3, 5, &mut rng), Matrix::randn(1, 4, &mut rng)],
+            lr: vec![
+                LrWeight::Factored(LowRank::random_init(8, 7, 3, &mut rng)),
+                LrWeight::Dense(Matrix::randn(6, 6, &mut rng)),
+            ],
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact() {
+        let w = sample_weights(1);
+        let back = weights_from_json(&weights_to_json(&w)).unwrap();
+        for (a, b) in w.dense.iter().zip(&back.dense) {
+            assert_eq!(a.data(), b.data());
+        }
+        match (&w.lr[0], &back.lr[0]) {
+            (LrWeight::Factored(x), LrWeight::Factored(y)) => {
+                assert_eq!(x.u.data(), y.u.data());
+                assert_eq!(x.s.data(), y.s.data());
+                assert_eq!(x.v.data(), y.v.data());
+            }
+            _ => panic!("kind changed"),
+        }
+        match (&w.lr[1], &back.lr[1]) {
+            (LrWeight::Dense(x), LrWeight::Dense(y)) => assert_eq!(x.data(), y.data()),
+            _ => panic!("kind changed"),
+        }
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("fedlrt_ckpt_test");
+        let path = dir.join("w.json");
+        let w = sample_weights(2);
+        save(&w, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(w.param_count(), back.param_count());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn special_values_survive() {
+        // Subnormals, negative zero, infinities must round-trip.
+        let m = Matrix::from_vec(
+            1,
+            4,
+            vec![f64::MIN_POSITIVE / 2.0, -0.0, f64::INFINITY, 1.0e-300],
+        );
+        let w = Weights { dense: vec![m], lr: vec![] };
+        let back = weights_from_json(&weights_to_json(&w)).unwrap();
+        for (a, b) in w.dense[0].data().iter().zip(back.dense[0].data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(weights_from_json(&Json::obj()).is_err());
+        assert!(parse("{").is_err());
+        let mut bad = weights_to_json(&sample_weights(3));
+        bad.set("format", "other");
+        assert!(weights_from_json(&bad).is_err());
+    }
+}

@@ -1,0 +1,165 @@
+//! Problem abstraction for federated optimization.
+//!
+//! A [`FedProblem`] is the thing being trained: it knows the weight
+//! structure (dense parameters + low-rank-capable layers), the client
+//! partition, and how to evaluate losses and gradients. Two families
+//! implement it:
+//!
+//! * [`least_squares`] — the paper's §4.1 convex tests, with analytic
+//!   gradients computed natively in Rust;
+//! * `nn::NnProblem` — the §4.2 vision benchmarks, whose gradients run
+//!   through the AOT-compiled JAX/Pallas artifacts via PJRT.
+
+pub mod checkpoint;
+pub mod least_squares;
+pub mod quadratic;
+
+use crate::lowrank::LowRank;
+use crate::tensor::Matrix;
+
+/// Shapes of all trainables.
+#[derive(Debug, Clone, Default)]
+pub struct ProblemSpec {
+    /// Dense (non-factorized) parameter shapes, e.g. biases, head.
+    pub dense_shapes: Vec<(usize, usize)>,
+    /// Low-rank-capable layer shapes `(m, n)`.
+    pub lr_shapes: Vec<(usize, usize)>,
+}
+
+/// One low-rank-capable layer's weight in either representation.
+#[derive(Debug, Clone)]
+pub enum LrWeight {
+    /// Factorized `U S Vᵀ` (FeDLRT).
+    Factored(LowRank),
+    /// Dense matrix (FedAvg / FedLin baselines).
+    Dense(Matrix),
+}
+
+impl LrWeight {
+    pub fn as_factored(&self) -> &LowRank {
+        match self {
+            LrWeight::Factored(f) => f,
+            LrWeight::Dense(_) => panic!("expected factored weight"),
+        }
+    }
+
+    pub fn as_dense(&self) -> &Matrix {
+        match self {
+            LrWeight::Dense(m) => m,
+            LrWeight::Factored(_) => panic!("expected dense weight"),
+        }
+    }
+
+    /// Materialize as a dense matrix regardless of representation.
+    pub fn to_dense(&self) -> Matrix {
+        match self {
+            LrWeight::Dense(m) => m.clone(),
+            LrWeight::Factored(f) => f.to_dense(),
+        }
+    }
+
+    /// Trainable parameter count in the current representation.
+    pub fn param_count(&self) -> usize {
+        match self {
+            LrWeight::Dense(m) => m.rows() * m.cols(),
+            LrWeight::Factored(f) => f.param_count(),
+        }
+    }
+}
+
+/// A complete set of trainable weights.
+#[derive(Debug, Clone)]
+pub struct Weights {
+    pub dense: Vec<Matrix>,
+    pub lr: Vec<LrWeight>,
+}
+
+impl Weights {
+    pub fn param_count(&self) -> usize {
+        self.dense.iter().map(|m| m.rows() * m.cols()).sum::<usize>()
+            + self.lr.iter().map(|w| w.param_count()).sum::<usize>()
+    }
+}
+
+/// Which gradient form the caller wants for the low-rank layers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LrWant {
+    /// Basis + coefficient gradients `(G_U, G_V, G_S)` at `U S Vᵀ`
+    /// (Algorithm 1 line 3 / Algorithm 5 lines 3–5).
+    Factors,
+    /// Coefficient gradient only `∇_S̃ L_c(Ũ S̃ Ṽᵀ)` — the client inner
+    /// loop (eq. 7/8); weights carry the *augmented* factors.
+    Coeff,
+    /// Dense gradient `∇_W L_c(W)` — FedAvg/FedLin baselines.
+    Dense,
+}
+
+/// Per-layer gradient matching [`LrWant`].
+#[derive(Debug, Clone)]
+pub enum LrGrad {
+    Factors { g_u: Matrix, g_v: Matrix, g_s: Matrix },
+    Coeff(Matrix),
+    Dense(Matrix),
+}
+
+impl LrGrad {
+    pub fn coeff(&self) -> &Matrix {
+        match self {
+            LrGrad::Coeff(m) => m,
+            _ => panic!("expected coefficient gradient"),
+        }
+    }
+
+    pub fn dense(&self) -> &Matrix {
+        match self {
+            LrGrad::Dense(m) => m,
+            _ => panic!("expected dense gradient"),
+        }
+    }
+}
+
+/// Result of a gradient evaluation.
+#[derive(Debug, Clone)]
+pub struct Grads {
+    /// Mini-batch (or full-batch) loss at the evaluation point.
+    pub loss: f64,
+    pub dense: Vec<Matrix>,
+    pub lr: Vec<LrGrad>,
+}
+
+/// A federated optimization problem (eq. 1).
+pub trait FedProblem {
+    /// Weight structure.
+    fn spec(&self) -> ProblemSpec;
+
+    /// Number of clients `C`.
+    fn num_clients(&self) -> usize;
+
+    /// Evaluate client `c`'s loss and gradient at `w`.
+    ///
+    /// `step` selects the mini-batch for stochastic problems (clients
+    /// use a deterministic schedule so runs are reproducible); convex
+    /// full-batch problems ignore it.
+    fn grad(&self, c: usize, w: &Weights, want: LrWant, step: u64) -> Grads;
+
+    /// Global loss `L(w) = (1/C) Σ_c L_c(w)` on the full data.
+    fn global_loss(&self, w: &Weights) -> f64;
+
+    /// Optional task metric (e.g. validation accuracy ∈ [0,1]).
+    fn eval_metric(&self, _w: &Weights) -> Option<f64> {
+        None
+    }
+
+    /// Distance to a known optimum, if the problem has one (Fig 4).
+    fn distance_to_optimum(&self, _w: &Weights) -> Option<f64> {
+        None
+    }
+
+    /// Aggregation weight of client `c` (paper §2: "the extension to
+    /// handle a (non-uniform) weighted average case is straightforward"
+    /// — e.g. proportional to shard sizes). Uniform by default; engines
+    /// normalize over the participating set.
+    fn client_weight(&self, _c: usize) -> f64 {
+        1.0
+    }
+}

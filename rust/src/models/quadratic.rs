@@ -1,0 +1,129 @@
+//! Synthetic quadratic problem with known smoothness constant.
+//!
+//! `L_c(W) = (α_c/2) ‖W − B_c‖_F²` — the simplest L-smooth federated
+//! problem (`L = max_c α_c`, global minimizer `W* = Σ α_c B_c / Σ α_c`).
+//! Used by the theorem-validation tests (drift bound Thm 1, descent
+//! Thm 2, convergence Thm 3) where the analysis constants must be
+//! checkable exactly, and by failure-injection tests that need a problem
+//! whose every quantity is analytic.
+
+use crate::tensor::Matrix;
+use crate::util::rng::Rng;
+
+use super::{FedProblem, Grads, LrGrad, LrWant, LrWeight, ProblemSpec, Weights};
+
+/// Federated quadratic: client `c` pulls toward `B_c` with weight `α_c`.
+#[derive(Debug, Clone)]
+pub struct Quadratic {
+    pub targets: Vec<Matrix>,
+    pub alphas: Vec<f64>,
+    pub n: usize,
+}
+
+impl Quadratic {
+    /// Random targets of the given rank; `alphas` all 1 (L = 1).
+    pub fn random(n: usize, target_rank: usize, num_clients: usize, rng: &mut Rng) -> Quadratic {
+        let targets = (0..num_clients)
+            .map(|_| crate::lowrank::LowRank::random_init(n, n, target_rank, rng).to_dense())
+            .collect();
+        Quadratic { targets, alphas: vec![1.0; num_clients], n }
+    }
+
+    /// Smoothness constant of every `L_c` (and of `L`).
+    pub fn smoothness(&self) -> f64 {
+        self.alphas.iter().cloned().fold(0.0f64, f64::max)
+    }
+
+    /// Global minimizer `W* = Σ α_c B_c / Σ α_c`.
+    pub fn minimizer(&self) -> Matrix {
+        let mut acc = Matrix::zeros(self.n, self.n);
+        let total: f64 = self.alphas.iter().sum();
+        for (b, &a) in self.targets.iter().zip(&self.alphas) {
+            acc.axpy(a / total, b);
+        }
+        acc
+    }
+
+    fn local_loss(&self, c: usize, w: &Matrix) -> f64 {
+        let d = w.sub(&self.targets[c]);
+        0.5 * self.alphas[c] * d.fro_norm().powi(2)
+    }
+
+    /// `∇_W L_c = α_c (W − B_c)`.
+    fn local_grad(&self, c: usize, w: &Matrix) -> Matrix {
+        w.sub(&self.targets[c]).scale(self.alphas[c])
+    }
+}
+
+impl FedProblem for Quadratic {
+    fn spec(&self) -> ProblemSpec {
+        ProblemSpec { dense_shapes: vec![], lr_shapes: vec![(self.n, self.n)] }
+    }
+
+    fn num_clients(&self) -> usize {
+        self.targets.len()
+    }
+
+    fn grad(&self, c: usize, w: &Weights, want: LrWant, _step: u64) -> Grads {
+        let (loss, lr_grad) = match (want, &w.lr[0]) {
+            (LrWant::Dense, LrWeight::Dense(wm)) => {
+                (self.local_loss(c, wm), LrGrad::Dense(self.local_grad(c, wm)))
+            }
+            (LrWant::Factors, LrWeight::Factored(f)) => {
+                let dense = f.to_dense();
+                let g = self.local_grad(c, &dense);
+                let g_u = crate::tensor::matmul_nt(&crate::tensor::matmul(&g, &f.v), &f.s);
+                let g_v = crate::tensor::matmul(&crate::tensor::matmul_tn(&g, &f.u), &f.s);
+                let g_s = crate::lowrank::factorization::project_coeff_grad(&f.u, &g, &f.v);
+                (self.local_loss(c, &dense), LrGrad::Factors { g_u, g_v, g_s })
+            }
+            (LrWant::Coeff, LrWeight::Factored(f)) => {
+                let dense = f.to_dense();
+                let g = self.local_grad(c, &dense);
+                let g_s = crate::lowrank::factorization::project_coeff_grad(&f.u, &g, &f.v);
+                (self.local_loss(c, &dense), LrGrad::Coeff(g_s))
+            }
+            _ => panic!("weight representation does not match requested gradient"),
+        };
+        Grads { loss, dense: vec![], lr: vec![lr_grad] }
+    }
+
+    fn global_loss(&self, w: &Weights) -> f64 {
+        let dense = w.lr[0].to_dense();
+        (0..self.num_clients()).map(|c| self.local_loss(c, &dense)).sum::<f64>()
+            / self.num_clients() as f64
+    }
+
+    fn distance_to_optimum(&self, w: &Weights) -> Option<f64> {
+        Some(w.lr[0].to_dense().sub(&self.minimizer()).fro_norm())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimizer_has_zero_gradient() {
+        let mut rng = Rng::new(701);
+        let prob = Quadratic::random(6, 2, 3, &mut rng);
+        let w_star = prob.minimizer();
+        let wts = Weights { dense: vec![], lr: vec![LrWeight::Dense(w_star)] };
+        let mut g_sum = Matrix::zeros(6, 6);
+        for c in 0..3 {
+            g_sum.axpy(1.0 / 3.0, prob.grad(c, &wts, LrWant::Dense, 0).lr[0].dense());
+        }
+        assert!(g_sum.max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn gradient_is_linear() {
+        let mut rng = Rng::new(703);
+        let prob = Quadratic::random(5, 2, 2, &mut rng);
+        let w = Matrix::randn(5, 5, &mut rng);
+        let wts = Weights { dense: vec![], lr: vec![LrWeight::Dense(w.clone())] };
+        let g = prob.grad(0, &wts, LrWant::Dense, 0);
+        let want = w.sub(&prob.targets[0]);
+        assert!(g.lr[0].dense().sub(&want).max_abs() < 1e-12);
+    }
+}

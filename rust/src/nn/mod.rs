@@ -1,0 +1,423 @@
+//! Federated neural-network problems over the PJRT runtime (the §4.2
+//! vision benchmarks).
+//!
+//! [`NnProblem`] implements [`FedProblem`] by routing every gradient and
+//! evaluation call through the AOT-compiled JAX/Pallas artifacts. The
+//! coordinator's dynamic ranks are reconciled with the artifacts' static
+//! shapes by exact zero-padding to `r_pad` (DESIGN.md §Static-shape AOT):
+//! the coordinator may use any rank `r ≤ r_pad/2` (so the augmented rank
+//! `2r ≤ r_pad` still fits).
+
+pub mod experiment;
+
+use anyhow::{anyhow, Result};
+
+use crate::data::{dirichlet_partition, uniform_partition, VisionDataset};
+use crate::models::{FedProblem, Grads, LrGrad, LrWant, LrWeight, ProblemSpec, Weights};
+use crate::runtime::{Executable, HostTensor, ModelEntry, Runtime};
+use crate::tensor::Matrix;
+use crate::util::rng::Rng;
+
+/// Options for constructing an [`NnProblem`].
+#[derive(Debug, Clone)]
+pub struct NnOptions {
+    /// Model config name from the artifact manifest.
+    pub config: String,
+    pub num_clients: usize,
+    pub train_n: usize,
+    pub test_n: usize,
+    /// Cap on samples used for the per-round global-loss estimate
+    /// (full test set is always used for accuracy).
+    pub eval_cap: usize,
+    pub seed: u64,
+    /// Feature-augmentation on training batches (paper's flips).
+    pub augment: bool,
+    /// Label-skew heterogeneity: `None` = the paper's uniform shards;
+    /// `Some(alpha)` = Dirichlet(α) label skew (smaller α ⇒ more skew).
+    pub dirichlet_alpha: Option<f64>,
+}
+
+impl Default for NnOptions {
+    fn default() -> Self {
+        NnOptions {
+            config: "test_tiny".into(),
+            num_clients: 4,
+            train_n: 2048,
+            test_n: 512,
+            eval_cap: 1024,
+            seed: 0,
+            augment: true,
+            dirichlet_alpha: None,
+        }
+    }
+}
+
+/// A federated NN training problem backed by AOT artifacts.
+pub struct NnProblem {
+    entry: ModelEntry,
+    grad_factors: Executable,
+    grad_coeff: Executable,
+    grad_dense: Executable,
+    eval_factors: Executable,
+    eval_dense: Executable,
+    dataset: VisionDataset,
+    shards: Vec<Vec<usize>>,
+    opts: NnOptions,
+}
+
+impl NnProblem {
+    /// Build the problem: load artifacts, synthesize + partition data.
+    pub fn new(runtime: &mut Runtime, opts: NnOptions) -> Result<NnProblem> {
+        let entry = runtime
+            .manifest
+            .configs
+            .get(&opts.config)
+            .ok_or_else(|| anyhow!("no config '{}' in manifest", opts.config))?
+            .clone();
+        // Compile all five functions up front (owned by this problem).
+        let grad_factors = runtime.compile(&opts.config, "grad_factors")?;
+        let grad_coeff = runtime.compile(&opts.config, "grad_coeff")?;
+        let grad_dense = runtime.compile(&opts.config, "grad_dense")?;
+        let eval_factors = runtime.compile(&opts.config, "eval_factors")?;
+        let eval_dense = runtime.compile(&opts.config, "eval_dense")?;
+
+        let dataset = VisionDataset::synthesize(
+            entry.d_in,
+            entry.classes,
+            opts.train_n,
+            opts.test_n,
+            opts.seed,
+        );
+        let mut rng = Rng::new(opts.seed ^ 0x5A4D);
+        let shards = match opts.dirichlet_alpha {
+            None => uniform_partition(opts.train_n, opts.num_clients, &mut rng),
+            Some(alpha) => dirichlet_partition(
+                &dataset.train.y,
+                entry.classes,
+                opts.num_clients,
+                alpha,
+                entry.batch,
+                &mut rng,
+            ),
+        };
+        // Every client must fill at least one batch.
+        for s in &shards {
+            assert!(
+                s.len() >= entry.batch,
+                "shard of {} samples < batch {}",
+                s.len(),
+                entry.batch
+            );
+        }
+        Ok(NnProblem {
+            entry,
+            grad_factors,
+            grad_coeff,
+            grad_dense,
+            eval_factors,
+            eval_dense,
+            dataset,
+            shards,
+            opts,
+        })
+    }
+
+    /// Recommended rank cap compatible with the artifacts' padding.
+    pub fn max_rank(&self) -> usize {
+        self.entry.r_pad / 2
+    }
+
+    pub fn entry(&self) -> &ModelEntry {
+        &self.entry
+    }
+
+    /// Training batch for client `c` at local step counter `step`.
+    fn batch(&self, c: usize, step: u64) -> (HostTensor, HostTensor) {
+        let shard = &self.shards[c];
+        let b = self.entry.batch;
+        let num_batches = shard.len() / b;
+        let epoch = step / num_batches.max(1) as u64;
+        let bi = (step % num_batches.max(1) as u64) as usize;
+        let d = self.entry.d_in;
+        let mut x = vec![0f32; b * d];
+        let mut y = vec![0i32; b];
+        for k in 0..b {
+            let idx = shard[(bi * b + k) % shard.len()];
+            if self.opts.augment {
+                self.dataset.augmented_row(idx, epoch, &mut x[k * d..(k + 1) * d]);
+            } else {
+                for (j, v) in self.dataset.train.x.row(idx).iter().enumerate() {
+                    x[k * d + j] = *v as f32;
+                }
+            }
+            y[k] = self.dataset.train.y[idx];
+        }
+        (HostTensor::f32(&[b, d], x), HostTensor::i32(&[b], y))
+    }
+
+    /// Build artifact inputs from coordinator weights (factored form),
+    /// padding factors to `r_pad`.
+    fn factored_inputs(&self, w: &Weights, x: HostTensor, y: HostTensor) -> Vec<HostTensor> {
+        let r_pad = self.entry.r_pad;
+        let mut dense_iter = w.dense.iter();
+        let mut lr_idx = 0usize;
+        let mut inputs = Vec::with_capacity(self.entry.params_factored.len() + 2);
+        for spec in &self.entry.params_factored {
+            let t = if spec.name.ends_with(".u") {
+                let f = w.lr[lr_idx].as_factored();
+                HostTensor::f32(&[f.m(), r_pad], pad_cols(&f.u, r_pad))
+            } else if spec.name.ends_with(".s") {
+                let f = w.lr[lr_idx].as_factored();
+                HostTensor::f32(&[r_pad, r_pad], pad_square(&f.s, r_pad))
+            } else if spec.name.ends_with(".v") {
+                let f = w.lr[lr_idx].as_factored();
+                lr_idx += 1; // v is the last factor of this layer
+                HostTensor::f32(&[f.n(), r_pad], pad_cols(&f.v, r_pad))
+            } else {
+                let d = dense_iter.next().expect("missing dense weight");
+                HostTensor::f32(&[d.rows(), d.cols()], d.to_f32())
+            };
+            inputs.push(t);
+        }
+        inputs.push(x);
+        inputs.push(y);
+        inputs
+    }
+
+    fn dense_inputs(&self, w: &Weights, x: HostTensor, y: HostTensor) -> Vec<HostTensor> {
+        let mut dense_iter = w.dense.iter();
+        let mut lr_iter = w.lr.iter();
+        let mut inputs = Vec::with_capacity(self.entry.params_dense.len() + 2);
+        for spec in &self.entry.params_dense {
+            let is_lr_w = spec.name.starts_with("lr") && spec.name.ends_with(".w");
+            let t = if is_lr_w {
+                let m = lr_iter.next().expect("missing lr weight").as_dense();
+                HostTensor::f32(&[m.rows(), m.cols()], m.to_f32())
+            } else {
+                let d = dense_iter.next().expect("missing dense weight");
+                HostTensor::f32(&[d.rows(), d.cols()], d.to_f32())
+            };
+            inputs.push(t);
+        }
+        inputs.push(x);
+        inputs.push(y);
+        inputs
+    }
+
+    /// Evaluate `(mean loss, accuracy)` over a split via the eval artifact.
+    fn evaluate(&self, w: &Weights, on_test: bool, cap: usize) -> (f64, f64) {
+        let factored = matches!(w.lr.first(), Some(LrWeight::Factored(_)));
+        let exe = if factored { &self.eval_factors } else { &self.eval_dense };
+        let split = if on_test { &self.dataset.test } else { &self.dataset.train };
+        let e = self.entry.eval_batch;
+        let d = self.entry.d_in;
+        let n = split.len().min(cap.max(e));
+        let num_batches = (n / e).max(1);
+        let mut loss_sum = 0.0;
+        let mut correct = 0.0;
+        let mut count = 0usize;
+        for bi in 0..num_batches {
+            let mut x = vec![0f32; e * d];
+            let mut y = vec![0i32; e];
+            for k in 0..e {
+                let idx = (bi * e + k) % split.len();
+                for (j, v) in split.x.row(idx).iter().enumerate() {
+                    x[k * d + j] = *v as f32;
+                }
+                y[k] = split.y[idx];
+            }
+            let inputs_x = HostTensor::f32(&[e, d], x);
+            let inputs_y = HostTensor::i32(&[e], y);
+            let inputs = if factored {
+                self.factored_inputs(w, inputs_x, inputs_y)
+            } else {
+                self.dense_inputs(w, inputs_x, inputs_y)
+            };
+            let out = exe.call(&inputs).expect("eval artifact failed");
+            loss_sum += out[0][0] as f64;
+            correct += out[1][0] as f64;
+            count += e;
+        }
+        (loss_sum / count as f64, correct / count as f64)
+    }
+}
+
+/// Pad an `m×r` matrix to `m×r_pad` with zero columns (flat f32).
+fn pad_cols(m: &Matrix, r_pad: usize) -> Vec<f32> {
+    let (rows, r) = m.shape();
+    assert!(r <= r_pad, "rank {r} exceeds artifact padding {r_pad}");
+    let mut out = vec![0f32; rows * r_pad];
+    for i in 0..rows {
+        for j in 0..r {
+            out[i * r_pad + j] = m[(i, j)] as f32;
+        }
+    }
+    out
+}
+
+/// Pad an `r×r` matrix into the top-left of `r_pad×r_pad` (flat f32).
+fn pad_square(m: &Matrix, r_pad: usize) -> Vec<f32> {
+    let r = m.rows();
+    assert!(r <= r_pad);
+    let mut out = vec![0f32; r_pad * r_pad];
+    for i in 0..r {
+        for j in 0..r {
+            out[i * r_pad + j] = m[(i, j)] as f32;
+        }
+    }
+    out
+}
+
+/// Slice the leading `rows×r` block out of a flat `rows×r_pad` f32 grad.
+fn unpad_cols(flat: &[f32], rows: usize, r_pad: usize, r: usize) -> Matrix {
+    let mut m = Matrix::zeros(rows, r);
+    for i in 0..rows {
+        for j in 0..r {
+            m[(i, j)] = flat[i * r_pad + j] as f64;
+        }
+    }
+    m
+}
+
+impl FedProblem for NnProblem {
+    fn spec(&self) -> ProblemSpec {
+        let mut dense_shapes = Vec::new();
+        for spec in &self.entry.params_factored {
+            if !spec.name.ends_with(".u")
+                && !spec.name.ends_with(".s")
+                && !spec.name.ends_with(".v")
+            {
+                dense_shapes.push((spec.shape[0], spec.shape[1]));
+            }
+        }
+        let lr_shapes = vec![(self.entry.n_core, self.entry.n_core); self.entry.num_lr];
+        ProblemSpec { dense_shapes, lr_shapes }
+    }
+
+    fn num_clients(&self) -> usize {
+        self.opts.num_clients
+    }
+
+    fn grad(&self, c: usize, w: &Weights, want: LrWant, step: u64) -> Grads {
+        let (x, y) = self.batch(c, step);
+        let r_pad = self.entry.r_pad;
+        match want {
+            LrWant::Factors => {
+                let inputs = self.factored_inputs(w, x, y);
+                let out = self.grad_factors.call(&inputs).expect("grad_factors failed");
+                let loss = out[0][0] as f64;
+                // Outputs follow params_factored order after the loss.
+                let mut dense = Vec::new();
+                let mut lr: Vec<LrGrad> = Vec::new();
+                let mut cur: Option<(Matrix, Matrix)> = None; // (g_u, g_s) awaiting g_v
+                let mut lr_idx = 0usize;
+                for (oi, spec) in self.entry.params_factored.iter().enumerate() {
+                    let flat = &out[1 + oi];
+                    if spec.name.ends_with(".u") {
+                        let r = w.lr[lr_idx].as_factored().rank();
+                        let g_u = unpad_cols(flat, spec.shape[0], r_pad, r);
+                        cur = Some((g_u, Matrix::zeros(0, 0)));
+                    } else if spec.name.ends_with(".s") {
+                        let r = w.lr[lr_idx].as_factored().rank();
+                        let g_s_full = Matrix::from_f32(r_pad, r_pad, flat);
+                        let g_s = g_s_full.block(r, r);
+                        if let Some((_, slot)) = cur.as_mut() {
+                            *slot = g_s;
+                        }
+                    } else if spec.name.ends_with(".v") {
+                        let r = w.lr[lr_idx].as_factored().rank();
+                        let g_v = unpad_cols(flat, spec.shape[0], r_pad, r);
+                        let (g_u, g_s) = cur.take().unwrap();
+                        lr.push(LrGrad::Factors { g_u, g_v, g_s });
+                        lr_idx += 1;
+                    } else {
+                        dense.push(Matrix::from_f32(spec.shape[0], spec.shape[1], flat));
+                    }
+                }
+                Grads { loss, dense, lr }
+            }
+            LrWant::Coeff => {
+                let inputs = self.factored_inputs(w, x, y);
+                let out = self.grad_coeff.call(&inputs).expect("grad_coeff failed");
+                let loss = out[0][0] as f64;
+                let mut dense = Vec::new();
+                let mut lr = Vec::new();
+                let mut lr_idx = 0usize;
+                let mut oi = 0usize;
+                for spec in &self.entry.params_factored {
+                    if spec.name.ends_with(".u") || spec.name.ends_with(".v") {
+                        continue; // not an output of grad_coeff
+                    }
+                    let flat = &out[1 + oi];
+                    oi += 1;
+                    if spec.name.ends_with(".s") {
+                        let r = w.lr[lr_idx].as_factored().rank();
+                        let g_s = Matrix::from_f32(r_pad, r_pad, flat).block(r, r);
+                        lr.push(LrGrad::Coeff(g_s));
+                        lr_idx += 1;
+                    } else {
+                        dense.push(Matrix::from_f32(spec.shape[0], spec.shape[1], flat));
+                    }
+                }
+                Grads { loss, dense, lr }
+            }
+            LrWant::Dense => {
+                let inputs = self.dense_inputs(w, x, y);
+                let out = self.grad_dense.call(&inputs).expect("grad_dense failed");
+                let loss = out[0][0] as f64;
+                let mut dense = Vec::new();
+                let mut lr = Vec::new();
+                for (oi, spec) in self.entry.params_dense.iter().enumerate() {
+                    let flat = &out[1 + oi];
+                    let m = Matrix::from_f32(spec.shape[0], spec.shape[1], flat);
+                    if spec.name.starts_with("lr") && spec.name.ends_with(".w") {
+                        lr.push(LrGrad::Dense(m));
+                    } else {
+                        dense.push(m);
+                    }
+                }
+                Grads { loss, dense, lr }
+            }
+        }
+    }
+
+    fn global_loss(&self, w: &Weights) -> f64 {
+        self.evaluate(w, false, self.opts.eval_cap).0
+    }
+
+    fn eval_metric(&self, w: &Weights) -> Option<f64> {
+        Some(self.evaluate(w, true, usize::MAX).1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Runtime-backed tests live in `rust/tests/runtime_nn.rs` (they need
+    // `make artifacts` to have run); unit-testable pieces:
+    use super::*;
+
+    #[test]
+    fn padding_roundtrip() {
+        let mut rng = Rng::new(1);
+        let m = Matrix::randn(5, 3, &mut rng);
+        let flat = pad_cols(&m, 6);
+        assert_eq!(flat.len(), 30);
+        let back = unpad_cols(&flat, 5, 6, 3);
+        assert!(back.sub(&m).max_abs() < 1e-6);
+        // Zero padding in the extra columns.
+        for i in 0..5 {
+            for j in 3..6 {
+                assert_eq!(flat[i * 6 + j], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn square_padding_top_left() {
+        let m = Matrix::diag(&[1.0, 2.0]);
+        let flat = pad_square(&m, 4);
+        assert_eq!(flat[0], 1.0);
+        assert_eq!(flat[5], 2.0);
+        assert_eq!(flat.iter().filter(|&&x| x != 0.0).count(), 2);
+    }
+}

@@ -1,0 +1,267 @@
+//! Client-side optimizers and learning-rate schedules (Table 2).
+//!
+//! The paper's client inner loop is plain SGD (eqs. 2/4/7/8) with
+//! momentum and weight decay for the vision benchmarks (Table 2). The
+//! optimizer state lives on the *client* and is reset at each
+//! aggregation round — matching the paper's setup where local iterations
+//! restart from the broadcast global state.
+
+use crate::tensor::Matrix;
+
+/// SGD hyperparameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SgdConfig {
+    pub momentum: f64,
+    pub weight_decay: f64,
+}
+
+impl Default for SgdConfig {
+    fn default() -> Self {
+        SgdConfig { momentum: 0.0, weight_decay: 0.0 }
+    }
+}
+
+/// SGD with (optional) momentum and decoupled weight decay for one
+/// parameter tensor.
+#[derive(Debug, Clone)]
+pub struct Sgd {
+    cfg: SgdConfig,
+    velocity: Option<Matrix>,
+}
+
+impl Sgd {
+    pub fn new(cfg: SgdConfig) -> Sgd {
+        Sgd { cfg, velocity: None }
+    }
+
+    /// One update `w ← w − λ·(g + wd·w)` with momentum buffer.
+    /// `extra` is an additive gradient correction (the variance
+    /// correction term `V_c`), applied before momentum.
+    pub fn step(&mut self, w: &mut Matrix, g: &Matrix, lr: f64, extra: Option<&Matrix>) {
+        let mut eff = g.clone();
+        if let Some(e) = extra {
+            eff.axpy(1.0, e);
+        }
+        if self.cfg.weight_decay != 0.0 {
+            eff.axpy(self.cfg.weight_decay, w);
+        }
+        if self.cfg.momentum != 0.0 {
+            let v = self
+                .velocity
+                .get_or_insert_with(|| Matrix::zeros(w.rows(), w.cols()));
+            v.scale_inplace(self.cfg.momentum);
+            v.axpy(1.0, &eff);
+            w.axpy(-lr, v);
+        } else {
+            w.axpy(-lr, &eff);
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.velocity = None;
+    }
+}
+
+/// Adam optimizer (Table 2: the ViT benchmark uses Adam with standard
+/// parameters). State is per-client and reset each aggregation round,
+/// like [`Sgd`].
+#[derive(Debug, Clone)]
+pub struct Adam {
+    beta1: f64,
+    beta2: f64,
+    eps: f64,
+    weight_decay: f64,
+    m: Option<Matrix>,
+    v: Option<Matrix>,
+    t: u64,
+}
+
+impl Adam {
+    /// Standard PyTorch defaults: β=(0.9, 0.999), ε=1e-8.
+    pub fn new(weight_decay: f64) -> Adam {
+        Adam { beta1: 0.9, beta2: 0.999, eps: 1e-8, weight_decay, m: None, v: None, t: 0 }
+    }
+
+    /// One Adam update; `extra` is the variance-correction term, applied
+    /// to the gradient before the moment updates (so the correction is
+    /// also adaptively scaled, matching how FedLin-style corrections
+    /// compose with adaptive optimizers).
+    pub fn step(&mut self, w: &mut Matrix, g: &Matrix, lr: f64, extra: Option<&Matrix>) {
+        let mut eff = g.clone();
+        if let Some(e) = extra {
+            eff.axpy(1.0, e);
+        }
+        if self.weight_decay != 0.0 {
+            eff.axpy(self.weight_decay, w);
+        }
+        self.t += 1;
+        let m = self.m.get_or_insert_with(|| Matrix::zeros(w.rows(), w.cols()));
+        m.scale_inplace(self.beta1);
+        m.axpy(1.0 - self.beta1, &eff);
+        let v = self.v.get_or_insert_with(|| Matrix::zeros(w.rows(), w.cols()));
+        v.scale_inplace(self.beta2);
+        for (vi, gi) in v.data_mut().iter_mut().zip(eff.data()) {
+            *vi += (1.0 - self.beta2) * gi * gi;
+        }
+        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+        let (m, v) = (self.m.as_ref().unwrap(), self.v.as_ref().unwrap());
+        for ((wi, mi), vi) in w.data_mut().iter_mut().zip(m.data()).zip(v.data()) {
+            let mhat = mi / bc1;
+            let vhat = vi / bc2;
+            *wi -= lr * mhat / (vhat.sqrt() + self.eps);
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.m = None;
+        self.v = None;
+        self.t = 0;
+    }
+}
+
+/// Which client optimizer a training run uses (Table 2's Optimizer row).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum OptimizerKind {
+    Sgd(SgdConfig),
+    Adam { weight_decay: f64 },
+}
+
+impl Default for OptimizerKind {
+    fn default() -> Self {
+        OptimizerKind::Sgd(SgdConfig::default())
+    }
+}
+
+/// A client-side optimizer instance for one parameter tensor.
+#[derive(Debug, Clone)]
+pub enum ClientOptimizer {
+    Sgd(Sgd),
+    Adam(Adam),
+}
+
+impl ClientOptimizer {
+    pub fn new(kind: OptimizerKind) -> ClientOptimizer {
+        match kind {
+            OptimizerKind::Sgd(cfg) => ClientOptimizer::Sgd(Sgd::new(cfg)),
+            OptimizerKind::Adam { weight_decay } => {
+                ClientOptimizer::Adam(Adam::new(weight_decay))
+            }
+        }
+    }
+
+    pub fn step(&mut self, w: &mut Matrix, g: &Matrix, lr: f64, extra: Option<&Matrix>) {
+        match self {
+            ClientOptimizer::Sgd(o) => o.step(w, g, lr, extra),
+            ClientOptimizer::Adam(o) => o.step(w, g, lr, extra),
+        }
+    }
+}
+
+/// Learning-rate schedule over aggregation rounds.
+#[derive(Debug, Clone, Copy)]
+pub enum LrSchedule {
+    Constant(f64),
+    /// Cosine annealing from `start` to `end` over `total` rounds
+    /// (all four vision benchmarks in Table 2).
+    Cosine { start: f64, end: f64, total: usize },
+}
+
+impl LrSchedule {
+    pub fn at(&self, round: usize) -> f64 {
+        match *self {
+            LrSchedule::Constant(lr) => lr,
+            LrSchedule::Cosine { start, end, total } => {
+                if total <= 1 {
+                    return end;
+                }
+                let t = (round.min(total - 1)) as f64 / (total - 1) as f64;
+                end + 0.5 * (start - end) * (1.0 + (std::f64::consts::PI * t).cos())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn plain_sgd_descends_quadratic() {
+        // min ½‖w‖² — gradient w, fixed point 0.
+        let mut w = Matrix::from_vec(1, 2, vec![1.0, -2.0]);
+        let mut opt = Sgd::new(SgdConfig::default());
+        for _ in 0..100 {
+            let g = w.clone();
+            opt.step(&mut w, &g, 0.1, None);
+        }
+        assert!(w.max_abs() < 1e-4);
+    }
+
+    #[test]
+    fn momentum_accelerates() {
+        let run = |momentum: f64| {
+            let mut w = Matrix::from_vec(1, 1, vec![1.0]);
+            let mut opt = Sgd::new(SgdConfig { momentum, weight_decay: 0.0 });
+            for _ in 0..30 {
+                let g = w.clone();
+                opt.step(&mut w, &g, 0.05, None);
+            }
+            w[(0, 0)].abs()
+        };
+        assert!(run(0.9) < run(0.0));
+    }
+
+    #[test]
+    fn weight_decay_shrinks() {
+        let mut w = Matrix::from_vec(1, 1, vec![1.0]);
+        let mut opt = Sgd::new(SgdConfig { momentum: 0.0, weight_decay: 0.5 });
+        let zero_g = Matrix::zeros(1, 1);
+        opt.step(&mut w, &zero_g, 0.1, None);
+        assert!((w[(0, 0)] - (1.0 - 0.1 * 0.5)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn extra_term_is_added() {
+        // Variance correction: step with g=0, extra=v must move by −λv.
+        let mut w = Matrix::zeros(2, 2);
+        let mut rng = Rng::new(5);
+        let v = Matrix::randn(2, 2, &mut rng);
+        let mut opt = Sgd::new(SgdConfig::default());
+        opt.step(&mut w, &Matrix::zeros(2, 2), 0.3, Some(&v));
+        assert!(w.sub(&v.scale(-0.3)).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn adam_descends_quadratic() {
+        let mut w = Matrix::from_vec(1, 2, vec![3.0, -4.0]);
+        let mut opt = Adam::new(0.0);
+        for _ in 0..300 {
+            let g = w.clone();
+            opt.step(&mut w, &g, 0.05, None);
+        }
+        assert!(w.max_abs() < 1e-2, "{w:?}");
+    }
+
+    #[test]
+    fn adam_reset_clears_state() {
+        let mut w = Matrix::zeros(1, 1);
+        let mut opt = Adam::new(0.0);
+        opt.step(&mut w, &Matrix::from_vec(1, 1, vec![1.0]), 0.1, None);
+        opt.reset();
+        assert!(opt.m.is_none() && opt.t == 0);
+    }
+
+    #[test]
+    fn cosine_schedule_endpoints() {
+        let s = LrSchedule::Cosine { start: 1e-2, end: 1e-5, total: 200 };
+        assert!((s.at(0) - 1e-2).abs() < 1e-12);
+        assert!((s.at(199) - 1e-5).abs() < 1e-9);
+        assert!(s.at(100) < 1e-2 && s.at(100) > 1e-5);
+        // Monotone decreasing.
+        for t in 1..200 {
+            assert!(s.at(t) <= s.at(t - 1) + 1e-15);
+        }
+    }
+}

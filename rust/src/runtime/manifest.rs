@@ -1,0 +1,185 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime. Parsed with the in-tree JSON substrate.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::{parse, Json};
+
+/// Name + shape of one tensor (parameter or output).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let name = j
+            .get("name")
+            .and_then(|x| x.as_str())
+            .ok_or_else(|| anyhow!("tensor spec missing name"))?
+            .to_string();
+        let shape = j
+            .get("shape")
+            .and_then(|x| x.as_arr())
+            .ok_or_else(|| anyhow!("tensor spec missing shape"))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<_>>()?;
+        Ok(TensorSpec { name, shape })
+    }
+}
+
+/// One model configuration's artifact set.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub d_in: usize,
+    pub n_core: usize,
+    pub num_lr: usize,
+    pub classes: usize,
+    pub r_pad: usize,
+    pub batch: usize,
+    pub eval_batch: usize,
+    /// Parameter order for the factored functions.
+    pub params_factored: Vec<TensorSpec>,
+    /// Parameter order for the dense-baseline functions.
+    pub params_dense: Vec<TensorSpec>,
+    /// function name → artifact file name.
+    pub functions: BTreeMap<String, String>,
+    /// function name → output tuple layout.
+    pub outputs: BTreeMap<String, Vec<TensorSpec>>,
+}
+
+/// The parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub configs: BTreeMap<String, ModelEntry>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path:?}"))?;
+        Manifest::parse_str(&text)
+    }
+
+    pub fn parse_str(text: &str) -> Result<Manifest> {
+        let root = parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let cfgs = root
+            .get("configs")
+            .ok_or_else(|| anyhow!("manifest missing 'configs'"))?;
+        let map = match cfgs {
+            Json::Obj(m) => m,
+            _ => return Err(anyhow!("'configs' is not an object")),
+        };
+        let mut configs = BTreeMap::new();
+        for (name, entry) in map {
+            configs.insert(name.clone(), ModelEntry::from_json(entry)?);
+        }
+        Ok(Manifest { configs })
+    }
+}
+
+impl ModelEntry {
+    fn from_json(j: &Json) -> Result<ModelEntry> {
+        let tensor_list = |key: &str| -> Result<Vec<TensorSpec>> {
+            j.get(key)
+                .and_then(|x| x.as_arr())
+                .ok_or_else(|| anyhow!("missing '{key}'"))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect()
+        };
+        let functions = match j.get("functions") {
+            Some(Json::Obj(m)) => m
+                .iter()
+                .map(|(k, v)| {
+                    Ok((
+                        k.clone(),
+                        v.as_str().ok_or_else(|| anyhow!("bad function entry"))?.to_string(),
+                    ))
+                })
+                .collect::<Result<BTreeMap<_, _>>>()?,
+            _ => return Err(anyhow!("missing 'functions'")),
+        };
+        let outputs = match j.get("outputs") {
+            Some(Json::Obj(m)) => m
+                .iter()
+                .map(|(k, v)| {
+                    let list = v
+                        .as_arr()
+                        .ok_or_else(|| anyhow!("bad outputs entry"))?
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect::<Result<Vec<_>>>()?;
+                    Ok((k.clone(), list))
+                })
+                .collect::<Result<BTreeMap<_, _>>>()?,
+            _ => return Err(anyhow!("missing 'outputs'")),
+        };
+        Ok(ModelEntry {
+            d_in: j.usize_or("d_in", 0),
+            n_core: j.usize_or("n_core", 0),
+            num_lr: j.usize_or("num_lr", 0),
+            classes: j.usize_or("classes", 0),
+            r_pad: j.usize_or("r_pad", 0),
+            batch: j.usize_or("batch", 0),
+            eval_batch: j.usize_or("eval_batch", 0),
+            params_factored: tensor_list("params_factored")?,
+            params_dense: tensor_list("params_dense")?,
+            functions,
+            outputs,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "configs": {
+        "tiny": {
+          "d_in": 12, "backbone": [16], "n_core": 16, "num_lr": 1,
+          "classes": 4, "r_pad": 8, "batch": 16, "eval_batch": 32,
+          "params_factored": [
+            {"name": "backbone0.w", "shape": [12, 16]},
+            {"name": "lr0.u", "shape": [16, 8]}
+          ],
+          "params_dense": [
+            {"name": "backbone0.w", "shape": [12, 16]},
+            {"name": "lr0.w", "shape": [16, 16]}
+          ],
+          "functions": {"grad_coeff": "tiny.grad_coeff.hlo.txt"},
+          "outputs": {"grad_coeff": [{"name": "loss", "shape": []}]}
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse_str(SAMPLE).unwrap();
+        let e = &m.configs["tiny"];
+        assert_eq!(e.d_in, 12);
+        assert_eq!(e.r_pad, 8);
+        assert_eq!(e.params_factored[1].name, "lr0.u");
+        assert_eq!(e.params_factored[1].shape, vec![16, 8]);
+        assert_eq!(e.functions["grad_coeff"], "tiny.grad_coeff.hlo.txt");
+        assert_eq!(e.outputs["grad_coeff"][0].name, "loss");
+        assert_eq!(e.outputs["grad_coeff"][0].numel(), 1);
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        assert!(Manifest::parse_str("{}").is_err());
+        assert!(Manifest::parse_str(r#"{"configs": {"x": {}}}"#).is_err());
+    }
+}

@@ -1,0 +1,192 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! The Rust hot path never touches Python. `make artifacts` (build time)
+//! leaves `artifacts/*.hlo.txt` plus `manifest.json`; this module
+//!
+//! 1. parses the manifest ([`Manifest`], [`ModelEntry`]),
+//! 2. compiles each HLO module once on a PJRT CPU client
+//!    ([`Runtime::load`]), and
+//! 3. executes gradient/eval calls from the coordinator
+//!    ([`Executable::call`]) with flat `f32` tensors at the boundary.
+//!
+//! HLO **text** is the interchange format (xla_extension 0.5.1 rejects
+//! jax ≥ 0.5's 64-bit-id protos; the text parser reassigns ids — see
+//! DESIGN.md and /opt/xla-example/README.md).
+
+pub mod manifest;
+
+pub use manifest::{Manifest, ModelEntry, TensorSpec};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+/// A tensor crossing the PJRT boundary.
+#[derive(Debug, Clone)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::F32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn i32(shape: &[usize], data: Vec<i32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::I32 { shape: shape.to_vec(), data }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        match self {
+            HostTensor::F32 { shape, data } => {
+                let lit = xla::Literal::vec1(data);
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                Ok(lit.reshape(&dims)?)
+            }
+            HostTensor::I32 { shape, data } => {
+                let lit = xla::Literal::vec1(data);
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                Ok(lit.reshape(&dims)?)
+            }
+        }
+    }
+}
+
+/// One compiled artifact (model function) ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Expected output tuple layout (names + shapes) from the manifest.
+    pub outputs: Vec<TensorSpec>,
+    /// Artifact identifier, e.g. "test_tiny.grad_coeff".
+    pub id: String,
+}
+
+impl Executable {
+    /// Execute with the given inputs; returns the flat `f32` contents of
+    /// every tuple element, in manifest order.
+    ///
+    /// All model outputs are f32 (losses, gradients, counts-as-f32), so
+    /// the return type is uniform; shapes are in [`Executable::outputs`].
+    pub fn call(&self, inputs: &[HostTensor]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("{}: fetching result", self.id))?;
+        let parts = tuple.to_tuple()?;
+        if parts.len() != self.outputs.len() {
+            return Err(anyhow!(
+                "{}: artifact returned {} outputs, manifest says {}",
+                self.id,
+                parts.len(),
+                self.outputs.len()
+            ));
+        }
+        parts.into_iter().map(|lit| Ok(lit.to_vec::<f32>()?)).collect()
+    }
+}
+
+/// The runtime: one PJRT client plus an executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    pub manifest: Manifest,
+    cache: HashMap<String, Executable>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and read the manifest from
+    /// `artifacts_dir`.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let artifacts_dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&artifacts_dir.join("manifest.json"))
+            .with_context(|| "reading artifacts manifest (run `make artifacts` first)")?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, artifacts_dir, manifest, cache: HashMap::new() })
+    }
+
+    /// Default artifacts directory: `$FEDLRT_ARTIFACTS`, else walk up
+    /// from cwd to find `artifacts/manifest.json` (so tests and examples
+    /// work from any workspace subdirectory).
+    pub fn default_dir() -> PathBuf {
+        if let Ok(dir) = std::env::var("FEDLRT_ARTIFACTS") {
+            return PathBuf::from(dir);
+        }
+        let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+        loop {
+            let cand = dir.join("artifacts");
+            if cand.join("manifest.json").exists() {
+                return cand;
+            }
+            if !dir.pop() {
+                return PathBuf::from("artifacts");
+            }
+        }
+    }
+
+    /// Compile a fresh, caller-owned executable for `config.function`
+    /// (bypasses the cache; use when the executable must outlive `self`'s
+    /// borrow, e.g. inside [`crate::nn::NnProblem`]).
+    pub fn compile(&self, config: &str, function: &str) -> Result<Executable> {
+        let key = format!("{config}.{function}");
+        let entry = self
+            .manifest
+            .configs
+            .get(config)
+            .ok_or_else(|| anyhow!("unknown model config '{config}'"))?;
+        let fname = entry
+            .functions
+            .get(function)
+            .ok_or_else(|| anyhow!("config '{config}' has no function '{function}'"))?;
+        let path = self.artifacts_dir.join(fname);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("loading HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {key}"))?;
+        let outputs = entry
+            .outputs
+            .get(function)
+            .ok_or_else(|| anyhow!("manifest missing outputs for {key}"))?
+            .clone();
+        Ok(Executable { exe, outputs, id: key })
+    }
+
+    /// Compile (once) and return the cached executable for
+    /// `config.function`.
+    pub fn load(&mut self, config: &str, function: &str) -> Result<&Executable> {
+        let key = format!("{config}.{function}");
+        if !self.cache.contains_key(&key) {
+            let exe = self.compile(config, function)?;
+            self.cache.insert(key.clone(), exe);
+        }
+        Ok(self.cache.get(&key).unwrap())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_shape_checks() {
+        let t = HostTensor::f32(&[2, 3], vec![0.0; 6]);
+        assert!(matches!(t, HostTensor::F32 { .. }));
+    }
+
+    #[test]
+    #[should_panic]
+    fn host_tensor_bad_shape_panics() {
+        let _ = HostTensor::f32(&[2, 3], vec![0.0; 5]);
+    }
+}

@@ -1,0 +1,357 @@
+//! Dense row-major matrix over `f64`.
+//!
+//! This is the numeric workhorse for the coordinator side of FeDLRT:
+//! bases `U, V ∈ R^{n×r}`, coefficients `S ∈ R^{r×r}`, gradients, and the
+//! dense baselines (FedAvg/FedLin) all live in this type. The environment
+//! carries no ndarray/BLAS, so we provide our own blocked matmul
+//! (see `ops.rs` for the optimized kernels) and the structural operations
+//! the DLRA algebra needs: transpose, slicing, horizontal concatenation
+//! (basis augmentation), and block embedding (Lemma 1 assembly).
+
+use std::fmt;
+use std::ops::{Index, IndexMut};
+
+use crate::util::rng::Rng;
+
+/// Dense row-major matrix.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Matrix {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Matrix {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a row-major data vector.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Matrix {
+        assert_eq!(data.len(), rows * cols, "from_vec: shape/data mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    /// Build from a function of (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Matrix {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    /// iid standard-normal entries.
+    pub fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Matrix {
+        Matrix { rows, cols, data: rng.normal_vec(rows * cols) }
+    }
+
+    /// Diagonal matrix from entries.
+    pub fn diag(d: &[f64]) -> Matrix {
+        let n = d.len();
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = d[i];
+        }
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Borrow row `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Extract column `j` (copied).
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    /// Transpose (copied).
+    pub fn t(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness on large matrices.
+        const B: usize = 32;
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                for i in ib..(ib + B).min(self.rows) {
+                    for j in jb..(jb + B).min(self.cols) {
+                        out.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Max-abs entry.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |m, &x| m.max(x.abs()))
+    }
+
+    /// `self + other`.
+    pub fn add(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), other.shape(), "add: shape mismatch");
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// `self - other`.
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), other.shape(), "sub: shape mismatch");
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// `self * alpha` (scalar).
+    pub fn scale(&self, alpha: f64) -> Matrix {
+        let data = self.data.iter().map(|a| a * alpha).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// In-place `self += alpha * other` (the optimizer hot path).
+    pub fn axpy(&mut self, alpha: f64, other: &Matrix) {
+        assert_eq!(self.shape(), other.shape(), "axpy: shape mismatch");
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// In-place scale.
+    pub fn scale_inplace(&mut self, alpha: f64) {
+        for a in self.data.iter_mut() {
+            *a *= alpha;
+        }
+    }
+
+    /// Copy of the leading `rows × cols` sub-block.
+    pub fn block(&self, rows: usize, cols: usize) -> Matrix {
+        self.sub_block(0, 0, rows, cols)
+    }
+
+    /// Copy of an arbitrary sub-block starting at (r0, c0).
+    pub fn sub_block(&self, r0: usize, c0: usize, rows: usize, cols: usize) -> Matrix {
+        assert!(r0 + rows <= self.rows && c0 + cols <= self.cols, "sub_block out of range");
+        let mut out = Matrix::zeros(rows, cols);
+        for i in 0..rows {
+            out.row_mut(i)
+                .copy_from_slice(&self.data[(r0 + i) * self.cols + c0..(r0 + i) * self.cols + c0 + cols]);
+        }
+        out
+    }
+
+    /// Write `block` into `self` at offset (r0, c0).
+    pub fn set_block(&mut self, r0: usize, c0: usize, block: &Matrix) {
+        assert!(
+            r0 + block.rows <= self.rows && c0 + block.cols <= self.cols,
+            "set_block out of range"
+        );
+        for i in 0..block.rows {
+            let dst = (r0 + i) * self.cols + c0;
+            self.data[dst..dst + block.cols].copy_from_slice(block.row(i));
+        }
+    }
+
+    /// Horizontal concatenation `[self | other]` (basis augmentation, eq 6).
+    pub fn hcat(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.rows, other.rows, "hcat: row mismatch");
+        let mut out = Matrix::zeros(self.rows, self.cols + other.cols);
+        out.set_block(0, 0, self);
+        out.set_block(0, self.cols, other);
+        out
+    }
+
+    /// Embed into a larger zero matrix at the top-left (Lemma 1: S̃ = [[S,0],[0,0]]).
+    pub fn embed(&self, rows: usize, cols: usize) -> Matrix {
+        assert!(rows >= self.rows && cols >= self.cols, "embed must grow");
+        let mut out = Matrix::zeros(rows, cols);
+        out.set_block(0, 0, self);
+        out
+    }
+
+    /// Keep the first `cols` columns.
+    pub fn first_cols(&self, cols: usize) -> Matrix {
+        self.sub_block(0, 0, self.rows, cols)
+    }
+
+    /// Dot product treating both matrices as flat vectors (⟨A,B⟩_F).
+    pub fn dot(&self, other: &Matrix) -> f64 {
+        assert_eq!(self.shape(), other.shape(), "dot: shape mismatch");
+        self.data.iter().zip(&other.data).map(|(a, b)| a * b).sum()
+    }
+
+    /// Convert to f32 (PJRT boundary).
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&x| x as f32).collect()
+    }
+
+    /// Build from f32 data (PJRT boundary).
+    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Matrix {
+        assert_eq!(data.len(), rows * cols);
+        Matrix { rows, cols, data: data.iter().map(|&x| x as f64).collect() }
+    }
+
+    /// True if every entry is finite.
+    pub fn is_finite(&self) -> bool {
+        self.data.iter().all(|x| x.is_finite())
+    }
+}
+
+impl Index<(usize, usize)> for Matrix {
+    type Output = f64;
+
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Matrix {}x{} [", self.rows, self.cols)?;
+        let show_rows = self.rows.min(6);
+        for i in 0..show_rows {
+            write!(f, "  [")?;
+            let show_cols = self.cols.min(8);
+            for j in 0..show_cols {
+                write!(f, "{:>10.4}", self[(i, j)])?;
+                if j + 1 < show_cols {
+                    write!(f, ", ")?;
+                }
+            }
+            if self.cols > 8 {
+                write!(f, ", …")?;
+            }
+            writeln!(f, "]")?;
+        }
+        if self.rows > 6 {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_indexing() {
+        let m = Matrix::from_fn(2, 3, |i, j| (i * 3 + j) as f64);
+        assert_eq!(m.shape(), (2, 3));
+        assert_eq!(m[(1, 2)], 5.0);
+        assert_eq!(m.row(1), &[3.0, 4.0, 5.0]);
+        assert_eq!(m.col(2), vec![2.0, 5.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(5);
+        let m = Matrix::randn(37, 53, &mut rng);
+        assert_eq!(m.t().t(), m);
+        assert_eq!(m.t()[(10, 20)], m[(20, 10)]);
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = Matrix::from_fn(2, 2, |i, j| (i + j) as f64);
+        let b = Matrix::eye(2);
+        let c = a.add(&b).sub(&a);
+        assert_eq!(c, b);
+        assert_eq!(a.scale(2.0)[(1, 1)], 4.0);
+        let mut d = a.clone();
+        d.axpy(-1.0, &a);
+        assert_eq!(d.fro_norm(), 0.0);
+    }
+
+    #[test]
+    fn blocks_and_concat() {
+        let a = Matrix::from_fn(4, 4, |i, j| (10 * i + j) as f64);
+        let blk = a.sub_block(1, 2, 2, 2);
+        assert_eq!(blk[(0, 0)], 12.0);
+        assert_eq!(blk[(1, 1)], 23.0);
+        let h = a.first_cols(2).hcat(&a.sub_block(0, 2, 4, 2));
+        assert_eq!(h, a);
+        let e = Matrix::eye(2).embed(4, 4);
+        assert_eq!(e[(1, 1)], 1.0);
+        assert_eq!(e[(3, 3)], 0.0);
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let mut rng = Rng::new(8);
+        let m = Matrix::randn(5, 7, &mut rng);
+        let back = Matrix::from_f32(5, 7, &m.to_f32());
+        assert!(m.sub(&back).max_abs() < 1e-6);
+    }
+
+    #[test]
+    fn diag_and_eye() {
+        let d = Matrix::diag(&[1.0, 2.0, 3.0]);
+        assert_eq!(d[(1, 1)], 2.0);
+        assert_eq!(d[(0, 1)], 0.0);
+        assert_eq!(Matrix::eye(3).fro_norm(), 3.0f64.sqrt());
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn add_shape_mismatch_panics() {
+        let _ = Matrix::zeros(2, 2).add(&Matrix::zeros(2, 3));
+    }
+}

@@ -1,0 +1,11 @@
+//! Dense matrix substrate: the `Matrix` type and multiplication kernels.
+//!
+//! See DESIGN.md §System inventory (1). Everything the coordinator
+//! computes — bases, coefficients, gradients, dense baselines — uses
+//! these types; `linalg` builds QR/SVD on top.
+
+pub mod matrix;
+pub mod ops;
+
+pub use matrix::Matrix;
+pub use ops::{matmul, matmul_into, matmul_nt, matmul_tn, matvec, usv};

@@ -1,0 +1,290 @@
+//! Matrix-multiplication kernels.
+//!
+//! All FeDLRT linear algebra funnels through these routines, so they are
+//! the L3 hot path. We implement a cache-blocked, register-tiled matmul
+//! (i-k-j loop order over a packed panel of B, which vectorizes well with
+//! rustc's auto-vectorizer on a single core) plus the transposed variants
+//! the low-rank algebra needs — `AᵀB` and `ABᵀ` are computed without
+//! materializing the transpose.
+
+use super::matrix::Matrix;
+
+/// Loop blocking for the k dimension — fits comfortably in L1 with the
+/// 4-wide j unrolling below.
+const KC: usize = 256;
+/// Row blocking for the i dimension.
+const MC: usize = 64;
+
+/// `C = A · B`.
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.rows(), "matmul: inner dims {} vs {}", a.cols(), b.rows());
+    let (m, _k) = a.shape();
+    let n = b.cols();
+    let mut c = Matrix::zeros(m, n);
+    matmul_into(a, b, &mut c, 0.0);
+    c
+}
+
+/// `C = beta·C + A·B`, writing into preallocated `c`.
+///
+/// The kernel iterates row-panels of A (MC) by depth-panels (KC); within
+/// a panel, each A row broadcasts `a_ik` against B's row `k`, giving a
+/// saxpy over contiguous memory in both B and C — the auto-vectorizable
+/// inner loop.
+pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix, beta: f64) {
+    let (m, kdim) = a.shape();
+    let n = b.cols();
+    assert_eq!(kdim, b.rows(), "matmul_into: inner dims");
+    assert_eq!(c.shape(), (m, n), "matmul_into: output shape");
+
+    if beta == 0.0 {
+        c.data_mut().fill(0.0);
+    } else if beta != 1.0 {
+        c.scale_inplace(beta);
+    }
+
+    let a_data = a.data();
+    let b_data = b.data();
+    for i0 in (0..m).step_by(MC) {
+        let i1 = (i0 + MC).min(m);
+        for k0 in (0..kdim).step_by(KC) {
+            let k1 = (k0 + KC).min(kdim);
+            for i in i0..i1 {
+                let a_row = &a_data[i * kdim..(i + 1) * kdim];
+                let c_row = &mut c.data_mut()[i * n..(i + 1) * n];
+                // Process four k per pass over c_row: quarters the number
+                // of traversals of the store-bound C stream (B's rows are
+                // L1/L2-resident inside a KC panel).
+                let mut k = k0;
+                while k + 4 <= k1 {
+                    let a0 = a_row[k];
+                    let a1 = a_row[k + 1];
+                    let a2 = a_row[k + 2];
+                    let a3 = a_row[k + 3];
+                    if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
+                        // Zero-padded rank columns (static-shape AOT
+                        // padding) are skipped for free.
+                        k += 4;
+                        continue;
+                    }
+                    let b0 = &b_data[k * n..k * n + n];
+                    let b1 = &b_data[(k + 1) * n..(k + 1) * n + n];
+                    let b2 = &b_data[(k + 2) * n..(k + 2) * n + n];
+                    let b3 = &b_data[(k + 3) * n..(k + 3) * n + n];
+                    for j in 0..n {
+                        c_row[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+                    }
+                    k += 4;
+                }
+                while k < k1 {
+                    let aik = a_row[k];
+                    if aik != 0.0 {
+                        let b_row = &b_data[k * n..k * n + n];
+                        for (c_v, &b_v) in c_row.iter_mut().zip(b_row) {
+                            *c_v += aik * b_v;
+                        }
+                    }
+                    k += 1;
+                }
+            }
+        }
+    }
+}
+
+/// `C = Aᵀ · B` without materializing `Aᵀ`.
+///
+/// Used for the Galerkin projections `G_S = Ũᵀ G Ṽ` and `UᵀW`: A is tall
+/// (n×r), so `AᵀB` iterates A rows (contiguous) and scatters into C rows
+/// indexed by A's columns — still a contiguous saxpy over B's row.
+pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.rows(), b.rows(), "matmul_tn: inner dims {} vs {}", a.rows(), b.rows());
+    let (kdim, m) = a.shape();
+    let n = b.cols();
+    let mut c = Matrix::zeros(m, n);
+    let a_data = a.data();
+    let b_data = b.data();
+    for k in 0..kdim {
+        let a_row = &a_data[k * m..(k + 1) * m];
+        let b_row = &b_data[k * n..(k + 1) * n];
+        for (i, &aki) in a_row.iter().enumerate() {
+            if aki == 0.0 {
+                continue;
+            }
+            let c_row = &mut c.data_mut()[i * n..(i + 1) * n];
+            for j in 0..n {
+                c_row[j] += aki * b_row[j];
+            }
+        }
+    }
+    c
+}
+
+/// `C = A · Bᵀ` without materializing `Bᵀ`.
+///
+/// Inner product of row i of A with row j of B — both contiguous.
+pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.cols(), "matmul_nt: inner dims {} vs {}", a.cols(), b.cols());
+    let (m, kdim) = a.shape();
+    let n = b.rows();
+    let mut c = Matrix::zeros(m, n);
+    let a_data = a.data();
+    let b_data = b.data();
+    for i in 0..m {
+        let a_row = &a_data[i * kdim..(i + 1) * kdim];
+        let c_row = &mut c.data_mut()[i * n..(i + 1) * n];
+        // Two B rows per pass: A's row is streamed once for both dot
+        // products, and four accumulators hide FMA latency.
+        let mut j = 0;
+        while j + 2 <= n {
+            let b0 = &b_data[j * kdim..(j + 1) * kdim];
+            let b1 = &b_data[(j + 1) * kdim..(j + 2) * kdim];
+            let (mut s00, mut s01, mut s10, mut s11) = (0.0, 0.0, 0.0, 0.0);
+            let mut k = 0;
+            while k + 2 <= kdim {
+                s00 += a_row[k] * b0[k];
+                s10 += a_row[k] * b1[k];
+                s01 += a_row[k + 1] * b0[k + 1];
+                s11 += a_row[k + 1] * b1[k + 1];
+                k += 2;
+            }
+            if k < kdim {
+                s00 += a_row[k] * b0[k];
+                s10 += a_row[k] * b1[k];
+            }
+            c_row[j] = s00 + s01;
+            c_row[j + 1] = s10 + s11;
+            j += 2;
+        }
+        if j < n {
+            let b_row = &b_data[j * kdim..(j + 1) * kdim];
+            let mut acc = 0.0;
+            for k in 0..kdim {
+                acc += a_row[k] * b_row[k];
+            }
+            c_row[j] = acc;
+        }
+    }
+    c
+}
+
+/// Reconstruct the full weight `W = U · S · Vᵀ` (ordering chosen so the
+/// intermediate is the skinny `U·S ∈ R^{n×r}`).
+pub fn usv(u: &Matrix, s: &Matrix, v: &Matrix) -> Matrix {
+    let us = matmul(u, s);
+    matmul_nt(&us, v)
+}
+
+/// `y = A·x` for a vector `x` (len = A.cols()).
+pub fn matvec(a: &Matrix, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.cols(), x.len(), "matvec: dims");
+    let (m, n) = a.shape();
+    let mut y = vec![0.0; m];
+    for i in 0..m {
+        let row = a.row(i);
+        let mut acc = 0.0;
+        for j in 0..n {
+            acc += row[j] * x[j];
+        }
+        y[i] = acc;
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive(a: &Matrix, b: &Matrix) -> Matrix {
+        let (m, k) = a.shape();
+        let n = b.cols();
+        let mut c = Matrix::zeros(m, n);
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0;
+                for p in 0..k {
+                    acc += a[(i, p)] * b[(p, j)];
+                }
+                c[(i, j)] = acc;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::new(17);
+        for &(m, k, n) in &[(1, 1, 1), (3, 4, 5), (17, 33, 9), (64, 70, 65), (130, 257, 31)] {
+            let a = Matrix::randn(m, k, &mut rng);
+            let b = Matrix::randn(k, n, &mut rng);
+            let c = matmul(&a, &b);
+            let want = naive(&a, &b);
+            assert!(c.sub(&want).max_abs() < 1e-10, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn transposed_variants_match() {
+        let mut rng = Rng::new(23);
+        let a = Matrix::randn(40, 13, &mut rng);
+        let b = Matrix::randn(40, 21, &mut rng);
+        let tn = matmul_tn(&a, &b);
+        assert!(tn.sub(&naive(&a.t(), &b)).max_abs() < 1e-10);
+
+        let c = Matrix::randn(12, 40, &mut rng);
+        let d = Matrix::randn(29, 40, &mut rng);
+        let nt = matmul_nt(&c, &d);
+        assert!(nt.sub(&naive(&c, &d.t())).max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn matmul_into_beta() {
+        let mut rng = Rng::new(29);
+        let a = Matrix::randn(8, 9, &mut rng);
+        let b = Matrix::randn(9, 7, &mut rng);
+        let mut c = Matrix::randn(8, 7, &mut rng);
+        let c0 = c.clone();
+        matmul_into(&a, &b, &mut c, 1.0);
+        let want = c0.add(&naive(&a, &b));
+        assert!(c.sub(&want).max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn usv_reconstruction() {
+        let mut rng = Rng::new(31);
+        let u = Matrix::randn(20, 4, &mut rng);
+        let s = Matrix::randn(4, 4, &mut rng);
+        let v = Matrix::randn(20, 4, &mut rng);
+        let w = usv(&u, &s, &v);
+        let want = naive(&naive(&u, &s), &v.t());
+        assert!(w.sub(&want).max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn matvec_matches() {
+        let mut rng = Rng::new(37);
+        let a = Matrix::randn(11, 6, &mut rng);
+        let x = rng.normal_vec(6);
+        let y = matvec(&a, &x);
+        let xm = Matrix::from_vec(6, 1, x);
+        let want = matmul(&a, &xm);
+        for i in 0..11 {
+            assert!((y[i] - want[(i, 0)]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn zero_padding_skipped_correctly() {
+        // Padded columns (zeros) must not change results.
+        let mut rng = Rng::new(41);
+        let a = Matrix::randn(10, 4, &mut rng);
+        let a_pad = a.hcat(&Matrix::zeros(10, 4));
+        let b = Matrix::randn(4, 6, &mut rng);
+        let b_pad = {
+            let mut bp = Matrix::zeros(8, 6);
+            bp.set_block(0, 0, &b);
+            bp
+        };
+        assert!(matmul(&a_pad, &b_pad).sub(&matmul(&a, &b)).max_abs() < 1e-12);
+    }
+}

@@ -1,0 +1,256 @@
+//! Tiny command-line argument parser (the environment has no `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! and generates a usage string. Declarative enough for the `fedlrt` CLI,
+//! the examples, and the bench drivers.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// One declared option.
+#[derive(Debug, Clone)]
+struct OptSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Declarative CLI parser.
+#[derive(Debug, Clone)]
+pub struct Cli {
+    program: String,
+    about: String,
+    opts: Vec<OptSpec>,
+    positional: Vec<(String, String)>,
+}
+
+/// Parsed argument values.
+#[derive(Debug, Clone)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    positional: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(program: &str, about: &str) -> Self {
+        Cli {
+            program: program.to_string(),
+            about: about.to_string(),
+            opts: Vec::new(),
+            positional: Vec::new(),
+        }
+    }
+
+    /// Declare `--name <value>` with a default.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Declare a boolean `--name` flag (default false).
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    /// Declare a positional argument (for usage text only).
+    pub fn positional(mut self, name: &str, help: &str) -> Self {
+        self.positional.push((name.to_string(), help.to_string()));
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}", self.program, self.about);
+        let _ = write!(s, "\nusage: {}", self.program);
+        for (p, _) in &self.positional {
+            let _ = write!(s, " <{p}>");
+        }
+        let _ = writeln!(s, " [options]\n\noptions:");
+        for o in &self.opts {
+            if o.is_flag {
+                let _ = writeln!(s, "  --{:<22} {}", o.name, o.help);
+            } else {
+                let _ = writeln!(
+                    s,
+                    "  --{:<22} {} (default: {})",
+                    format!("{} <v>", o.name),
+                    o.help,
+                    o.default.as_deref().unwrap_or("")
+                );
+            }
+        }
+        s
+    }
+
+    /// Parse a raw argument list (exclusive of argv[0]).
+    pub fn parse(&self, raw: &[String]) -> Result<Args, String> {
+        let mut values = BTreeMap::new();
+        let mut flags = BTreeMap::new();
+        for o in &self.opts {
+            if o.is_flag {
+                flags.insert(o.name.clone(), false);
+            } else if let Some(d) = &o.default {
+                values.insert(o.name.clone(), d.clone());
+            }
+        }
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n\n{}", self.usage()))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("flag --{key} takes no value"));
+                    }
+                    flags.insert(key, true);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            raw.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("option --{key} needs a value"))?
+                        }
+                    };
+                    values.insert(key, val);
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Args { values, flags, positional })
+    }
+
+    /// Parse `std::env::args()`, printing usage and exiting on error/--help.
+    pub fn parse_env(&self) -> Args {
+        let raw: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse(&raw) {
+            Ok(a) => a,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+impl Args {
+    pub fn str(&self, name: &str) -> &str {
+        self.values.get(name).map(|s| s.as_str()).unwrap_or("")
+    }
+
+    pub fn usize(&self, name: &str) -> usize {
+        self.parse_num(name)
+    }
+
+    pub fn u64(&self, name: &str) -> u64 {
+        self.parse_num(name)
+    }
+
+    pub fn f64(&self, name: &str) -> f64 {
+        self.parse_num(name)
+    }
+
+    fn parse_num<T: std::str::FromStr>(&self, name: &str) -> T {
+        let raw = self.values.get(name).unwrap_or_else(|| panic!("undeclared option --{name}"));
+        raw.parse().unwrap_or_else(|_| panic!("--{name}: cannot parse '{raw}'"))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        *self.flags.get(name).unwrap_or(&false)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Parse a comma-separated list of usize, e.g. `--clients 1,2,4,8`.
+    pub fn usize_list(&self, name: &str) -> Vec<usize> {
+        self.str(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().parse().unwrap_or_else(|_| panic!("--{name}: bad int '{s}'")))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .opt("n", "20", "problem size")
+            .opt("lr", "0.001", "learning rate")
+            .opt("clients", "1,2,4", "client counts")
+            .flag("verbose", "verbosity")
+    }
+
+    fn to_vec(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults() {
+        let a = cli().parse(&[]).unwrap();
+        assert_eq!(a.usize("n"), 20);
+        assert_eq!(a.f64("lr"), 0.001);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn overrides_and_flags() {
+        let a = cli().parse(&to_vec(&["--n", "64", "--verbose", "--lr=0.5"])).unwrap();
+        assert_eq!(a.usize("n"), 64);
+        assert_eq!(a.f64("lr"), 0.5);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn lists_and_positionals() {
+        let a = cli().parse(&to_vec(&["run", "--clients", "1,2,8", "extra"])).unwrap();
+        assert_eq!(a.usize_list("clients"), vec![1, 2, 8]);
+        assert_eq!(a.positional(), &["run".to_string(), "extra".to_string()]);
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(cli().parse(&to_vec(&["--nope"])).is_err());
+        assert!(cli().parse(&to_vec(&["--n"])).is_err()); // missing value
+        assert!(cli().parse(&to_vec(&["--verbose=1"])).is_err()); // flag w/ value
+    }
+
+    #[test]
+    fn usage_mentions_options() {
+        let u = cli().usage();
+        assert!(u.contains("--n"));
+        assert!(u.contains("--verbose"));
+    }
+}

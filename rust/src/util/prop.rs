@@ -1,0 +1,103 @@
+//! Miniature property-based testing harness (no `proptest` offline).
+//!
+//! [`check`] runs a property over `CASES` randomly generated inputs with
+//! deterministic seeding; on failure it retries the failing seed with a
+//! shrink loop over the generator's `size` parameter to report the
+//! smallest failing size. Generators receive `(rng, size)` and grow their
+//! inputs with `size`, mirroring proptest's value-size scaling.
+
+use super::rng::Rng;
+
+/// Number of cases per property (override with FEDLRT_PROP_CASES).
+pub fn cases() -> usize {
+    std::env::var("FEDLRT_PROP_CASES").ok().and_then(|s| s.parse().ok()).unwrap_or(48)
+}
+
+/// Run `prop` on `cases()` inputs produced by `gen` at growing sizes.
+///
+/// `gen(rng, size)` should produce inputs whose complexity scales with
+/// `size` (1..=max_size). `prop(input)` returns `Err(reason)` on failure.
+/// Panics with the seed, size, and reason of the smallest failure found.
+pub fn check<T, G, P>(name: &str, max_size: usize, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng, usize) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let n = cases();
+    for case in 0..n {
+        let seed = 0xF3D1_0000 + case as u64;
+        let size = 1 + (case * max_size) / n.max(1);
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng, size.max(1));
+        if let Err(reason) = prop(&input) {
+            // Shrink: retry the same seed at smaller sizes to find the
+            // smallest size that still fails.
+            let mut smallest = (size, reason.clone(), format!("{input:?}"));
+            for s in 1..size {
+                let mut rng = Rng::new(seed);
+                let small = gen(&mut rng, s);
+                if let Err(r) = prop(&small) {
+                    smallest = (s, r, format!("{small:?}"));
+                    break;
+                }
+            }
+            panic!(
+                "property '{name}' failed (seed={seed:#x}, size={}):\n  {}\n  input: {}",
+                smallest.0,
+                smallest.1,
+                truncate(&smallest.2, 600)
+            );
+        }
+    }
+}
+
+fn truncate(s: &str, max: usize) -> String {
+    if s.len() <= max {
+        s.to_string()
+    } else {
+        format!("{}… ({} bytes)", &s[..max], s.len())
+    }
+}
+
+/// Assert two floats are close in absolute+relative terms.
+pub fn close(a: f64, b: f64, tol: f64) -> Result<(), String> {
+    let scale = 1.0f64.max(a.abs()).max(b.abs());
+    if (a - b).abs() <= tol * scale {
+        Ok(())
+    } else {
+        Err(format!("|{a} - {b}| = {} > {tol}*{scale}", (a - b).abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs() {
+        check("reverse-involution", 32, |rng, size| rng.normal_vec(size), |v| {
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            if w == *v {
+                Ok(())
+            } else {
+                Err("reverse twice != id".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_context() {
+        check("always-fails", 8, |rng, size| rng.normal_vec(size), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn close_tolerances() {
+        assert!(close(1.0, 1.0 + 1e-12, 1e-9).is_ok());
+        assert!(close(1e6, 1e6 + 1.0, 1e-9).is_err());
+        assert!(close(1e6, 1e6 + 1.0, 1e-5).is_ok());
+    }
+}

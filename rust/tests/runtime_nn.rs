@@ -1,0 +1,274 @@
+//! Integration tests: Rust coordinator ↔ PJRT runtime ↔ AOT artifacts.
+//!
+//! These tests require `make artifacts` (they are the proof that all
+//! three layers compose). They use the `test_tiny` model config so a
+//! full federated round takes milliseconds.
+
+use fedlrt::coordinator::{
+    run_dense, run_fedlrt, DenseAlgo, RankConfig, TrainConfig, VarCorrection,
+};
+use fedlrt::models::{FedProblem, LrWant, LrWeight, Weights};
+use fedlrt::nn::{NnOptions, NnProblem};
+use fedlrt::opt::LrSchedule;
+use fedlrt::runtime::Runtime;
+use fedlrt::tensor::Matrix;
+use fedlrt::util::rng::Rng;
+
+fn runtime() -> Runtime {
+    Runtime::new(Runtime::default_dir()).expect("artifacts missing — run `make artifacts`")
+}
+
+fn tiny_problem(clients: usize, seed: u64) -> NnProblem {
+    let mut rt = runtime();
+    NnProblem::new(
+        &mut rt,
+        NnOptions {
+            config: "test_tiny".into(),
+            num_clients: clients,
+            train_n: 512,
+            test_n: 128,
+            eval_cap: 256,
+            seed,
+            augment: false,
+            dirichlet_alpha: None,
+        },
+    )
+    .expect("problem construction")
+}
+
+fn factored_weights(p: &NnProblem, rank: usize, seed: u64) -> Weights {
+    let spec = p.spec();
+    let mut rng = Rng::new(seed);
+    let lr = spec
+        .lr_shapes
+        .iter()
+        .map(|&(m, n)| {
+            let mut f = fedlrt::lowrank::LowRank::random_init(m, n, rank, &mut rng);
+            f.s.scale_inplace((1.0 / m as f64).sqrt());
+            LrWeight::Factored(f)
+        })
+        .collect();
+    let dense = spec
+        .dense_shapes
+        .iter()
+        .map(|&(m, n)| {
+            if m == 1 {
+                Matrix::zeros(m, n)
+            } else {
+                Matrix::randn(m, n, &mut rng).scale((1.0 / m as f64).sqrt())
+            }
+        })
+        .collect();
+    Weights { dense, lr }
+}
+
+#[test]
+fn artifact_gradients_match_finite_differences() {
+    // The decisive cross-layer check: HLO-computed ∇_S̃ equals a finite
+    // difference of the HLO-computed loss.
+    let p = tiny_problem(2, 42);
+    let w = factored_weights(&p, 3, 7);
+    let g = p.grad(0, &w, LrWant::Coeff, 0);
+    let g_s = g.lr[0].coeff().clone();
+    assert_eq!(g_s.shape(), (3, 3));
+
+    let eps = 1e-2_f64; // f32 artifacts ⇒ coarse step, relative check
+    for &(i, j) in &[(0usize, 0usize), (1, 2), (2, 1)] {
+        let perturb = |delta: f64| -> f64 {
+            let mut wp = w.clone();
+            if let LrWeight::Factored(f) = &mut wp.lr[0] {
+                f.s[(i, j)] += delta;
+            }
+            p.grad(0, &wp, LrWant::Coeff, 0).loss
+        };
+        let fd = (perturb(eps) - perturb(-eps)) / (2.0 * eps);
+        let an = g_s[(i, j)];
+        assert!(
+            (fd - an).abs() < 2e-2 * (1.0 + an.abs()),
+            "∂S[{i},{j}]: fd {fd} vs analytic {an}"
+        );
+    }
+}
+
+#[test]
+fn factor_grads_respect_padding_invariant() {
+    // Gradients beyond the active rank must be exactly zero (they are
+    // sliced off, but the slice must equal the unpadded computation).
+    let p = tiny_problem(2, 43);
+    let w3 = factored_weights(&p, 3, 11);
+    let g3 = p.grad(0, &w3, LrWant::Factors, 0);
+    // Same factors padded by the coordinator to rank 4 (extra zero col).
+    let w4 = Weights {
+        dense: w3.dense.clone(),
+        lr: w3
+            .lr
+            .iter()
+            .map(|lw| LrWeight::Factored(lw.as_factored().pad_to(4)))
+            .collect(),
+    };
+    let g4 = p.grad(0, &w4, LrWant::Factors, 0);
+    assert!((g3.loss - g4.loss).abs() < 1e-6, "{} vs {}", g3.loss, g4.loss);
+    match (&g3.lr[0], &g4.lr[0]) {
+        (
+            fedlrt::models::LrGrad::Factors { g_u: u3, g_s: s3, .. },
+            fedlrt::models::LrGrad::Factors { g_u: u4, g_s: s4, .. },
+        ) => {
+            // Leading block matches; padded col of G_U is zero.
+            assert!(u4.first_cols(3).sub(u3).max_abs() < 1e-5);
+            assert!(s4.block(3, 3).sub(s3).max_abs() < 1e-5);
+            for i in 0..u4.rows() {
+                assert_eq!(u4[(i, 3)], 0.0, "padded G_U column must be 0");
+            }
+        }
+        _ => unreachable!(),
+    }
+}
+
+#[test]
+fn fedlrt_trains_tiny_network_end_to_end() {
+    let p = tiny_problem(4, 44);
+    let cfg = TrainConfig {
+        rounds: 12,
+        local_iters: 8,
+        lr: LrSchedule::Constant(5e-2),
+        var_correction: VarCorrection::Simplified,
+        rank: RankConfig { initial_rank: 3, max_rank: p.max_rank(), tau: 0.03 },
+        seed: 5,
+        eval_every: 4,
+        ..TrainConfig::default()
+    };
+    let rec = run_fedlrt(&p, &cfg, "it");
+    let first = rec.rounds.first().unwrap().global_loss;
+    let last = rec.final_loss();
+    assert!(last < first, "loss should drop: {first} -> {last}");
+    let acc = rec.final_metric().expect("accuracy metric");
+    assert!(acc > 1.5 / 4.0, "accuracy {acc} ≤ chance (4 classes)");
+    // Ranks stay within the artifact padding budget.
+    for r in &rec.rounds {
+        assert!(r.ranks.iter().all(|&x| x <= p.max_rank()));
+    }
+}
+
+#[test]
+fn dense_baseline_trains_through_artifacts() {
+    let p = tiny_problem(2, 45);
+    let cfg = TrainConfig {
+        rounds: 8,
+        local_iters: 8,
+        lr: LrSchedule::Constant(5e-2),
+        seed: 9,
+        eval_every: 4,
+        ..TrainConfig::default()
+    };
+    let rec = run_dense(&p, &cfg, DenseAlgo::FedLin, "it");
+    assert!(rec.final_loss() < rec.rounds[0].global_loss);
+    assert!(rec.final_metric().unwrap() > 0.25);
+}
+
+#[test]
+fn eval_metric_bounded() {
+    let p = tiny_problem(2, 46);
+    let w = factored_weights(&p, 3, 3);
+    let acc = p.eval_metric(&w).unwrap();
+    assert!((0.0..=1.0).contains(&acc));
+}
+
+#[test]
+fn conv_stem_config_trains_through_artifacts() {
+    // resnet18_conv: a convolutional stem lowered into the same HLO —
+    // the closest structural analogue of the paper's CNN bodies.
+    let mut rt = runtime();
+    if !rt.manifest.configs.contains_key("resnet18_conv") {
+        eprintln!("skipping: resnet18_conv not in manifest");
+        return;
+    }
+    let p = NnProblem::new(
+        &mut rt,
+        NnOptions {
+            config: "resnet18_conv".into(),
+            num_clients: 2,
+            train_n: 512,
+            test_n: 256,
+            eval_cap: 256,
+            seed: 9,
+            augment: false,
+            dirichlet_alpha: None,
+        },
+    )
+    .expect("conv problem");
+    let cfg = TrainConfig {
+        rounds: 6,
+        local_iters: 4,
+        lr: LrSchedule::Constant(3e-2),
+        var_correction: VarCorrection::Simplified,
+        rank: RankConfig { initial_rank: 8, max_rank: p.max_rank(), tau: 0.02 },
+        seed: 2,
+        eval_every: 3,
+        ..TrainConfig::default()
+    };
+    let rec = run_fedlrt(&p, &cfg, "conv");
+    assert!(rec.final_loss() < rec.rounds[0].global_loss, "conv model should learn");
+    assert!(rec.final_metric().unwrap() > 0.1);
+}
+
+#[test]
+fn checkpoint_roundtrip_preserves_nn_evaluation() {
+    // Save → load → identical loss through the PJRT artifacts.
+    use fedlrt::models::checkpoint;
+    let p = tiny_problem(2, 47);
+    let w = factored_weights(&p, 3, 21);
+    let loss_before = p.global_loss(&w);
+    let dir = std::env::temp_dir().join("fedlrt_it_ckpt");
+    let path = dir.join("w.json");
+    checkpoint::save(&w, &path).unwrap();
+    let back = checkpoint::load(&path).unwrap();
+    let loss_after = p.global_loss(&back);
+    assert_eq!(loss_before.to_bits(), loss_after.to_bits());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn attention_config_trains_through_artifacts() {
+    // vit_attn: a real multi-head self-attention block whose four
+    // projection matrices (W_q, W_k, W_v, W_o) are all FeDLRT low-rank
+    // layers — the paper's ViT benchmark structure.
+    let mut rt = runtime();
+    if !rt.manifest.configs.contains_key("vit_attn") {
+        eprintln!("skipping: vit_attn not in manifest");
+        return;
+    }
+    let p = NnProblem::new(
+        &mut rt,
+        NnOptions {
+            config: "vit_attn".into(),
+            num_clients: 2,
+            train_n: 512,
+            test_n: 256,
+            eval_cap: 256,
+            seed: 31,
+            augment: false,
+            dirichlet_alpha: None,
+        },
+    )
+    .expect("attention problem");
+    assert_eq!(p.spec().lr_shapes.len(), 4, "one block = 4 low-rank matrices");
+    let cfg = TrainConfig {
+        rounds: 5,
+        local_iters: 4,
+        lr: LrSchedule::Constant(2e-2),
+        var_correction: VarCorrection::Simplified,
+        rank: RankConfig { initial_rank: 8, max_rank: p.max_rank(), tau: 0.02 },
+        seed: 3,
+        eval_every: 5,
+        ..TrainConfig::default()
+    };
+    let rec = run_fedlrt(&p, &cfg, "attn");
+    assert!(
+        rec.final_loss() < rec.rounds[0].global_loss,
+        "attention model should learn: {} -> {}",
+        rec.rounds[0].global_loss,
+        rec.final_loss()
+    );
+    // Every attention matrix keeps an independent adaptive rank.
+    assert_eq!(rec.rounds.last().unwrap().ranks.len(), 4);
+}

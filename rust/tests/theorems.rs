@@ -1,0 +1,279 @@
+//! Theorem-validation tests: the paper's analysis, checked numerically.
+//!
+//! These run the actual algorithm machinery on quadratic problems with
+//! known smoothness constant L = 1 and verify the bounds of §3.2 hold
+//! (they are *bounds*, so the tests check the inequality direction, not
+//! tightness).
+
+use fedlrt::lowrank::{augment_basis, LowRank};
+use fedlrt::models::quadratic::Quadratic;
+use fedlrt::models::{FedProblem, LrWant, LrWeight, Weights};
+use fedlrt::tensor::Matrix;
+use fedlrt::util::rng::Rng;
+
+/// Manual FeDLRT round pieces on a quadratic, exposing internals the
+/// round engine hides — mirrors Algorithm 1 exactly.
+struct Round {
+    prob: Quadratic,
+    aug_u: Matrix,
+    aug_v: Matrix,
+    s_tilde: Matrix,
+}
+
+fn setup(n: usize, r: usize, c: usize, seed: u64) -> Round {
+    let mut rng = Rng::new(seed);
+    let prob = Quadratic::random(n, r, c, &mut rng);
+    let fac = LowRank::random_init(n, n, r, &mut rng);
+    // Aggregate basis gradients at the current point.
+    let w_t = Weights { dense: vec![], lr: vec![LrWeight::Factored(fac.clone())] };
+    let mut g_u = Matrix::zeros(n, r);
+    let mut g_v = Matrix::zeros(n, r);
+    for cc in 0..c {
+        let g = prob.grad(cc, &w_t, LrWant::Factors, 0);
+        if let fedlrt::models::LrGrad::Factors { g_u: gu, g_v: gv, .. } = &g.lr[0] {
+            g_u.axpy(1.0 / c as f64, gu);
+            g_v.axpy(1.0 / c as f64, gv);
+        }
+    }
+    let aug = augment_basis(&fac, &g_u, &g_v, 2 * r);
+    Round { prob, aug_u: aug.u_tilde.clone(), aug_v: aug.v_tilde.clone(), s_tilde: aug.s_tilde }
+}
+
+/// Variance-corrected inner iterations (eq. 8) for client `c`.
+fn corrected_iterations(
+    round: &Round,
+    c: usize,
+    s_star: usize,
+    lambda: f64,
+) -> (Vec<Matrix>, Matrix) {
+    let num_clients = round.prob.num_clients();
+    // Correction term V_c = G_S̃ − G_S̃,c at the augmented start point.
+    let w0 = Weights {
+        dense: vec![],
+        lr: vec![LrWeight::Factored(LowRank {
+            u: round.aug_u.clone(),
+            s: round.s_tilde.clone(),
+            v: round.aug_v.clone(),
+        })],
+    };
+    let per: Vec<Matrix> = (0..num_clients)
+        .map(|cc| round.prob.grad(cc, &w0, LrWant::Coeff, 0).lr[0].coeff().clone())
+        .collect();
+    let mut g_mean = Matrix::zeros(per[0].rows(), per[0].cols());
+    for g in &per {
+        g_mean.axpy(1.0 / num_clients as f64, g);
+    }
+    let v_c = g_mean.sub(&per[c]);
+
+    let mut s_c = round.s_tilde.clone();
+    let mut iterates = vec![s_c.clone()];
+    for _ in 0..s_star {
+        let w = Weights {
+            dense: vec![],
+            lr: vec![LrWeight::Factored(LowRank {
+                u: round.aug_u.clone(),
+                s: s_c.clone(),
+                v: round.aug_v.clone(),
+            })],
+        };
+        let g = round.prob.grad(c, &w, LrWant::Coeff, 0).lr[0].coeff().clone();
+        let mut step = g;
+        step.axpy(1.0, &v_c);
+        s_c.axpy(-lambda, &step);
+        iterates.push(s_c.clone());
+    }
+    (iterates, g_mean)
+}
+
+#[test]
+fn theorem1_coefficient_drift_bound() {
+    // ‖S̃_c^s − S̃‖ ≤ e·s*·λ·‖∇_S̃ L(Ũ S̃ Ṽᵀ)‖ for λ ≤ 1/(L s*), L = 1.
+    for seed in [1, 2, 3] {
+        let round = setup(12, 3, 4, seed);
+        let s_star = 8;
+        let lambda = 1.0 / s_star as f64; // exactly the theorem's edge
+        for c in 0..4 {
+            let (iterates, g_mean) = corrected_iterations(&round, c, s_star, lambda);
+            let bound = std::f64::consts::E * s_star as f64 * lambda * g_mean.fro_norm();
+            for (s, it) in iterates.iter().enumerate() {
+                let drift = it.sub(&round.s_tilde).fro_norm();
+                assert!(
+                    drift <= bound + 1e-9,
+                    "seed {seed} client {c} step {s}: drift {drift} > bound {bound}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn theorem2_global_loss_descent() {
+    // One full variance-corrected round must satisfy
+    // L(W^{t+1}) − L(Wᵗ) ≤ −s*λ(1−12s*λL)‖∇_S̃L‖² + Lϑ.
+    // We run the production engine with tiny λ and ϑ=0 (tau=0) and check
+    // monotone descent round over round.
+    use fedlrt::coordinator::{run_fedlrt, RankConfig, TrainConfig, VarCorrection};
+    use fedlrt::opt::LrSchedule;
+    let mut rng = Rng::new(77);
+    let prob = Quadratic::random(10, 2, 4, &mut rng);
+    let s_star = 5usize;
+    let lambda = 1.0 / (12.0 * s_star as f64); // theorem's λ ≤ 1/(12 L s*)
+    let cfg = TrainConfig {
+        rounds: 20,
+        local_iters: s_star,
+        lr: LrSchedule::Constant(lambda),
+        var_correction: VarCorrection::Full,
+        rank: RankConfig { initial_rank: 2, max_rank: 4, tau: 0.0 },
+        seed: 5,
+        ..TrainConfig::default()
+    };
+    let rec = run_fedlrt(&prob, &cfg, "thm2");
+    for w in rec.rounds.windows(2) {
+        assert!(
+            w[1].global_loss <= w[0].global_loss + 1e-12,
+            "descent violated: {} -> {}",
+            w[0].global_loss,
+            w[1].global_loss
+        );
+    }
+}
+
+#[test]
+fn theorem2_descent_magnitude_on_first_round() {
+    // Quantitative check of the descent constant on one round, where we
+    // can compute ‖∇_S̃ L(Ũ S̃ Ṽᵀ)‖ explicitly.
+    let round = setup(10, 2, 3, 99);
+    let s_star = 6;
+    let lambda = 1.0 / (12.0 * s_star as f64);
+    let num_clients = round.prob.num_clients();
+
+    let loss_at = |s: &Matrix| -> f64 {
+        round.prob.global_loss(&Weights {
+            dense: vec![],
+            lr: vec![LrWeight::Factored(LowRank {
+                u: round.aug_u.clone(),
+                s: s.clone(),
+                v: round.aug_v.clone(),
+            })],
+        })
+    };
+    let l_before = loss_at(&round.s_tilde);
+    // All clients iterate; server averages (no truncation, ϑ=0).
+    let mut s_star_mean =
+        Matrix::zeros(round.s_tilde.rows(), round.s_tilde.cols());
+    let mut grad_norm = 0.0;
+    for c in 0..num_clients {
+        let (iterates, g_mean) = corrected_iterations(&round, c, s_star, lambda);
+        grad_norm = g_mean.fro_norm();
+        s_star_mean.axpy(1.0 / num_clients as f64, iterates.last().unwrap());
+    }
+    let l_after = loss_at(&s_star_mean);
+    let s_lambda = s_star as f64 * lambda;
+    let promised = s_lambda * (1.0 - 12.0 * s_lambda) * grad_norm * grad_norm;
+    assert!(
+        l_after - l_before <= -promised + 1e-9,
+        "descent {} shallower than theorem's {}",
+        l_after - l_before,
+        -promised
+    );
+}
+
+#[test]
+fn theorem3_convergence_to_stationary_point() {
+    // min_t ‖∇_S̃L‖² ≤ (48L/T)(L(W¹) − L(W^{T+1})) + 48L²ϑ.
+    // With ϑ=0 and T→larger the best gradient norm must shrink; we track
+    // the coefficient gradient through the engine indirectly via loss
+    // plateau: run long, assert the final loss is within 1e-6 of the
+    // best rank-capped approximation's loss.
+    use fedlrt::coordinator::{run_fedlrt, RankConfig, TrainConfig, VarCorrection};
+    use fedlrt::opt::LrSchedule;
+    let mut rng = Rng::new(123);
+    // Homogeneous quadratic: all targets equal, rank 2 ≤ cap ⇒ L* = 0.
+    let base = Quadratic::random(10, 2, 1, &mut rng);
+    let prob = Quadratic {
+        targets: vec![base.targets[0].clone(); 3],
+        alphas: vec![1.0; 3],
+        n: 10,
+    };
+    let s_star = 4usize;
+    let cfg = TrainConfig {
+        rounds: 200,
+        local_iters: s_star,
+        lr: LrSchedule::Constant(1.0 / (12.0 * s_star as f64)),
+        var_correction: VarCorrection::Full,
+        rank: RankConfig { initial_rank: 2, max_rank: 4, tau: 0.0 },
+        seed: 6,
+        eval_every: 10,
+        ..TrainConfig::default()
+    };
+    let rec = run_fedlrt(&prob, &cfg, "thm3");
+    assert!(
+        rec.final_loss() < 1e-6,
+        "should converge to the stationary point (L*=0): {}",
+        rec.final_loss()
+    );
+}
+
+#[test]
+fn truncation_bias_scales_with_theta() {
+    // Theorems 2–4 carry a +Lϑ term: the loss floor should scale with
+    // the truncation tolerance. Compare two runs differing only in τ.
+    use fedlrt::coordinator::{run_fedlrt, RankConfig, TrainConfig, VarCorrection};
+    use fedlrt::opt::LrSchedule;
+    let mut rng = Rng::new(321);
+    let base = Quadratic::random(12, 6, 1, &mut rng); // full-ish rank target
+    let prob = Quadratic {
+        targets: vec![base.targets[0].clone(); 2],
+        alphas: vec![1.0; 2],
+        n: 12,
+    };
+    let mk = |tau: f64| TrainConfig {
+        rounds: 120,
+        local_iters: 4,
+        lr: LrSchedule::Constant(0.02),
+        var_correction: VarCorrection::Full,
+        rank: RankConfig { initial_rank: 3, max_rank: 6, tau },
+        seed: 9,
+        eval_every: 20,
+        ..TrainConfig::default()
+    };
+    let tight = run_fedlrt(&prob, &mk(1e-4), "theta").final_loss();
+    let loose = run_fedlrt(&prob, &mk(0.3), "theta").final_loss();
+    assert!(
+        loose > tight,
+        "larger ϑ must leave a larger loss floor: τ=0.3 → {loose}, τ=1e-4 → {tight}"
+    );
+}
+
+#[test]
+fn assumption1_delta_small_near_convergence() {
+    // Assumption 1 (simplified vc): near a stationary point the
+    // augmented-block gradient norm is close to the S-block norm. Verify
+    // on a nearly-converged factorization.
+    let mut rng = Rng::new(555);
+    let base = Quadratic::random(10, 2, 1, &mut rng);
+    let prob =
+        Quadratic { targets: vec![base.targets[0].clone(); 3], alphas: vec![1.0; 3], n: 10 };
+    // Start FROM the minimizer's best rank-2 approximation: ∇ ≈ 0.
+    let fac = LowRank::from_dense(&prob.minimizer(), 2);
+    let w = Weights { dense: vec![], lr: vec![LrWeight::Factored(fac.clone())] };
+    let g = prob.grad(0, &w, LrWant::Factors, 0);
+    if let fedlrt::models::LrGrad::Factors { g_u, g_v, g_s } = &g.lr[0] {
+        let aug = augment_basis(&fac, g_u, g_v, 4);
+        let w_aug = Weights {
+            dense: vec![],
+            lr: vec![LrWeight::Factored(aug.as_factorization())],
+        };
+        let g_aug = prob.grad(0, &w_aug, LrWant::Coeff, 0);
+        let full_norm = g_aug.lr[0].coeff().fro_norm();
+        let s_block_norm = g_aug.lr[0].coeff().block(2, 2).fro_norm();
+        // δ-small: the augmented part carries little extra gradient.
+        assert!(
+            full_norm - s_block_norm <= 0.2 * full_norm + 1e-12,
+            "Assumption 1 violated near convergence: full {full_norm}, S-block {s_block_norm}"
+        );
+        let _ = g_s;
+    } else {
+        unreachable!()
+    }
+}
