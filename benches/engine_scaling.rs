@@ -1,0 +1,112 @@
+//! Engine scaling bench: per-round wall-clock vs client count for the
+//! serial and thread-pool executors, with the realized speedup recorded
+//! in the bench JSON (`results/engine_scaling.jsonl`).
+//!
+//! Each client count uses a fixed per-client shard size, so the serial
+//! round cost grows linearly with C while the thread pool amortizes it
+//! across cores — the scenario the `engine::` subsystem exists for.
+//!
+//! Run: `cargo bench --bench engine_scaling`
+//! (`FEDLRT_BENCH_FULL=1` for more rounds per point.)
+
+use fedlrt::coordinator::{run_fedlrt, RankConfig, TrainConfig, VarCorrection};
+use fedlrt::engine::ExecutorKind;
+use fedlrt::models::least_squares::LeastSquares;
+use fedlrt::opt::LrSchedule;
+use fedlrt::util::json::Json;
+use fedlrt::util::rng::Rng;
+use fedlrt::util::Stopwatch;
+
+fn cfg(rounds: usize, executor: ExecutorKind) -> TrainConfig {
+    TrainConfig {
+        rounds,
+        local_iters: 20,
+        lr: LrSchedule::Constant(1e-3),
+        var_correction: VarCorrection::Simplified,
+        rank: RankConfig { initial_rank: 4, max_rank: 8, tau: 0.1 },
+        seed: 7,
+        executor,
+        ..TrainConfig::default()
+    }
+}
+
+fn main() {
+    let full = fedlrt::bench::full_scale();
+    let rounds = if full { 12 } else { 4 };
+    let per_client_points = if full { 400 } else { 200 };
+    let clients = [1usize, 2, 4, 8, 16, 32, 64];
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+
+    println!("Engine scaling — round wall-clock vs client count ({cores} cores)\n");
+    println!(
+        "{:>8} {:>12} {:>12} {:>9} {:>16}",
+        "clients", "serial s", "pool s", "speedup", "client speedup"
+    );
+
+    let mut rows: Vec<Json> = Vec::new();
+    for &c in &clients {
+        // Same problem instance for both executors (and fresh caches per
+        // run via clone) so the comparison is apples to apples.
+        let mut rng = Rng::new(100 + c as u64);
+        let prob = LeastSquares::homogeneous(16, 3, per_client_points * c, c, &mut rng);
+
+        let watch = Stopwatch::start();
+        let rec_serial = run_fedlrt(&prob.clone(), &cfg(rounds, ExecutorKind::Serial), "engine");
+        let serial_s = watch.elapsed_s();
+
+        let watch = Stopwatch::start();
+        let rec_pool = run_fedlrt(
+            &prob.clone(),
+            &cfg(rounds, ExecutorKind::ThreadPool { threads: 0 }),
+            "engine",
+        );
+        let pool_s = watch.elapsed_s();
+
+        // The determinism contract, asserted on every bench point.
+        for (a, b) in rec_serial.rounds.iter().zip(&rec_pool.rounds) {
+            assert_eq!(
+                a.global_loss.to_bits(),
+                b.global_loss.to_bits(),
+                "C={c}: executors diverged at round {}",
+                a.round
+            );
+            assert_eq!(a.ranks, b.ranks, "C={c}: rank trajectories diverged");
+        }
+
+        let speedup = serial_s / pool_s.max(1e-12);
+        let client_speedup = rec_pool.client_speedup();
+        println!(
+            "{:>8} {:>12.4} {:>12.4} {:>8.2}x {:>15.2}x",
+            c, serial_s, pool_s, speedup, client_speedup
+        );
+
+        let mut row = Json::obj();
+        row.set("clients", c)
+            .set("rounds", rounds)
+            .set("serial_s", serial_s)
+            .set("pool_s", pool_s)
+            .set("speedup", speedup)
+            .set("client_wall_s", rec_pool.total_client_wall_s())
+            .set("client_serial_s", rec_pool.total_client_serial_s())
+            .set("client_speedup", client_speedup);
+        rows.push(row);
+    }
+
+    let mut out = Json::obj();
+    out.set("bench", "engine_scaling")
+        .set("cores", cores)
+        .set("full_scale", full)
+        .set("rows", Json::Arr(rows));
+    let path = std::path::Path::new("results/engine_scaling.jsonl");
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent).expect("creating results dir");
+    }
+    use std::io::Write as _;
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+        .expect("opening bench output");
+    writeln!(f, "{}", out.to_string_compact()).expect("writing bench output");
+    println!("\nwrote {path:?}");
+}

@@ -5,8 +5,8 @@
 //! few hundred aggregation rounds on the synthetic vision workload, and
 //! log the loss curve.
 //!
-//! The run is recorded in EXPERIMENTS.md §End-to-end validation; raw
-//! per-round metrics land in `results/train_e2e.jsonl`.
+//! Raw per-round metrics land in `results/train_e2e.jsonl` (see
+//! DESIGN.md §Experiment index).
 //!
 //! Run: `make artifacts && cargo run --release --example train_e2e`
 //! Flags: --model <config> --clients N --rounds N --iters N --vc <mode>
@@ -29,6 +29,7 @@ fn main() -> anyhow::Result<()> {
         .opt("lr", "0.05", "start learning rate")
         .opt("vc", "simplified", "variance correction: none|simplified|full")
         .opt("seed", "1", "random seed")
+        .opt("executor", "serial", "client execution engine: serial|threads|threads:N")
         .flag("skewed", "use Dirichlet(0.3) label-skew partition")
         .parse_env();
 
@@ -77,6 +78,9 @@ fn main() -> anyhow::Result<()> {
         eval_every: (rounds / 20).max(1),
         participation: 1.0,
         straggler_jitter: 0.0,
+        dropout: 0.0,
+        executor: fedlrt::engine::ExecutorKind::parse(args.str("executor"))
+            .unwrap_or_else(|e| panic!("{e}")),
     };
 
     println!(

@@ -12,6 +12,7 @@
 //! | aggregate / broadcast G_S̃ | `Matrix{2r,2r}` |
 //! | aggregate S̃_c^{s*} | `Matrix{2r,2r}` |
 //! | FedAvg/FedLin dense W, G_W | `Matrix{n,n}` |
+//! | naive-FeDLRT factor-triple upload (Alg 6) | `Batch{label, floats}` via [`Payload::batch`] |
 
 /// Size descriptor of one message.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -23,8 +24,10 @@ pub enum Payload {
     CoeffDiag(usize),
     /// A raw float count (scalars, metadata treated as float-equivalent).
     Floats(u64),
-    /// A batch of payloads sent together in one message.
-    Batch2(&'static str, u64, u64),
+    /// Several payloads coalesced into one labelled message (e.g. the
+    /// naive-FeDLRT client's {Ũ_c, Ṽ_c, S̃_c} factor-triple upload).
+    /// Build with [`Payload::batch`].
+    Batch { label: &'static str, floats: u64 },
 }
 
 impl Payload {
@@ -34,12 +37,17 @@ impl Payload {
             Payload::Matrix { rows, cols } => (rows * cols) as u64,
             Payload::CoeffDiag(r) => r as u64,
             Payload::Floats(n) => n,
-            Payload::Batch2(_, a, b) => a + b,
+            Payload::Batch { floats, .. } => floats,
         }
     }
 
     pub fn matrix(rows: usize, cols: usize) -> Payload {
         Payload::Matrix { rows, cols }
+    }
+
+    /// Coalesce any number of payloads into one labelled message.
+    pub fn batch(label: &'static str, parts: &[Payload]) -> Payload {
+        Payload::Batch { label, floats: parts.iter().map(|p| p.floats()).sum() }
     }
 }
 
@@ -52,6 +60,18 @@ mod tests {
         assert_eq!(Payload::matrix(512, 16).floats(), 8192);
         assert_eq!(Payload::CoeffDiag(16).floats(), 16);
         assert_eq!(Payload::Floats(7).floats(), 7);
-        assert_eq!(Payload::Batch2("x", 3, 4).floats(), 7);
+        assert_eq!(Payload::Batch { label: "x", floats: 7 }.floats(), 7);
+    }
+
+    #[test]
+    fn batch_builder_sums_parts() {
+        let b = Payload::batch(
+            "factor_triple",
+            &[Payload::matrix(10, 3), Payload::CoeffDiag(3), Payload::matrix(10, 3)],
+        );
+        assert_eq!(b.floats(), 30 + 3 + 30);
+        assert!(matches!(b, Payload::Batch { label: "factor_triple", .. }));
+        // Empty batches are legal and free.
+        assert_eq!(Payload::batch("empty", &[]).floats(), 0);
     }
 }

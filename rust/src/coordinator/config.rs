@@ -1,5 +1,6 @@
 //! Training configuration shared by all federated algorithms.
 
+use crate::engine::ExecutorKind;
 use crate::opt::{LrSchedule, OptimizerKind, SgdConfig};
 use crate::util::json::Json;
 
@@ -72,6 +73,14 @@ pub struct TrainConfig {
     /// uniform `s*`; footnote 3 notes the analysis extends to
     /// client-dependent counts.
     pub straggler_jitter: f64,
+    /// Probability a *sampled* client drops out of the round after the
+    /// broadcast (device churn). 0.0 = nobody drops; the round always
+    /// keeps at least one client. See [`crate::engine::RoundPlan`].
+    pub dropout: f64,
+    /// Client execution engine: serial reference semantics or a thread
+    /// pool. Bitwise-identical trajectories either way (the engine's
+    /// determinism contract); only wall-clock changes.
+    pub executor: ExecutorKind,
 }
 
 impl Default for TrainConfig {
@@ -87,6 +96,8 @@ impl Default for TrainConfig {
             eval_every: 1,
             participation: 1.0,
             straggler_jitter: 0.0,
+            dropout: 0.0,
+            executor: ExecutorKind::Serial,
         }
     }
 }
@@ -102,7 +113,9 @@ impl TrainConfig {
             .set("tau", self.rank.tau)
             .set("seed", self.seed)
             .set("participation", self.participation)
-            .set("straggler_jitter", self.straggler_jitter);
+            .set("straggler_jitter", self.straggler_jitter)
+            .set("dropout", self.dropout)
+            .set("executor", self.executor.label());
         match self.opt {
             OptimizerKind::Sgd(sgd) => {
                 o.set("optimizer", "sgd")

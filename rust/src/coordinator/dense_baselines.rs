@@ -12,6 +12,7 @@
 //! ```
 
 use crate::comm::{Network, Payload};
+use crate::engine::{ClientExecutor, Executor, RoundPlan};
 use crate::metrics::{RoundMetrics, RunRecord};
 use crate::models::{FedProblem, LrWant, LrWeight, Weights};
 use crate::opt::ClientOptimizer;
@@ -20,7 +21,6 @@ use crate::util::rng::Rng;
 use crate::util::Stopwatch;
 
 use super::config::TrainConfig;
-use super::sampling::{local_iters_for, sample_active};
 
 /// Which dense baseline to run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -39,7 +39,7 @@ impl DenseAlgo {
 }
 
 /// Run FedAvg or FedLin on `problem`.
-pub fn run_dense<P: FedProblem>(
+pub fn run_dense<P: FedProblem + Sync>(
     problem: &P,
     cfg: &TrainConfig,
     algo: DenseAlgo,
@@ -62,6 +62,7 @@ pub fn run_dense<P: FedProblem>(
         .collect();
 
     let mut net = Network::new(c_num);
+    let executor = Executor::from_kind(cfg.executor);
     let mut record = RunRecord::new(algo.label(), experiment, c_num, cfg.seed);
     record.config = cfg.to_json();
 
@@ -69,9 +70,11 @@ pub fn run_dense<P: FedProblem>(
         let watch = Stopwatch::start();
         let lr_t = cfg.lr.at(t);
         let step0 = (t * cfg.local_iters) as u64;
-        let active = sample_active(c_num, cfg.participation, cfg.seed, t);
-        let a_num = active.len();
+        let plan = RoundPlan::build(cfg, c_num, t, |c| problem.client_weight(c));
+        let a_num = plan.len();
         net.set_active_clients(a_num);
+        let mut client_wall_s = 0.0;
+        let mut client_serial_s = 0.0;
 
         // Broadcast the full weights.
         for w in &lr_w {
@@ -89,10 +92,12 @@ pub fn run_dense<P: FedProblem>(
                     dense: dense.clone(),
                     lr: lr_w.iter().cloned().map(LrWeight::Dense).collect(),
                 };
-                let per_client: Vec<_> = active
-                    .iter()
-                    .map(|&c| problem.grad(c, &w_t, LrWant::Dense, step0))
-                    .collect();
+                let report = executor.execute(&plan, |task| {
+                    problem.grad(task.client_id, &w_t, LrWant::Dense, step0)
+                });
+                client_wall_s += report.wall_s;
+                client_serial_s += report.serial_s;
+                let per_client = report.results;
                 for w in &lr_w {
                     net.aggregate("G_W_lr", &Payload::matrix(w.rows(), w.cols()));
                     net.broadcast("G_W_lr", &Payload::matrix(w.rows(), w.cols()));
@@ -107,12 +112,12 @@ pub fn run_dense<P: FedProblem>(
                     lr_w.iter().map(|w| Matrix::zeros(w.rows(), w.cols())).collect();
                 let mut mean_d: Vec<Matrix> =
                     dense.iter().map(|w| Matrix::zeros(w.rows(), w.cols())).collect();
-                for g in &per_client {
+                for (task, g) in plan.tasks.iter().zip(&per_client) {
                     for (acc, gl) in mean_lr.iter_mut().zip(&g.lr) {
-                        acc.axpy(1.0 / a_num as f64, gl.dense());
+                        acc.axpy(task.weight, gl.dense());
                     }
                     for (acc, gd) in mean_d.iter_mut().zip(&g.dense) {
-                        acc.axpy(1.0 / a_num as f64, gd);
+                        acc.axpy(task.weight, gd);
                     }
                 }
                 Some(
@@ -135,39 +140,45 @@ pub fn run_dense<P: FedProblem>(
             }
         };
 
-        // Local iterations, then aggregate the mean.
-        let mut lr_accum: Vec<Matrix> =
-            lr_w.iter().map(|w| Matrix::zeros(w.rows(), w.cols())).collect();
-        let mut dense_accum: Vec<Matrix> =
-            dense.iter().map(|w| Matrix::zeros(w.rows(), w.cols())).collect();
-        for (ai, &c) in active.iter().enumerate() {
+        // Local iterations as executor work items, then aggregate the
+        // weighted mean in plan order (executor-independent bitwise).
+        let report = executor.execute(&plan, |task| {
+            let c = task.client_id;
             let mut lr_c = lr_w.clone();
             let mut dense_c = dense.clone();
             let mut opt_lr: Vec<ClientOptimizer> =
                 (0..lr_c.len()).map(|_| ClientOptimizer::new(cfg.opt)).collect();
             let mut opt_d: Vec<ClientOptimizer> =
                 (0..dense_c.len()).map(|_| ClientOptimizer::new(cfg.opt)).collect();
-            let iters_c = local_iters_for(cfg, t, c);
-            for s in 0..iters_c {
+            for s in 0..task.local_iters {
                 let w_c = Weights {
                     dense: dense_c.clone(),
                     lr: lr_c.iter().cloned().map(LrWeight::Dense).collect(),
                 };
                 let g = problem.grad(c, &w_c, LrWant::Dense, step0 + s as u64);
                 for (l, w) in lr_c.iter_mut().enumerate() {
-                    let corr = corrections.as_ref().map(|cs| &cs[ai].0[l]);
+                    let corr = corrections.as_ref().map(|cs| &cs[task.ordinal].0[l]);
                     opt_lr[l].step(w, g.lr[l].dense(), lr_t, corr);
                 }
                 for (dl, w) in dense_c.iter_mut().enumerate() {
-                    let corr = corrections.as_ref().map(|cs| &cs[ai].1[dl]);
+                    let corr = corrections.as_ref().map(|cs| &cs[task.ordinal].1[dl]);
                     opt_d[dl].step(w, &g.dense[dl], lr_t, corr);
                 }
             }
+            (lr_c, dense_c)
+        });
+        client_wall_s += report.wall_s;
+        client_serial_s += report.serial_s;
+        let mut lr_accum: Vec<Matrix> =
+            lr_w.iter().map(|w| Matrix::zeros(w.rows(), w.cols())).collect();
+        let mut dense_accum: Vec<Matrix> =
+            dense.iter().map(|w| Matrix::zeros(w.rows(), w.cols())).collect();
+        for (task, (lr_c, dense_c)) in plan.tasks.iter().zip(&report.results) {
             for (l, w) in lr_c.iter().enumerate() {
-                lr_accum[l].axpy(1.0 / a_num as f64, w);
+                lr_accum[l].axpy(task.weight, w);
             }
             for (dl, w) in dense_c.iter().enumerate() {
-                dense_accum[dl].axpy(1.0 / a_num as f64, w);
+                dense_accum[dl].axpy(task.weight, w);
             }
         }
         // Upload accounting once; `aggregate` multiplies by C.
@@ -202,6 +213,8 @@ pub fn run_dense<P: FedProblem>(
             dist_to_opt: if should_eval { problem.distance_to_optimum(&w_eval) } else { None },
             eval_metric: if should_eval { problem.eval_metric(&w_eval) } else { None },
             wall_s: watch.elapsed_s(),
+            client_wall_s,
+            client_serial_s,
         });
     }
 

@@ -20,6 +20,7 @@
 //! This is the executable counterpart of Table 1's FeDLR row.
 
 use crate::comm::{Network, Payload};
+use crate::engine::{ClientExecutor, Executor, RoundPlan};
 use crate::linalg::svd;
 use crate::lowrank::LowRank;
 use crate::metrics::{RoundMetrics, RunRecord};
@@ -30,11 +31,14 @@ use crate::util::rng::Rng;
 use crate::util::Stopwatch;
 
 use super::config::TrainConfig;
-use super::sampling::{local_iters_for, sample_active};
 
 /// Run the FeDLR-style dual-side-compression baseline. Single low-rank
 /// layer problems (the §4.1 comparisons).
-pub fn run_fedlr<P: FedProblem>(problem: &P, cfg: &TrainConfig, experiment: &str) -> RunRecord {
+pub fn run_fedlr<P: FedProblem + Sync>(
+    problem: &P,
+    cfg: &TrainConfig,
+    experiment: &str,
+) -> RunRecord {
     let spec = problem.spec();
     assert!(
         spec.dense_shapes.is_empty() && spec.lr_shapes.len() == 1,
@@ -48,6 +52,7 @@ pub fn run_fedlr<P: FedProblem>(problem: &P, cfg: &TrainConfig, experiment: &str
     let mut w = Matrix::randn(m, n, &mut rng).scale((1.0 / m as f64).sqrt());
 
     let mut net = Network::new(c_num);
+    let executor = Executor::from_kind(cfg.executor);
     let mut record = RunRecord::new("fedlr", experiment, c_num, cfg.seed);
     record.config = cfg.to_json();
 
@@ -55,9 +60,8 @@ pub fn run_fedlr<P: FedProblem>(problem: &P, cfg: &TrainConfig, experiment: &str
         let watch = Stopwatch::start();
         let lr_t = cfg.lr.at(t);
         let step0 = (t * cfg.local_iters) as u64;
-        let active = sample_active(c_num, cfg.participation, cfg.seed, t);
-        let a_num = active.len();
-        net.set_active_clients(a_num);
+        let plan = RoundPlan::build(cfg, c_num, t, |c| problem.client_weight(c));
+        net.set_active_clients(plan.len());
 
         // Server-side compression for the downlink (full n×n SVD!).
         let dec = svd(&w);
@@ -70,16 +74,14 @@ pub fn run_fedlr<P: FedProblem>(problem: &P, cfg: &TrainConfig, experiment: &str
         let w_compressed =
             crate::tensor::matmul_nt(&crate::tensor::matmul(&p, &Matrix::diag(&sig)), &q);
 
-        // Clients: reconstruct, dense local training, compress upload.
-        let mut w_next = Matrix::zeros(m, n);
-        let mut rank_up_max = 1usize;
-        for &c in &active {
+        // Clients: reconstruct, dense local training, compress upload —
+        // one hermetic work item per client.
+        let report = executor.execute(&plan, |task| {
             let mut w_c = w_compressed.clone();
             let mut opt = ClientOptimizer::new(cfg.opt);
-            let iters_c = local_iters_for(cfg, t, c);
-            for s in 0..iters_c {
+            for s in 0..task.local_iters {
                 let wts = Weights { dense: vec![], lr: vec![LrWeight::Dense(w_c.clone())] };
-                let g = problem.grad(c, &wts, LrWant::Dense, step0 + s as u64);
+                let g = problem.grad(task.client_id, &wts, LrWant::Dense, step0 + s as u64);
                 opt.step(&mut w_c, g.lr[0].dense(), lr_t, None);
             }
             // Client-side compression (another full SVD, on-device).
@@ -87,11 +89,18 @@ pub fn run_fedlr<P: FedProblem>(problem: &P, cfg: &TrainConfig, experiment: &str
             let theta_c =
                 cfg.rank.tau * dec_c.sigma.iter().map(|x| x * x).sum::<f64>().sqrt();
             let r_up = dec_c.rank_for_tolerance(theta_c).clamp(1, cfg.rank.max_rank);
-            rank_up_max = rank_up_max.max(r_up);
             let (pc, sc, qc) = dec_c.truncate(r_up);
             let w_c_approx =
                 crate::tensor::matmul_nt(&crate::tensor::matmul(&pc, &Matrix::diag(&sc)), &qc);
-            w_next.axpy(1.0 / a_num as f64, &w_c_approx);
+            (w_c_approx, r_up)
+        });
+        let client_wall_s = report.wall_s;
+        let client_serial_s = report.serial_s;
+        let mut w_next = Matrix::zeros(m, n);
+        let mut rank_up_max = 1usize;
+        for (task, (w_c_approx, r_up)) in plan.tasks.iter().zip(&report.results) {
+            rank_up_max = rank_up_max.max(*r_up);
+            w_next.axpy(task.weight, w_c_approx);
         }
         // Upload accounting (uniform upper bound at the max upload rank).
         net.aggregate("P_c", &Payload::matrix(m, rank_up_max));
@@ -117,6 +126,8 @@ pub fn run_fedlr<P: FedProblem>(problem: &P, cfg: &TrainConfig, experiment: &str
             dist_to_opt: problem.distance_to_optimum(&w_eval),
             eval_metric: problem.eval_metric(&w_eval),
             wall_s: watch.elapsed_s(),
+            client_wall_s,
+            client_serial_s,
         });
     }
 

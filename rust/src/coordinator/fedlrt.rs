@@ -25,6 +25,7 @@
 //! conventionally.
 
 use crate::comm::{Network, Payload};
+use crate::engine::{ClientExecutor, Executor, RoundPlan};
 use crate::lowrank::{augment_basis, truncate, AugmentedBasis, LowRank};
 use crate::metrics::{RoundMetrics, RunRecord};
 use crate::models::{FedProblem, LrGrad, LrWant, LrWeight, Weights};
@@ -34,10 +35,13 @@ use crate::util::rng::Rng;
 use crate::util::Stopwatch;
 
 use super::config::{TrainConfig, VarCorrection};
-use super::sampling::{local_iters_for, sample_active};
 
 /// Run FeDLRT on `problem` under `cfg`; returns the full run record.
-pub fn run_fedlrt<P: FedProblem>(problem: &P, cfg: &TrainConfig, experiment: &str) -> RunRecord {
+pub fn run_fedlrt<P: FedProblem + Sync>(
+    problem: &P,
+    cfg: &TrainConfig,
+    experiment: &str,
+) -> RunRecord {
     let spec = problem.spec();
     let c_num = problem.num_clients();
     let mut rng = Rng::new(cfg.seed);
@@ -61,6 +65,7 @@ pub fn run_fedlrt<P: FedProblem>(problem: &P, cfg: &TrainConfig, experiment: &st
         .collect();
 
     let mut net = Network::new(c_num);
+    let executor = Executor::from_kind(cfg.executor);
     let algo = format!("fedlrt_{}", cfg.var_correction.label());
     let mut record = RunRecord::new(&algo, experiment, c_num, cfg.seed);
     record.config = cfg.to_json();
@@ -69,17 +74,15 @@ pub fn run_fedlrt<P: FedProblem>(problem: &P, cfg: &TrainConfig, experiment: &st
         let watch = Stopwatch::start();
         let lr_t = cfg.lr.at(t);
         let step0 = (t * cfg.local_iters) as u64;
-        // Client selection (full participation unless configured).
-        let active = sample_active(c_num, cfg.participation, cfg.seed, t);
-        let a_num = active.len();
+        // Round schedule: participation sampling, dropout, straggler
+        // iteration counts, and normalized aggregation weights, all in
+        // one deterministic plan.
+        let plan = RoundPlan::build(cfg, c_num, t, |c| problem.client_weight(c));
+        let a_num = plan.len();
         net.set_active_clients(a_num);
-        // Normalized aggregation weights over the participating set
-        // (uniform unless the problem overrides client_weight).
-        let weights: Vec<f64> = {
-            let raw: Vec<f64> = active.iter().map(|&c| problem.client_weight(c)).collect();
-            let total: f64 = raw.iter().sum();
-            raw.iter().map(|w| w / total).collect()
-        };
+        let weights: Vec<f64> = plan.tasks.iter().map(|task| task.weight).collect();
+        let mut client_wall_s = 0.0;
+        let mut client_serial_s = 0.0;
 
         // (2) Broadcast current factorization + dense params. S is
         // diagonal after truncation, so only its diagonal travels.
@@ -100,8 +103,11 @@ pub fn run_fedlrt<P: FedProblem>(problem: &P, cfg: &TrainConfig, experiment: &st
             dense: dense.clone(),
             lr: factors.iter().cloned().map(LrWeight::Factored).collect(),
         };
-        let per_client: Vec<_> =
-            active.iter().map(|&c| problem.grad(c, &w_t, LrWant::Factors, step0)).collect();
+        let report = executor
+            .execute(&plan, |task| problem.grad(task.client_id, &w_t, LrWant::Factors, step0));
+        client_wall_s += report.wall_s;
+        client_serial_s += report.serial_s;
+        let per_client = report.results;
         for f in &factors {
             net.aggregate("G_U", &Payload::matrix(f.m(), f.rank()));
             net.aggregate("G_V", &Payload::matrix(f.n(), f.rank()));
@@ -194,10 +200,12 @@ pub fn run_fedlrt<P: FedProblem>(problem: &P, cfg: &TrainConfig, experiment: &st
                     dense: dense.clone(),
                     lr: augs.iter().map(|a| LrWeight::Factored(a.as_factorization())).collect(),
                 };
-                let grads_aug: Vec<_> = active
-                    .iter()
-                    .map(|&c| problem.grad(c, &w_aug, LrWant::Coeff, step0))
-                    .collect();
+                let report = executor.execute(&plan, |task| {
+                    problem.grad(task.client_id, &w_aug, LrWant::Coeff, step0)
+                });
+                client_wall_s += report.wall_s;
+                client_serial_s += report.serial_s;
+                let grads_aug = report.results;
                 for aug in &augs {
                     let r2 = aug.rank();
                     net.aggregate("G_S_tilde", &Payload::matrix(r2, r2));
@@ -237,23 +245,19 @@ pub fn run_fedlrt<P: FedProblem>(problem: &P, cfg: &TrainConfig, experiment: &st
         };
 
         // (13)-(15) Local client iterations on the coefficients (and
-        // dense params). Clients run sequentially — the simulation
-        // measures communication/compute volume, not wall-parallelism.
-        let mut s_accum: Vec<Matrix> = augs.iter().map(|a| {
-            Matrix::zeros(a.rank(), a.rank())
-        }).collect();
-        let mut dense_accum: Vec<Matrix> =
-            dense.iter().map(|d| Matrix::zeros(d.rows(), d.cols())).collect();
-        let mut local_loss_sum = 0.0;
-        for (ai, &c) in active.iter().enumerate() {
+        // dense params), expressed as hermetic work items: each task
+        // reads only broadcast round state and returns its local
+        // optimum, so the executor may shard clients across threads.
+        let report = executor.execute(&plan, |task| {
+            let c = task.client_id;
             let mut s_c: Vec<Matrix> = augs.iter().map(|a| a.s_tilde.clone()).collect();
             let mut dense_c: Vec<Matrix> = dense.clone();
             let mut opt_s: Vec<ClientOptimizer> =
                 (0..num_lr).map(|_| ClientOptimizer::new(cfg.opt)).collect();
             let mut opt_d: Vec<ClientOptimizer> =
                 (0..dense.len()).map(|_| ClientOptimizer::new(cfg.opt)).collect();
-            let iters_c = local_iters_for(cfg, t, c);
-            for s in 0..iters_c {
+            let mut first_loss = 0.0;
+            for s in 0..task.local_iters {
                 let w_c = Weights {
                     dense: dense_c.clone(),
                     lr: (0..num_lr)
@@ -268,27 +272,39 @@ pub fn run_fedlrt<P: FedProblem>(problem: &P, cfg: &TrainConfig, experiment: &st
                 };
                 let g = problem.grad(c, &w_c, LrWant::Coeff, step0 + s as u64);
                 if s == 0 {
-                    local_loss_sum += g.loss;
+                    first_loss = g.loss;
                 }
                 for l in 0..num_lr {
                     opt_s[l].step(
                         &mut s_c[l],
                         g.lr[l].coeff(),
                         lr_t,
-                        corrections[ai][l].as_ref(),
+                        corrections[task.ordinal][l].as_ref(),
                     );
                 }
                 for (dl, (w, gd)) in dense_c.iter_mut().zip(&g.dense).enumerate() {
-                    opt_d[dl].step(w, gd, lr_t, dense_corrections[ai][dl].as_ref());
+                    opt_d[dl].step(w, gd, lr_t, dense_corrections[task.ordinal][dl].as_ref());
                 }
             }
-            // (16) Server averages the uploaded S̃_c^{s*} (+ dense),
-            // weighted (eq. 10 with non-uniform weights).
-            for (l, _aug) in augs.iter().enumerate() {
-                s_accum[l].axpy(weights[ai], &s_c[l]);
+            (s_c, dense_c, first_loss)
+        });
+        client_wall_s += report.wall_s;
+        client_serial_s += report.serial_s;
+        // (16) Server averages the uploaded S̃_c^{s*} (+ dense), weighted
+        // (eq. 10 with non-uniform weights) — reduced in plan order so
+        // the trajectory is bitwise independent of the executor.
+        let mut s_accum: Vec<Matrix> =
+            augs.iter().map(|a| Matrix::zeros(a.rank(), a.rank())).collect();
+        let mut dense_accum: Vec<Matrix> =
+            dense.iter().map(|d| Matrix::zeros(d.rows(), d.cols())).collect();
+        let mut local_loss_sum = 0.0;
+        for (task, (s_c, dense_c, first_loss)) in plan.tasks.iter().zip(&report.results) {
+            local_loss_sum += *first_loss;
+            for l in 0..num_lr {
+                s_accum[l].axpy(task.weight, &s_c[l]);
             }
             for (dl, d) in dense_c.iter().enumerate() {
-                dense_accum[dl].axpy(weights[ai], d);
+                dense_accum[dl].axpy(task.weight, d);
             }
         }
         // Upload accounting: every client sends its S̃_c (and dense
@@ -344,6 +360,8 @@ pub fn run_fedlrt<P: FedProblem>(problem: &P, cfg: &TrainConfig, experiment: &st
             dist_to_opt: if should_eval { problem.distance_to_optimum(&w_eval) } else { None },
             eval_metric: if should_eval { problem.eval_metric(&w_eval) } else { None },
             wall_s: watch.elapsed_s(),
+            client_wall_s,
+            client_serial_s,
         });
         let _ = discarded_total;
     }
@@ -475,6 +493,23 @@ mod tests {
         for (x, y) in a.rounds.iter().zip(&b.rounds) {
             assert_eq!(x.global_loss.to_bits(), y.global_loss.to_bits());
             assert_eq!(x.ranks, y.ranks);
+        }
+    }
+
+    #[test]
+    fn thread_pool_executor_matches_serial_bitwise() {
+        let mut rng = Rng::new(811);
+        let prob = Quadratic::random(10, 2, 4, &mut rng);
+        let mut cfg_serial = quick_cfg(6, 3, VarCorrection::Simplified);
+        cfg_serial.straggler_jitter = 0.4;
+        let mut cfg_pool = cfg_serial.clone();
+        cfg_pool.executor = crate::engine::ExecutorKind::ThreadPool { threads: 3 };
+        let a = run_fedlrt(&prob, &cfg_serial, "t");
+        let b = run_fedlrt(&prob, &cfg_pool, "t");
+        for (x, y) in a.rounds.iter().zip(&b.rounds) {
+            assert_eq!(x.global_loss.to_bits(), y.global_loss.to_bits());
+            assert_eq!(x.ranks, y.ranks);
+            assert_eq!(x.comm_floats, y.comm_floats);
         }
     }
 }

@@ -10,6 +10,7 @@
 //! factor triples travel upstream instead of small coefficient matrices.
 
 use crate::comm::{Network, Payload};
+use crate::engine::{ClientExecutor, Executor, RoundPlan};
 use crate::linalg::svd;
 use crate::lowrank::{augment_basis, LowRank};
 use crate::metrics::{RoundMetrics, RunRecord};
@@ -23,7 +24,7 @@ use super::config::TrainConfig;
 
 /// Run Algorithm 6. Only supports problems whose trainables are a single
 /// low-rank layer (the convex tests it is benchmarked on).
-pub fn run_fedlrt_naive<P: FedProblem>(
+pub fn run_fedlrt_naive<P: FedProblem + Sync>(
     problem: &P,
     cfg: &TrainConfig,
     experiment: &str,
@@ -42,6 +43,7 @@ pub fn run_fedlrt_naive<P: FedProblem>(
     fac.s.scale_inplace((1.0 / m as f64).sqrt());
 
     let mut net = Network::new(c_num);
+    let executor = Executor::from_kind(cfg.executor);
     let mut record = RunRecord::new("fedlrt_naive", experiment, c_num, cfg.seed);
     record.config = cfg.to_json();
 
@@ -49,6 +51,8 @@ pub fn run_fedlrt_naive<P: FedProblem>(
         let watch = Stopwatch::start();
         let lr_t = cfg.lr.at(t);
         let step0 = (t * cfg.local_iters) as u64;
+        let plan = RoundPlan::build(cfg, c_num, t, |c| problem.client_weight(c));
+        net.set_active_clients(plan.len());
 
         // Broadcast the current global factors.
         net.broadcast("U", &Payload::matrix(m, fac.rank()));
@@ -56,9 +60,10 @@ pub fn run_fedlrt_naive<P: FedProblem>(
         net.broadcast("S_diag", &Payload::CoeffDiag(fac.rank()));
 
         // Per-client: local augmentation (own QR on own gradients) and
-        // local coefficient iterations — no coordination until upload.
-        let mut w_star = Matrix::zeros(m, n);
-        for c in 0..c_num {
+        // local coefficient iterations — no coordination until upload,
+        // so each client is one hermetic work item.
+        let report = executor.execute(&plan, |task| {
+            let c = task.client_id;
             let w_c = Weights { dense: vec![], lr: vec![LrWeight::Factored(fac.clone())] };
             let g = problem.grad(c, &w_c, LrWant::Factors, step0);
             let (g_u, g_v) = match &g.lr[0] {
@@ -69,7 +74,7 @@ pub fn run_fedlrt_naive<P: FedProblem>(
             let aug = augment_basis(&fac, &g_u, &g_v, 2 * fac.rank());
             let mut s_c = aug.s_tilde.clone();
             let mut opt = ClientOptimizer::new(cfg.opt);
-            for s in 0..cfg.local_iters {
+            for s in 0..task.local_iters {
                 let w_loc = Weights {
                     dense: vec![],
                     lr: vec![LrWeight::Factored(LowRank {
@@ -81,20 +86,35 @@ pub fn run_fedlrt_naive<P: FedProblem>(
                 let gg = problem.grad(c, &w_loc, LrWant::Coeff, step0 + s as u64);
                 opt.step(&mut s_c, gg.lr[0].coeff(), lr_t, None);
             }
-            // Upload the *full factor triple* — bases diverged, so the
-            // server cannot reuse shared ones. (Counted once per client:
-            // `aggregate` multiplies by C, so divide the sizes here by
-            // recording through a per-client helper.)
-            if c == 0 {
-                let r2 = aug.rank();
-                net.aggregate("U_tilde_c", &Payload::matrix(m, r2));
-                net.aggregate("V_tilde_c", &Payload::matrix(n, r2));
-                net.aggregate("S_tilde_c", &Payload::matrix(r2, r2));
-            }
-            // Server accumulates the reconstructed dense average.
-            let w_c_dense =
-                LowRank { u: aug.u_tilde, s: s_c, v: aug.v_tilde }.to_dense();
-            w_star.axpy(1.0 / c_num as f64, &w_c_dense);
+            let r2 = aug.rank();
+            // The client uploads its reconstructed full factor triple —
+            // bases diverged, so the server cannot reuse shared ones.
+            let w_c_dense = LowRank { u: aug.u_tilde, s: s_c, v: aug.v_tilde }.to_dense();
+            (w_c_dense, r2)
+        });
+        let client_wall_s = report.wall_s;
+        let client_serial_s = report.serial_s;
+        // Upload accounting at the (uniform) augmented rank: every
+        // participating client ships its full factor triple
+        // {Ũ_c, S̃_c, Ṽ_c} as one coalesced message; `aggregate`
+        // multiplies by the active-client count.
+        let r2 = report.results.first().map(|(_, r2)| *r2).unwrap_or(fac.rank());
+        net.aggregate(
+            "factor_triple_c",
+            &Payload::batch(
+                "factor_triple_c",
+                &[
+                    Payload::matrix(m, r2),
+                    Payload::matrix(n, r2),
+                    Payload::matrix(r2, r2),
+                ],
+            ),
+        );
+        // Server accumulates the reconstructed dense average in plan
+        // order (executor-independent bitwise).
+        let mut w_star = Matrix::zeros(m, n);
+        for (task, (w_c_dense, _)) in plan.tasks.iter().zip(&report.results) {
+            w_star.axpy(task.weight, w_c_dense);
         }
         net.end_round_trip();
 
@@ -123,6 +143,8 @@ pub fn run_fedlrt_naive<P: FedProblem>(
             dist_to_opt: problem.distance_to_optimum(&w_eval),
             eval_metric: problem.eval_metric(&w_eval),
             wall_s: watch.elapsed_s(),
+            client_wall_s,
+            client_serial_s,
         });
     }
 

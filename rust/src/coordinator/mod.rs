@@ -11,6 +11,10 @@
 //! All engines are generic over [`crate::models::FedProblem`], route
 //! every transfer through [`crate::comm::Network`] for exact
 //! communication accounting, and emit [`crate::metrics::RunRecord`]s.
+//! Per-round client work is scheduled by [`crate::engine::RoundPlan`]
+//! (participation sampling, dropout, stragglers) and submitted to the
+//! configured [`crate::engine::ClientExecutor`] as hermetic work items;
+//! serial and thread-pool execution are bitwise-identical.
 
 pub mod config;
 pub mod dense_baselines;

@@ -5,6 +5,7 @@
 //! iteration counts for the CPU-only default bench runs
 //! (`FEDLRT_BENCH_FULL=1` restores paper scale).
 
+use crate::engine::ExecutorKind;
 use crate::opt::{LrSchedule, OptimizerKind, SgdConfig};
 
 use super::config::{RankConfig, TrainConfig, VarCorrection};
@@ -23,6 +24,8 @@ pub fn fig4_config(full: bool) -> TrainConfig {
         eval_every: 1,
         participation: 1.0,
         straggler_jitter: 0.0,
+        dropout: 0.0,
+        executor: ExecutorKind::Serial,
     }
 }
 
@@ -44,6 +47,8 @@ pub fn fig1_config(full: bool) -> TrainConfig {
         eval_every: 1,
         participation: 1.0,
         straggler_jitter: 0.0,
+        dropout: 0.0,
+        executor: ExecutorKind::Serial,
     }
 }
 
@@ -161,6 +166,8 @@ impl VisionPreset {
             eval_every: (rounds / 4).max(1),
             participation: 1.0,
             straggler_jitter: 0.0,
+            dropout: 0.0,
+            executor: ExecutorKind::Serial,
         }
     }
 }

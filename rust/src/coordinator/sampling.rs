@@ -1,45 +1,18 @@
-//! Client sampling and straggler modelling.
+//! Client sampling and straggler modelling — stable import path.
 //!
-//! The paper analyses full participation with a uniform `s*` and notes
-//! (footnote 3) that the analysis extends to client-dependent local
-//! iteration counts; partial participation is the standard production
-//! relaxation [26, 6, 29]. Both are deterministic functions of
-//! `(seed, round)` so runs stay reproducible.
+//! The implementations moved to [`crate::engine::plan`], where
+//! [`crate::engine::RoundPlan`] folds sampling, dropout, straggler
+//! iteration counts, aggregation-weight normalization, and per-client
+//! RNG streams into one schedule object. These re-exports keep the
+//! original `coordinator::sampling` paths working; the tests below pin
+//! the sampling semantics the paper's reproducibility relies on.
 
-use crate::util::rng::Rng;
-
-use super::config::TrainConfig;
-
-/// The clients participating in round `t`: a uniformly random subset of
-/// size `max(1, ⌈fraction·C⌉)`, sorted for deterministic iteration.
-pub fn sample_active(c_num: usize, fraction: f64, seed: u64, round: usize) -> Vec<usize> {
-    let take = ((fraction * c_num as f64).ceil() as usize).clamp(1, c_num);
-    if take == c_num {
-        return (0..c_num).collect();
-    }
-    let mut rng = Rng::new(seed ^ 0x5E1E_C700).split(round as u64);
-    let mut perm = rng.permutation(c_num);
-    perm.truncate(take);
-    perm.sort_unstable();
-    perm
-}
-
-/// Local iterations for client `c` in round `t` under the straggler
-/// model: `s*·(1 − jitter·u)` with `u ~ U[0,1)` per (round, client).
-pub fn local_iters_for(cfg: &TrainConfig, round: usize, client: usize) -> usize {
-    if cfg.straggler_jitter <= 0.0 {
-        return cfg.local_iters;
-    }
-    let mut rng =
-        Rng::new(cfg.seed ^ 0x57A6_6000).split((round as u64) << 20 | client as u64);
-    let u = rng.uniform();
-    let scaled = cfg.local_iters as f64 * (1.0 - cfg.straggler_jitter.clamp(0.0, 1.0) * u);
-    (scaled.round() as usize).max(1)
-}
+pub use crate::engine::plan::{local_iters_for, sample_active};
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::config::TrainConfig;
 
     #[test]
     fn full_participation_returns_everyone() {

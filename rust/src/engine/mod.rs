@@ -1,0 +1,30 @@
+//! Client execution engine: round scheduling + pluggable executors.
+//!
+//! The coordinator layer describes *what* every participating client
+//! must do in an aggregation round; this subsystem decides *which*
+//! clients run ([`RoundPlan`] — participation sampling, dropout, and
+//! straggler skew in one place) and *how* their work is executed
+//! ([`ClientExecutor`] — serially, or sharded across OS threads).
+//!
+//! Two invariants make the engine safe to drop under any coordinator:
+//!
+//! 1. **Determinism.** A [`RoundPlan`] is a pure function of
+//!    `(TrainConfig, round)`; every [`ClientTask`] carries its own RNG
+//!    stream seed `f(run_seed, round, client_id)`. Executors return
+//!    results in task order and never fold across clients themselves —
+//!    the coordinator reduces in plan order — so [`SerialExecutor`] and
+//!    [`ThreadPoolExecutor`] produce **bitwise-identical**
+//!    [`crate::metrics::RunRecord`]s for the same seed (asserted by
+//!    `tests/engine_determinism.rs`).
+//! 2. **Honest accounting.** [`ExecReport`] reports both the parallel
+//!    wall-clock and the serial-equivalent (sum of per-client) time, so
+//!    [`crate::metrics::RoundMetrics`] can report simulation speedup
+//!    without contaminating the paper's communication metrics.
+
+pub mod executor;
+pub mod plan;
+
+pub use executor::{
+    ClientExecutor, ExecReport, Executor, ExecutorKind, SerialExecutor, ThreadPoolExecutor,
+};
+pub use plan::{local_iters_for, sample_active, ClientTask, RoundPlan};

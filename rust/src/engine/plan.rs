@@ -1,0 +1,245 @@
+//! Round scheduling: participation sampling, dropout, stragglers, and
+//! per-client deterministic RNG streams, folded into one [`RoundPlan`].
+//!
+//! The paper analyses full participation with a uniform `s*` and notes
+//! (footnote 3) that the analysis extends to client-dependent local
+//! iteration counts; partial participation and per-round dropout are the
+//! standard production relaxations [26, 6, 29]. Everything here is a
+//! deterministic function of `(TrainConfig, round)` so runs stay
+//! reproducible under any executor.
+
+use crate::coordinator::config::TrainConfig;
+use crate::util::rng::Rng;
+
+/// The clients participating in round `t`: a uniformly random subset of
+/// size `max(1, ⌈fraction·C⌉)`, sorted for deterministic iteration.
+pub fn sample_active(c_num: usize, fraction: f64, seed: u64, round: usize) -> Vec<usize> {
+    let take = ((fraction * c_num as f64).ceil() as usize).clamp(1, c_num);
+    if take == c_num {
+        return (0..c_num).collect();
+    }
+    let mut rng = Rng::new(seed ^ 0x5E1E_C700).split(round as u64);
+    let mut perm = rng.permutation(c_num);
+    perm.truncate(take);
+    perm.sort_unstable();
+    perm
+}
+
+/// Local iterations for client `c` in round `t` under the straggler
+/// model: `s*·(1 − jitter·u)` with `u ~ U[0,1)` per (round, client).
+pub fn local_iters_for(cfg: &TrainConfig, round: usize, client: usize) -> usize {
+    if cfg.straggler_jitter <= 0.0 {
+        return cfg.local_iters;
+    }
+    let mut rng =
+        Rng::new(cfg.seed ^ 0x57A6_6000).split((round as u64) << 20 | client as u64);
+    let u = rng.uniform();
+    let scaled = cfg.local_iters as f64 * (1.0 - cfg.straggler_jitter.clamp(0.0, 1.0) * u);
+    (scaled.round() as usize).max(1)
+}
+
+/// Whether a sampled client drops out of round `t` *after* receiving the
+/// broadcast (device churn, network loss). Deterministic per
+/// `(seed, round, client)`.
+fn drops_out(seed: u64, round: usize, client: usize, dropout: f64) -> bool {
+    if dropout <= 0.0 {
+        return false;
+    }
+    let mut rng = Rng::new(seed ^ 0xD809_0FF1).split((round as u64) << 20 | client as u64);
+    rng.uniform() < dropout.clamp(0.0, 1.0)
+}
+
+/// Deterministic per-task RNG stream seed: a SplitMix64 finalizer over
+/// `(run_seed, round, client)`. Distinct tasks get decorrelated streams;
+/// the same task always gets the same stream regardless of executor.
+fn task_seed(run_seed: u64, round: usize, client: usize) -> u64 {
+    let mut z = run_seed
+        ^ 0x9E37_79B9_7F4A_7C15
+        ^ ((round as u64) << 32)
+        ^ (client as u64).wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// One client's work item for a round: everything an executor needs to
+/// run the client hermetically (no shared mutable state).
+#[derive(Debug, Clone)]
+pub struct ClientTask {
+    /// Global client index `c ∈ [0, C)`.
+    pub client_id: usize,
+    /// Position within the round's roster — the index of this task's
+    /// result in [`crate::engine::ExecReport::results`], and the index
+    /// coordinators use for per-client round state (e.g. corrections).
+    pub ordinal: usize,
+    /// Local iterations `s*_c` for this round (straggler model applied).
+    pub local_iters: usize,
+    /// Normalized aggregation weight over the *surviving* roster.
+    pub weight: f64,
+    /// Per-(run, round, client) RNG stream seed.
+    pub seed: u64,
+}
+
+impl ClientTask {
+    /// The task's private RNG stream. Two executors handing the same
+    /// task to different threads observe identical streams.
+    pub fn rng(&self) -> Rng {
+        Rng::new(self.seed)
+    }
+}
+
+/// The schedule of one aggregation round: who participates, with what
+/// weight, and how much local work each client performs.
+#[derive(Debug, Clone)]
+pub struct RoundPlan {
+    pub round: usize,
+    /// Surviving tasks, sorted by `client_id`, `ordinal` = position.
+    pub tasks: Vec<ClientTask>,
+}
+
+impl RoundPlan {
+    /// Build the plan for round `t`: sample participants, apply dropout
+    /// (keeping at least one client so the round stays well-defined),
+    /// normalize aggregation weights over the survivors, and assign
+    /// per-client iteration counts and RNG streams.
+    ///
+    /// `client_weight` is the problem's raw (unnormalized) aggregation
+    /// weight, e.g. proportional to shard sizes; uniform weights yield
+    /// exactly the `1/|active|` averaging of the paper's eq. 10.
+    pub fn build(
+        cfg: &TrainConfig,
+        c_num: usize,
+        round: usize,
+        client_weight: impl Fn(usize) -> f64,
+    ) -> RoundPlan {
+        let sampled = sample_active(c_num, cfg.participation, cfg.seed, round);
+        let survivors: Vec<usize> = if cfg.dropout <= 0.0 {
+            sampled
+        } else {
+            let kept: Vec<usize> = sampled
+                .iter()
+                .copied()
+                .filter(|&c| !drops_out(cfg.seed, round, c, cfg.dropout))
+                .collect();
+            if kept.is_empty() {
+                vec![sampled[0]]
+            } else {
+                kept
+            }
+        };
+        let raw: Vec<f64> = survivors.iter().map(|&c| client_weight(c)).collect();
+        let total: f64 = raw.iter().sum();
+        let tasks = survivors
+            .iter()
+            .enumerate()
+            .map(|(ordinal, &c)| ClientTask {
+                client_id: c,
+                ordinal,
+                local_iters: local_iters_for(cfg, round, c),
+                weight: raw[ordinal] / total,
+                seed: task_seed(cfg.seed, round, c),
+            })
+            .collect();
+        RoundPlan { round, tasks }
+    }
+
+    /// Number of participating (surviving) clients.
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    /// The participating client ids, in task order.
+    pub fn client_ids(&self) -> Vec<usize> {
+        self.tasks.iter().map(|t| t.client_id).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_participation_plan_covers_everyone_uniformly() {
+        let cfg = TrainConfig { seed: 3, local_iters: 7, ..TrainConfig::default() };
+        let plan = RoundPlan::build(&cfg, 5, 2, |_| 1.0);
+        assert_eq!(plan.client_ids(), vec![0, 1, 2, 3, 4]);
+        for (i, t) in plan.tasks.iter().enumerate() {
+            assert_eq!(t.ordinal, i);
+            assert_eq!(t.local_iters, 7);
+            assert!((t.weight - 0.2).abs() < 1e-15);
+        }
+        let total: f64 = plan.tasks.iter().map(|t| t.weight).sum();
+        assert!((total - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn plan_is_deterministic_and_round_varying() {
+        let cfg = TrainConfig {
+            seed: 11,
+            participation: 0.4,
+            dropout: 0.2,
+            straggler_jitter: 0.5,
+            local_iters: 20,
+            ..TrainConfig::default()
+        };
+        let a = RoundPlan::build(&cfg, 10, 4, |_| 1.0);
+        let b = RoundPlan::build(&cfg, 10, 4, |_| 1.0);
+        assert_eq!(a.client_ids(), b.client_ids());
+        for (x, y) in a.tasks.iter().zip(&b.tasks) {
+            assert_eq!(x.seed, y.seed);
+            assert_eq!(x.local_iters, y.local_iters);
+            assert_eq!(x.weight.to_bits(), y.weight.to_bits());
+        }
+        // Different rounds reshuffle (almost surely, over many rounds).
+        let differs = (0..50)
+            .any(|t| RoundPlan::build(&cfg, 10, t, |_| 1.0).client_ids() != a.client_ids());
+        assert!(differs);
+    }
+
+    #[test]
+    fn dropout_never_empties_the_round() {
+        let cfg = TrainConfig { seed: 5, dropout: 1.0, ..TrainConfig::default() };
+        for t in 0..20 {
+            let plan = RoundPlan::build(&cfg, 6, t, |_| 1.0);
+            assert_eq!(plan.len(), 1, "total dropout must keep one client");
+            assert!((plan.tasks[0].weight - 1.0).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn dropout_thins_the_roster_on_average() {
+        let cfg = TrainConfig { seed: 9, dropout: 0.5, ..TrainConfig::default() };
+        let total: usize = (0..100).map(|t| RoundPlan::build(&cfg, 8, t, |_| 1.0).len()).sum();
+        // E ≈ 400 of 800 slots; generous tolerance.
+        assert!((250..=550).contains(&total), "survivors {total}");
+    }
+
+    #[test]
+    fn nonuniform_weights_are_normalized() {
+        let cfg = TrainConfig::default();
+        let plan = RoundPlan::build(&cfg, 4, 0, |c| (c + 1) as f64);
+        let total: f64 = plan.tasks.iter().map(|t| t.weight).sum();
+        assert!((total - 1.0).abs() < 1e-12);
+        assert!(plan.tasks[3].weight > plan.tasks[0].weight);
+    }
+
+    #[test]
+    fn task_streams_are_distinct_and_stable() {
+        let cfg = TrainConfig { seed: 21, ..TrainConfig::default() };
+        let plan = RoundPlan::build(&cfg, 6, 3, |_| 1.0);
+        for i in 0..plan.len() {
+            for j in (i + 1)..plan.len() {
+                assert_ne!(plan.tasks[i].seed, plan.tasks[j].seed);
+            }
+        }
+        let mut a = plan.tasks[2].rng();
+        let mut b = plan.tasks[2].rng();
+        for _ in 0..16 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+}

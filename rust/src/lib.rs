@@ -10,6 +10,10 @@
 //!   protocol with exact communication accounting, basis augmentation
 //!   (QR), rank-adaptive truncation (SVD), full/simplified variance
 //!   correction, plus the FedAvg / FedLin / naive-low-rank baselines.
+//!   Per-round client work is scheduled by the [`engine`] subsystem
+//!   (participation, dropout, stragglers) and executed by a pluggable
+//!   [`engine::ClientExecutor`] — serial or thread-pool — with
+//!   bitwise-identical trajectories either way.
 //! * **L2 (`python/compile/model.py`)** — JAX low-rank network
 //!   forward/backward, AOT-lowered to HLO text artifacts at build time.
 //! * **L1 (`python/compile/kernels/`)** — Pallas kernels for the low-rank
@@ -18,14 +22,16 @@
 //! Python never runs at training time; the [`runtime`] module loads the
 //! AOT artifacts through PJRT and serves them to the coordinator.
 //!
-//! See `DESIGN.md` for the system inventory and experiment index, and
-//! `EXPERIMENTS.md` for paper-vs-measured results.
+//! See `DESIGN.md` for the system inventory, the offline-environment
+//! substitutions, and the experiment index; measured results are the
+//! JSONL files the `benches/` drivers emit under `results/`.
 
 pub mod bench;
 pub mod comm;
 pub mod coordinator;
 pub mod costmodel;
 pub mod data;
+pub mod engine;
 pub mod linalg;
 pub mod lowrank;
 pub mod metrics;

@@ -21,6 +21,7 @@ use anyhow::Result;
 use fedlrt::coordinator::{
     run_dense, run_fedlrt, DenseAlgo, RankConfig, TrainConfig, VarCorrection,
 };
+use fedlrt::engine::ExecutorKind;
 use fedlrt::models::least_squares::LeastSquares;
 use fedlrt::nn::{NnOptions, NnProblem};
 use fedlrt::opt::{LrSchedule, OptimizerKind, SgdConfig};
@@ -49,6 +50,13 @@ fn main() -> Result<()> {
             std::process::exit(2);
         }
     }
+}
+
+fn parse_executor(s: &str) -> ExecutorKind {
+    ExecutorKind::parse(s).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    })
 }
 
 fn parse_vc(s: &str) -> VarCorrection {
@@ -80,6 +88,8 @@ fn cmd_train(rest: &[String]) -> Result<()> {
         .opt("seed", "0", "random seed")
         .opt("alpha", "0", "Dirichlet label-skew α (0 = uniform shards)")
         .opt("participation", "1.0", "fraction of clients sampled per round")
+        .opt("dropout", "0.0", "per-round client dropout probability")
+        .opt("executor", "serial", "client execution engine: serial|threads|threads:N")
         .opt("out", "results/train.jsonl", "JSONL output path");
     let a = cli.parse(rest).unwrap_or_else(|e| {
         eprintln!("{e}");
@@ -117,6 +127,8 @@ fn cmd_train(rest: &[String]) -> Result<()> {
         eval_every: (rounds / 10).max(1),
         participation: a.f64("participation"),
         straggler_jitter: 0.0,
+        dropout: a.f64("dropout"),
+        executor: parse_executor(a.str("executor")),
     };
     let rec = match a.str("algo") {
         "fedlrt" => run_fedlrt(&problem, &cfg, "cli_train"),
@@ -158,7 +170,9 @@ fn cmd_lsq(rest: &[String]) -> Result<()> {
         .opt("iters", "20", "local iterations")
         .opt("lr", "0.005", "learning rate")
         .opt("tau", "0.1", "truncation tolerance")
-        .opt("seed", "0", "random seed");
+        .opt("seed", "0", "random seed")
+        .opt("dropout", "0.0", "per-round client dropout probability")
+        .opt("executor", "serial", "client execution engine: serial|threads|threads:N");
     let a = cli.parse(rest).unwrap_or_else(|e| {
         eprintln!("{e}");
         std::process::exit(2)
@@ -191,6 +205,8 @@ fn cmd_lsq(rest: &[String]) -> Result<()> {
             tau: a.f64("tau"),
         },
         seed: a.u64("seed"),
+        dropout: a.f64("dropout"),
+        executor: parse_executor(a.str("executor")),
         ..TrainConfig::default()
     };
     let rec = match a.str("algo") {

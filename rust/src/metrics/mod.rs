@@ -1,7 +1,8 @@
 //! Training metrics: per-round records and JSON-lines export.
 //!
 //! Every experiment emits a [`RunRecord`] — the raw material for the
-//! figure/table reproductions in `benches/` and for EXPERIMENTS.md.
+//! figure/table reproductions in `benches/` (see DESIGN.md §Experiment
+//! index); drivers append them as JSON lines under `results/`.
 
 use std::io::Write;
 use std::path::Path;
@@ -27,9 +28,20 @@ pub struct RoundMetrics {
     pub dist_to_opt: Option<f64>,
     /// Validation metric (accuracy), if the problem has one.
     pub eval_metric: Option<f64>,
-    /// Wall-clock seconds spent in this round (client compute simulated
-    /// serially; see DESIGN.md §Substitutions).
+    /// Wall-clock seconds of the whole round (scheduling + client work +
+    /// server linear algebra + evaluation).
     pub wall_s: f64,
+    /// Wall-clock seconds of client-side work under the configured
+    /// [`crate::engine::ClientExecutor`] (parallel time).
+    pub client_wall_s: f64,
+    /// Serial-equivalent client work: Σ over clients of per-client
+    /// wall-clock. `client_serial_s / client_wall_s` is the round's
+    /// simulation speedup (1.0 under the serial executor). Per-task
+    /// times are measured on the worker threads, so under a thread
+    /// pool this is an estimate with mild upward bias from scheduling
+    /// overlap; the executor caps workers at the core count to keep
+    /// that bias small.
+    pub client_serial_s: f64,
 }
 
 /// A full training run.
@@ -80,6 +92,28 @@ impl RunRecord {
         self.rounds.iter().map(|r| r.comm_floats_lr).sum()
     }
 
+    /// Total client-side wall-clock under the configured executor.
+    pub fn total_client_wall_s(&self) -> f64 {
+        self.rounds.iter().map(|r| r.client_wall_s).sum()
+    }
+
+    /// Total serial-equivalent client work across the run.
+    pub fn total_client_serial_s(&self) -> f64 {
+        self.rounds.iter().map(|r| r.client_serial_s).sum()
+    }
+
+    /// Realized client-execution speedup over the run:
+    /// `Σ client_serial_s / Σ client_wall_s` (≈1.0 for the serial
+    /// executor; >1 when a thread pool overlaps client work).
+    pub fn client_speedup(&self) -> f64 {
+        let wall = self.total_client_wall_s();
+        if wall > 0.0 {
+            self.total_client_serial_s() / wall
+        } else {
+            1.0
+        }
+    }
+
     /// First round at which the loss drops below `eps` (rounds-to-ε).
     pub fn rounds_to_loss(&self, eps: f64) -> Option<usize> {
         self.rounds.iter().find(|r| r.global_loss <= eps).map(|r| r.round)
@@ -103,7 +137,9 @@ impl RunRecord {
                     .set("comm_floats", r.comm_floats)
                     .set("comm_floats_lr", r.comm_floats_lr)
                     .set("comm_floats_per_client", r.comm_floats_per_client)
-                    .set("wall_s", r.wall_s);
+                    .set("wall_s", r.wall_s)
+                    .set("client_wall_s", r.client_wall_s)
+                    .set("client_serial_s", r.client_serial_s);
                 if let Some(d) = r.dist_to_opt {
                     ro.set("dist_to_opt", d);
                 }
@@ -137,8 +173,10 @@ pub fn median_trajectory(runs: &[RunRecord]) -> Vec<(usize, f64, f64, Option<f64
     (0..num_rounds)
         .map(|t| {
             let losses: Vec<f64> = runs.iter().map(|r| r.rounds[t].global_loss).collect();
-            let ranks: Vec<f64> =
-                runs.iter().map(|r| r.rounds[t].ranks.first().copied().unwrap_or(0) as f64).collect();
+            let ranks: Vec<f64> = runs
+                .iter()
+                .map(|r| r.rounds[t].ranks.first().copied().unwrap_or(0) as f64)
+                .collect();
             let dists: Vec<f64> =
                 runs.iter().filter_map(|r| r.rounds[t].dist_to_opt).collect();
             let d = if dists.len() == runs.len() {
@@ -168,6 +206,8 @@ mod tests {
                 dist_to_opt: Some(l.sqrt()),
                 eval_metric: None,
                 wall_s: 0.0,
+                client_wall_s: 0.0,
+                client_serial_s: 0.0,
             });
         }
         r

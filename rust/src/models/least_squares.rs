@@ -25,8 +25,7 @@
 //!
 //! which is `O(N n r)` — the `O(s*b(4nr+4r²))` row of Table 1.
 
-use std::cell::RefCell;
-use std::collections::HashMap;
+use std::sync::Mutex;
 
 use crate::lowrank::LowRank;
 use crate::tensor::{matmul, matmul_nt, matmul_tn, Matrix};
@@ -178,8 +177,17 @@ impl Shard {
     }
 }
 
+/// One client's cached basis projections `(A, B) = (P_x U, P_y V)`.
+#[derive(Debug)]
+struct ProjCache {
+    /// Content fingerprint of the bases the projections were built from.
+    key: u64,
+    a: Matrix,
+    b: Matrix,
+}
+
 /// The federated least-squares problem.
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct LeastSquares {
     n: usize,
     shards: Vec<Shard>,
@@ -191,9 +199,26 @@ pub struct LeastSquares {
     /// only `S̃` changes, so the `O(N·n·r)` projections are reusable
     /// across all `s*` iterations — this is precisely what a real FeDLRT
     /// client implementation would precompute after basis broadcast.
-    /// Keyed by a cheap content fingerprint of the bases so stale
-    /// entries can never be served.
-    proj_cache: RefCell<HashMap<usize, (u64, Matrix, Matrix)>>,
+    /// Guarded by a cheap content fingerprint of the bases so stale
+    /// entries can never be served. One lock *per client* (not one
+    /// shared map) so the thread-pool executor's clients never contend:
+    /// a client's gradient work only ever touches its own slot.
+    proj_cache: Vec<Mutex<Option<ProjCache>>>,
+}
+
+impl Clone for LeastSquares {
+    fn clone(&self) -> LeastSquares {
+        LeastSquares {
+            n: self.n,
+            shards: self.shards.clone(),
+            w_star: self.w_star.clone(),
+            proj_cache: fresh_cache(self.shards.len()),
+        }
+    }
+}
+
+fn fresh_cache(num_clients: usize) -> Vec<Mutex<Option<ProjCache>>> {
+    (0..num_clients).map(|_| Mutex::new(None)).collect()
 }
 
 impl LeastSquares {
@@ -215,7 +240,8 @@ impl LeastSquares {
             let f = targets(&px, &py, &w_r);
             shards.push(Shard { px, py, f });
         }
-        LeastSquares { n, shards, w_star: Some(w_r), proj_cache: RefCell::new(HashMap::new()) }
+        let proj_cache = fresh_cache(shards.len());
+        LeastSquares { n, shards, w_star: Some(w_r), proj_cache }
     }
 
     /// Heterogeneous test (§4.1 / Fig 1): per-client rank-1 targets
@@ -245,7 +271,8 @@ impl LeastSquares {
             shards.push(Shard { px, py, f });
         }
         let w_star = solve_global_minimizer(n, &shards);
-        LeastSquares { n, shards, w_star: Some(w_star), proj_cache: RefCell::new(HashMap::new()) }
+        let proj_cache = fresh_cache(shards.len());
+        LeastSquares { n, shards, w_star: Some(w_star), proj_cache }
     }
 
     pub fn dim(&self) -> usize {
@@ -277,17 +304,21 @@ impl LeastSquares {
     /// basis broadcast and reused across the s* local iterations.
     fn grad_coeff_cached(&self, c: usize, fac: &LowRank) -> (f64, Matrix) {
         let key = Self::basis_fingerprint(&fac.u, &fac.v);
-        let mut cache = self.proj_cache.borrow_mut();
-        let entry = cache.entry(c).or_insert_with(|| {
-            let sh = &self.shards[c];
-            (key, matmul(&sh.px, &fac.u), matmul(&sh.py, &fac.v))
-        });
-        if entry.0 != key {
-            let sh = &self.shards[c];
-            *entry = (key, matmul(&sh.px, &fac.u), matmul(&sh.py, &fac.v));
-        }
-        let (_, a, b) = &*entry;
+        let mut slot = self.proj_cache[c].lock().expect("projection cache poisoned");
         let sh = &self.shards[c];
+        let stale = match slot.as_ref() {
+            Some(entry) => entry.key != key,
+            None => true,
+        };
+        if stale {
+            *slot = Some(ProjCache {
+                key,
+                a: matmul(&sh.px, &fac.u),
+                b: matmul(&sh.py, &fac.v),
+            });
+        }
+        let entry = slot.as_ref().expect("cache entry just written");
+        let (a, b) = (&entry.a, &entry.b);
         // res_i = a_iᵀ S b_i − f_i
         let asb = matmul(a, &fac.s);
         let r = fac.rank();

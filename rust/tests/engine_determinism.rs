@@ -1,0 +1,175 @@
+//! Executor determinism: the thread-pool executor must reproduce the
+//! serial executor's `RunRecord` **bitwise** — same loss, rank, and
+//! communication trajectories — for every coordinator, across seeds and
+//! scheduling stressors (partial participation, dropout, stragglers).
+//!
+//! This is the engine's core contract: parallelism may only change
+//! wall-clock, never a single bit of the training trajectory.
+
+use fedlrt::coordinator::{
+    run_dense, run_fedlr, run_fedlrt, run_fedlrt_naive, DenseAlgo, RankConfig, TrainConfig,
+    VarCorrection,
+};
+use fedlrt::engine::ExecutorKind;
+use fedlrt::metrics::RunRecord;
+use fedlrt::models::least_squares::LeastSquares;
+use fedlrt::opt::LrSchedule;
+use fedlrt::util::rng::Rng;
+
+/// Bitwise comparison of everything deterministic in a round record
+/// (wall-clock fields are timing measurements and legitimately differ).
+fn assert_trajectories_identical(a: &RunRecord, b: &RunRecord, what: &str) {
+    assert_eq!(a.rounds.len(), b.rounds.len(), "{what}: round counts differ");
+    for (x, y) in a.rounds.iter().zip(&b.rounds) {
+        assert_eq!(
+            x.global_loss.to_bits(),
+            y.global_loss.to_bits(),
+            "{what}: loss differs at round {} ({} vs {})",
+            x.round,
+            x.global_loss,
+            y.global_loss
+        );
+        assert_eq!(x.ranks, y.ranks, "{what}: ranks differ at round {}", x.round);
+        assert_eq!(x.comm_floats, y.comm_floats, "{what}: comm differs at round {}", x.round);
+        assert_eq!(
+            x.comm_floats_lr, y.comm_floats_lr,
+            "{what}: lr comm differs at round {}",
+            x.round
+        );
+        assert_eq!(
+            x.comm_floats_per_client.to_bits(),
+            y.comm_floats_per_client.to_bits(),
+            "{what}: per-client comm differs at round {}",
+            x.round
+        );
+        match (x.dist_to_opt, y.dist_to_opt) {
+            (Some(dx), Some(dy)) => assert_eq!(
+                dx.to_bits(),
+                dy.to_bits(),
+                "{what}: dist-to-opt differs at round {}",
+                x.round
+            ),
+            (None, None) => {}
+            _ => panic!("{what}: dist-to-opt presence differs at round {}", x.round),
+        }
+    }
+}
+
+fn lsq_cfg(seed: u64, executor: ExecutorKind) -> TrainConfig {
+    TrainConfig {
+        rounds: 8,
+        local_iters: 6,
+        lr: LrSchedule::Constant(5e-3),
+        var_correction: VarCorrection::Simplified,
+        rank: RankConfig { initial_rank: 3, max_rank: 6, tau: 0.05 },
+        seed,
+        executor,
+        ..TrainConfig::default()
+    }
+}
+
+#[test]
+fn prop_fedlrt_serial_equals_thread_pool_across_seeds() {
+    // The ISSUE's property: identical loss/rank/comm trajectories on a
+    // small least-squares problem across ≥3 seeds and all vc modes.
+    for seed in [11u64, 12, 13] {
+        let mut rng = Rng::new(seed);
+        let prob = LeastSquares::homogeneous(10, 3, 400, 6, &mut rng);
+        for vc in [VarCorrection::None, VarCorrection::Simplified, VarCorrection::Full] {
+            let mut cfg_serial = lsq_cfg(seed, ExecutorKind::Serial);
+            cfg_serial.var_correction = vc;
+            let mut cfg_pool = cfg_serial.clone();
+            cfg_pool.executor = ExecutorKind::ThreadPool { threads: 4 };
+            let a = run_fedlrt(&prob, &cfg_serial, "det");
+            let b = run_fedlrt(&prob, &cfg_pool, "det");
+            assert_trajectories_identical(&a, &b, &format!("fedlrt/{}/seed{seed}", vc.label()));
+        }
+    }
+}
+
+#[test]
+fn determinism_survives_scheduling_stressors() {
+    // Partial participation + dropout + stragglers: the round plans are
+    // irregular, yet serial and parallel execution still agree bitwise.
+    for seed in [21u64, 22, 23] {
+        let mut rng = Rng::new(seed);
+        let prob = LeastSquares::heterogeneous(8, 320, 8, &mut rng);
+        let mut cfg_serial = lsq_cfg(seed, ExecutorKind::Serial);
+        cfg_serial.participation = 0.6;
+        cfg_serial.dropout = 0.25;
+        cfg_serial.straggler_jitter = 0.5;
+        let mut cfg_pool = cfg_serial.clone();
+        cfg_pool.executor = ExecutorKind::ThreadPool { threads: 3 };
+        let a = run_fedlrt(&prob, &cfg_serial, "det");
+        let b = run_fedlrt(&prob, &cfg_pool, "det");
+        assert_trajectories_identical(&a, &b, &format!("fedlrt-stressed/seed{seed}"));
+    }
+}
+
+#[test]
+fn dense_baselines_serial_equals_thread_pool() {
+    for seed in [31u64, 32, 33] {
+        let mut rng = Rng::new(seed);
+        let prob = LeastSquares::homogeneous(8, 2, 320, 5, &mut rng);
+        for algo in [DenseAlgo::FedAvg, DenseAlgo::FedLin] {
+            let cfg_serial = lsq_cfg(seed, ExecutorKind::Serial);
+            let cfg_pool = lsq_cfg(seed, ExecutorKind::ThreadPool { threads: 4 });
+            let a = run_dense(&prob, &cfg_serial, algo, "det");
+            let b = run_dense(&prob, &cfg_pool, algo, "det");
+            assert_trajectories_identical(&a, &b, &format!("{}/seed{seed}", algo.label()));
+        }
+    }
+}
+
+#[test]
+fn fedlr_baseline_serial_equals_thread_pool() {
+    for seed in [41u64, 42, 43] {
+        let mut rng = Rng::new(seed);
+        let prob = LeastSquares::homogeneous(8, 2, 320, 5, &mut rng);
+        let cfg_serial = lsq_cfg(seed, ExecutorKind::Serial);
+        let cfg_pool = lsq_cfg(seed, ExecutorKind::ThreadPool { threads: 2 });
+        let a = run_fedlr(&prob, &cfg_serial, "det");
+        let b = run_fedlr(&prob, &cfg_pool, "det");
+        assert_trajectories_identical(&a, &b, &format!("fedlr/seed{seed}"));
+    }
+}
+
+#[test]
+fn naive_baseline_serial_equals_thread_pool() {
+    for seed in [51u64, 52, 53] {
+        let mut rng = Rng::new(seed);
+        let prob = LeastSquares::homogeneous(8, 2, 320, 4, &mut rng);
+        let cfg_serial = lsq_cfg(seed, ExecutorKind::Serial);
+        let cfg_pool = lsq_cfg(seed, ExecutorKind::ThreadPool { threads: 8 });
+        let a = run_fedlrt_naive(&prob, &cfg_serial, "det");
+        let b = run_fedlrt_naive(&prob, &cfg_pool, "det");
+        assert_trajectories_identical(&a, &b, &format!("naive/seed{seed}"));
+    }
+}
+
+#[test]
+fn thread_count_does_not_matter() {
+    // Any worker count — including more workers than clients — yields
+    // the serial trajectory.
+    let mut rng = Rng::new(61);
+    let prob = LeastSquares::homogeneous(10, 3, 400, 6, &mut rng);
+    let reference = run_fedlrt(&prob, &lsq_cfg(61, ExecutorKind::Serial), "det");
+    for threads in [0usize, 1, 2, 5, 16] {
+        let cfg = lsq_cfg(61, ExecutorKind::ThreadPool { threads });
+        let rec = run_fedlrt(&prob, &cfg, "det");
+        assert_trajectories_identical(&reference, &rec, &format!("threads={threads}"));
+    }
+}
+
+#[test]
+fn executor_choice_is_recorded_in_config_echo() {
+    let mut rng = Rng::new(71);
+    let prob = LeastSquares::homogeneous(8, 2, 200, 2, &mut rng);
+    let cfg = lsq_cfg(71, ExecutorKind::ThreadPool { threads: 2 });
+    let rec = run_fedlrt(&prob, &cfg, "det");
+    let echoed = rec.config.get("executor").and_then(|v| v.as_str().map(str::to_string));
+    assert_eq!(echoed.as_deref(), Some("threads:2"));
+    // Client-time accounting is populated under both executors.
+    assert!(rec.total_client_serial_s() > 0.0);
+    assert!(rec.total_client_wall_s() > 0.0);
+}

@@ -1,0 +1,140 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so this vendored crate
+//! provides the API subset the workspace uses — `Error`, `Result`,
+//! `anyhow!`, and the `Context` extension trait — with the same
+//! semantics (message-carrying error, context prefixing, blanket
+//! conversion from `std::error::Error` types). Swap the path dependency
+//! for the real `anyhow = "1"` when registry access is available; no
+//! call sites need to change.
+
+use std::fmt;
+
+/// A message-carrying error, convertible from any `std::error::Error`.
+///
+/// Deliberately does **not** implement `std::error::Error` itself — that
+/// is what keeps the blanket `From` impl coherent, exactly as in the
+/// real crate.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+
+    fn push_context(mut self, context: impl fmt::Display) -> Error {
+        self.msg = format!("{context}: {}", self.msg);
+        self
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut msg = e.to_string();
+        let mut source = e.source();
+        while let Some(s) = source {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            source = s.source();
+        }
+        Error { msg }
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Attach human-readable context to errors (and `None`s).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().push_context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().push_context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn macro_and_display() {
+        let e = anyhow!("bad value {}", 7);
+        assert_eq!(e.to_string(), "bad value 7");
+        assert_eq!(format!("{e:?}"), "bad value 7");
+    }
+
+    #[test]
+    fn question_mark_from_std_error() {
+        fn inner() -> Result<()> {
+            let r: std::result::Result<(), std::io::Error> = Err(io_err());
+            r?;
+            Ok(())
+        }
+        assert!(inner().unwrap_err().to_string().contains("missing"));
+    }
+
+    #[test]
+    fn context_prefixes() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| "reading config").unwrap_err();
+        assert_eq!(e.to_string(), "reading config: missing");
+        // Context also composes on an already-anyhow Result.
+        let r2: Result<()> = Err(anyhow!("inner"));
+        assert_eq!(r2.context("outer").unwrap_err().to_string(), "outer: inner");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        assert_eq!(v.context("no value").unwrap_err().to_string(), "no value");
+        assert_eq!(Some(3u32).context("unused").unwrap(), 3);
+    }
+}

@@ -1,0 +1,152 @@
+//! Offline stub of the `xla` crate (PJRT bindings).
+//!
+//! The build environment carries neither crates.io access nor an XLA
+//! toolchain, so this vendored crate mirrors the API surface
+//! `fedlrt::runtime` uses — `PjRtClient`, `PjRtLoadedExecutable`,
+//! `PjRtBuffer`, `Literal`, `HloModuleProto`, `XlaComputation` — with
+//! every backend entry point returning a descriptive error at runtime.
+//! The library therefore builds and the pure-Rust coordinator stack
+//! (convex experiments, benches, tests) runs everywhere; the NN path
+//! reports "PJRT backend unavailable" until the real `xla` dependency is
+//! swapped back in. All types here are plain data (`Send + Sync`),
+//! which is what lets `NnProblem` satisfy the coordinators'
+//! `FedProblem + Sync` bound. The real PJRT types wrap raw C handles
+//! and are **not** `Sync` — when restoring the real bindings, wrap the
+//! executables in `runtime::Executable` behind a `Mutex` (or hold one
+//! executable per worker thread) to keep that bound satisfied.
+
+use std::fmt;
+
+/// Error type matching the real crate's role; implements
+/// `std::error::Error` so `?` converts it into `anyhow::Error`.
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(op: &str) -> Result<T> {
+    Err(Error {
+        msg: format!(
+            "{op}: PJRT backend unavailable (offline `xla` stub crate; swap the path \
+             dependency for the real `xla` bindings and run `make artifacts` to enable \
+             the NN path)"
+        ),
+    })
+}
+
+/// Element types a [`Literal`] can carry.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+
+/// A host-side tensor value.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    len: usize,
+}
+
+impl Literal {
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { len: data.len() }
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.len
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable("Literal::reshape")
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+}
+
+/// A device-side buffer handle.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Parsed HLO module.
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// A computation ready for compilation.
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// A PJRT client (CPU in the real deployment).
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+}
+
+/// A compiled executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("PJRT backend unavailable"));
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0]);
+        assert_eq!(lit.element_count(), 3);
+        assert!(lit.to_vec::<f32>().is_err());
+    }
+}
