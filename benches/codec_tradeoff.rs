@@ -1,0 +1,142 @@
+//! Codec trade-off: bytes-on-wire vs final loss across wire codecs.
+//!
+//! Runs FeDLRT on the Fig-1 (heterogeneous) and Fig-4 (homogeneous)
+//! least-squares problems under every wire codec (`dense`, `f16`,
+//! `q8`) and records the measured communication bytes against the
+//! reached loss — the curve a bandwidth-constrained deployment actually
+//! cares about. Lossy codecs feed their decoded tensors back into the
+//! coordinator (decode-on-receive), so the accuracy cost of compression
+//! is visible in the loss column, not just asserted.
+//!
+//! Appends one JSON line per (problem, codec) to
+//! `results/codec_tradeoff.jsonl`.
+//!
+//! Run: `cargo bench --bench codec_tradeoff`
+//! Paper-scale: `FEDLRT_BENCH_FULL=1 cargo bench --bench codec_tradeoff`
+//! CI smoke: `FEDLRT_BENCH_SMOKE=1 cargo bench --bench codec_tradeoff`
+
+use std::io::Write as _;
+use std::path::Path;
+
+use fedlrt::bench::full_scale;
+use fedlrt::comm::{CodecKind, ALL_CODECS};
+use fedlrt::coordinator::presets::{fig1_config, fig4_config};
+use fedlrt::coordinator::run_fedlrt;
+use fedlrt::metrics::RunRecord;
+use fedlrt::models::least_squares::LeastSquares;
+use fedlrt::util::json::Json;
+use fedlrt::util::rng::Rng;
+
+fn smoke() -> bool {
+    std::env::var("FEDLRT_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
+fn append_row(path: &Path, row: &Json) {
+    if let Some(parent) = path.parent() {
+        let _ = std::fs::create_dir_all(parent);
+    }
+    let f = std::fs::OpenOptions::new().create(true).append(true).open(path);
+    if let Ok(mut f) = f {
+        let _ = writeln!(f, "{}", row.to_string_compact());
+    }
+}
+
+fn main() {
+    let full = full_scale();
+    let out = Path::new("results/codec_tradeoff.jsonl");
+    let c = 4usize;
+
+    // The two §4.1 problems of Figs 1 and 4.
+    let mut rng = Rng::new(1);
+    let fig1_points = if full { 10_000 } else if smoke() { 600 } else { 2_000 };
+    let fig4_points = if full { 10_000 } else if smoke() { 800 } else { 3_000 };
+    let prob_fig1 = LeastSquares::heterogeneous(10, fig1_points, c, &mut rng);
+    let prob_fig4 = LeastSquares::homogeneous(20, 4, fig4_points, c, &mut rng);
+
+    let mut cfg_fig1 = fig1_config(full);
+    let mut cfg_fig4 = fig4_config(full);
+    if smoke() {
+        cfg_fig1.rounds = 25;
+        cfg_fig4.rounds = 30;
+    }
+
+    let setups: [(&str, &LeastSquares, &fedlrt::coordinator::TrainConfig, f64); 2] = [
+        ("fig1_heterogeneous", &prob_fig1, &cfg_fig1, prob_fig1.min_loss()),
+        ("fig4_homogeneous", &prob_fig4, &cfg_fig4, prob_fig4.min_loss()),
+    ];
+
+    println!("Codec trade-off — bytes on wire vs final loss (C={c})\n");
+    println!(
+        "{:<20} {:<6} {:>14} {:>14} {:>13} {:>13} {:>5}",
+        "experiment", "codec", "bytes", "floats", "final loss", "gap to L*", "rank"
+    );
+
+    for (experiment, prob, cfg, l_star) in setups {
+        let mut bytes_by_codec: Vec<(CodecKind, u64, RunRecord)> = Vec::new();
+        for codec in ALL_CODECS {
+            let mut c_cfg = cfg.clone();
+            c_cfg.codec = codec;
+            let rec = run_fedlrt(prob, &c_cfg, experiment);
+            let bytes = rec.total_bytes();
+            println!(
+                "{:<20} {:<6} {:>14} {:>14} {:>13.4e} {:>13.4e} {:>5}",
+                experiment,
+                codec.label(),
+                bytes,
+                rec.total_comm_floats(),
+                rec.final_loss(),
+                rec.final_loss() - l_star,
+                rec.final_rank()
+            );
+            let mut row = Json::obj();
+            row.set("experiment", experiment)
+                .set("algorithm", rec.algorithm.as_str())
+                .set("codec", codec.label())
+                .set("rounds", rec.rounds.len())
+                .set("num_clients", c)
+                .set("bytes_down", rec.total_bytes_down())
+                .set("bytes_up", rec.total_bytes_up())
+                .set("bytes_total", bytes)
+                .set("comm_floats", rec.total_comm_floats())
+                .set("final_loss", rec.final_loss())
+                .set("loss_gap", rec.final_loss() - l_star)
+                .set("final_rank", rec.final_rank() as u64)
+                .set("full_scale", full);
+            append_row(out, &row);
+            bytes_by_codec.push((codec, bytes, rec));
+        }
+
+        // Invariants the wire model guarantees per problem.
+        let dense = bytes_by_codec.iter().find(|(k, _, _)| *k == CodecKind::DenseF32).unwrap();
+        let f16 = bytes_by_codec.iter().find(|(k, _, _)| *k == CodecKind::F16Cast).unwrap();
+        let q8 = bytes_by_codec.iter().find(|(k, _, _)| *k == CodecKind::QuantizeInt8).unwrap();
+        // The reference codec reproduces the seed accounting exactly:
+        // measured bytes == floats × 4.
+        assert_eq!(
+            dense.1,
+            4 * dense.2.total_comm_floats(),
+            "{experiment}: dense bytes must equal floats×4"
+        );
+        // Within a run, the per-entry factors hold exactly / as bounds.
+        assert_eq!(f16.1, 2 * f16.2.total_comm_floats(), "{experiment}: f16 is 2 B/entry");
+        assert!(q8.1 < 2 * q8.2.total_comm_floats(), "{experiment}: q8 under 2 B/entry");
+        // Headline (Fig-1 acceptance): q8 cuts bytes-on-wire ≥ 3× vs
+        // the dense reference. Fig 4 truncates adaptively, so its rank
+        // trajectory may differ across codecs — assert a still-large
+        // 2× floor there.
+        let factor = if experiment == "fig1_heterogeneous" { 3 } else { 2 };
+        assert!(
+            factor * q8.1 <= dense.1,
+            "{experiment}: q8 should use ≤ 1/{factor} the bytes: {} vs {}",
+            q8.1,
+            dense.1
+        );
+        // All codecs stay numerically alive.
+        for (k, _, rec) in &bytes_by_codec {
+            assert!(rec.final_loss().is_finite(), "{experiment}/{} diverged", k.label());
+        }
+        println!();
+    }
+
+    println!("codec_tradeoff OK (rows appended to {})", out.display());
+}

@@ -4,8 +4,8 @@
 //!
 //! Run: `cargo run --release --example cost_explorer -- --n 512 --r 32`
 
-use fedlrt::comm::LinkModel;
-use fedlrt::costmodel::{comm_amortization_rank, costs, CostParams, Method, ALL_METHODS};
+use fedlrt::comm::{CodecKind, LinkModel};
+use fedlrt::costmodel::{comm_amortization_rank, comm_bytes, costs, CostParams, Method, ALL_METHODS};
 use fedlrt::util::cli::Cli;
 
 fn main() {
@@ -16,7 +16,13 @@ fn main() {
         .opt("batch", "128", "mini-batch size")
         .opt("mbps", "100", "link bandwidth (Mbit/s)")
         .opt("latency-ms", "20", "link latency (ms)")
+        .opt("codec", "dense", "wire codec for the byte/time columns: dense|f16|q8")
         .parse_env();
+
+    let codec = CodecKind::parse(args.str("codec")).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
 
     let p = CostParams {
         n: args.usize("n"),
@@ -29,21 +35,30 @@ fn main() {
         latency: args.f64("latency-ms") * 1e-3,
     };
 
-    println!("operating point: n={}, r={}, s*={}, b={}\n", p.n, p.r, p.s_star, p.b);
+    println!(
+        "operating point: n={}, r={}, s*={}, b={}, codec={}\n",
+        p.n,
+        p.r,
+        p.s_star,
+        p.b,
+        codec.label()
+    );
     println!(
         "{:<24} {:>13} {:>13} {:>13} {:>10} {:>12}",
-        "method", "client flops", "server flops", "comm floats", "rounds", "est. time/rd"
+        "method", "client flops", "server flops", "comm bytes", "rounds", "est. time/rd"
     );
     for m in ALL_METHODS {
         let c = costs(m, p);
-        let bytes = (c.comm_cost * 4.0) as u64;
-        let t = link.transfer_time(bytes) + link.latency * c.comm_rounds as f64;
+        let bytes = comm_bytes(m, p, codec);
+        // Latency is charged once per synchronous round trip; the
+        // volume term is pure serialization (bytes over bandwidth).
+        let t = bytes / link.bandwidth + link.latency * c.comm_rounds as f64;
         println!(
             "{:<24} {:>13.3e} {:>13.3e} {:>13.3e} {:>10} {:>10.1}ms",
             m.label(),
             c.client_compute,
             c.server_compute,
-            c.comm_cost,
+            bytes,
             c.comm_rounds,
             t * 1e3,
         );

@@ -81,6 +81,7 @@ fn main() -> anyhow::Result<()> {
         dropout: 0.0,
         executor: fedlrt::engine::ExecutorKind::parse(args.str("executor"))
             .unwrap_or_else(|e| panic!("{e}")),
+        codec: fedlrt::comm::CodecKind::DenseF32,
     };
 
     println!(

@@ -12,7 +12,26 @@
 //! | aggregate / broadcast G_S̃ | `Matrix{2r,2r}` |
 //! | aggregate S̃_c^{s*} | `Matrix{2r,2r}` |
 //! | FedAvg/FedLin dense W, G_W | `Matrix{n,n}` |
-//! | naive-FeDLRT factor-triple upload (Alg 6) | `Batch{label, floats}` via [`Payload::batch`] |
+//! | naive-FeDLRT factor-triple upload (Alg 6) | coalesced per-client message via `Network::aggregate_batch` |
+//!
+//! Descriptor-only variants (including `Batch`, built with
+//! [`Payload::batch`]) remain for scalar/metadata accounting where no
+//! tensor data exists; all coordinator tensor traffic travels through
+//! the data-carrying `Network` methods below.
+//!
+//! A payload of `k` entries serializes through the configured wire
+//! codec ([`crate::comm::wire`]) to measured bytes:
+//!
+//! | Codec (`--codec`) | Bytes for `k` entries | Example: `Matrix{512,16}` |
+//! |---|---|---|
+//! | `dense` (reference) | `4·k` | 32 768 B |
+//! | `f16` | `2·k` | 16 384 B |
+//! | `q8` | `8 + k` (per-tensor scale/min header) | 8 200 B |
+//!
+//! Data-carrying transfers (`broadcast_mat`/`aggregate_mat`/…) measure
+//! the actual encoder output; descriptor-only transfers use
+//! [`crate::comm::wire::CodecKind::wire_bytes`], which is asserted to
+//! match the encoder exactly.
 
 /// Size descriptor of one message.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -1,16 +1,23 @@
-//! Simulated federated network with exact communication accounting.
+//! Simulated federated network with byte-exact communication accounting.
 //!
-//! The paper's evaluation reports *communication cost* — floats on the
+//! The paper's evaluation reports *communication cost* — volume on the
 //! wire per aggregation round (Table 1, Fig 3) and cumulative savings
 //! (Figs 5–8). This module is the substrate that measures it: every
 //! server↔client transfer in the coordinator goes through [`Network`],
-//! which records message sizes per round and per direction and can
-//! convert volumes to wall-clock estimates under a bandwidth/latency
-//! model (used for the Fig 3 cost curves).
+//! which serializes the tensor data with the configured wire
+//! [`Codec`](wire::Codec), records *measured serialized bytes* (and
+//! logical float counts) per round and per direction, hands the
+//! *decoded* tensor back to the receive side, and can convert volumes
+//! to wall-clock estimates under a bandwidth/latency model (the Fig 3
+//! cost curves).
 
 pub mod message;
+pub mod wire;
 
 pub use message::Payload;
+pub use wire::{Codec, CodecKind, ALL_CODECS};
+
+use crate::tensor::Matrix;
 
 /// Bandwidth/latency model of one server↔client link.
 ///
@@ -32,7 +39,7 @@ impl Default for LinkModel {
 }
 
 impl LinkModel {
-    /// Transfer time of `bytes` over this link.
+    /// Transfer time of `bytes` over this link (one latency + serialization).
     pub fn transfer_time(&self, bytes: u64) -> f64 {
         self.latency + bytes as f64 / self.bandwidth
     }
@@ -45,11 +52,20 @@ pub struct RoundComm {
     pub broadcast_floats: u64,
     /// Floats uplinked clients→server (counted per client).
     pub aggregate_floats: u64,
+    /// Measured serialized bytes server→clients.
+    pub bytes_down: u64,
+    /// Measured serialized bytes clients→server (per client, summed).
+    pub bytes_up: u64,
     /// Number of communication *rounds* (synchronous round trips),
     /// the paper's "Com. Rounds" column of Table 1.
     pub round_trips: u64,
-    /// Per-message log (direction, label, floats) for debugging.
-    pub log: Vec<(Direction, &'static str, u64)>,
+    /// Clients that participated in this round (recorded at
+    /// [`Network::end_round`]) — the divisor for a participating
+    /// client's upload share.
+    pub participants: usize,
+    /// Per-message log (direction, label, floats, bytes) for debugging
+    /// and the footnote-6 label-based accounting splits.
+    pub log: Vec<(Direction, &'static str, u64, u64)>,
 }
 
 /// Message direction.
@@ -64,22 +80,35 @@ pub enum Direction {
 impl RoundComm {
     /// Total floats on the wire this round (broadcast counted once,
     /// uplink counted per client — matches Table 1's per-client cost
-    /// when divided by C).
+    /// when divided by the participant count).
     pub fn total_floats(&self) -> u64 {
         self.broadcast_floats + self.aggregate_floats
     }
 
-    /// Per-client download+upload volume in floats: what one edge device
-    /// pays (broadcast counted once per client, uplink its own share).
-    pub fn per_client_floats(&self, num_clients: usize) -> f64 {
-        self.broadcast_floats as f64 + self.aggregate_floats as f64 / num_clients as f64
+    /// Total measured bytes on the wire this round.
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes_down + self.bytes_up
+    }
+
+    /// Per-client download+upload volume in floats: what one
+    /// *participating* edge device pays (broadcast counted once per
+    /// client; upload volume divided by the participant count, since
+    /// only participants upload — under partial participation/dropout
+    /// dividing by the full population would understate it).
+    pub fn per_client_floats(&self) -> f64 {
+        self.broadcast_floats as f64 + self.aggregate_floats as f64 / self.participants.max(1) as f64
     }
 
     /// Floats attributable to messages whose label satisfies `pred` —
     /// used to separate compressed-layer traffic from dense-parameter
     /// traffic (the paper's footnote-6 accounting).
     pub fn floats_matching(&self, mut pred: impl FnMut(&str) -> bool) -> u64 {
-        self.log.iter().filter(|(_, label, _)| pred(label)).map(|(_, _, f)| f).sum()
+        self.log.iter().filter(|(_, label, _, _)| pred(label)).map(|(_, _, f, _)| f).sum()
+    }
+
+    /// Measured bytes attributable to messages whose label satisfies `pred`.
+    pub fn bytes_matching(&self, mut pred: impl FnMut(&str) -> bool) -> u64 {
+        self.log.iter().filter(|(_, label, _, _)| pred(label)).map(|(_, _, _, b)| b).sum()
     }
 }
 
@@ -88,33 +117,118 @@ impl RoundComm {
 pub struct Network {
     pub num_clients: usize,
     /// Clients participating in the current round (≤ num_clients);
-    /// aggregation volume scales with this.
+    /// aggregation volume scales with this. Reset to `num_clients` at
+    /// `end_round` so a stale participation count cannot leak into the
+    /// next round.
     pub active_clients: usize,
     pub link: LinkModel,
+    /// Wire codec all payloads are serialized with.
+    pub codec: CodecKind,
     current: RoundComm,
     /// Completed rounds.
     pub rounds: Vec<RoundComm>,
-    /// Bytes per float on the wire (4 = f32, what deployments send).
-    pub bytes_per_float: u64,
 }
 
 impl Network {
     pub fn new(num_clients: usize) -> Network {
+        Network::with_codec(num_clients, CodecKind::DenseF32)
+    }
+
+    /// A network whose transfers are serialized with `codec`.
+    pub fn with_codec(num_clients: usize, codec: CodecKind) -> Network {
         Network {
             num_clients,
             active_clients: num_clients,
             link: LinkModel::default(),
+            codec,
             current: RoundComm::default(),
             rounds: Vec::new(),
-            bytes_per_float: 4,
         }
     }
 
-    /// Record a server→clients broadcast of `payload`.
+    /// Serialize through the wire codec: measured byte count plus the
+    /// receive-side values (identity for the transparent reference
+    /// codec — see `wire` module docs; real decode otherwise). For the
+    /// transparent codec the byte count comes from the closed form
+    /// (asserted byte-identical to the encoder in the wire tests), so
+    /// the hot path skips the per-entry encode.
+    fn transcode(&self, values: &[f64]) -> (u64, Vec<f64>) {
+        let codec = self.codec.codec();
+        if codec.transparent() {
+            return (self.codec.wire_bytes(values.len() as u64), values.to_vec());
+        }
+        let bytes = codec.encode(values);
+        let n = bytes.len() as u64;
+        let decoded = codec.decode(&bytes);
+        debug_assert_eq!(decoded.len(), values.len(), "codec changed message length");
+        (n, decoded)
+    }
+
+    /// Record a server→clients broadcast of `values` (counted once —
+    /// broadcast); returns what the clients receive after decode.
+    pub fn broadcast_vec(&mut self, label: &'static str, values: &[f64]) -> Vec<f64> {
+        let (bytes, decoded) = self.transcode(values);
+        self.current.broadcast_floats += values.len() as u64;
+        self.current.bytes_down += bytes;
+        self.current.log.push((Direction::Broadcast, label, values.len() as u64, bytes));
+        decoded
+    }
+
+    /// [`Network::broadcast_vec`] for a matrix (shape-preserving).
+    pub fn broadcast_mat(&mut self, label: &'static str, m: &Matrix) -> Matrix {
+        let decoded = self.broadcast_vec(label, m.data());
+        Matrix::from_vec(m.rows(), m.cols(), decoded)
+    }
+
+    /// Record *one participating client's* upload of `values`; returns
+    /// what the server receives after decode. Call once per client.
+    pub fn aggregate_vec(&mut self, label: &'static str, values: &[f64]) -> Vec<f64> {
+        let (bytes, decoded) = self.transcode(values);
+        self.current.aggregate_floats += values.len() as u64;
+        self.current.bytes_up += bytes;
+        self.current.log.push((Direction::Aggregate, label, values.len() as u64, bytes));
+        decoded
+    }
+
+    /// [`Network::aggregate_vec`] for a matrix (shape-preserving).
+    pub fn aggregate_mat(&mut self, label: &'static str, m: &Matrix) -> Matrix {
+        let decoded = self.aggregate_vec(label, m.data());
+        Matrix::from_vec(m.rows(), m.cols(), decoded)
+    }
+
+    /// One client's upload of several tensors coalesced into a single
+    /// *message* (one log entry, e.g. the naive-FeDLRT factor triple);
+    /// returns the decoded parts in input order. Each part is encoded
+    /// with its own codec header: tensors of very different dynamic
+    /// range (orthonormal bases vs. singular values) must not share one
+    /// per-tensor quantization scale, or the large part would crush the
+    /// small part's resolution — a few header bytes buy full per-tensor
+    /// accuracy.
+    pub fn aggregate_batch(&mut self, label: &'static str, parts: &[&[f64]]) -> Vec<Vec<f64>> {
+        let mut floats = 0u64;
+        let mut bytes = 0u64;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            let (b, decoded) = self.transcode(p);
+            floats += p.len() as u64;
+            bytes += b;
+            out.push(decoded);
+        }
+        self.current.aggregate_floats += floats;
+        self.current.bytes_up += bytes;
+        self.current.log.push((Direction::Aggregate, label, floats, bytes));
+        out
+    }
+
+    /// Descriptor-only broadcast accounting (no tensor data — scalar or
+    /// metadata payloads): bytes are the codec's exact wire size for
+    /// that entry count.
     pub fn broadcast(&mut self, label: &'static str, payload: &Payload) {
         let f = payload.floats();
+        let bytes = self.codec.wire_bytes(f);
         self.current.broadcast_floats += f;
-        self.current.log.push((Direction::Broadcast, label, f));
+        self.current.bytes_down += bytes;
+        self.current.log.push((Direction::Broadcast, label, f, bytes));
     }
 
     /// Set the number of participating clients for this round.
@@ -122,12 +236,15 @@ impl Network {
         self.active_clients = n.clamp(1, self.num_clients);
     }
 
-    /// Record a clients→server aggregation where *each participating*
-    /// client uploads a message of `payload`'s size.
+    /// Descriptor-only aggregation accounting: *each participating*
+    /// client uploads one message of `payload`'s size.
     pub fn aggregate(&mut self, label: &'static str, payload: &Payload) {
-        let f = payload.floats() * self.active_clients as u64;
+        let c = self.active_clients as u64;
+        let f = payload.floats() * c;
+        let bytes = self.codec.wire_bytes(payload.floats()) * c;
         self.current.aggregate_floats += f;
-        self.current.log.push((Direction::Aggregate, label, f));
+        self.current.bytes_up += bytes;
+        self.current.log.push((Direction::Aggregate, label, f, bytes));
     }
 
     /// Mark the end of one synchronous round trip (broadcast+aggregate
@@ -136,8 +253,12 @@ impl Network {
         self.current.round_trips += 1;
     }
 
-    /// Close the current aggregation round and start a new record.
+    /// Close the current aggregation round and start a new record. The
+    /// participating-client count is stamped into the record and the
+    /// active count resets to full participation for the next round.
     pub fn end_round(&mut self) -> &RoundComm {
+        self.current.participants = self.active_clients;
+        self.active_clients = self.num_clients;
         let done = std::mem::take(&mut self.current);
         self.rounds.push(done);
         self.rounds.last().unwrap()
@@ -148,22 +269,27 @@ impl Network {
         self.rounds.iter().map(|r| r.total_floats()).sum()
     }
 
-    /// Cumulative per-client floats (download + own upload share).
-    pub fn per_client_floats(&self) -> f64 {
-        self.rounds.iter().map(|r| r.per_client_floats(self.num_clients)).sum()
+    /// Cumulative measured bytes over all completed rounds.
+    pub fn total_bytes(&self) -> u64 {
+        self.rounds.iter().map(|r| r.total_bytes()).sum()
     }
 
-    /// Wall-clock estimate of all communication under the link model.
-    /// Each round trip costs latency; volume is serialized per direction
-    /// (server link is the bottleneck for aggregation).
+    /// Cumulative per-client floats (download + own upload share).
+    pub fn per_client_floats(&self) -> f64 {
+        self.rounds.iter().map(|r| r.per_client_floats()).sum()
+    }
+
+    /// Wall-clock estimate of all communication under the link model:
+    /// serialization time per direction (measured bytes over bandwidth)
+    /// plus link latency charged exactly once per synchronous round
+    /// trip. (The latency is a property of the round trip, not of each
+    /// direction's transfer — charging it per direction *and* per round
+    /// trip would triple-count it.)
     pub fn estimated_comm_time(&self) -> f64 {
         self.rounds
             .iter()
             .map(|r| {
-                let bytes_down = r.broadcast_floats * self.bytes_per_float;
-                let bytes_up = r.aggregate_floats * self.bytes_per_float;
-                self.link.transfer_time(bytes_down)
-                    + self.link.transfer_time(bytes_up)
+                (r.bytes_down + r.bytes_up) as f64 / self.link.bandwidth
                     + self.link.latency * r.round_trips as f64
             })
             .sum()
@@ -185,7 +311,11 @@ mod tests {
         assert_eq!(round.aggregate_floats, 30 * 4);
         assert_eq!(round.round_trips, 1);
         assert_eq!(round.total_floats(), 30 + 120);
-        assert!((round.per_client_floats(4) - (30.0 + 30.0)).abs() < 1e-12);
+        assert_eq!(round.participants, 4);
+        assert!((round.per_client_floats() - (30.0 + 30.0)).abs() < 1e-12);
+        // Reference codec: bytes are exactly floats × 4.
+        assert_eq!(round.bytes_down, 30 * 4);
+        assert_eq!(round.bytes_up, 120 * 4);
     }
 
     #[test]
@@ -199,6 +329,101 @@ mod tests {
         }
         assert_eq!(net.rounds.len(), 3);
         assert_eq!(net.total_floats(), 3 * (100 + 200));
+        assert_eq!(net.total_bytes(), 4 * net.total_floats());
+    }
+
+    #[test]
+    fn dense_codec_is_transparent_and_counts_4_bytes_per_float() {
+        let mut net = Network::new(3);
+        let vals: Vec<f64> = (0..17).map(|i| (i as f64).sin() * 1e3).collect();
+        let down = net.broadcast_vec("w", &vals);
+        // Bitwise identity at simulation precision (reference codec).
+        for (a, b) in vals.iter().zip(&down) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let up = net.aggregate_vec("g", &vals);
+        assert_eq!(up, vals);
+        net.end_round_trip();
+        let r = net.end_round();
+        assert_eq!(r.bytes_down, 17 * 4);
+        assert_eq!(r.bytes_up, 17 * 4);
+        assert_eq!(r.total_floats(), 34);
+    }
+
+    #[test]
+    fn lossy_codec_measures_fewer_bytes_and_decodes_on_receive() {
+        let mut net = Network::with_codec(2, CodecKind::QuantizeInt8);
+        let m = Matrix::from_fn(8, 8, |i, j| (i * 8 + j) as f64 / 10.0);
+        let received = net.broadcast_mat("w", &m);
+        assert_eq!(received.shape(), m.shape());
+        // Lossy: values change, but stay within the documented bound.
+        let spread = m.max_abs(); // values span [0, 6.3]
+        assert!(received.sub(&m).max_abs() <= spread / 255.0 + 1e-6);
+        assert!(received.sub(&m).max_abs() > 0.0);
+        net.end_round_trip();
+        let r = net.end_round();
+        assert_eq!(r.bytes_down, 8 + 64); // header + 1 byte/entry
+        assert_eq!(r.broadcast_floats, 64);
+    }
+
+    #[test]
+    fn aggregate_batch_splits_and_coalesces() {
+        let mut net = Network::with_codec(2, CodecKind::F16Cast);
+        let a = [1.0, 2.0, 3.0];
+        let b = [4.0; 5];
+        let parts = net.aggregate_batch("triple", &[&a, &b]);
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0], a.to_vec());
+        assert_eq!(parts[1], b.to_vec());
+        net.end_round_trip();
+        let r = net.end_round().clone();
+        assert_eq!(r.aggregate_floats, 8);
+        assert_eq!(r.bytes_up, 16); // one log entry, 2 B/entry
+        assert_eq!(r.log.len(), 1);
+
+        // q8: one header per part — a large-range part must not crush a
+        // small-range part's quantization resolution.
+        let mut net = Network::with_codec(2, CodecKind::QuantizeInt8);
+        let small = [0.001, 0.002, 0.003, 0.004];
+        let large = [0.0, 500.0, 1000.0];
+        let parts = net.aggregate_batch("triple", &[&small, &large]);
+        net.end_round_trip();
+        let r = net.end_round();
+        assert_eq!(r.bytes_up, (8 + 4) + (8 + 3));
+        for (x, y) in small.iter().zip(&parts[0]) {
+            // Shared-scale coalescing would decode these all to ~0 with
+            // error ~ 1000/255 ≫ the per-part bound (max−min)/255.
+            assert!((x - y).abs() <= (0.003 / 255.0) + 1e-6, "{x} -> {y}");
+        }
+    }
+
+    #[test]
+    fn partial_participation_upload_share_and_reset() {
+        // Satellite regression: upload share divides by *participants*,
+        // and a stale participation count must not leak into the next
+        // round.
+        let mut net = Network::new(4);
+        net.set_active_clients(2);
+        for _ in 0..2 {
+            net.aggregate_vec("g", &[1.0; 10]);
+        }
+        net.broadcast_vec("w", &[1.0; 8]);
+        net.end_round_trip();
+        {
+            let r = net.end_round();
+            assert_eq!(r.participants, 2);
+            // Each of the 2 participants pays the 8-float download plus
+            // its own 10-float upload — NOT 20/4 = 5.
+            assert!((r.per_client_floats() - (8.0 + 20.0 / 2.0)).abs() < 1e-12);
+        }
+        // Next round, no set_active_clients call: back to full
+        // participation for both descriptor accounting and the divisor.
+        net.aggregate("g", &Payload::Floats(10));
+        net.end_round_trip();
+        let r2 = net.end_round();
+        assert_eq!(r2.participants, 4);
+        assert_eq!(r2.aggregate_floats, 40);
+        assert!((r2.per_client_floats() - 10.0).abs() < 1e-12);
     }
 
     #[test]
@@ -206,6 +431,32 @@ mod tests {
         let link = LinkModel::default();
         assert!(link.transfer_time(1000) < link.transfer_time(1_000_000));
         assert!(link.transfer_time(0) >= link.latency);
+    }
+
+    #[test]
+    fn latency_charged_once_per_round_trip() {
+        // Satellite regression: with a high-latency link, the latency
+        // term must appear exactly once per round trip (the old
+        // accounting charged it up to 3× — once in each direction's
+        // transfer time and once per round trip again).
+        let mut net = Network::new(2);
+        net.link = LinkModel { bandwidth: 1e6, latency: 5.0 };
+        net.broadcast_vec("w", &[0.0; 250]); // 1000 bytes down
+        net.aggregate_vec("g", &[0.0; 250]); // 1000 bytes up
+        net.end_round_trip();
+        net.end_round();
+        let want = 2000.0 / 1e6 + 5.0;
+        let got = net.estimated_comm_time();
+        assert!((got - want).abs() < 1e-9, "latency multi-counted: {got} vs {want}");
+        // Two round trips in a round ⇒ exactly two latencies.
+        let mut net2 = Network::new(2);
+        net2.link = LinkModel { bandwidth: 1e6, latency: 5.0 };
+        net2.broadcast_vec("w", &[0.0; 250]);
+        net2.end_round_trip();
+        net2.aggregate_vec("g", &[0.0; 250]);
+        net2.end_round_trip();
+        net2.end_round();
+        assert!((net2.estimated_comm_time() - (2000.0 / 1e6 + 10.0)).abs() < 1e-9);
     }
 
     #[test]

@@ -1,0 +1,420 @@
+//! Byte-exact wire codecs.
+//!
+//! The paper's headline claim is an order-of-magnitude cut in
+//! communication cost, so the simulation must measure *bytes on the
+//! wire*, not abstract float counts. Every transfer through
+//! [`crate::comm::Network`] is serialized by a [`Codec`] and the
+//! serialized length is what the accounting records; the receive side
+//! sees the *decoded* tensor, so lossy codecs visibly trade accuracy
+//! for bytes in the training trajectory.
+//!
+//! Three codecs cover the design space (cf. Konečný et al., *Federated
+//! Learning: Strategies for Improving Communication Efficiency*):
+//!
+//! | Codec | Wire format | Bytes for `n` entries | Receive-side error |
+//! |---|---|---|---|
+//! | [`DenseF32`] | little-endian `f32` per entry | `4·n` | none (reference) |
+//! | [`F16Cast`] | IEEE 754 binary16 per entry | `2·n` | relative ≈ 2⁻¹¹ |
+//! | [`QuantizeInt8`] | `f32` scale + `f32` min + `u8` per entry | `8 + n` | absolute ≤ `(max−min)/255` |
+//!
+//! **Reference-codec convention.** Simulation numerics are `f64`, but
+//! deployments ship `f32`; the seed accounting therefore counted
+//! `floats × 4` bytes while the coordinator math stayed at `f64`.
+//! `DenseF32` preserves exactly that convention: it serializes real
+//! `f32` bytes (so measured bytes equal `floats × 4`) and its simulated
+//! receive side is the identity at simulation precision
+//! ([`Codec::transparent`]), keeping training trajectories bitwise
+//! identical to the pre-codec accounting. The lossy codecs round-trip
+//! for real: what the coordinator computes with is what survived the
+//! wire.
+//!
+//! **QuantizeInt8 error bound.** Per-tensor affine quantization
+//! `q = round((x − min)/s)` with `s = (max − min)/255` stored as `f32`.
+//! Decode returns `min + q·s`, so the round-trip error is at most
+//! `s/2` from rounding plus the `f32` representation error of `min`
+//! and `s` (relative 2⁻²⁴) — bounded by `(max − min)/255` overall,
+//! which the unit tests assert on random tensors.
+
+/// Identifier of a wire codec — what configs, presets, and the CLI
+/// carry (`--codec dense|f16|q8`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CodecKind {
+    /// Reference: 4 bytes/entry, transparent at simulation precision.
+    DenseF32,
+    /// IEEE 754 half precision: 2 bytes/entry, lossy.
+    F16Cast,
+    /// Per-tensor affine int8 quantization: 1 byte/entry + 8-byte
+    /// header, lossy.
+    QuantizeInt8,
+}
+
+pub const ALL_CODECS: [CodecKind; 3] =
+    [CodecKind::DenseF32, CodecKind::F16Cast, CodecKind::QuantizeInt8];
+
+impl CodecKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            CodecKind::DenseF32 => "dense",
+            CodecKind::F16Cast => "f16",
+            CodecKind::QuantizeInt8 => "q8",
+        }
+    }
+
+    /// Parse a CLI spelling.
+    pub fn parse(s: &str) -> Result<CodecKind, String> {
+        match s {
+            "dense" | "f32" => Ok(CodecKind::DenseF32),
+            "f16" | "half" => Ok(CodecKind::F16Cast),
+            "q8" | "int8" => Ok(CodecKind::QuantizeInt8),
+            other => Err(format!("unknown codec '{other}' (expected dense|f16|q8)")),
+        }
+    }
+
+    /// The codec implementation (static — `CodecKind` stays `Copy`).
+    pub fn codec(&self) -> &'static dyn Codec {
+        match self {
+            CodecKind::DenseF32 => &DenseF32,
+            CodecKind::F16Cast => &F16Cast,
+            CodecKind::QuantizeInt8 => &QuantizeInt8,
+        }
+    }
+
+    /// Exact serialized size of a message of `entries` values — matches
+    /// `codec().encode(values).len()` for any values of that length
+    /// (asserted in tests). Used for descriptor-only accounting where
+    /// no tensor data exists (scalar/metadata payloads).
+    pub fn wire_bytes(&self, entries: u64) -> u64 {
+        if entries == 0 {
+            return 0;
+        }
+        match self {
+            CodecKind::DenseF32 => 4 * entries,
+            CodecKind::F16Cast => 2 * entries,
+            CodecKind::QuantizeInt8 => 8 + entries,
+        }
+    }
+
+    /// Asymptotic bytes per tensor entry (header amortized away) — the
+    /// factor the closed-form cost model applies to Table 1 / Fig 3
+    /// communication entries.
+    pub fn bytes_per_entry(&self) -> f64 {
+        match self {
+            CodecKind::DenseF32 => 4.0,
+            CodecKind::F16Cast => 2.0,
+            CodecKind::QuantizeInt8 => 1.0,
+        }
+    }
+}
+
+/// A pluggable wire codec: `f64` tensor data → bytes → `f64` tensor
+/// data. Implementations must be shape-oblivious (a tensor travels as
+/// its flattened entries) and length-preserving through the round trip.
+pub trait Codec: Sync {
+    fn kind(&self) -> CodecKind;
+
+    /// Serialize `values` to wire bytes.
+    fn encode(&self, values: &[f64]) -> Vec<u8>;
+
+    /// Deserialize wire bytes back to values.
+    fn decode(&self, bytes: &[u8]) -> Vec<f64>;
+
+    /// True when the simulated receive side is the identity at
+    /// simulation (`f64`) precision — see the module docs on the
+    /// reference-codec convention. Lossy codecs return `false` and
+    /// their decoded values feed the coordinator numerics.
+    fn transparent(&self) -> bool {
+        false
+    }
+}
+
+/// Reference codec: little-endian `f32` per entry.
+pub struct DenseF32;
+
+impl Codec for DenseF32 {
+    fn kind(&self) -> CodecKind {
+        CodecKind::DenseF32
+    }
+
+    fn encode(&self, values: &[f64]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(4 * values.len());
+        for &v in values {
+            out.extend_from_slice(&(v as f32).to_le_bytes());
+        }
+        out
+    }
+
+    fn decode(&self, bytes: &[u8]) -> Vec<f64> {
+        bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]) as f64)
+            .collect()
+    }
+
+    fn transparent(&self) -> bool {
+        true
+    }
+}
+
+/// Lossy codec: IEEE 754 binary16 per entry (round-to-nearest-even).
+pub struct F16Cast;
+
+impl Codec for F16Cast {
+    fn kind(&self) -> CodecKind {
+        CodecKind::F16Cast
+    }
+
+    fn encode(&self, values: &[f64]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(2 * values.len());
+        for &v in values {
+            out.extend_from_slice(&f32_to_f16_bits(v as f32).to_le_bytes());
+        }
+        out
+    }
+
+    fn decode(&self, bytes: &[u8]) -> Vec<f64> {
+        bytes.chunks_exact(2).map(|c| f16_bits_to_f64(u16::from_le_bytes([c[0], c[1]]))).collect()
+    }
+}
+
+/// Lossy codec: per-tensor affine `u8` quantization
+/// (`scale: f32`, `min: f32` header, one byte per entry).
+pub struct QuantizeInt8;
+
+impl Codec for QuantizeInt8 {
+    fn kind(&self) -> CodecKind {
+        CodecKind::QuantizeInt8
+    }
+
+    fn encode(&self, values: &[f64]) -> Vec<u8> {
+        if values.is_empty() {
+            return Vec::new();
+        }
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for &v in values {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        // Degenerate ranges (constant tensor, or a spread that
+        // underflows f32) collapse to scale 0: every entry decodes to
+        // `min`, with error ≤ (hi − lo)/2 from representing the tensor
+        // by its midpoint.
+        let mut scale = ((hi - lo) / 255.0) as f32;
+        let mut min = lo as f32;
+        if !scale.is_finite() || scale <= 0.0 {
+            scale = 0.0;
+            min = (lo + (hi - lo) / 2.0) as f32;
+        }
+        let mut out = Vec::with_capacity(8 + values.len());
+        out.extend_from_slice(&scale.to_le_bytes());
+        out.extend_from_slice(&min.to_le_bytes());
+        let (s64, m64) = (scale as f64, min as f64);
+        for &v in values {
+            let q = if s64 > 0.0 { ((v - m64) / s64).round().clamp(0.0, 255.0) } else { 0.0 };
+            out.push(q as u8);
+        }
+        out
+    }
+
+    fn decode(&self, bytes: &[u8]) -> Vec<f64> {
+        if bytes.is_empty() {
+            return Vec::new();
+        }
+        let scale = f32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]) as f64;
+        let min = f32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]) as f64;
+        bytes[8..].iter().map(|&q| min + q as f64 * scale).collect()
+    }
+}
+
+/// `f32` → IEEE 754 binary16 bit pattern, round-to-nearest-even,
+/// overflow to ±inf, underflow through subnormals to ±0.
+fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // Inf / NaN (keep NaN payload nonzero).
+        return sign | 0x7c00 | if mant != 0 { 0x0200 } else { 0 };
+    }
+    let unbiased = exp - 127;
+    if unbiased >= 16 {
+        return sign | 0x7c00; // overflow → inf
+    }
+    if unbiased >= -14 {
+        // Normal half: round the 23-bit mantissa to 10 bits (RNE). A
+        // mantissa carry propagates into the exponent field correctly
+        // because the encoding is monotone in (exp, mant).
+        let mant16 = (mant >> 13) as u16;
+        let round = mant & 0x1fff;
+        let mut h = sign | (((unbiased + 15) as u16) << 10) | mant16;
+        if round > 0x1000 || (round == 0x1000 && (h & 1) == 1) {
+            h += 1;
+        }
+        return h;
+    }
+    if unbiased >= -25 {
+        // Subnormal half: value = m16 · 2⁻²⁴ with m16 = round(m24 · 2^(unbiased+1)).
+        let m24 = mant | 0x0080_0000;
+        let shift = (-(unbiased + 1)) as u32; // 14..=24
+        let m16 = m24 >> shift;
+        let rem = m24 & ((1u32 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        let mut m = m16;
+        if rem > half || (rem == half && (m & 1) == 1) {
+            m += 1; // may round up to the smallest normal — encoding stays valid
+        }
+        return sign | m as u16;
+    }
+    sign // underflow → ±0
+}
+
+/// IEEE 754 binary16 bit pattern → `f64` (exact).
+fn f16_bits_to_f64(h: u16) -> f64 {
+    let sign = if h & 0x8000 != 0 { -1.0 } else { 1.0 };
+    let exp = ((h >> 10) & 0x1f) as i32;
+    let mant = (h & 0x3ff) as f64;
+    let mag = match exp {
+        0 => mant * (2.0f64).powi(-24),
+        0x1f => {
+            if mant == 0.0 {
+                f64::INFINITY
+            } else {
+                return f64::NAN;
+            }
+        }
+        e => (1.0 + mant / 1024.0) * (2.0f64).powi(e - 15),
+    };
+    sign * mag
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_values(n: usize, scale: f64, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal() * scale).collect()
+    }
+
+    #[test]
+    fn wire_bytes_matches_encoder_output() {
+        for kind in ALL_CODECS {
+            let codec = kind.codec();
+            for n in [0usize, 1, 7, 64, 255] {
+                let vals = random_values(n, 1.0, 11 + n as u64);
+                assert_eq!(
+                    codec.encode(&vals).len() as u64,
+                    kind.wire_bytes(n as u64),
+                    "{} / n={n}",
+                    kind.label()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn round_trip_preserves_length() {
+        for kind in ALL_CODECS {
+            let codec = kind.codec();
+            for n in [0usize, 1, 5, 100] {
+                let vals = random_values(n, 3.0, 5 + n as u64);
+                assert_eq!(codec.decode(&codec.encode(&vals)).len(), n, "{}", kind.label());
+            }
+        }
+    }
+
+    #[test]
+    fn dense_f32_is_the_reference() {
+        let codec = CodecKind::DenseF32.codec();
+        assert!(codec.transparent());
+        // Values representable in f32 round-trip exactly.
+        let vals = [1.0, -2.5, 0.0, 1024.0, -0.015625];
+        let back = codec.decode(&codec.encode(&vals));
+        assert_eq!(back, vals.to_vec());
+        // Arbitrary f64 round-trips at f32 precision.
+        let vals = random_values(200, 1.0, 17);
+        for (a, b) in vals.iter().zip(codec.decode(&codec.encode(&vals))) {
+            assert!((a - b).abs() <= a.abs() * 1e-7 + 1e-30, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn f16_error_within_half_precision() {
+        let codec = CodecKind::F16Cast.codec();
+        for seed in 0..4 {
+            let vals = random_values(300, 10.0f64.powi(seed as i32 - 2), 23 + seed);
+            let back = codec.decode(&codec.encode(&vals));
+            for (a, b) in vals.iter().zip(&back) {
+                // Relative 2⁻¹¹ in the normal range, absolute 2⁻²⁴ near 0.
+                let tol = a.abs() * (1.0 / 2048.0) + (2.0f64).powi(-24);
+                assert!((a - b).abs() <= tol, "f16: {a} -> {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn f16_special_values_and_exactness() {
+        let codec = CodecKind::F16Cast.codec();
+        // Powers of two and small integers are exact in binary16.
+        let vals = [0.0, -0.0, 1.0, -1.0, 0.5, 2.0, 3.0, 1536.0, -0.125];
+        assert_eq!(codec.decode(&codec.encode(&vals)), vals.to_vec());
+        // Overflow saturates to inf.
+        let big = codec.decode(&codec.encode(&[1e9]));
+        assert!(big[0].is_infinite() && big[0] > 0.0);
+        // Tiny values underflow to zero.
+        let tiny = codec.decode(&codec.encode(&[1e-12]));
+        assert_eq!(tiny[0], 0.0);
+    }
+
+    #[test]
+    fn q8_error_bounded_by_documented_bound() {
+        let codec = CodecKind::QuantizeInt8.codec();
+        for seed in 0..6 {
+            let vals = random_values(400, 10.0f64.powi(seed as i32 - 3), 41 + seed);
+            let lo = vals.iter().cloned().fold(f64::INFINITY, f64::min);
+            let hi = vals.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let bound = (hi - lo) / 255.0 + (hi.abs() + lo.abs() + 1.0) * 1e-6;
+            let back = codec.decode(&codec.encode(&vals));
+            for (a, b) in vals.iter().zip(&back) {
+                assert!((a - b).abs() <= bound, "q8: {a} -> {b} (bound {bound})");
+            }
+        }
+    }
+
+    #[test]
+    fn q8_degenerate_tensors() {
+        let codec = CodecKind::QuantizeInt8.codec();
+        // Constant tensor decodes to the constant (at f32 precision).
+        let back = codec.decode(&codec.encode(&[2.5; 10]));
+        assert!(back.iter().all(|&x| (x - 2.5).abs() < 1e-6), "{back:?}");
+        // All-zero tensor decodes to exact zeros.
+        let back = codec.decode(&codec.encode(&[0.0; 8]));
+        assert!(back.iter().all(|&x| x == 0.0));
+        // Asymmetric range far from zero must not wrap (affine, not symmetric).
+        let vals = [100.0, 100.5, 101.0];
+        let back = codec.decode(&codec.encode(&vals));
+        for (a, b) in vals.iter().zip(&back) {
+            assert!((a - b).abs() < 0.01, "{a} -> {b}");
+        }
+    }
+
+    #[test]
+    fn codec_kind_parse_and_labels() {
+        assert_eq!(CodecKind::parse("dense").unwrap(), CodecKind::DenseF32);
+        assert_eq!(CodecKind::parse("f16").unwrap(), CodecKind::F16Cast);
+        assert_eq!(CodecKind::parse("q8").unwrap(), CodecKind::QuantizeInt8);
+        assert!(CodecKind::parse("zstd").is_err());
+        for kind in ALL_CODECS {
+            assert_eq!(CodecKind::parse(kind.label()).unwrap(), kind);
+            assert_eq!(kind.codec().kind(), kind);
+        }
+    }
+
+    #[test]
+    fn bytes_per_entry_ordering() {
+        assert!(CodecKind::QuantizeInt8.bytes_per_entry() < CodecKind::F16Cast.bytes_per_entry());
+        assert!(CodecKind::F16Cast.bytes_per_entry() < CodecKind::DenseF32.bytes_per_entry());
+    }
+}

@@ -1,5 +1,6 @@
 //! Training configuration shared by all federated algorithms.
 
+use crate::comm::CodecKind;
 use crate::engine::ExecutorKind;
 use crate::opt::{LrSchedule, OptimizerKind, SgdConfig};
 use crate::util::json::Json;
@@ -81,6 +82,11 @@ pub struct TrainConfig {
     /// pool. Bitwise-identical trajectories either way (the engine's
     /// determinism contract); only wall-clock changes.
     pub executor: ExecutorKind,
+    /// Wire codec every transfer is serialized with. The reference
+    /// `DenseF32` preserves the seed's `floats × 4` accounting and
+    /// trajectories exactly; `F16Cast`/`QuantizeInt8` trade accuracy
+    /// for bytes (decode-on-receive — see [`crate::comm::wire`]).
+    pub codec: CodecKind,
 }
 
 impl Default for TrainConfig {
@@ -98,6 +104,7 @@ impl Default for TrainConfig {
             straggler_jitter: 0.0,
             dropout: 0.0,
             executor: ExecutorKind::Serial,
+            codec: CodecKind::DenseF32,
         }
     }
 }
@@ -115,7 +122,8 @@ impl TrainConfig {
             .set("participation", self.participation)
             .set("straggler_jitter", self.straggler_jitter)
             .set("dropout", self.dropout)
-            .set("executor", self.executor.label());
+            .set("executor", self.executor.label())
+            .set("codec", self.codec.label());
         match self.opt {
             OptimizerKind::Sgd(sgd) => {
                 o.set("optimizer", "sgd")
@@ -155,5 +163,6 @@ mod tests {
         let j = cfg.to_json();
         assert_eq!(j.usize_or("rounds", 0), 100);
         assert_eq!(j.str_or("var_correction", ""), "full_vc");
+        assert_eq!(j.str_or("codec", ""), "dense");
     }
 }

@@ -11,7 +11,7 @@
 //!          → s* corrected steps (∇L_c(W_c) + (G_W − G_W,c)) → aggregate
 //! ```
 
-use crate::comm::{Network, Payload};
+use crate::comm::Network;
 use crate::engine::{ClientExecutor, Executor, RoundPlan};
 use crate::metrics::{RoundMetrics, RunRecord};
 use crate::models::{FedProblem, LrWant, LrWeight, Weights};
@@ -61,7 +61,7 @@ pub fn run_dense<P: FedProblem + Sync>(
         .map(|&(m, n)| Matrix::randn(m, n, &mut rng).scale((1.0 / m.max(1) as f64).sqrt()))
         .collect();
 
-    let mut net = Network::new(c_num);
+    let mut net = Network::with_codec(c_num, cfg.codec);
     let executor = Executor::from_kind(cfg.executor);
     let mut record = RunRecord::new(algo.label(), experiment, c_num, cfg.seed);
     record.config = cfg.to_json();
@@ -76,21 +76,19 @@ pub fn run_dense<P: FedProblem + Sync>(
         let mut client_wall_s = 0.0;
         let mut client_serial_s = 0.0;
 
-        // Broadcast the full weights.
-        for w in &lr_w {
-            net.broadcast("W_lr", &Payload::matrix(w.rows(), w.cols()));
-        }
-        for w in &dense {
-            net.broadcast("W_dense", &Payload::matrix(w.rows(), w.cols()));
-        }
+        // Broadcast the full weights through the wire codec; clients
+        // train on the decoded copies.
+        let lr_bc: Vec<Matrix> = lr_w.iter().map(|w| net.broadcast_mat("W_lr", w)).collect();
+        let dense_bc: Vec<Matrix> =
+            dense.iter().map(|w| net.broadcast_mat("W_dense", w)).collect();
 
         // FedLin: one extra round trip for the global gradient.
         let corrections: Option<Vec<(Vec<Matrix>, Vec<Matrix>)>> = match algo {
             DenseAlgo::FedAvg => None,
             DenseAlgo::FedLin => {
                 let w_t = Weights {
-                    dense: dense.clone(),
-                    lr: lr_w.iter().cloned().map(LrWeight::Dense).collect(),
+                    dense: dense_bc.clone(),
+                    lr: lr_bc.iter().cloned().map(LrWeight::Dense).collect(),
                 };
                 let report = executor.execute(&plan, |task| {
                     problem.grad(task.client_id, &w_t, LrWant::Dense, step0)
@@ -98,37 +96,35 @@ pub fn run_dense<P: FedProblem + Sync>(
                 client_wall_s += report.wall_s;
                 client_serial_s += report.serial_s;
                 let per_client = report.results;
-                for w in &lr_w {
-                    net.aggregate("G_W_lr", &Payload::matrix(w.rows(), w.cols()));
-                    net.broadcast("G_W_lr", &Payload::matrix(w.rows(), w.cols()));
-                }
-                for w in &dense {
-                    net.aggregate("G_W_dense", &Payload::matrix(w.rows(), w.cols()));
-                    net.broadcast("G_W_dense", &Payload::matrix(w.rows(), w.cols()));
-                }
-                net.end_round_trip();
-                // Mean gradients.
+                // Mean gradients: each participating client's upload is
+                // decoded on receive; the mean goes back down through
+                // the codec too.
                 let mut mean_lr: Vec<Matrix> =
                     lr_w.iter().map(|w| Matrix::zeros(w.rows(), w.cols())).collect();
                 let mut mean_d: Vec<Matrix> =
                     dense.iter().map(|w| Matrix::zeros(w.rows(), w.cols())).collect();
                 for (task, g) in plan.tasks.iter().zip(&per_client) {
                     for (acc, gl) in mean_lr.iter_mut().zip(&g.lr) {
-                        acc.axpy(task.weight, gl.dense());
+                        acc.axpy(task.weight, &net.aggregate_mat("G_W_lr", gl.dense()));
                     }
                     for (acc, gd) in mean_d.iter_mut().zip(&g.dense) {
-                        acc.axpy(task.weight, gd);
+                        acc.axpy(task.weight, &net.aggregate_mat("G_W_dense", gd));
                     }
                 }
+                let mean_lr_bc: Vec<Matrix> =
+                    mean_lr.iter().map(|m| net.broadcast_mat("G_W_lr", m)).collect();
+                let mean_d_bc: Vec<Matrix> =
+                    mean_d.iter().map(|m| net.broadcast_mat("G_W_dense", m)).collect();
+                net.end_round_trip();
                 Some(
                     (0..a_num)
                         .map(|c| {
-                            let v_lr: Vec<Matrix> = mean_lr
+                            let v_lr: Vec<Matrix> = mean_lr_bc
                                 .iter()
                                 .zip(&per_client[c].lr)
                                 .map(|(gm, gc)| gm.sub(gc.dense()))
                                 .collect();
-                            let v_d: Vec<Matrix> = mean_d
+                            let v_d: Vec<Matrix> = mean_d_bc
                                 .iter()
                                 .zip(&per_client[c].dense)
                                 .map(|(gm, gc)| gm.sub(gc))
@@ -144,8 +140,8 @@ pub fn run_dense<P: FedProblem + Sync>(
         // weighted mean in plan order (executor-independent bitwise).
         let report = executor.execute(&plan, |task| {
             let c = task.client_id;
-            let mut lr_c = lr_w.clone();
-            let mut dense_c = dense.clone();
+            let mut lr_c = lr_bc.clone();
+            let mut dense_c = dense_bc.clone();
             let mut opt_lr: Vec<ClientOptimizer> =
                 (0..lr_c.len()).map(|_| ClientOptimizer::new(cfg.opt)).collect();
             let mut opt_d: Vec<ClientOptimizer> =
@@ -173,20 +169,15 @@ pub fn run_dense<P: FedProblem + Sync>(
             lr_w.iter().map(|w| Matrix::zeros(w.rows(), w.cols())).collect();
         let mut dense_accum: Vec<Matrix> =
             dense.iter().map(|w| Matrix::zeros(w.rows(), w.cols())).collect();
+        // Each client's trained weights upload through the codec; the
+        // server averages the decoded tensors in plan order.
         for (task, (lr_c, dense_c)) in plan.tasks.iter().zip(&report.results) {
             for (l, w) in lr_c.iter().enumerate() {
-                lr_accum[l].axpy(task.weight, w);
+                lr_accum[l].axpy(task.weight, &net.aggregate_mat("W_lr", w));
             }
             for (dl, w) in dense_c.iter().enumerate() {
-                dense_accum[dl].axpy(task.weight, w);
+                dense_accum[dl].axpy(task.weight, &net.aggregate_mat("W_dense", w));
             }
-        }
-        // Upload accounting once; `aggregate` multiplies by C.
-        for w in &lr_w {
-            net.aggregate("W_lr", &Payload::matrix(w.rows(), w.cols()));
-        }
-        for w in &dense {
-            net.aggregate("W_dense", &Payload::matrix(w.rows(), w.cols()));
         }
         net.end_round_trip();
         lr_w = lr_accum;
@@ -194,8 +185,8 @@ pub fn run_dense<P: FedProblem + Sync>(
 
         // Metrics.
         let comm = net.end_round();
-        let (comm_floats, comm_per_client) =
-            (comm.total_floats(), comm.per_client_floats(c_num));
+        let (comm_floats, comm_per_client) = (comm.total_floats(), comm.per_client_floats());
+        let (bytes_down, bytes_up) = (comm.bytes_down, comm.bytes_up);
         let comm_floats_lr = comm.floats_matching(|l| l.ends_with("_lr"));
         let should_eval = t % cfg.eval_every == 0 || t + 1 == cfg.rounds;
         let w_eval = Weights {
@@ -209,6 +200,8 @@ pub fn run_dense<P: FedProblem + Sync>(
             ranks: lr_w.iter().map(|w| w.rows().min(w.cols())).collect(),
             comm_floats,
             comm_floats_lr,
+            bytes_down,
+            bytes_up,
             comm_floats_per_client: comm_per_client,
             dist_to_opt: if should_eval { problem.distance_to_optimum(&w_eval) } else { None },
             eval_metric: if should_eval { problem.eval_metric(&w_eval) } else { None },

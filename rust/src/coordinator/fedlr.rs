@@ -19,7 +19,7 @@
 //! the drift/accuracy gap FeDLRT's shared-basis design eliminates.
 //! This is the executable counterpart of Table 1's FeDLR row.
 
-use crate::comm::{Network, Payload};
+use crate::comm::Network;
 use crate::engine::{ClientExecutor, Executor, RoundPlan};
 use crate::linalg::svd;
 use crate::lowrank::LowRank;
@@ -51,7 +51,7 @@ pub fn run_fedlr<P: FedProblem + Sync>(
     // Server state: the DENSE weight matrix.
     let mut w = Matrix::randn(m, n, &mut rng).scale((1.0 / m as f64).sqrt());
 
-    let mut net = Network::new(c_num);
+    let mut net = Network::with_codec(c_num, cfg.codec);
     let executor = Executor::from_kind(cfg.executor);
     let mut record = RunRecord::new("fedlr", experiment, c_num, cfg.seed);
     record.config = cfg.to_json();
@@ -68,11 +68,13 @@ pub fn run_fedlr<P: FedProblem + Sync>(
         let theta = cfg.rank.tau * dec.sigma.iter().map(|x| x * x).sum::<f64>().sqrt();
         let r_dn = dec.rank_for_tolerance(theta).clamp(1, cfg.rank.max_rank);
         let (p, sig, q) = dec.truncate(r_dn);
-        net.broadcast("P", &Payload::matrix(m, r_dn));
-        net.broadcast("Sigma", &Payload::CoeffDiag(r_dn));
-        net.broadcast("Q", &Payload::matrix(n, r_dn));
+        // Downlink through the wire codec: clients reconstruct from the
+        // decoded factors.
+        let p_bc = net.broadcast_mat("P", &p);
+        let sig_bc = net.broadcast_vec("Sigma", &sig);
+        let q_bc = net.broadcast_mat("Q", &q);
         let w_compressed =
-            crate::tensor::matmul_nt(&crate::tensor::matmul(&p, &Matrix::diag(&sig)), &q);
+            crate::tensor::matmul_nt(&crate::tensor::matmul(&p_bc, &Matrix::diag(&sig_bc)), &q_bc);
 
         // Clients: reconstruct, dense local training, compress upload —
         // one hermetic work item per client.
@@ -89,23 +91,26 @@ pub fn run_fedlr<P: FedProblem + Sync>(
             let theta_c =
                 cfg.rank.tau * dec_c.sigma.iter().map(|x| x * x).sum::<f64>().sqrt();
             let r_up = dec_c.rank_for_tolerance(theta_c).clamp(1, cfg.rank.max_rank);
-            let (pc, sc, qc) = dec_c.truncate(r_up);
-            let w_c_approx =
-                crate::tensor::matmul_nt(&crate::tensor::matmul(&pc, &Matrix::diag(&sc)), &qc);
-            (w_c_approx, r_up)
+            dec_c.truncate(r_up)
         });
         let client_wall_s = report.wall_s;
         let client_serial_s = report.serial_s;
+        // Each client ships its compressed triple {P_c, Σ_c, Q_c} as one
+        // coalesced message at its *actual* upload rank (byte-exact — the
+        // old accounting charged everyone a uniform upper bound); the
+        // server reconstructs from the decoded factors in plan order.
         let mut w_next = Matrix::zeros(m, n);
-        let mut rank_up_max = 1usize;
-        for (task, (w_c_approx, r_up)) in plan.tasks.iter().zip(&report.results) {
-            rank_up_max = rank_up_max.max(*r_up);
-            w_next.axpy(task.weight, w_c_approx);
+        for (task, (pc, sc, qc)) in plan.tasks.iter().zip(&report.results) {
+            let mut parts = net
+                .aggregate_batch("factor_triple_c", &[pc.data(), sc.as_slice(), qc.data()])
+                .into_iter();
+            let pc_d = Matrix::from_vec(pc.rows(), pc.cols(), parts.next().unwrap());
+            let sc_d = parts.next().unwrap();
+            let qc_d = Matrix::from_vec(qc.rows(), qc.cols(), parts.next().unwrap());
+            let w_c_approx =
+                crate::tensor::matmul_nt(&crate::tensor::matmul(&pc_d, &Matrix::diag(&sc_d)), &qc_d);
+            w_next.axpy(task.weight, &w_c_approx);
         }
-        // Upload accounting (uniform upper bound at the max upload rank).
-        net.aggregate("P_c", &Payload::matrix(m, rank_up_max));
-        net.aggregate("Sigma_c", &Payload::CoeffDiag(rank_up_max));
-        net.aggregate("Q_c", &Payload::matrix(n, rank_up_max));
         net.end_round_trip();
         w = w_next;
 
@@ -113,8 +118,8 @@ pub fn run_fedlr<P: FedProblem + Sync>(
         // (which is generally r_up·C before the next truncation: the
         // "average of low-rank matrices is not low rank" effect).
         let comm = net.end_round();
-        let (comm_floats, comm_per_client) =
-            (comm.total_floats(), comm.per_client_floats(c_num));
+        let (comm_floats, comm_per_client) = (comm.total_floats(), comm.per_client_floats());
+        let (bytes_down, bytes_up) = (comm.bytes_down, comm.bytes_up);
         let w_eval = Weights { dense: vec![], lr: vec![LrWeight::Dense(w.clone())] };
         record.rounds.push(RoundMetrics {
             round: t,
@@ -122,6 +127,8 @@ pub fn run_fedlr<P: FedProblem + Sync>(
             ranks: vec![r_dn],
             comm_floats,
             comm_floats_lr: comm_floats,
+            bytes_down,
+            bytes_up,
             comm_floats_per_client: comm_per_client,
             dist_to_opt: problem.distance_to_optimum(&w_eval),
             eval_metric: problem.eval_metric(&w_eval),

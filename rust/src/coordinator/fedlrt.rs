@@ -24,7 +24,7 @@
 //! the paper trains "the fully connected head" with FeDLRT and the rest
 //! conventionally.
 
-use crate::comm::{Network, Payload};
+use crate::comm::Network;
 use crate::engine::{ClientExecutor, Executor, RoundPlan};
 use crate::lowrank::{augment_basis, truncate, AugmentedBasis, LowRank};
 use crate::metrics::{RoundMetrics, RunRecord};
@@ -64,7 +64,7 @@ pub fn run_fedlrt<P: FedProblem + Sync>(
         .map(|&(m, n)| Matrix::randn(m, n, &mut rng).scale((1.0 / m.max(1) as f64).sqrt()))
         .collect();
 
-    let mut net = Network::new(c_num);
+    let mut net = Network::with_codec(c_num, cfg.codec);
     let executor = Executor::from_kind(cfg.executor);
     let algo = format!("fedlrt_{}", cfg.var_correction.label());
     let mut record = RunRecord::new(&algo, experiment, c_num, cfg.seed);
@@ -84,98 +84,116 @@ pub fn run_fedlrt<P: FedProblem + Sync>(
         let mut client_wall_s = 0.0;
         let mut client_serial_s = 0.0;
 
-        // (2) Broadcast current factorization + dense params. S is
-        // diagonal after truncation, so only its diagonal travels.
-        for f in &factors {
-            net.broadcast("U", &Payload::matrix(f.m(), f.rank()));
-            net.broadcast("V", &Payload::matrix(f.n(), f.rank()));
-            net.broadcast("S_diag", &Payload::CoeffDiag(f.rank()));
-        }
-        for d in &dense {
-            net.broadcast("dense_w", &Payload::matrix(d.rows(), d.cols()));
-        }
+        // (2) Broadcast current factorization + dense params, through
+        // the wire codec: clients compute on the *decoded* copies
+        // (decode-on-receive). S is diagonal after truncation, so only
+        // its diagonal travels.
+        let bc: Vec<LowRank> = factors
+            .iter()
+            .map(|f| {
+                let u = net.broadcast_mat("U", &f.u);
+                let v = net.broadcast_mat("V", &f.v);
+                let s_diag: Vec<f64> = (0..f.rank()).map(|i| f.s[(i, i)]).collect();
+                let s = Matrix::diag(&net.broadcast_vec("S_diag", &s_diag));
+                LowRank { u, s, v }
+            })
+            .collect();
+        let dense_bc: Vec<Matrix> =
+            dense.iter().map(|d| net.broadcast_mat("dense_w", d)).collect();
 
         // (3)-(4) Clients evaluate basis gradients at the broadcast
-        // point; the server aggregates the mean. The simplified-vc
-        // variant also needs the non-augmented coefficient gradient
-        // G_S — Algorithm 5 folds it into this same round trip.
+        // point; each participating client's upload goes through the
+        // codec and the server averages the *decoded* tensors in plan
+        // order. The simplified-vc variant also needs the non-augmented
+        // coefficient gradient G_S — Algorithm 5 folds it into this
+        // same round trip.
         let w_t = Weights {
-            dense: dense.clone(),
-            lr: factors.iter().cloned().map(LrWeight::Factored).collect(),
+            dense: dense_bc.clone(),
+            lr: bc.iter().cloned().map(LrWeight::Factored).collect(),
         };
         let report = executor
             .execute(&plan, |task| problem.grad(task.client_id, &w_t, LrWant::Factors, step0));
         client_wall_s += report.wall_s;
         client_serial_s += report.serial_s;
         let per_client = report.results;
-        for f in &factors {
-            net.aggregate("G_U", &Payload::matrix(f.m(), f.rank()));
-            net.aggregate("G_V", &Payload::matrix(f.n(), f.rank()));
-            if cfg.var_correction == VarCorrection::Simplified {
-                net.aggregate("G_S", &Payload::matrix(f.rank(), f.rank()));
-            }
-        }
-        if cfg.var_correction != VarCorrection::None {
-            for d in &dense {
-                net.aggregate("G_dense", &Payload::matrix(d.rows(), d.cols()));
-            }
-        }
-        net.end_round_trip();
-
         let num_lr = factors.len();
-        // Mean basis/coeff gradients per layer.
-        let mut g_u_mean: Vec<Matrix> = Vec::with_capacity(num_lr);
-        let mut g_v_mean: Vec<Matrix> = Vec::with_capacity(num_lr);
-        let mut g_s_mean: Vec<Matrix> = Vec::with_capacity(num_lr);
-        for l in 0..num_lr {
-            let f = &factors[l];
-            let mut gu = Matrix::zeros(f.m(), f.rank());
-            let mut gv = Matrix::zeros(f.n(), f.rank());
-            let mut gs = Matrix::zeros(f.rank(), f.rank());
-            for (g, &wt) in per_client.iter().zip(&weights) {
+        // Mean basis/coeff gradients per layer (decoded where uplinked).
+        let mut g_u_mean: Vec<Matrix> =
+            factors.iter().map(|f| Matrix::zeros(f.m(), f.rank())).collect();
+        let mut g_v_mean: Vec<Matrix> =
+            factors.iter().map(|f| Matrix::zeros(f.n(), f.rank())).collect();
+        let mut g_s_mean: Vec<Matrix> =
+            factors.iter().map(|f| Matrix::zeros(f.rank(), f.rank())).collect();
+        let mut g_dense_mean: Vec<Matrix> =
+            dense.iter().map(|d| Matrix::zeros(d.rows(), d.cols())).collect();
+        for (g, &wt) in per_client.iter().zip(&weights) {
+            for l in 0..num_lr {
                 match &g.lr[l] {
                     LrGrad::Factors { g_u, g_v, g_s } => {
-                        gu.axpy(wt, g_u);
-                        gv.axpy(wt, g_v);
-                        gs.axpy(wt, g_s);
+                        g_u_mean[l].axpy(wt, &net.aggregate_mat("G_U", g_u));
+                        g_v_mean[l].axpy(wt, &net.aggregate_mat("G_V", g_v));
+                        if cfg.var_correction == VarCorrection::Simplified {
+                            g_s_mean[l].axpy(wt, &net.aggregate_mat("G_S", g_s));
+                        } else {
+                            // Not uplinked in this mode (server-side
+                            // bookkeeping only).
+                            g_s_mean[l].axpy(wt, g_s);
+                        }
                     }
                     _ => unreachable!("requested factor gradients"),
                 }
             }
-            g_u_mean.push(gu);
-            g_v_mean.push(gv);
-            g_s_mean.push(gs);
-        }
-        let mut g_dense_mean: Vec<Matrix> =
-            dense.iter().map(|d| Matrix::zeros(d.rows(), d.cols())).collect();
-        for (g, &wt) in per_client.iter().zip(&weights) {
-            for (acc, gd) in g_dense_mean.iter_mut().zip(&g.dense) {
-                acc.axpy(wt, gd);
+            if cfg.var_correction != VarCorrection::None {
+                for (acc, gd) in g_dense_mean.iter_mut().zip(&g.dense) {
+                    acc.axpy(wt, &net.aggregate_mat("G_dense", gd));
+                }
+            } else {
+                for (acc, gd) in g_dense_mean.iter_mut().zip(&g.dense) {
+                    acc.axpy(wt, gd);
+                }
             }
         }
+        net.end_round_trip();
 
         // (5) Server-side basis augmentation (QR), (6) broadcast Ū, V̄.
+        // Clients assemble their augmented factorization from decoded
+        // pieces: Ũ_c = [U_c | Ū_c], S̃ = [[S,0],[0,0]] needs no wire
+        // (Lemma 1). The server keeps its own exact `augs` for the
+        // final reconstruction/truncation step.
         let augs: Vec<AugmentedBasis> = (0..num_lr)
             .map(|l| augment_basis(&factors[l], &g_u_mean[l], &g_v_mean[l], 2 * factors[l].rank()))
             .collect();
+        let mut augs_c: Vec<AugmentedBasis> = Vec::with_capacity(num_lr);
+        let mut g_s_mean_bc: Vec<Matrix> = Vec::new();
         for (l, aug) in augs.iter().enumerate() {
-            net.broadcast("U_bar", &Payload::matrix(factors[l].m(), aug.u_bar.cols()));
-            net.broadcast("V_bar", &Payload::matrix(factors[l].n(), aug.v_bar.cols()));
+            let u_bar = net.broadcast_mat("U_bar", &aug.u_bar);
+            let v_bar = net.broadcast_mat("V_bar", &aug.v_bar);
+            let r2 = aug.rank();
+            augs_c.push(AugmentedBasis {
+                u_tilde: bc[l].u.hcat(&u_bar),
+                v_tilde: bc[l].v.hcat(&v_bar),
+                u_bar,
+                v_bar,
+                s_tilde: bc[l].s.embed(r2, r2),
+                r_old: bc[l].rank(),
+            });
             if cfg.var_correction == VarCorrection::Simplified {
                 // Algorithm 5 line 8: G_S rides with the Ū,V̄ broadcast.
-                net.broadcast("G_S", &Payload::matrix(factors[l].rank(), factors[l].rank()));
+                g_s_mean_bc.push(net.broadcast_mat("G_S", &g_s_mean[l]));
             }
         }
-        if cfg.var_correction != VarCorrection::None {
-            for d in &dense {
-                net.broadcast("G_dense", &Payload::matrix(d.rows(), d.cols()));
-            }
-        }
+        let g_dense_bc: Vec<Matrix> = if cfg.var_correction != VarCorrection::None {
+            g_dense_mean.iter().map(|g| net.broadcast_mat("G_dense", g)).collect()
+        } else {
+            Vec::new()
+        };
         net.end_round_trip();
 
         // (9)-(12) Variance-correction terms V_c per client per layer.
         // Full: V_c = G_S̃ − G_S̃,c at the augmented point (extra round).
         // Simplified: V̌_c = [[G_S − G_S,c, 0],[0,0]] (already available).
+        // The mean term is what the server *broadcast* (decoded); each
+        // client subtracts its own exact local gradient.
         let corrections: Vec<Vec<Option<Matrix>>> = match cfg.var_correction {
             VarCorrection::None => vec![vec![None; num_lr]; a_num],
             VarCorrection::Simplified => (0..a_num)
@@ -186,19 +204,20 @@ pub fn run_fedlrt<P: FedProblem + Sync>(
                                 LrGrad::Factors { g_s, .. } => g_s,
                                 _ => unreachable!(),
                             };
-                            let r2 = augs[l].rank();
-                            Some(g_s_mean[l].sub(g_s_c).embed(r2, r2))
+                            let r2 = augs_c[l].rank();
+                            Some(g_s_mean_bc[l].sub(g_s_c).embed(r2, r2))
                         })
                         .collect()
                 })
                 .collect(),
             VarCorrection::Full => {
-                // Clients evaluate ∇_S̃ L_c at (Ũ, S̃, Ṽ); server
-                // aggregates and broadcasts the mean — the third
-                // communication round of Algorithm 1.
+                // Clients evaluate ∇_S̃ L_c at the decoded (Ũ, S̃, Ṽ);
+                // the server aggregates the decoded uploads and
+                // broadcasts the mean back — the third communication
+                // round of Algorithm 1.
                 let w_aug = Weights {
-                    dense: dense.clone(),
-                    lr: augs.iter().map(|a| LrWeight::Factored(a.as_factorization())).collect(),
+                    dense: dense_bc.clone(),
+                    lr: augs_c.iter().map(|a| LrWeight::Factored(a.as_factorization())).collect(),
                 };
                 let report = executor.execute(&plan, |task| {
                     problem.grad(task.client_id, &w_aug, LrWant::Coeff, step0)
@@ -206,23 +225,20 @@ pub fn run_fedlrt<P: FedProblem + Sync>(
                 client_wall_s += report.wall_s;
                 client_serial_s += report.serial_s;
                 let grads_aug = report.results;
-                for aug in &augs {
-                    let r2 = aug.rank();
-                    net.aggregate("G_S_tilde", &Payload::matrix(r2, r2));
-                    net.broadcast("G_S_tilde", &Payload::matrix(r2, r2));
-                }
-                net.end_round_trip();
                 let mut mean: Vec<Matrix> =
                     augs.iter().map(|a| Matrix::zeros(a.rank(), a.rank())).collect();
                 for (g, &wt) in grads_aug.iter().zip(&weights) {
                     for (l, m) in mean.iter_mut().enumerate() {
-                        m.axpy(wt, g.lr[l].coeff());
+                        m.axpy(wt, &net.aggregate_mat("G_S_tilde", g.lr[l].coeff()));
                     }
                 }
+                let mean_bc: Vec<Matrix> =
+                    mean.iter().map(|m| net.broadcast_mat("G_S_tilde", m)).collect();
+                net.end_round_trip();
                 (0..a_num)
                     .map(|c| {
                         (0..num_lr)
-                            .map(|l| Some(mean[l].sub(grads_aug[c].lr[l].coeff())))
+                            .map(|l| Some(mean_bc[l].sub(grads_aug[c].lr[l].coeff())))
                             .collect()
                     })
                     .collect()
@@ -235,7 +251,7 @@ pub fn run_fedlrt<P: FedProblem + Sync>(
         } else {
             (0..a_num)
                 .map(|c| {
-                    g_dense_mean
+                    g_dense_bc
                         .iter()
                         .zip(&per_client[c].dense)
                         .map(|(gm, gc)| Some(gm.sub(gc)))
@@ -250,8 +266,8 @@ pub fn run_fedlrt<P: FedProblem + Sync>(
         // optimum, so the executor may shard clients across threads.
         let report = executor.execute(&plan, |task| {
             let c = task.client_id;
-            let mut s_c: Vec<Matrix> = augs.iter().map(|a| a.s_tilde.clone()).collect();
-            let mut dense_c: Vec<Matrix> = dense.clone();
+            let mut s_c: Vec<Matrix> = augs_c.iter().map(|a| a.s_tilde.clone()).collect();
+            let mut dense_c: Vec<Matrix> = dense_bc.clone();
             let mut opt_s: Vec<ClientOptimizer> =
                 (0..num_lr).map(|_| ClientOptimizer::new(cfg.opt)).collect();
             let mut opt_d: Vec<ClientOptimizer> =
@@ -263,9 +279,9 @@ pub fn run_fedlrt<P: FedProblem + Sync>(
                     lr: (0..num_lr)
                         .map(|l| {
                             LrWeight::Factored(LowRank {
-                                u: augs[l].u_tilde.clone(),
+                                u: augs_c[l].u_tilde.clone(),
                                 s: s_c[l].clone(),
-                                v: augs[l].v_tilde.clone(),
+                                v: augs_c[l].v_tilde.clone(),
                             })
                         })
                         .collect(),
@@ -290,7 +306,8 @@ pub fn run_fedlrt<P: FedProblem + Sync>(
         });
         client_wall_s += report.wall_s;
         client_serial_s += report.serial_s;
-        // (16) Server averages the uploaded S̃_c^{s*} (+ dense), weighted
+        // (16) Each client uploads its S̃_c^{s*} (+ dense params) through
+        // the codec; the server averages the *decoded* tensors, weighted
         // (eq. 10 with non-uniform weights) — reduced in plan order so
         // the trajectory is bitwise independent of the executor.
         let mut s_accum: Vec<Matrix> =
@@ -301,19 +318,11 @@ pub fn run_fedlrt<P: FedProblem + Sync>(
         for (task, (s_c, dense_c, first_loss)) in plan.tasks.iter().zip(&report.results) {
             local_loss_sum += *first_loss;
             for l in 0..num_lr {
-                s_accum[l].axpy(task.weight, &s_c[l]);
+                s_accum[l].axpy(task.weight, &net.aggregate_mat("S_tilde_c", &s_c[l]));
             }
             for (dl, d) in dense_c.iter().enumerate() {
-                dense_accum[dl].axpy(task.weight, d);
+                dense_accum[dl].axpy(task.weight, &net.aggregate_mat("dense_w", d));
             }
-        }
-        // Upload accounting: every client sends its S̃_c (and dense
-        // params) once; `aggregate` already multiplies by C.
-        for aug in &augs {
-            net.aggregate("S_tilde_c", &Payload::matrix(aug.rank(), aug.rank()));
-        }
-        for d in &dense {
-            net.aggregate("dense_w", &Payload::matrix(d.rows(), d.cols()));
         }
         net.end_round_trip();
 
@@ -336,8 +345,8 @@ pub fn run_fedlrt<P: FedProblem + Sync>(
 
         // ---- Metrics ----
         let comm = net.end_round();
-        let (comm_floats, comm_per_client) =
-            (comm.total_floats(), comm.per_client_floats(c_num));
+        let (comm_floats, comm_per_client) = (comm.total_floats(), comm.per_client_floats());
+        let (bytes_down, bytes_up) = (comm.bytes_down, comm.bytes_up);
         let comm_floats_lr =
             comm.floats_matching(|l| !matches!(l, "dense_w" | "G_dense"));
         let should_eval = t % cfg.eval_every == 0 || t + 1 == cfg.rounds;
@@ -356,6 +365,8 @@ pub fn run_fedlrt<P: FedProblem + Sync>(
             ranks: factors.iter().map(|f| f.rank()).collect(),
             comm_floats,
             comm_floats_lr,
+            bytes_down,
+            bytes_up,
             comm_floats_per_client: comm_per_client,
             dist_to_opt: if should_eval { problem.distance_to_optimum(&w_eval) } else { None },
             eval_metric: if should_eval { problem.eval_metric(&w_eval) } else { None },
@@ -494,6 +505,31 @@ mod tests {
             assert_eq!(x.global_loss.to_bits(), y.global_loss.to_bits());
             assert_eq!(x.ranks, y.ranks);
         }
+    }
+
+    #[test]
+    fn codecs_trade_bytes_for_accuracy() {
+        let mut rng = Rng::new(813);
+        let prob = Quadratic::random(12, 2, 3, &mut rng);
+        let run = |codec| {
+            let mut cfg = quick_cfg(6, 3, VarCorrection::Simplified);
+            cfg.codec = codec;
+            run_fedlrt(&prob, &cfg, "t")
+        };
+        let dense = run(crate::comm::CodecKind::DenseF32);
+        let f16 = run(crate::comm::CodecKind::F16Cast);
+        let q8 = run(crate::comm::CodecKind::QuantizeInt8);
+        // Reference codec: measured bytes are exactly floats × 4.
+        assert_eq!(dense.total_bytes(), 4 * dense.total_comm_floats());
+        // f16 halves every message; q8 beats 2 bytes/entry overall
+        // (1 byte/entry + small per-message headers).
+        assert_eq!(f16.total_bytes(), 2 * f16.total_comm_floats());
+        assert!(q8.total_bytes() < 2 * q8.total_comm_floats());
+        // Lossy codecs feed decoded tensors into the coordinator, so
+        // the trajectory visibly differs from the reference while
+        // staying numerically alive.
+        assert!(f16.final_loss().is_finite() && q8.final_loss().is_finite());
+        assert_ne!(dense.final_loss().to_bits(), q8.final_loss().to_bits());
     }
 
     #[test]

@@ -9,7 +9,7 @@
 //! Table 1 for FeDLR-style schemes). Communication also grows: full
 //! factor triples travel upstream instead of small coefficient matrices.
 
-use crate::comm::{Network, Payload};
+use crate::comm::Network;
 use crate::engine::{ClientExecutor, Executor, RoundPlan};
 use crate::linalg::svd;
 use crate::lowrank::{augment_basis, LowRank};
@@ -42,7 +42,7 @@ pub fn run_fedlrt_naive<P: FedProblem + Sync>(
     let mut fac = LowRank::random_init(m, n, r0, &mut rng);
     fac.s.scale_inplace((1.0 / m as f64).sqrt());
 
-    let mut net = Network::new(c_num);
+    let mut net = Network::with_codec(c_num, cfg.codec);
     let executor = Executor::from_kind(cfg.executor);
     let mut record = RunRecord::new("fedlrt_naive", experiment, c_num, cfg.seed);
     record.config = cfg.to_json();
@@ -54,24 +54,28 @@ pub fn run_fedlrt_naive<P: FedProblem + Sync>(
         let plan = RoundPlan::build(cfg, c_num, t, |c| problem.client_weight(c));
         net.set_active_clients(plan.len());
 
-        // Broadcast the current global factors.
-        net.broadcast("U", &Payload::matrix(m, fac.rank()));
-        net.broadcast("V", &Payload::matrix(n, fac.rank()));
-        net.broadcast("S_diag", &Payload::CoeffDiag(fac.rank()));
+        // Broadcast the current global factors through the wire codec;
+        // clients work on the decoded copies (S is diagonal, so only
+        // its diagonal travels).
+        let u_bc = net.broadcast_mat("U", &fac.u);
+        let v_bc = net.broadcast_mat("V", &fac.v);
+        let s_diag: Vec<f64> = (0..fac.rank()).map(|i| fac.s[(i, i)]).collect();
+        let s_bc = Matrix::diag(&net.broadcast_vec("S_diag", &s_diag));
+        let fac_c = LowRank { u: u_bc, s: s_bc, v: v_bc };
 
         // Per-client: local augmentation (own QR on own gradients) and
         // local coefficient iterations — no coordination until upload,
         // so each client is one hermetic work item.
         let report = executor.execute(&plan, |task| {
             let c = task.client_id;
-            let w_c = Weights { dense: vec![], lr: vec![LrWeight::Factored(fac.clone())] };
+            let w_c = Weights { dense: vec![], lr: vec![LrWeight::Factored(fac_c.clone())] };
             let g = problem.grad(c, &w_c, LrWant::Factors, step0);
             let (g_u, g_v) = match &g.lr[0] {
                 LrGrad::Factors { g_u, g_v, .. } => (g_u.clone(), g_v.clone()),
                 _ => unreachable!(),
             };
             // Algorithm 6 lines 7–9: client-local augmentation.
-            let aug = augment_basis(&fac, &g_u, &g_v, 2 * fac.rank());
+            let aug = augment_basis(&fac_c, &g_u, &g_v, 2 * fac_c.rank());
             let mut s_c = aug.s_tilde.clone();
             let mut opt = ClientOptimizer::new(cfg.opt);
             for s in 0..task.local_iters {
@@ -86,35 +90,27 @@ pub fn run_fedlrt_naive<P: FedProblem + Sync>(
                 let gg = problem.grad(c, &w_loc, LrWant::Coeff, step0 + s as u64);
                 opt.step(&mut s_c, gg.lr[0].coeff(), lr_t, None);
             }
-            let r2 = aug.rank();
-            // The client uploads its reconstructed full factor triple —
-            // bases diverged, so the server cannot reuse shared ones.
-            let w_c_dense = LowRank { u: aug.u_tilde, s: s_c, v: aug.v_tilde }.to_dense();
-            (w_c_dense, r2)
+            // The client uploads its full factor triple — bases
+            // diverged, so the server cannot reuse shared ones.
+            (aug.u_tilde, s_c, aug.v_tilde)
         });
         let client_wall_s = report.wall_s;
         let client_serial_s = report.serial_s;
-        // Upload accounting at the (uniform) augmented rank: every
-        // participating client ships its full factor triple
-        // {Ũ_c, S̃_c, Ṽ_c} as one coalesced message; `aggregate`
-        // multiplies by the active-client count.
-        let r2 = report.results.first().map(|(_, r2)| *r2).unwrap_or(fac.rank());
-        net.aggregate(
-            "factor_triple_c",
-            &Payload::batch(
-                "factor_triple_c",
-                &[
-                    Payload::matrix(m, r2),
-                    Payload::matrix(n, r2),
-                    Payload::matrix(r2, r2),
-                ],
-            ),
-        );
-        // Server accumulates the reconstructed dense average in plan
-        // order (executor-independent bitwise).
+        // Every participating client ships its factor triple
+        // {Ũ_c, S̃_c, Ṽ_c} as one coalesced message through the wire
+        // codec; the server reconstructs the dense average from the
+        // *decoded* triples in plan order (executor-independent
+        // bitwise).
         let mut w_star = Matrix::zeros(m, n);
-        for (task, (w_c_dense, _)) in plan.tasks.iter().zip(&report.results) {
-            w_star.axpy(task.weight, w_c_dense);
+        for (task, (u_t, s_t, v_t)) in plan.tasks.iter().zip(&report.results) {
+            let mut parts = net
+                .aggregate_batch("factor_triple_c", &[u_t.data(), s_t.data(), v_t.data()])
+                .into_iter();
+            let u_d = Matrix::from_vec(u_t.rows(), u_t.cols(), parts.next().unwrap());
+            let s_d = Matrix::from_vec(s_t.rows(), s_t.cols(), parts.next().unwrap());
+            let v_d = Matrix::from_vec(v_t.rows(), v_t.cols(), parts.next().unwrap());
+            let w_c_dense = LowRank { u: u_d, s: s_d, v: v_d }.to_dense();
+            w_star.axpy(task.weight, &w_c_dense);
         }
         net.end_round_trip();
 
@@ -129,8 +125,8 @@ pub fn run_fedlrt_naive<P: FedProblem + Sync>(
 
         // Metrics.
         let comm = net.end_round();
-        let (comm_floats, comm_per_client) =
-            (comm.total_floats(), comm.per_client_floats(c_num));
+        let (comm_floats, comm_per_client) = (comm.total_floats(), comm.per_client_floats());
+        let (bytes_down, bytes_up) = (comm.bytes_down, comm.bytes_up);
         let comm_floats_lr = comm_floats; // single-layer problems only
         let w_eval = Weights { dense: vec![], lr: vec![LrWeight::Factored(fac.clone())] };
         record.rounds.push(RoundMetrics {
@@ -139,6 +135,8 @@ pub fn run_fedlrt_naive<P: FedProblem + Sync>(
             ranks: vec![fac.rank()],
             comm_floats,
             comm_floats_lr,
+            bytes_down,
+            bytes_up,
             comm_floats_per_client: comm_per_client,
             dist_to_opt: problem.distance_to_optimum(&w_eval),
             eval_metric: problem.eval_metric(&w_eval),

@@ -5,6 +5,7 @@
 //! iteration counts for the CPU-only default bench runs
 //! (`FEDLRT_BENCH_FULL=1` restores paper scale).
 
+use crate::comm::CodecKind;
 use crate::engine::ExecutorKind;
 use crate::opt::{LrSchedule, OptimizerKind, SgdConfig};
 
@@ -26,6 +27,7 @@ pub fn fig4_config(full: bool) -> TrainConfig {
         straggler_jitter: 0.0,
         dropout: 0.0,
         executor: ExecutorKind::Serial,
+        codec: CodecKind::DenseF32,
     }
 }
 
@@ -49,6 +51,7 @@ pub fn fig1_config(full: bool) -> TrainConfig {
         straggler_jitter: 0.0,
         dropout: 0.0,
         executor: ExecutorKind::Serial,
+        codec: CodecKind::DenseF32,
     }
 }
 
@@ -168,6 +171,7 @@ impl VisionPreset {
             straggler_jitter: 0.0,
             dropout: 0.0,
             executor: ExecutorKind::Serial,
+            codec: CodecKind::DenseF32,
         }
     }
 }

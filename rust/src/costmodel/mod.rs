@@ -164,6 +164,16 @@ pub fn costs(method: Method, p: CostParams) -> Costs {
     }
 }
 
+/// Per-round communication volume in *bytes on the wire* under a wire
+/// codec: Table 1's float-entry count scaled by the codec's asymptotic
+/// bytes-per-entry factor (4 for the `f32` reference, 2 for `f16`, 1
+/// for int8; per-message headers are negligible at Table 1 / Fig 3
+/// scales and excluded from the closed form — the simulation measures
+/// them exactly).
+pub fn comm_bytes(method: Method, p: CostParams, codec: crate::comm::CodecKind) -> f64 {
+    costs(method, p).comm_cost * codec.bytes_per_entry()
+}
+
 /// The rank below which FeDLRT's communication beats the dense method's
 /// (the "amortization point" of Fig 3): smallest integer `r` with
 /// `comm(FeDLRT, r) < comm(dense)`. Returns `None` if never.
@@ -233,6 +243,19 @@ mod tests {
             (150..=300).contains(&r),
             "amortization rank {r} outside Fig 3's ~200 ballpark"
         );
+    }
+
+    #[test]
+    fn comm_bytes_scales_with_codec() {
+        use crate::comm::CodecKind;
+        for m in ALL_METHODS {
+            let dense = comm_bytes(m, P, CodecKind::DenseF32);
+            let f16 = comm_bytes(m, P, CodecKind::F16Cast);
+            let q8 = comm_bytes(m, P, CodecKind::QuantizeInt8);
+            assert_eq!(dense, costs(m, P).comm_cost * 4.0, "{}", m.label());
+            assert_eq!(f16, dense / 2.0, "{}", m.label());
+            assert_eq!(q8, dense / 4.0, "{}", m.label());
+        }
     }
 
     #[test]

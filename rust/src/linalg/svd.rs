@@ -101,20 +101,68 @@ fn svd_tall(a: &Matrix) -> Svd {
         (0..n).map(|j| wt.row(j).iter().map(|x| x * x).sum::<f64>().sqrt()).collect();
     order.sort_by(|&i, &j| norms[j].partial_cmp(&norms[i]).unwrap());
 
+    // Columns whose norm is at cancellation-noise level are *null
+    // directions*: for exactly rank-deficient inputs (zero or repeated
+    // columns) the annihilated column is rounding residue of magnitude
+    // ≲ 100·ε·‖A‖, and normalizing it would emit a junk direction
+    // correlated with the accepted columns. The threshold sits far
+    // above that residue and far below both the Jacobi convergence
+    // resolution and every consumer's tolerance, so zeroing such σ
+    // perturbs `UΣVᵀ` by ≤ n·10⁻¹²·√m·‖A‖ ≪ any test bound.
+    let null_tol = scale * 1e-12 * (m as f64).sqrt();
+
     let mut u = Matrix::zeros(m, n);
     let mut vv = Matrix::zeros(n, n);
     let mut sigma = vec![0.0; n];
     for (new_j, &old_j) in order.iter().enumerate() {
         sigma[new_j] = norms[old_j];
-        if norms[old_j] > 0.0 {
+        if norms[old_j] > null_tol {
             let inv = 1.0 / norms[old_j];
             for (i, &x) in wt.row(old_j).iter().enumerate() {
                 u[(i, new_j)] = x * inv;
             }
         } else {
-            // Null direction: produce some unit vector orthogonal enough;
-            // only reached for exactly rank-deficient inputs.
-            u[(new_j.min(m - 1), new_j)] = 1.0;
+            // Null direction — only reached for (numerically) exactly
+            // rank-deficient inputs. Complete the basis by Gram–Schmidt:
+            // take the coordinate direction least captured by the
+            // columns placed so far and orthonormalize it against them,
+            // so U keeps the orthonormality contract `lowrank::truncate`
+            // relies on. (Nonzero-σ columns sort first, so columns
+            // 0..new_j are already final; new_j < n ≤ m guarantees the
+            // placed columns never span R^m and a nonzero residual
+            // always exists.)
+            sigma[new_j] = 0.0;
+            let mut best_k = 0;
+            let mut best_res = -1.0;
+            for k in 0..m {
+                let mut res = 1.0;
+                for j2 in 0..new_j {
+                    res -= u[(k, j2)] * u[(k, j2)];
+                }
+                if res > best_res + 1e-12 {
+                    best_res = res;
+                    best_k = k;
+                }
+            }
+            let mut w = vec![0.0; m];
+            w[best_k] = 1.0;
+            // Two projection passes (re-orthogonalization) for stability.
+            for _pass in 0..2 {
+                for j2 in 0..new_j {
+                    let mut dot = 0.0;
+                    for (i, wi) in w.iter().enumerate() {
+                        dot += u[(i, j2)] * wi;
+                    }
+                    for (i, wi) in w.iter_mut().enumerate() {
+                        *wi -= dot * u[(i, j2)];
+                    }
+                }
+            }
+            let wnorm = w.iter().map(|x| x * x).sum::<f64>().sqrt();
+            let inv = 1.0 / wnorm;
+            for (i, wi) in w.iter().enumerate() {
+                u[(i, new_j)] = wi * inv;
+            }
         }
         for (i, &x) in vt.row(old_j).iter().enumerate() {
             vv[(i, new_j)] = x;
@@ -326,14 +374,71 @@ mod tests {
     }
 
     #[test]
+    fn rank_deficient_null_directions_are_orthonormal() {
+        // Exactly rank-deficient inputs (zero columns, repeated
+        // columns) exercise the null-direction completion: U must stay
+        // orthonormal — the contract `lowrank::truncate` relies on —
+        // not just carry duplicate coordinate vectors.
+        let mut rng = Rng::new(213);
+        for &(m, n, zero_cols, dup_cols) in
+            &[(6usize, 4usize, 2usize, 0usize), (8, 5, 0, 3), (5, 5, 2, 2), (9, 3, 2, 1), (4, 7, 3, 2)]
+        {
+            let mut a = Matrix::randn(m, n, &mut rng);
+            for j in 0..zero_cols.min(n) {
+                for i in 0..m {
+                    a[(i, j)] = 0.0;
+                }
+            }
+            for d in 0..dup_cols {
+                let (src, dst) = (n - 1, n.saturating_sub(2 + d));
+                if dst == n - 1 {
+                    continue;
+                }
+                for i in 0..m {
+                    let x = a[(i, src)];
+                    a[(i, dst)] = x;
+                }
+            }
+            let s = svd(&a);
+            assert!(
+                orthonormality_error(&s.u) < 1e-8,
+                "U not orthonormal for ({m},{n}) zeros={zero_cols} dups={dup_cols}: {}",
+                orthonormality_error(&s.u)
+            );
+            assert!(orthonormality_error(&s.v) < 1e-8, "V ({m},{n})");
+            let scale = 1.0 + a.max_abs();
+            assert!(s.reconstruct().sub(&a).max_abs() < 1e-8 * scale, "reconstruction ({m},{n})");
+        }
+    }
+
+    #[test]
     fn prop_svd_invariants() {
         prop::check(
-            "svd: UΣVᵀ=A, orthonormal factors, sorted σ",
-            16,
+            "svd: UΣVᵀ=A, orthonormal factors, sorted σ (incl. rank-deficient)",
+            24,
             |rng, size| {
                 let m = 1 + rng.below(size + 2);
                 let n = 1 + rng.below(size + 2);
-                Matrix::randn(m, n, rng)
+                let mut a = Matrix::randn(m, n, rng);
+                // A third of the cases are deliberately rank-deficient:
+                // zero out or duplicate random columns.
+                match rng.below(3) {
+                    0 => {
+                        let j = rng.below(n);
+                        for i in 0..m {
+                            a[(i, j)] = 0.0;
+                        }
+                    }
+                    1 => {
+                        let (src, dst) = (rng.below(n), rng.below(n));
+                        for i in 0..m {
+                            let x = a[(i, src)];
+                            a[(i, dst)] = x;
+                        }
+                    }
+                    _ => {}
+                }
+                a
             },
             |a| {
                 let s = svd(a);

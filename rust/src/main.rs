@@ -18,6 +18,7 @@
 //! ```
 
 use anyhow::Result;
+use fedlrt::comm::CodecKind;
 use fedlrt::coordinator::{
     run_dense, run_fedlrt, DenseAlgo, RankConfig, TrainConfig, VarCorrection,
 };
@@ -59,6 +60,13 @@ fn parse_executor(s: &str) -> ExecutorKind {
     })
 }
 
+fn parse_codec(s: &str) -> CodecKind {
+    CodecKind::parse(s).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    })
+}
+
 fn parse_vc(s: &str) -> VarCorrection {
     match s {
         "none" => VarCorrection::None,
@@ -90,6 +98,7 @@ fn cmd_train(rest: &[String]) -> Result<()> {
         .opt("participation", "1.0", "fraction of clients sampled per round")
         .opt("dropout", "0.0", "per-round client dropout probability")
         .opt("executor", "serial", "client execution engine: serial|threads|threads:N")
+        .opt("codec", "dense", "wire codec: dense|f16|q8")
         .opt("out", "results/train.jsonl", "JSONL output path");
     let a = cli.parse(rest).unwrap_or_else(|e| {
         eprintln!("{e}");
@@ -129,6 +138,7 @@ fn cmd_train(rest: &[String]) -> Result<()> {
         straggler_jitter: 0.0,
         dropout: a.f64("dropout"),
         executor: parse_executor(a.str("executor")),
+        codec: parse_codec(a.str("codec")),
     };
     let rec = match a.str("algo") {
         "fedlrt" => run_fedlrt(&problem, &cfg, "cli_train"),
@@ -148,10 +158,12 @@ fn cmd_train(rest: &[String]) -> Result<()> {
         }
     }
     println!(
-        "final loss {:.5}, acc {:.4}, comm {:.2} Mfloats",
+        "final loss {:.5}, acc {:.4}, comm {:.2} Mfloats ({:.2} MB on wire, codec {})",
         rec.final_loss(),
         rec.final_metric().unwrap_or(f64::NAN),
-        rec.total_comm_floats() as f64 / 1e6
+        rec.total_comm_floats() as f64 / 1e6,
+        rec.total_bytes() as f64 / 1e6,
+        cfg.codec.label()
     );
     rec.append_jsonl(std::path::Path::new(a.str("out")))?;
     Ok(())
@@ -172,7 +184,8 @@ fn cmd_lsq(rest: &[String]) -> Result<()> {
         .opt("tau", "0.1", "truncation tolerance")
         .opt("seed", "0", "random seed")
         .opt("dropout", "0.0", "per-round client dropout probability")
-        .opt("executor", "serial", "client execution engine: serial|threads|threads:N");
+        .opt("executor", "serial", "client execution engine: serial|threads|threads:N")
+        .opt("codec", "dense", "wire codec: dense|f16|q8");
     let a = cli.parse(rest).unwrap_or_else(|e| {
         eprintln!("{e}");
         std::process::exit(2)
@@ -207,6 +220,7 @@ fn cmd_lsq(rest: &[String]) -> Result<()> {
         seed: a.u64("seed"),
         dropout: a.f64("dropout"),
         executor: parse_executor(a.str("executor")),
+        codec: parse_codec(a.str("codec")),
         ..TrainConfig::default()
     };
     let rec = match a.str("algo") {
@@ -224,11 +238,13 @@ fn cmd_lsq(rest: &[String]) -> Result<()> {
         );
     }
     println!(
-        "final loss {:.4e} (L* = {:.4e}), rank {}, comm {} floats",
+        "final loss {:.4e} (L* = {:.4e}), rank {}, comm {} floats / {} bytes on wire ({})",
         rec.final_loss(),
         problem.min_loss(),
         rec.final_rank(),
-        rec.total_comm_floats()
+        rec.total_comm_floats(),
+        rec.total_bytes(),
+        cfg.codec.label()
     );
     Ok(())
 }

@@ -22,7 +22,12 @@ pub struct RoundMetrics {
     /// Floats attributable to the low-rank (compressed) layers only —
     /// the paper's footnote-6 accounting for the comm-saving figures.
     pub comm_floats_lr: u64,
-    /// Per-client floats (download + own upload).
+    /// Measured serialized bytes server→clients this round (wire codec).
+    pub bytes_down: u64,
+    /// Measured serialized bytes clients→server this round (wire codec).
+    pub bytes_up: u64,
+    /// Per-client floats (download + own upload share among the
+    /// round's participants).
     pub comm_floats_per_client: f64,
     /// Distance to the known optimum, if the problem has one.
     pub dist_to_opt: Option<f64>,
@@ -92,6 +97,21 @@ impl RunRecord {
         self.rounds.iter().map(|r| r.comm_floats_lr).sum()
     }
 
+    /// Cumulative measured downlink bytes (wire codec).
+    pub fn total_bytes_down(&self) -> u64 {
+        self.rounds.iter().map(|r| r.bytes_down).sum()
+    }
+
+    /// Cumulative measured uplink bytes (wire codec).
+    pub fn total_bytes_up(&self) -> u64 {
+        self.rounds.iter().map(|r| r.bytes_up).sum()
+    }
+
+    /// Cumulative measured bytes on the wire, both directions.
+    pub fn total_bytes(&self) -> u64 {
+        self.total_bytes_down() + self.total_bytes_up()
+    }
+
     /// Total client-side wall-clock under the configured executor.
     pub fn total_client_wall_s(&self) -> f64 {
         self.rounds.iter().map(|r| r.client_wall_s).sum()
@@ -136,6 +156,8 @@ impl RunRecord {
                     .set("ranks", Json::Arr(r.ranks.iter().map(|&x| Json::Num(x as f64)).collect()))
                     .set("comm_floats", r.comm_floats)
                     .set("comm_floats_lr", r.comm_floats_lr)
+                    .set("bytes_down", r.bytes_down)
+                    .set("bytes_up", r.bytes_up)
                     .set("comm_floats_per_client", r.comm_floats_per_client)
                     .set("wall_s", r.wall_s)
                     .set("client_wall_s", r.client_wall_s)
@@ -202,6 +224,8 @@ mod tests {
                 ranks: vec![4],
                 comm_floats: 100,
                 comm_floats_lr: 60,
+                bytes_down: 160,
+                bytes_up: 240,
                 comm_floats_per_client: 50.0,
                 dist_to_opt: Some(l.sqrt()),
                 eval_metric: None,
@@ -219,6 +243,9 @@ mod tests {
         assert_eq!(r.final_loss(), 0.01);
         assert_eq!(r.final_rank(), 4);
         assert_eq!(r.total_comm_floats(), 300);
+        assert_eq!(r.total_bytes_down(), 3 * 160);
+        assert_eq!(r.total_bytes_up(), 3 * 240);
+        assert_eq!(r.total_bytes(), 3 * 400);
         assert_eq!(r.rounds_to_loss(0.5), Some(1));
         assert_eq!(r.rounds_to_loss(1e-9), None);
     }

@@ -42,6 +42,8 @@ fn assert_trajectories_identical(a: &RunRecord, b: &RunRecord, what: &str) {
             "{what}: per-client comm differs at round {}",
             x.round
         );
+        assert_eq!(x.bytes_down, y.bytes_down, "{what}: bytes_down differs at round {}", x.round);
+        assert_eq!(x.bytes_up, y.bytes_up, "{what}: bytes_up differs at round {}", x.round);
         match (x.dist_to_opt, y.dist_to_opt) {
             (Some(dx), Some(dy)) => assert_eq!(
                 dx.to_bits(),
@@ -144,6 +146,44 @@ fn naive_baseline_serial_equals_thread_pool() {
         let a = run_fedlrt_naive(&prob, &cfg_serial, "det");
         let b = run_fedlrt_naive(&prob, &cfg_pool, "det");
         assert_trajectories_identical(&a, &b, &format!("naive/seed{seed}"));
+    }
+}
+
+#[test]
+fn every_codec_preserves_executor_determinism() {
+    // The wire codec runs on the coordinator thread in plan order, so
+    // serial ≡ thread-pool must hold bitwise for lossy codecs too —
+    // across all four coordinators, under scheduling stressors.
+    use fedlrt::comm::ALL_CODECS;
+    for codec in ALL_CODECS {
+        let mut rng = Rng::new(91);
+        let prob = LeastSquares::heterogeneous(8, 320, 6, &mut rng);
+        let mut cfg_serial = lsq_cfg(91, ExecutorKind::Serial);
+        cfg_serial.codec = codec;
+        cfg_serial.participation = 0.7;
+        cfg_serial.dropout = 0.2;
+        cfg_serial.straggler_jitter = 0.3;
+        let mut cfg_pool = cfg_serial.clone();
+        cfg_pool.executor = ExecutorKind::ThreadPool { threads: 3 };
+        let label = |algo: &str| format!("{algo}/codec={}", codec.label());
+
+        let a = run_fedlrt(&prob, &cfg_serial, "det");
+        let b = run_fedlrt(&prob, &cfg_pool, "det");
+        assert_trajectories_identical(&a, &b, &label("fedlrt"));
+
+        for algo in [DenseAlgo::FedAvg, DenseAlgo::FedLin] {
+            let a = run_dense(&prob, &cfg_serial, algo, "det");
+            let b = run_dense(&prob, &cfg_pool, algo, "det");
+            assert_trajectories_identical(&a, &b, &label(algo.label()));
+        }
+
+        let a = run_fedlr(&prob, &cfg_serial, "det");
+        let b = run_fedlr(&prob, &cfg_pool, "det");
+        assert_trajectories_identical(&a, &b, &label("fedlr"));
+
+        let a = run_fedlrt_naive(&prob, &cfg_serial, "det");
+        let b = run_fedlrt_naive(&prob, &cfg_pool, "det");
+        assert_trajectories_identical(&a, &b, &label("fedlrt_naive"));
     }
 }
 
