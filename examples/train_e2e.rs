@@ -82,6 +82,7 @@ fn main() -> anyhow::Result<()> {
         executor: fedlrt::engine::ExecutorKind::parse(args.str("executor"))
             .unwrap_or_else(|e| panic!("{e}")),
         codec: fedlrt::comm::CodecKind::DenseF32,
+        kernel_threads: 0,
     };
 
     println!(

@@ -87,6 +87,12 @@ pub struct TrainConfig {
     /// trajectories exactly; `F16Cast`/`QuantizeInt8` trade accuracy
     /// for bytes (decode-on-receive — see [`crate::comm::wire`]).
     pub codec: CodecKind,
+    /// Worker threads for the large-matmul kernels (CLI
+    /// `--kernel-threads`). `0` = leave the process-wide default alone
+    /// (the `FEDLRT_KERNEL_THREADS` env var, or 1). Kernel results are
+    /// bitwise independent of this value — the row-panel determinism
+    /// contract of [`crate::tensor::ops`] — so it only moves wall-clock.
+    pub kernel_threads: usize,
 }
 
 impl Default for TrainConfig {
@@ -105,11 +111,20 @@ impl Default for TrainConfig {
             dropout: 0.0,
             executor: ExecutorKind::Serial,
             codec: CodecKind::DenseF32,
+            kernel_threads: 0,
         }
     }
 }
 
 impl TrainConfig {
+    /// Apply the kernel-thread choice to the process-wide knob (no-op
+    /// when 0 = inherit). Coordinators call this at run start.
+    pub fn apply_kernel_threads(&self) {
+        if self.kernel_threads > 0 {
+            crate::tensor::set_kernel_threads(self.kernel_threads);
+        }
+    }
+
     pub fn to_json(&self) -> Json {
         let mut o = Json::obj();
         o.set("rounds", self.rounds)
@@ -123,7 +138,8 @@ impl TrainConfig {
             .set("straggler_jitter", self.straggler_jitter)
             .set("dropout", self.dropout)
             .set("executor", self.executor.label())
-            .set("codec", self.codec.label());
+            .set("codec", self.codec.label())
+            .set("kernel_threads", self.kernel_threads);
         match self.opt {
             OptimizerKind::Sgd(sgd) => {
                 o.set("optimizer", "sgd")
@@ -164,5 +180,6 @@ mod tests {
         assert_eq!(j.usize_or("rounds", 0), 100);
         assert_eq!(j.str_or("var_correction", ""), "full_vc");
         assert_eq!(j.str_or("codec", ""), "dense");
+        assert_eq!(j.usize_or("kernel_threads", 99), 0);
     }
 }

@@ -63,6 +63,7 @@ pub fn run_dense<P: FedProblem + Sync>(
 
     let mut net = Network::with_codec(c_num, cfg.codec);
     let executor = Executor::from_kind(cfg.executor);
+    cfg.apply_kernel_threads();
     let mut record = RunRecord::new(algo.label(), experiment, c_num, cfg.seed);
     record.config = cfg.to_json();
 
@@ -138,29 +139,35 @@ pub fn run_dense<P: FedProblem + Sync>(
 
         // Local iterations as executor work items, then aggregate the
         // weighted mean in plan order (executor-independent bitwise).
+        // The client's weight set is assembled once and trained in
+        // place — the seed re-cloned every n×n matrix into a fresh
+        // `Weights` on every local iteration.
         let report = executor.execute(&plan, |task| {
             let c = task.client_id;
-            let mut lr_c = lr_bc.clone();
-            let mut dense_c = dense_bc.clone();
+            let mut w_c = Weights {
+                dense: dense_bc.clone(),
+                lr: lr_bc.iter().cloned().map(LrWeight::Dense).collect(),
+            };
             let mut opt_lr: Vec<ClientOptimizer> =
-                (0..lr_c.len()).map(|_| ClientOptimizer::new(cfg.opt)).collect();
+                (0..w_c.lr.len()).map(|_| ClientOptimizer::new(cfg.opt)).collect();
             let mut opt_d: Vec<ClientOptimizer> =
-                (0..dense_c.len()).map(|_| ClientOptimizer::new(cfg.opt)).collect();
+                (0..w_c.dense.len()).map(|_| ClientOptimizer::new(cfg.opt)).collect();
             for s in 0..task.local_iters {
-                let w_c = Weights {
-                    dense: dense_c.clone(),
-                    lr: lr_c.iter().cloned().map(LrWeight::Dense).collect(),
-                };
                 let g = problem.grad(c, &w_c, LrWant::Dense, step0 + s as u64);
-                for (l, w) in lr_c.iter_mut().enumerate() {
+                for l in 0..w_c.lr.len() {
                     let corr = corrections.as_ref().map(|cs| &cs[task.ordinal].0[l]);
-                    opt_lr[l].step(w, g.lr[l].dense(), lr_t, corr);
+                    opt_lr[l].step(w_c.lr[l].as_dense_mut(), g.lr[l].dense(), lr_t, corr);
                 }
-                for (dl, w) in dense_c.iter_mut().enumerate() {
+                for (dl, w) in w_c.dense.iter_mut().enumerate() {
                     let corr = corrections.as_ref().map(|cs| &cs[task.ordinal].1[dl]);
                     opt_d[dl].step(w, &g.dense[dl], lr_t, corr);
                 }
             }
+            let Weights { dense: dense_c, lr } = w_c;
+            let lr_c: Vec<Matrix> = lr.into_iter().map(|lw| match lw {
+                LrWeight::Dense(m) => m,
+                LrWeight::Factored(_) => unreachable!("dense baseline weights"),
+            }).collect();
             (lr_c, dense_c)
         });
         client_wall_s += report.wall_s;

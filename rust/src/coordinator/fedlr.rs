@@ -53,6 +53,7 @@ pub fn run_fedlr<P: FedProblem + Sync>(
 
     let mut net = Network::with_codec(c_num, cfg.codec);
     let executor = Executor::from_kind(cfg.executor);
+    cfg.apply_kernel_threads();
     let mut record = RunRecord::new("fedlr", experiment, c_num, cfg.seed);
     record.config = cfg.to_json();
 
@@ -79,13 +80,20 @@ pub fn run_fedlr<P: FedProblem + Sync>(
         // Clients: reconstruct, dense local training, compress upload —
         // one hermetic work item per client.
         let report = executor.execute(&plan, |task| {
-            let mut w_c = w_compressed.clone();
+            // One weight set per client per round, trained in place —
+            // the seed cloned the full n×n matrix into a fresh
+            // `Weights` on every local iteration.
+            let mut wts =
+                Weights { dense: vec![], lr: vec![LrWeight::Dense(w_compressed.clone())] };
             let mut opt = ClientOptimizer::new(cfg.opt);
             for s in 0..task.local_iters {
-                let wts = Weights { dense: vec![], lr: vec![LrWeight::Dense(w_c.clone())] };
                 let g = problem.grad(task.client_id, &wts, LrWant::Dense, step0 + s as u64);
-                opt.step(&mut w_c, g.lr[0].dense(), lr_t, None);
+                opt.step(wts.lr[0].as_dense_mut(), g.lr[0].dense(), lr_t, None);
             }
+            let w_c = match wts.lr.pop() {
+                Some(LrWeight::Dense(m)) => m,
+                _ => unreachable!("dense client state"),
+            };
             // Client-side compression (another full SVD, on-device).
             let dec_c = svd(&w_c);
             let theta_c =

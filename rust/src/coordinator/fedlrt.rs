@@ -26,11 +26,11 @@
 
 use crate::comm::Network;
 use crate::engine::{ClientExecutor, Executor, RoundPlan};
-use crate::lowrank::{augment_basis, truncate, AugmentedBasis, LowRank};
+use crate::lowrank::{augment_basis_ws, truncate_ws, AugmentedBasis, LowRank};
 use crate::metrics::{RoundMetrics, RunRecord};
 use crate::models::{FedProblem, LrGrad, LrWant, LrWeight, Weights};
 use crate::opt::ClientOptimizer;
-use crate::tensor::Matrix;
+use crate::tensor::{Matrix, Workspace};
 use crate::util::rng::Rng;
 use crate::util::Stopwatch;
 
@@ -66,6 +66,11 @@ pub fn run_fedlrt<P: FedProblem + Sync>(
 
     let mut net = Network::with_codec(c_num, cfg.codec);
     let executor = Executor::from_kind(cfg.executor);
+    cfg.apply_kernel_threads();
+    // Server-side scratch, reused across all rounds: mean-gradient
+    // accumulators, the augmentation QR, and the truncation SVD draw
+    // from this pool, so the steady-state server step stops allocating.
+    let mut ws = Workspace::new();
     let algo = format!("fedlrt_{}", cfg.var_correction.label());
     let mut record = RunRecord::new(&algo, experiment, c_num, cfg.seed);
     record.config = cfg.to_json();
@@ -117,15 +122,16 @@ pub fn run_fedlrt<P: FedProblem + Sync>(
         client_serial_s += report.serial_s;
         let per_client = report.results;
         let num_lr = factors.len();
-        // Mean basis/coeff gradients per layer (decoded where uplinked).
+        // Mean basis/coeff gradients per layer (decoded where uplinked)
+        // — accumulators drawn from the cross-round workspace pool.
         let mut g_u_mean: Vec<Matrix> =
-            factors.iter().map(|f| Matrix::zeros(f.m(), f.rank())).collect();
+            factors.iter().map(|f| ws.take_mat(f.m(), f.rank())).collect();
         let mut g_v_mean: Vec<Matrix> =
-            factors.iter().map(|f| Matrix::zeros(f.n(), f.rank())).collect();
+            factors.iter().map(|f| ws.take_mat(f.n(), f.rank())).collect();
         let mut g_s_mean: Vec<Matrix> =
-            factors.iter().map(|f| Matrix::zeros(f.rank(), f.rank())).collect();
+            factors.iter().map(|f| ws.take_mat(f.rank(), f.rank())).collect();
         let mut g_dense_mean: Vec<Matrix> =
-            dense.iter().map(|d| Matrix::zeros(d.rows(), d.cols())).collect();
+            dense.iter().map(|d| ws.take_mat(d.rows(), d.cols())).collect();
         for (g, &wt) in per_client.iter().zip(&weights) {
             for l in 0..num_lr {
                 match &g.lr[l] {
@@ -161,8 +167,22 @@ pub fn run_fedlrt<P: FedProblem + Sync>(
         // (Lemma 1). The server keeps its own exact `augs` for the
         // final reconstruction/truncation step.
         let augs: Vec<AugmentedBasis> = (0..num_lr)
-            .map(|l| augment_basis(&factors[l], &g_u_mean[l], &g_v_mean[l], 2 * factors[l].rank()))
+            .map(|l| {
+                augment_basis_ws(
+                    &factors[l],
+                    &g_u_mean[l],
+                    &g_v_mean[l],
+                    2 * factors[l].rank(),
+                    &mut ws,
+                )
+            })
             .collect();
+        for buf in g_u_mean {
+            ws.give_mat(buf);
+        }
+        for buf in g_v_mean {
+            ws.give_mat(buf);
+        }
         let mut augs_c: Vec<AugmentedBasis> = Vec::with_capacity(num_lr);
         let mut g_s_mean_bc: Vec<Matrix> = Vec::new();
         for (l, aug) in augs.iter().enumerate() {
@@ -188,6 +208,12 @@ pub fn run_fedlrt<P: FedProblem + Sync>(
             Vec::new()
         };
         net.end_round_trip();
+        for buf in g_s_mean {
+            ws.give_mat(buf);
+        }
+        for buf in g_dense_mean {
+            ws.give_mat(buf);
+        }
 
         // (9)-(12) Variance-correction terms V_c per client per layer.
         // Full: V_c = G_S̃ − G_S̃,c at the augmented point (extra round).
@@ -264,45 +290,79 @@ pub fn run_fedlrt<P: FedProblem + Sync>(
         // dense params), expressed as hermetic work items: each task
         // reads only broadcast round state and returns its local
         // optimum, so the executor may shard clients across threads.
+        //
+        // Client state is assembled ONCE per client per round: the
+        // augmented factorization is trained *in place* (only S̃ changes
+        // between iterations — the seed re-cloned Ũ/Ṽ and the dense
+        // params every step), and the coefficient gradients land in
+        // per-layer buffers reused across all s* iterations through the
+        // problem's allocation-free `grad_coeff_into` fast path
+        // (LeastSquares implements it; PJRT problems fall back to
+        // `grad`).
         let report = executor.execute(&plan, |task| {
             let c = task.client_id;
-            let mut s_c: Vec<Matrix> = augs_c.iter().map(|a| a.s_tilde.clone()).collect();
-            let mut dense_c: Vec<Matrix> = dense_bc.clone();
+            let mut w_c = Weights {
+                dense: dense_bc.clone(),
+                lr: augs_c
+                    .iter()
+                    .map(|a| {
+                        LrWeight::Factored(LowRank {
+                            u: a.u_tilde.clone(),
+                            s: a.s_tilde.clone(),
+                            v: a.v_tilde.clone(),
+                        })
+                    })
+                    .collect(),
+            };
+            let mut g_coeff: Vec<Matrix> =
+                augs_c.iter().map(|a| Matrix::zeros(a.rank(), a.rank())).collect();
             let mut opt_s: Vec<ClientOptimizer> =
                 (0..num_lr).map(|_| ClientOptimizer::new(cfg.opt)).collect();
             let mut opt_d: Vec<ClientOptimizer> =
                 (0..dense.len()).map(|_| ClientOptimizer::new(cfg.opt)).collect();
             let mut first_loss = 0.0;
+            let fast_ok = dense.is_empty();
             for s in 0..task.local_iters {
-                let w_c = Weights {
-                    dense: dense_c.clone(),
-                    lr: (0..num_lr)
-                        .map(|l| {
-                            LrWeight::Factored(LowRank {
-                                u: augs_c[l].u_tilde.clone(),
-                                s: s_c[l].clone(),
-                                v: augs_c[l].v_tilde.clone(),
-                            })
-                        })
-                        .collect(),
-                };
-                let g = problem.grad(c, &w_c, LrWant::Coeff, step0 + s as u64);
+                let step = step0 + s as u64;
+                let mut loss = f64::NAN;
+                let mut used_fast = false;
+                if fast_ok {
+                    if let Some(l0) = problem.grad_coeff_into(c, &w_c, step, &mut g_coeff) {
+                        loss = l0;
+                        used_fast = true;
+                    }
+                }
+                if !used_fast {
+                    let g = problem.grad(c, &w_c, LrWant::Coeff, step);
+                    loss = g.loss;
+                    for (buf, gl) in g_coeff.iter_mut().zip(&g.lr) {
+                        buf.copy_from(gl.coeff());
+                    }
+                    for (dl, gd) in g.dense.iter().enumerate() {
+                        opt_d[dl].step(
+                            &mut w_c.dense[dl],
+                            gd,
+                            lr_t,
+                            dense_corrections[task.ordinal][dl].as_ref(),
+                        );
+                    }
+                }
                 if s == 0 {
-                    first_loss = g.loss;
+                    first_loss = loss;
                 }
                 for l in 0..num_lr {
+                    let fac_c = w_c.lr[l].as_factored_mut();
                     opt_s[l].step(
-                        &mut s_c[l],
-                        g.lr[l].coeff(),
+                        &mut fac_c.s,
+                        &g_coeff[l],
                         lr_t,
                         corrections[task.ordinal][l].as_ref(),
                     );
                 }
-                for (dl, (w, gd)) in dense_c.iter_mut().zip(&g.dense).enumerate() {
-                    opt_d[dl].step(w, gd, lr_t, dense_corrections[task.ordinal][dl].as_ref());
-                }
             }
-            (s_c, dense_c, first_loss)
+            let s_c: Vec<Matrix> =
+                w_c.lr.iter().map(|lw| lw.as_factored().s.clone()).collect();
+            (s_c, w_c.dense, first_loss)
         });
         client_wall_s += report.wall_s;
         client_serial_s += report.serial_s;
@@ -311,7 +371,7 @@ pub fn run_fedlrt<P: FedProblem + Sync>(
         // (eq. 10 with non-uniform weights) — reduced in plan order so
         // the trajectory is bitwise independent of the executor.
         let mut s_accum: Vec<Matrix> =
-            augs.iter().map(|a| Matrix::zeros(a.rank(), a.rank())).collect();
+            augs.iter().map(|a| ws.take_mat(a.rank(), a.rank())).collect();
         let mut dense_accum: Vec<Matrix> =
             dense.iter().map(|d| Matrix::zeros(d.rows(), d.cols())).collect();
         let mut local_loss_sum = 0.0;
@@ -326,20 +386,25 @@ pub fn run_fedlrt<P: FedProblem + Sync>(
         }
         net.end_round_trip();
 
-        // (17)-(18) Automatic compression: 2r×2r SVD + truncation.
+        // (17)-(18) Automatic compression: 2r×2r SVD + truncation
+        // (SVD scratch drawn from the cross-round workspace).
         let mut discarded_total = 0.0;
         for l in 0..num_lr {
             let theta = cfg.rank.tau * s_accum[l].fro_norm();
-            let res = truncate(
+            let res = truncate_ws(
                 &augs[l].u_tilde,
                 &s_accum[l],
                 &augs[l].v_tilde,
                 theta,
                 1,
                 cfg.rank.max_rank,
+                &mut ws,
             );
             discarded_total += res.discarded;
             factors[l] = res.fac;
+        }
+        for buf in s_accum {
+            ws.give_mat(buf);
         }
         dense = dense_accum;
 

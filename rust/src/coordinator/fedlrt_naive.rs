@@ -44,6 +44,7 @@ pub fn run_fedlrt_naive<P: FedProblem + Sync>(
 
     let mut net = Network::with_codec(c_num, cfg.codec);
     let executor = Executor::from_kind(cfg.executor);
+    cfg.apply_kernel_threads();
     let mut record = RunRecord::new("fedlrt_naive", experiment, c_num, cfg.seed);
     record.config = cfg.to_json();
 
@@ -74,25 +75,38 @@ pub fn run_fedlrt_naive<P: FedProblem + Sync>(
                 LrGrad::Factors { g_u, g_v, .. } => (g_u.clone(), g_v.clone()),
                 _ => unreachable!(),
             };
-            // Algorithm 6 lines 7–9: client-local augmentation.
+            // Algorithm 6 lines 7–9: client-local augmentation. The
+            // local factorization is trained in place (only S̃ changes
+            // between iterations) through the allocation-free
+            // `grad_coeff_into` fast path where the problem offers one.
             let aug = augment_basis(&fac_c, &g_u, &g_v, 2 * fac_c.rank());
-            let mut s_c = aug.s_tilde.clone();
+            let r2 = aug.rank();
+            let mut w_loc = Weights {
+                dense: vec![],
+                lr: vec![LrWeight::Factored(LowRank {
+                    u: aug.u_tilde,
+                    s: aug.s_tilde,
+                    v: aug.v_tilde,
+                })],
+            };
+            let mut g_coeff = vec![Matrix::zeros(r2, r2)];
             let mut opt = ClientOptimizer::new(cfg.opt);
             for s in 0..task.local_iters {
-                let w_loc = Weights {
-                    dense: vec![],
-                    lr: vec![LrWeight::Factored(LowRank {
-                        u: aug.u_tilde.clone(),
-                        s: s_c.clone(),
-                        v: aug.v_tilde.clone(),
-                    })],
-                };
-                let gg = problem.grad(c, &w_loc, LrWant::Coeff, step0 + s as u64);
-                opt.step(&mut s_c, gg.lr[0].coeff(), lr_t, None);
+                let step = step0 + s as u64;
+                if problem.grad_coeff_into(c, &w_loc, step, &mut g_coeff).is_none() {
+                    let gg = problem.grad(c, &w_loc, LrWant::Coeff, step);
+                    g_coeff[0].copy_from(gg.lr[0].coeff());
+                }
+                let fac_loc = w_loc.lr[0].as_factored_mut();
+                opt.step(&mut fac_loc.s, &g_coeff[0], lr_t, None);
             }
             // The client uploads its full factor triple — bases
             // diverged, so the server cannot reuse shared ones.
-            (aug.u_tilde, s_c, aug.v_tilde)
+            let fac_out = match w_loc.lr.pop() {
+                Some(LrWeight::Factored(f)) => f,
+                _ => unreachable!("factored client state"),
+            };
+            (fac_out.u, fac_out.s, fac_out.v)
         });
         let client_wall_s = report.wall_s;
         let client_serial_s = report.serial_s;

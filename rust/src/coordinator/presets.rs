@@ -28,6 +28,7 @@ pub fn fig4_config(full: bool) -> TrainConfig {
         dropout: 0.0,
         executor: ExecutorKind::Serial,
         codec: CodecKind::DenseF32,
+        kernel_threads: 0,
     }
 }
 
@@ -52,6 +53,7 @@ pub fn fig1_config(full: bool) -> TrainConfig {
         dropout: 0.0,
         executor: ExecutorKind::Serial,
         codec: CodecKind::DenseF32,
+        kernel_threads: 0,
     }
 }
 
@@ -172,6 +174,7 @@ impl VisionPreset {
             dropout: 0.0,
             executor: ExecutorKind::Serial,
             codec: CodecKind::DenseF32,
+            kernel_threads: 0,
         }
     }
 }

@@ -10,5 +10,5 @@
 pub mod qr;
 pub mod svd;
 
-pub use qr::{orthonormality_error, orthonormalize, qr_thin, random_orthonormal};
-pub use svd::{numerical_rank, spectral_norm, svd, Svd};
+pub use qr::{orthonormality_error, orthonormalize, qr_thin, qr_thin_ws, random_orthonormal};
+pub use svd::{numerical_rank, spectral_norm, svd, svd_ws, Svd};

@@ -8,22 +8,53 @@
 //! because `[U | G_U]` is ill-conditioned whenever the basis gradient is
 //! nearly inside span(U) — exactly the near-stationary regime FeDLRT
 //! converges into.
+//!
+//! Scratch layout (see DESIGN.md §Kernel layer): the reflectors live in
+//! **one flat buffer** (`v_j`, length `m−j`, at offset
+//! `j·m − j(j−1)/2`) instead of a `Vec<Vec<f64>>` per column, and the
+//! row-dot scratch is reused across columns — so [`qr_thin_ws`] with a
+//! warm [`Workspace`] allocates only its `Q`/`R` outputs, which is what
+//! makes the per-round augmentation call allocation-free in steady
+//! state.
 
-use crate::tensor::Matrix;
+use crate::tensor::{Matrix, Workspace};
 
 /// Economy QR: returns `(Q, R)` with `Q ∈ R^{m×k}`, `R ∈ R^{k×k}`,
 /// `k = min(m, n)`, `A = Q·R`, `QᵀQ = I`.
 pub fn qr_thin(a: &Matrix) -> (Matrix, Matrix) {
+    let mut ws = Workspace::new();
+    qr_thin_ws(a, &mut ws)
+}
+
+/// [`qr_thin`] with caller-owned scratch: the working copy of `A`, the
+/// flat reflector stack, and the dot buffer all come from `ws` and are
+/// returned to it — zero allocations beyond the `(Q, R)` outputs once
+/// the workspace is warm.
+pub fn qr_thin_ws(a: &Matrix, ws: &mut Workspace) -> (Matrix, Matrix) {
     let (m, n) = a.shape();
     let k = m.min(n);
-    let mut r = a.clone(); // workspace: becomes R in the upper triangle
-    // Householder vectors, stored column by column (v[j] has length m-j).
-    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(k);
+
+    // Working copy of A — becomes R's upper triangle.
+    let mut r = ws.take(m * n);
+    r.copy_from_slice(a.data());
+    // Flat reflector stack: v_j (length m−j) at off(j) = j·m − j(j−1)/2.
+    let off = |j: usize| j * m - j * j.saturating_sub(1) / 2;
+    let vs_len = if k == 0 { 0 } else { k * m - k * (k - 1) / 2 };
+    let mut vs = ws.take(vs_len);
+    // Row-dot scratch, reused across all columns (and by the Q pass).
+    let mut dots = ws.take(n.max(k));
 
     for j in 0..k {
+        let vlen = m - j;
         // Build the Householder vector for column j (rows j..m).
-        let mut v: Vec<f64> = (j..m).map(|i| r[(i, j)]).collect();
+        {
+            let v = &mut vs[off(j)..off(j) + vlen];
+            for (idx, vv) in v.iter_mut().enumerate() {
+                *vv = r[(j + idx) * n + j];
+            }
+        }
         let alpha = {
+            let v = &vs[off(j)..off(j) + vlen];
             let norm = v.iter().map(|x| x * x).sum::<f64>().sqrt();
             if v[0] >= 0.0 {
                 -norm
@@ -33,46 +64,46 @@ pub fn qr_thin(a: &Matrix) -> (Matrix, Matrix) {
         };
         if alpha == 0.0 {
             // Zero column: identity reflector (keep a zero v to stay in sync).
-            vs.push(vec![0.0; m - j]);
+            vs[off(j)..off(j) + vlen].fill(0.0);
             continue;
         }
-        v[0] -= alpha;
-        let vnorm2 = v.iter().map(|x| x * x).sum::<f64>();
+        vs[off(j)] -= alpha;
+        let vnorm2 = vs[off(j)..off(j) + vlen].iter().map(|x| x * x).sum::<f64>();
         if vnorm2 == 0.0 {
-            vs.push(vec![0.0; m - j]);
+            vs[off(j)..off(j) + vlen].fill(0.0);
             continue;
         }
         // Apply H = I − 2 v vᵀ / (vᵀv) to the trailing block of R.
         // Two row-major passes (dots, then update) instead of per-column
         // strided walks — R is row-major, so this streams cache lines.
         let scale = 2.0 / vnorm2;
-        let mut dots = vec![0.0; n - j];
-        for (idx, vi) in v.iter().enumerate() {
-            let row = &r.row(j + idx)[j..];
-            for (d, &x) in dots.iter_mut().zip(row) {
+        let dcount = n - j;
+        dots[..dcount].fill(0.0);
+        let v = &vs[off(j)..off(j) + vlen];
+        for (idx, &vi) in v.iter().enumerate() {
+            let row = &r[(j + idx) * n + j..(j + idx) * n + n];
+            for (d, &x) in dots[..dcount].iter_mut().zip(row) {
                 *d += vi * x;
             }
         }
-        for d in dots.iter_mut() {
+        for d in dots[..dcount].iter_mut() {
             *d *= scale;
         }
-        for (idx, vi) in v.iter().enumerate() {
-            let row = &mut r.row_mut(j + idx)[j..];
-            for (x, &d) in row.iter_mut().zip(&dots) {
+        for (idx, &vi) in v.iter().enumerate() {
+            let row = &mut r[(j + idx) * n + j..(j + idx) * n + n];
+            for (x, &d) in row.iter_mut().zip(&dots[..dcount]) {
                 *x -= d * vi;
             }
         }
-        vs.push(v);
     }
 
-    // Extract the k×n upper-triangular R, then keep the k×k head.
-    let mut r_out = Matrix::zeros(k, n);
+    // Extract the k×k head of the upper-triangular R.
+    let mut r_out = Matrix::zeros(k, k);
     for i in 0..k {
-        for j in i..n {
-            r_out[(i, j)] = r[(i, j)];
+        for j2 in i..k {
+            r_out[(i, j2)] = r[i * n + j2];
         }
     }
-    let r_out = if n > k { r_out.first_cols(k) } else { r_out };
 
     // Accumulate Q = H_0 H_1 … H_{k-1} · [I_k; 0] by applying reflectors
     // in reverse to the identity-embedded matrix.
@@ -81,30 +112,34 @@ pub fn qr_thin(a: &Matrix) -> (Matrix, Matrix) {
         q[(i, i)] = 1.0;
     }
     for j in (0..k).rev() {
-        let v = &vs[j];
+        let vlen = m - j;
+        let v = &vs[off(j)..off(j) + vlen];
         let vnorm2 = v.iter().map(|x| x * x).sum::<f64>();
         if vnorm2 == 0.0 {
             continue;
         }
         let scale = 2.0 / vnorm2;
-        let mut dots = vec![0.0; k];
-        for (idx, vi) in v.iter().enumerate() {
+        dots[..k].fill(0.0);
+        for (idx, &vi) in v.iter().enumerate() {
             let row = q.row(j + idx);
-            for (d, &x) in dots.iter_mut().zip(row) {
+            for (d, &x) in dots[..k].iter_mut().zip(row) {
                 *d += vi * x;
             }
         }
-        for d in dots.iter_mut() {
+        for d in dots[..k].iter_mut() {
             *d *= scale;
         }
-        for (idx, vi) in v.iter().enumerate() {
+        for (idx, &vi) in v.iter().enumerate() {
             let row = q.row_mut(j + idx);
-            for (x, &d) in row.iter_mut().zip(&dots) {
+            for (x, &d) in row.iter_mut().zip(&dots[..k]) {
                 *x -= d * vi;
             }
         }
     }
 
+    ws.give(r);
+    ws.give(vs);
+    ws.give(dots);
     (q, r_out)
 }
 
@@ -115,7 +150,7 @@ pub fn orthonormalize(a: &Matrix) -> Matrix {
 
 /// Max deviation of `QᵀQ` from the identity — orthonormality diagnostic.
 pub fn orthonormality_error(q: &Matrix) -> f64 {
-    let qtq = crate::tensor::matmul_tn(q, q);
+    let qtq = crate::tensor::gram(q);
     let k = qtq.rows();
     let mut err = 0.0f64;
     for i in 0..k {
@@ -191,6 +226,22 @@ mod tests {
         let (q, r) = qr_thin(&a);
         assert_eq!(q.shape(), (6, 3));
         assert!(r.max_abs() == 0.0);
+    }
+
+    #[test]
+    fn warm_workspace_gives_identical_results() {
+        // Scratch reuse across calls must not leak state between
+        // factorizations: the second run over the same input is bitwise
+        // identical, and interleaving different shapes is harmless.
+        let mut rng = Rng::new(109);
+        let a = Matrix::randn(24, 7, &mut rng);
+        let b = Matrix::randn(9, 9, &mut rng);
+        let mut ws = Workspace::new();
+        let (q1, r1) = qr_thin_ws(&a, &mut ws);
+        let _ = qr_thin_ws(&b, &mut ws);
+        let (q2, r2) = qr_thin_ws(&a, &mut ws);
+        assert_eq!(q1, q2);
+        assert_eq!(r1, r2);
     }
 
     #[test]

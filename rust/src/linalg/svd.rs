@@ -12,7 +12,7 @@
 //! the FeDLR-style server reconstruction) that do need larger SVDs — at
 //! their true `O(n³)` cost, which our cost accounting reports.
 
-use crate::tensor::Matrix;
+use crate::tensor::{Matrix, Workspace};
 
 /// Result of a singular value decomposition `A = U · diag(σ) · Vᵀ`.
 #[derive(Debug, Clone)]
@@ -27,12 +27,24 @@ pub struct Svd {
 
 /// Compute the thin SVD of `a` by one-sided Jacobi.
 pub fn svd(a: &Matrix) -> Svd {
+    let mut ws = Workspace::new();
+    svd_ws(a, &mut ws)
+}
+
+/// [`svd`] with caller-owned scratch: the Jacobi working matrices come
+/// from `ws` and are returned to it, so the per-round truncation SVD
+/// reuses its buffers across rounds (outputs `U/σ/V` are still fresh —
+/// they become round state).
+pub fn svd_ws(a: &Matrix, ws: &mut Workspace) -> Svd {
     let (m, n) = a.shape();
     if m >= n {
-        svd_tall(a)
+        svd_tall_ws(a, ws)
     } else {
         // A = U Σ Vᵀ  ⟺  Aᵀ = V Σ Uᵀ.
-        let s = svd_tall(&a.t());
+        let mut at = ws.take_mat(n, m);
+        a.t_into(&mut at);
+        let s = svd_tall_ws(&at, ws);
+        ws.give_mat(at);
         Svd { u: s.v, sigma: s.sigma, v: s.u }
     }
 }
@@ -44,20 +56,26 @@ pub fn svd(a: &Matrix) -> Svd {
 /// streams two contiguous rows instead of two stride-`n` columns —
 /// a large constant-factor win on the 2r×2r truncation SVD that runs
 /// every aggregation round.
-fn svd_tall(a: &Matrix) -> Svd {
+fn svd_tall_ws(a: &Matrix, ws: &mut Workspace) -> Svd {
     let (m, n) = a.shape();
     debug_assert!(m >= n);
-    let mut wt = a.t(); // n×m: row j == column j of A
-    let mut vt = Matrix::eye(n); // row j == column j of V
+    let mut wt = ws.take_mat(n, m); // n×m: row j == column j of A
+    a.t_into(&mut wt);
+    let mut vt = ws.take_mat(n, n); // row j == column j of V
+    for i in 0..n {
+        vt[(i, i)] = 1.0;
+    }
 
     let scale = a.max_abs();
     if scale == 0.0 {
         // Zero matrix: U = any orthonormal completion, σ = 0.
+        ws.give_mat(wt);
+        ws.give_mat(vt);
         let mut u = Matrix::zeros(m, n);
         for i in 0..n {
             u[(i, i)] = 1.0;
         }
-        return Svd { u, sigma: vec![0.0; n], v: vt };
+        return Svd { u, sigma: vec![0.0; n], v: Matrix::eye(n) };
     }
 
     let eps = 1e-15 * scale * scale * (n as f64);
@@ -169,6 +187,8 @@ fn svd_tall(a: &Matrix) -> Svd {
         }
     }
 
+    ws.give_mat(wt);
+    ws.give_mat(vt);
     Svd { u, sigma, v: vv }
 }
 

@@ -17,8 +17,8 @@
 //! equal to `U`, the projected coefficients need no communication at all:
 //! `S̃ = Ũᵀ U S Vᵀ Ṽ = [[S, 0], [0, 0]]`.
 
-use crate::linalg::qr_thin;
-use crate::tensor::Matrix;
+use crate::linalg::qr_thin_ws;
+use crate::tensor::{matmul_into, matmul_tn_into, Matrix, Workspace};
 
 use super::factorization::LowRank;
 
@@ -64,12 +64,27 @@ impl AugmentedBasis {
 /// equal to `U`) but keeps the existing basis *bit-identical*, which the
 /// "broadcast only `Ū`" optimization relies on.
 pub fn augment_basis(fac: &LowRank, g_u: &Matrix, g_v: &Matrix, max_rank: usize) -> AugmentedBasis {
+    let mut ws = Workspace::new();
+    augment_basis_ws(fac, g_u, g_v, max_rank, &mut ws)
+}
+
+/// [`augment_basis`] with caller-owned scratch: the projection
+/// intermediates and the QR's reflector stack all come from `ws`, so
+/// the per-round server augmentation reuses its buffers across rounds
+/// (the returned augmented bases are fresh — they become round state).
+pub fn augment_basis_ws(
+    fac: &LowRank,
+    g_u: &Matrix,
+    g_v: &Matrix,
+    max_rank: usize,
+    ws: &mut Workspace,
+) -> AugmentedBasis {
     let r = fac.rank();
     let a = r.min(max_rank.saturating_sub(r));
     assert!(a > 0 || max_rank <= r, "augmentation with zero budget");
 
-    let u_bar = new_directions(&fac.u, g_u, a);
-    let v_bar = new_directions(&fac.v, g_v, a);
+    let u_bar = new_directions(&fac.u, g_u, a, ws);
+    let v_bar = new_directions(&fac.v, g_v, a, ws);
 
     let u_tilde = fac.u.hcat(&u_bar);
     let v_tilde = fac.v.hcat(&v_bar);
@@ -81,35 +96,41 @@ pub fn augment_basis(fac: &LowRank, g_u: &Matrix, g_v: &Matrix, max_rank: usize)
 
 /// Orthonormal directions spanning `(I − B Bᵀ) G`, truncated/padded to
 /// exactly `a` columns.
-fn new_directions(basis: &Matrix, g: &Matrix, a: usize) -> Matrix {
+fn new_directions(basis: &Matrix, g: &Matrix, a: usize, ws: &mut Workspace) -> Matrix {
     let m = basis.rows();
     if a == 0 {
         return Matrix::zeros(m, 0);
     }
-    // Project out the existing span: G_perp = G − B (Bᵀ G).
-    let btg = crate::tensor::matmul_tn(basis, g);
-    let bbg = crate::tensor::matmul(basis, &btg);
-    let mut g_perp = g.sub(&bbg);
-    // Second projection pass (re-orthogonalization) for stability when
-    // G is nearly inside span(B) — the near-stationary regime.
-    let btg2 = crate::tensor::matmul_tn(basis, &g_perp);
-    let bbg2 = crate::tensor::matmul(basis, &btg2);
-    g_perp = g_perp.sub(&bbg2);
+    let r = basis.cols();
+    let gc = g.cols();
+    // Project out the existing span, G_perp = G − B (Bᵀ G), run twice
+    // (re-orthogonalization) for stability when G is nearly inside
+    // span(B) — the near-stationary regime. Both intermediates live in
+    // workspace scratch; the product is subtracted in place by negating
+    // the small BᵀG factor and accumulating with β = 1.
+    let mut btg = ws.take_mat(r, gc);
+    let mut g_perp = ws.take_mat(m, gc);
+    g_perp.copy_from(g);
+    for _pass in 0..2 {
+        matmul_tn_into(basis, &g_perp, &mut btg, 0.0);
+        btg.scale_inplace(-1.0);
+        matmul_into(basis, &btg, &mut g_perp, 1.0);
+    }
 
-    let (q, r_fac) = qr_thin(&g_perp);
+    let (q, r_fac) = qr_thin_ws(&g_perp, ws);
+    ws.give_mat(btg);
+    ws.give_mat(g_perp);
     // Drop numerically-null directions (zero diagonal in R): replacing
     // them with junk columns would pollute the augmented basis.
     let tol = 1e-12 * (1.0 + g.max_abs()) * (m as f64).sqrt();
-    let mut cols = Vec::new();
+    let mut out = Matrix::zeros(m, a);
+    let mut dst = 0;
     for j in 0..q.cols().min(a) {
         if r_fac[(j, j)].abs() > tol {
-            cols.push(j);
-        }
-    }
-    let mut out = Matrix::zeros(m, a);
-    for (dst, &src) in cols.iter().enumerate() {
-        for i in 0..m {
-            out[(i, dst)] = q[(i, src)];
+            for i in 0..m {
+                out[(i, dst)] = q[(i, j)];
+            }
+            dst += 1;
         }
     }
     // Remaining columns stay zero — harmless padding: zero basis columns

@@ -9,6 +9,6 @@ pub mod augment;
 pub mod factorization;
 pub mod truncate;
 
-pub use augment::{augment_basis, AugmentedBasis};
+pub use augment::{augment_basis, augment_basis_ws, AugmentedBasis};
 pub use factorization::LowRank;
-pub use truncate::{truncate, TruncationResult};
+pub use truncate::{truncate, truncate_ws, TruncationResult};

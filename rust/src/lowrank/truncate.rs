@@ -13,8 +13,8 @@
 //! consistency, Appendix D) and bounds the compression error by `ϑ`,
 //! which is exactly the `+Lϑ` term in Theorems 2–4.
 
-use crate::linalg::svd;
-use crate::tensor::{matmul, Matrix};
+use crate::linalg::svd_ws;
+use crate::tensor::{matmul, Matrix, Workspace};
 
 use super::factorization::LowRank;
 
@@ -44,7 +44,25 @@ pub fn truncate(
     min_rank: usize,
     max_rank: usize,
 ) -> TruncationResult {
-    let dec = svd(s_star);
+    let mut ws = Workspace::new();
+    truncate_ws(u_tilde, s_star, v_tilde, theta, min_rank, max_rank, &mut ws)
+}
+
+/// [`truncate`] with caller-owned scratch: the 2r×2r SVD's working
+/// matrices come from `ws` and return to it, so the per-round
+/// compression step reuses its buffers across rounds. The truncated
+/// factors are fresh allocations — they become the next round's state.
+#[allow(clippy::too_many_arguments)]
+pub fn truncate_ws(
+    u_tilde: &Matrix,
+    s_star: &Matrix,
+    v_tilde: &Matrix,
+    theta: f64,
+    min_rank: usize,
+    max_rank: usize,
+    ws: &mut Workspace,
+) -> TruncationResult {
+    let dec = svd_ws(s_star, ws);
     let r1 = dec.rank_for_tolerance(theta).clamp(min_rank.max(1), max_rank);
     let (p, sig, q) = dec.truncate(r1);
     let discarded = dec.sigma[r1..].iter().map(|x| x * x).sum::<f64>().sqrt();

@@ -99,6 +99,11 @@ fn cmd_train(rest: &[String]) -> Result<()> {
         .opt("dropout", "0.0", "per-round client dropout probability")
         .opt("executor", "serial", "client execution engine: serial|threads|threads:N")
         .opt("codec", "dense", "wire codec: dense|f16|q8")
+        .opt(
+            "kernel-threads",
+            "0",
+            "matmul kernel worker threads (0 = env FEDLRT_KERNEL_THREADS or 1)",
+        )
         .opt("out", "results/train.jsonl", "JSONL output path");
     let a = cli.parse(rest).unwrap_or_else(|e| {
         eprintln!("{e}");
@@ -139,6 +144,7 @@ fn cmd_train(rest: &[String]) -> Result<()> {
         dropout: a.f64("dropout"),
         executor: parse_executor(a.str("executor")),
         codec: parse_codec(a.str("codec")),
+        kernel_threads: a.usize("kernel-threads"),
     };
     let rec = match a.str("algo") {
         "fedlrt" => run_fedlrt(&problem, &cfg, "cli_train"),
@@ -185,7 +191,12 @@ fn cmd_lsq(rest: &[String]) -> Result<()> {
         .opt("seed", "0", "random seed")
         .opt("dropout", "0.0", "per-round client dropout probability")
         .opt("executor", "serial", "client execution engine: serial|threads|threads:N")
-        .opt("codec", "dense", "wire codec: dense|f16|q8");
+        .opt("codec", "dense", "wire codec: dense|f16|q8")
+        .opt(
+            "kernel-threads",
+            "0",
+            "matmul kernel worker threads (0 = env FEDLRT_KERNEL_THREADS or 1)",
+        );
     let a = cli.parse(rest).unwrap_or_else(|e| {
         eprintln!("{e}");
         std::process::exit(2)
@@ -221,6 +232,7 @@ fn cmd_lsq(rest: &[String]) -> Result<()> {
         dropout: a.f64("dropout"),
         executor: parse_executor(a.str("executor")),
         codec: parse_codec(a.str("codec")),
+        kernel_threads: a.usize("kernel-threads"),
         ..TrainConfig::default()
     };
     let rec = match a.str("algo") {

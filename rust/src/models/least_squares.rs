@@ -24,11 +24,26 @@
 //! ```
 //!
 //! which is `O(N n r)` — the `O(s*b(4nr+4r²))` row of Table 1.
+//!
+//! Performance structure (see DESIGN.md §Kernel layer): every client
+//! owns a [`ClientScratch`] behind its own lock — the projection cache
+//! `(A, B)`, the `A·S̃` product buffer, and a [`Workspace`] pool. The
+//! factored gradients fuse the `diag(res)` scaling into the skinny
+//! projection kernels ([`matmul_tn_scaled_into`]); the dense gradient
+//! scales `P_y` into a pooled buffer and runs the packed `Aᵀ·B` kernel
+//! (no per-call `P_y` clone either way), residuals are computed
+//! exactly once per gradient, and
+//! the coefficient-gradient path ([`FedProblem::grad_coeff_into`])
+//! performs **zero heap allocations** in steady state — asserted by the
+//! counting-allocator check in `benches/micro_hotpath.rs`.
 
 use std::sync::Mutex;
 
 use crate::lowrank::LowRank;
-use crate::tensor::{matmul, matmul_nt, matmul_tn, Matrix};
+use crate::tensor::{
+    gram, matmul, matmul_into, matmul_into_view, matmul_nt_into, matmul_tn_into_view,
+    matmul_tn_scaled_into, MatMut, MatRef, Matrix, Workspace,
+};
 use crate::util::rng::Rng;
 
 use super::{FedProblem, Grads, LrGrad, LrWant, LrWeight, ProblemSpec, Weights};
@@ -66,7 +81,8 @@ impl Shard {
         self.f.len()
     }
 
-    /// Residuals `p(x_i)ᵀ W p(y_i) − f_i` for dense `W`.
+    /// Residuals `p(x_i)ᵀ W p(y_i) − f_i` for dense `W` (eval-only
+    /// path; the gradient path fuses this computation instead).
     fn residuals_dense(&self, w: &Matrix) -> Vec<f64> {
         // T = P_x W (N×n), res_i = ⟨T_i, P_y_i⟩ − f_i.
         let t = matmul(&self.px, w);
@@ -89,24 +105,8 @@ impl Shard {
         res.iter().map(|r| r * r).sum::<f64>() / (2.0 * self.len() as f64)
     }
 
-    /// `∇_W = P_xᵀ diag(res) P_y / N`.
-    fn grad_dense(&self, w: &Matrix) -> (f64, Matrix) {
-        let res = self.residuals_dense(w);
-        let n_inv = 1.0 / self.len() as f64;
-        // scaled = diag(res) P_y
-        let mut scaled = self.py.clone();
-        for i in 0..self.len() {
-            let r = res[i] * n_inv;
-            for v in scaled.row_mut(i) {
-                *v *= r;
-            }
-        }
-        let g = matmul_tn(&self.px, &scaled);
-        let loss = res.iter().map(|r| r * r).sum::<f64>() / (2.0 * self.len() as f64);
-        (loss, g)
-    }
-
-    /// Factored-path intermediates `A = P_x U`, `B = P_y V`, residuals.
+    /// Factored-path intermediates `A = P_x U`, `B = P_y V`, residuals
+    /// (eval-only path).
     fn factored_parts(&self, fac: &LowRank) -> (Matrix, Matrix, Vec<f64>) {
         let a = matmul(&self.px, &fac.u); // N×r
         let b = matmul(&self.py, &fac.v); // N×r
@@ -130,51 +130,6 @@ impl Shard {
         let (_, _, res) = self.factored_parts(fac);
         res.iter().map(|r| r * r).sum::<f64>() / (2.0 * self.len() as f64)
     }
-
-    /// `(loss, G_U, G_V, G_S)` — never materializes `∇_W`.
-    fn grad_factors(&self, fac: &LowRank) -> (f64, Matrix, Matrix, Matrix) {
-        let (a, b, res) = self.factored_parts(fac);
-        let n_inv = 1.0 / self.len() as f64;
-        // rb = diag(res) B, ra = diag(res) A (scaled by 1/N)
-        let mut rb = b.clone();
-        let mut ra = a.clone();
-        for i in 0..self.len() {
-            let r = res[i] * n_inv;
-            for v in rb.row_mut(i) {
-                *v *= r;
-            }
-            for v in ra.row_mut(i) {
-                *v *= r;
-            }
-        }
-        // G_S = Aᵀ (diag(res) B) — note A already unscaled, rb has 1/N.
-        let g_s = matmul_tn(&a, &rb);
-        // G_U = P_xᵀ (diag(res) B Sᵀ)
-        let g_u = matmul_tn(&self.px, &matmul_nt(&rb, &fac.s));
-        // G_V = P_yᵀ (diag(res) A S)
-        let g_v = matmul_tn(&self.py, &matmul(&ra, &fac.s));
-        let loss = res.iter().map(|r| r * r).sum::<f64>() / (2.0 * self.len() as f64);
-        (loss, g_u, g_v, g_s)
-    }
-
-    /// Coefficient gradient only: `G_S = Aᵀ diag(res) B / N`.
-    /// (Uncached reference path; the production path is
-    /// `LeastSquares::grad_coeff_cached`. Kept for tests/documentation.)
-    #[allow(dead_code)]
-    fn grad_coeff(&self, fac: &LowRank) -> (f64, Matrix) {
-        let (a, b, res) = self.factored_parts(fac);
-        let n_inv = 1.0 / self.len() as f64;
-        let mut rb = b;
-        for i in 0..self.len() {
-            let r = res[i] * n_inv;
-            for v in rb.row_mut(i) {
-                *v *= r;
-            }
-        }
-        let g_s = matmul_tn(&a, &rb);
-        let loss = res.iter().map(|r| r * r).sum::<f64>() / (2.0 * self.len() as f64);
-        (loss, g_s)
-    }
 }
 
 /// One client's cached basis projections `(A, B) = (P_x U, P_y V)`.
@@ -186,6 +141,31 @@ struct ProjCache {
     b: Matrix,
 }
 
+/// Per-client reusable numeric state: the projection cache plus every
+/// scratch buffer the gradient paths need. One lock *per client* (not
+/// one shared map) so the thread-pool executor's clients never contend:
+/// a client's gradient work only ever touches its own slot.
+#[derive(Debug)]
+struct ClientScratch {
+    /// Cached `(A, B)` keyed by a basis fingerprint; rebuilt in place
+    /// (no reallocation) when the bases change at equal rank.
+    proj: Option<ProjCache>,
+    /// `A·S̃` product, flat `N×r̃` (resized only when the rank changes).
+    asb: Vec<f64>,
+    /// Buffer pool for the dense/factored gradient paths.
+    ws: Workspace,
+}
+
+impl ClientScratch {
+    fn new() -> ClientScratch {
+        ClientScratch { proj: None, asb: Vec::new(), ws: Workspace::new() }
+    }
+}
+
+fn fresh_scratch(num_clients: usize) -> Vec<Mutex<ClientScratch>> {
+    (0..num_clients).map(|_| Mutex::new(ClientScratch::new())).collect()
+}
+
 /// The federated least-squares problem.
 #[derive(Debug)]
 pub struct LeastSquares {
@@ -193,17 +173,16 @@ pub struct LeastSquares {
     shards: Vec<Shard>,
     /// Known global minimizer (homogeneous case), for Fig 4's error plot.
     w_star: Option<Matrix>,
-    /// Per-client cache of the projected features `(A, B) = (P_x U, P_y V)`.
+    /// Per-client scratch: projection cache `(A, B) = (P_x U, P_y V)`
+    /// and gradient buffers.
     ///
     /// During the client inner loop (eq. 7/8) the bases are frozen and
     /// only `S̃` changes, so the `O(N·n·r)` projections are reusable
     /// across all `s*` iterations — this is precisely what a real FeDLRT
     /// client implementation would precompute after basis broadcast.
     /// Guarded by a cheap content fingerprint of the bases so stale
-    /// entries can never be served. One lock *per client* (not one
-    /// shared map) so the thread-pool executor's clients never contend:
-    /// a client's gradient work only ever touches its own slot.
-    proj_cache: Vec<Mutex<Option<ProjCache>>>,
+    /// entries can never be served.
+    scratch: Vec<Mutex<ClientScratch>>,
 }
 
 impl Clone for LeastSquares {
@@ -212,13 +191,9 @@ impl Clone for LeastSquares {
             n: self.n,
             shards: self.shards.clone(),
             w_star: self.w_star.clone(),
-            proj_cache: fresh_cache(self.shards.len()),
+            scratch: fresh_scratch(self.shards.len()),
         }
     }
-}
-
-fn fresh_cache(num_clients: usize) -> Vec<Mutex<Option<ProjCache>>> {
-    (0..num_clients).map(|_| Mutex::new(None)).collect()
 }
 
 impl LeastSquares {
@@ -240,8 +215,8 @@ impl LeastSquares {
             let f = targets(&px, &py, &w_r);
             shards.push(Shard { px, py, f });
         }
-        let proj_cache = fresh_cache(shards.len());
-        LeastSquares { n, shards, w_star: Some(w_r), proj_cache }
+        let scratch = fresh_scratch(shards.len());
+        LeastSquares { n, shards, w_star: Some(w_r), scratch }
     }
 
     /// Heterogeneous test (§4.1 / Fig 1): per-client rank-1 targets
@@ -271,8 +246,8 @@ impl LeastSquares {
             shards.push(Shard { px, py, f });
         }
         let w_star = solve_global_minimizer(n, &shards);
-        let proj_cache = fresh_cache(shards.len());
-        LeastSquares { n, shards, w_star: Some(w_star), proj_cache }
+        let scratch = fresh_scratch(shards.len());
+        LeastSquares { n, shards, w_star: Some(w_star), scratch }
     }
 
     pub fn dim(&self) -> usize {
@@ -299,35 +274,160 @@ impl LeastSquares {
         h
     }
 
-    /// Coefficient gradient with the per-client projection cache: the
-    /// `O(N·n·r)` products `A = P_x U`, `B = P_y V` are computed once per
-    /// basis broadcast and reused across the s* local iterations.
-    fn grad_coeff_cached(&self, c: usize, fac: &LowRank) -> (f64, Matrix) {
-        let key = Self::basis_fingerprint(&fac.u, &fac.v);
-        let mut slot = self.proj_cache[c].lock().expect("projection cache poisoned");
+    /// Dense gradient `∇_W = P_xᵀ diag(res) P_y / N` — residuals
+    /// computed exactly once (fused with the loss), and the scaled
+    /// `diag(res/N)·P_y` lands in a pooled workspace buffer (no `P_y`
+    /// clone, allocation-free once warm) so the dominant `n×N×n`
+    /// projection runs through the packed `Aᵀ·B` kernel at full speed.
+    fn grad_dense(&self, c: usize, w: &Matrix) -> (f64, Matrix) {
         let sh = &self.shards[c];
-        let stale = match slot.as_ref() {
-            Some(entry) => entry.key != key,
+        let mut slot = self.scratch[c].lock().expect("client scratch poisoned");
+        let ws = &mut slot.ws;
+        let n_rows = sh.len();
+        let n = w.cols();
+        let n_inv = 1.0 / n_rows as f64;
+        // T = P_x W in workspace scratch; res_i = ⟨T_i, P_y_i⟩ − f_i.
+        let mut t = ws.take(n_rows * n);
+        matmul_into_view(sh.px.view(), w.view(), MatMut::new(&mut t, n_rows, n, n), 0.0);
+        let mut res = ws.take(n_rows);
+        let mut loss = 0.0;
+        for i in 0..n_rows {
+            let ti = &t[i * n..(i + 1) * n];
+            let pyi = sh.py.row(i);
+            let mut acc = 0.0;
+            for j in 0..n {
+                acc += ti[j] * pyi[j];
+            }
+            let rv = acc - sh.f[i];
+            res[i] = rv;
+            loss += rv * rv;
+        }
+        // scaled = diag(res/N)·P_y, reusing T's slot-mate in the pool.
+        let mut scaled = ws.take(n_rows * n);
+        for i in 0..n_rows {
+            let w_i = res[i] * n_inv;
+            let src = sh.py.row(i);
+            let dst = &mut scaled[i * n..(i + 1) * n];
+            for (d, &s) in dst.iter_mut().zip(src) {
+                *d = w_i * s;
+            }
+        }
+        let mut g = Matrix::zeros(n, n);
+        matmul_tn_into_view(
+            sh.px.view(),
+            MatRef::new(&scaled, n_rows, n, n),
+            g.view_mut(),
+            0.0,
+        );
+        ws.give(t);
+        ws.give(res);
+        ws.give(scaled);
+        (loss / (2.0 * n_rows as f64), g)
+    }
+
+    /// `(loss, G_U, G_V, G_S)` — never materializes `∇_W`; all
+    /// intermediates live in the client's workspace.
+    fn grad_factors(&self, c: usize, fac: &LowRank) -> (f64, Matrix, Matrix, Matrix) {
+        let sh = &self.shards[c];
+        let mut slot = self.scratch[c].lock().expect("client scratch poisoned");
+        let ws = &mut slot.ws;
+        let n_rows = sh.len();
+        let r = fac.rank();
+        let n = self.n;
+        let n_inv = 1.0 / n_rows as f64;
+        let mut a = ws.take_mat(n_rows, r);
+        matmul_into(&sh.px, &fac.u, &mut a, 0.0);
+        let mut b = ws.take_mat(n_rows, r);
+        matmul_into(&sh.py, &fac.v, &mut b, 0.0);
+        let mut asb = ws.take_mat(n_rows, r);
+        matmul_into(&a, &fac.s, &mut asb, 0.0);
+        let mut res = ws.take(n_rows);
+        let mut loss = 0.0;
+        for i in 0..n_rows {
+            let ai = asb.row(i);
+            let bi = b.row(i);
+            let mut pred = 0.0;
+            for j in 0..r {
+                pred += ai[j] * bi[j];
+            }
+            let rv = pred - sh.f[i];
+            res[i] = rv;
+            loss += rv * rv;
+        }
+        // G_S = Aᵀ diag(res) B / N.
+        let mut g_s = Matrix::zeros(r, r);
+        matmul_tn_scaled_into(&a, &b, &res, n_inv, &mut g_s, 0.0);
+        // G_U = P_xᵀ diag(res) B Sᵀ / N = (P_xᵀ diag(res/N) B) · Sᵀ.
+        let mut m_u = ws.take_mat(n, r);
+        matmul_tn_scaled_into(&sh.px, &b, &res, n_inv, &mut m_u, 0.0);
+        let mut g_u = Matrix::zeros(n, r);
+        matmul_nt_into(&m_u, &fac.s, &mut g_u, 0.0);
+        // G_V = P_yᵀ diag(res) A S / N = (P_yᵀ diag(res/N) A) · S.
+        let mut m_v = ws.take_mat(n, r);
+        matmul_tn_scaled_into(&sh.py, &a, &res, n_inv, &mut m_v, 0.0);
+        let mut g_v = Matrix::zeros(n, r);
+        matmul_into(&m_v, &fac.s, &mut g_v, 0.0);
+        ws.give_mat(a);
+        ws.give_mat(b);
+        ws.give_mat(asb);
+        ws.give_mat(m_u);
+        ws.give_mat(m_v);
+        ws.give(res);
+        (loss / (2.0 * n_rows as f64), g_u, g_v, g_s)
+    }
+
+    /// Coefficient gradient written into `out` — the zero-allocation
+    /// client-inner-loop path. The `O(N·n·r)` projections `A = P_x U`,
+    /// `B = P_y V` are computed once per basis broadcast (rebuilt in
+    /// place at equal rank) and reused across the s* local iterations;
+    /// `A·S̃` lands in the flat per-client scratch; `G_S` accumulates
+    /// directly into `out`.
+    fn grad_coeff_cached_into(&self, c: usize, fac: &LowRank, out: &mut Matrix) -> f64 {
+        let key = Self::basis_fingerprint(&fac.u, &fac.v);
+        let sh = &self.shards[c];
+        let r = fac.rank();
+        let n_rows = sh.len();
+        assert_eq!(out.shape(), (r, r), "coefficient-gradient buffer shape");
+        let mut slot = self.scratch[c].lock().expect("client scratch poisoned");
+        let scr = &mut *slot;
+        let stale = match &scr.proj {
+            Some(p) => p.key != key,
             None => true,
         };
         if stale {
-            *slot = Some(ProjCache {
-                key,
-                a: matmul(&sh.px, &fac.u),
-                b: matmul(&sh.py, &fac.v),
-            });
+            let reusable = matches!(
+                &scr.proj,
+                Some(p) if p.a.shape() == (n_rows, r) && p.b.shape() == (n_rows, r)
+            );
+            if reusable {
+                // Same shapes: rebuild the projections in place — the
+                // once-per-round steady-state path stays allocation-free.
+                let p = scr.proj.as_mut().expect("reusable cache entry");
+                matmul_into(&sh.px, &fac.u, &mut p.a, 0.0);
+                matmul_into(&sh.py, &fac.v, &mut p.b, 0.0);
+                p.key = key;
+            } else {
+                scr.proj = Some(ProjCache {
+                    key,
+                    a: matmul(&sh.px, &fac.u),
+                    b: matmul(&sh.py, &fac.v),
+                });
+            }
         }
-        let entry = slot.as_ref().expect("cache entry just written");
-        let (a, b) = (&entry.a, &entry.b);
-        // res_i = a_iᵀ S b_i − f_i
-        let asb = matmul(a, &fac.s);
-        let r = fac.rank();
-        let n_inv = 1.0 / sh.len() as f64;
+        if scr.asb.len() != n_rows * r {
+            scr.asb.resize(n_rows * r, 0.0);
+        }
+        let proj = scr.proj.as_ref().expect("cache entry just written");
+        let (a, b) = (&proj.a, &proj.b);
+        // asb = A·S̃ into the flat scratch (small-product path: no
+        // packing buffers, no allocation).
+        matmul_into_view(a.view(), fac.s.view(), MatMut::new(&mut scr.asb, n_rows, r, r), 0.0);
+        // res_i = a_iᵀ S b_i − f_i; G_S accumulates directly into out.
+        out.data_mut().fill(0.0);
+        let n_inv = 1.0 / n_rows as f64;
         let mut loss = 0.0;
-        // rb = diag(res)·B/N without cloning B: accumulate G_S directly.
-        let mut g_s = Matrix::zeros(r, r);
-        for i in 0..sh.len() {
-            let ai = asb.row(i);
+        for i in 0..n_rows {
+            let ai = &scr.asb[i * r..(i + 1) * r];
             let bi = b.row(i);
             let mut pred = 0.0;
             for j in 0..r {
@@ -340,14 +440,14 @@ impl LeastSquares {
             for p in 0..r {
                 let ap = arow[p] * w;
                 if ap != 0.0 {
-                    let row = g_s.row_mut(p);
+                    let row = out.row_mut(p);
                     for (gq, &bq) in row.iter_mut().zip(bi) {
                         *gq += ap * bq;
                     }
                 }
             }
         }
-        (loss / (2.0 * sh.len() as f64), g_s)
+        loss / (2.0 * n_rows as f64)
     }
 
     /// The known global minimizer, if any.
@@ -409,7 +509,8 @@ fn solve_global_minimizer(n: usize, shards: &[Shard]) -> Matrix {
                 }
             }
         }
-        let ata = matmul_tn(&a, &a);
+        // AᵀA via the symmetry-exploiting gram kernel.
+        let ata = gram(&a);
         m.axpy(scale, &ata);
         let atf = {
             let mut v = vec![0.0; d];
@@ -481,23 +582,43 @@ impl FedProblem for LeastSquares {
     }
 
     fn grad(&self, c: usize, w: &Weights, want: LrWant, _step: u64) -> Grads {
-        let shard = &self.shards[c];
         let (loss, lr_grad) = match (want, &w.lr[0]) {
             (LrWant::Dense, LrWeight::Dense(wm)) => {
-                let (loss, g) = shard.grad_dense(wm);
+                let (loss, g) = self.grad_dense(c, wm);
                 (loss, LrGrad::Dense(g))
             }
             (LrWant::Factors, LrWeight::Factored(f)) => {
-                let (loss, g_u, g_v, g_s) = shard.grad_factors(f);
+                let (loss, g_u, g_v, g_s) = self.grad_factors(c, f);
                 (loss, LrGrad::Factors { g_u, g_v, g_s })
             }
             (LrWant::Coeff, LrWeight::Factored(f)) => {
-                let (loss, g_s) = self.grad_coeff_cached(c, f);
+                let mut g_s = Matrix::zeros(f.rank(), f.rank());
+                let loss = self.grad_coeff_cached_into(c, f, &mut g_s);
                 (loss, LrGrad::Coeff(g_s))
             }
             _ => panic!("weight representation does not match requested gradient"),
         };
         Grads { loss, dense: vec![], lr: vec![lr_grad] }
+    }
+
+    fn grad_coeff_into(
+        &self,
+        c: usize,
+        w: &Weights,
+        _step: u64,
+        out: &mut [Matrix],
+    ) -> Option<f64> {
+        if !w.dense.is_empty() || w.lr.len() != 1 || out.len() != 1 {
+            return None;
+        }
+        let f = match &w.lr[0] {
+            LrWeight::Factored(f) => f,
+            LrWeight::Dense(_) => return None,
+        };
+        if out[0].shape() != (f.rank(), f.rank()) {
+            return None;
+        }
+        Some(self.grad_coeff_cached_into(c, f, &mut out[0]))
     }
 
     fn global_loss(&self, w: &Weights) -> f64 {
@@ -518,6 +639,7 @@ impl FedProblem for LeastSquares {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::{matmul_nt, matmul_tn};
     use crate::util::prop;
 
     #[test]
@@ -593,6 +715,28 @@ mod tests {
         let g_c = prob.grad(0, &wts_f, LrWant::Coeff, 0);
         assert!(g_c.lr[0].coeff().sub(g_s).max_abs() < 1e-12);
         assert!((g_c.loss - g_fac.loss).abs() < 1e-12);
+    }
+
+    #[test]
+    fn grad_coeff_into_matches_grad_and_does_not_allocate_state() {
+        // The fast path must write exactly what grad(LrWant::Coeff)
+        // returns, and repeated calls with frozen bases must reuse the
+        // projection cache (same result bitwise).
+        let mut rng = Rng::new(609);
+        let prob = LeastSquares::homogeneous(8, 2, 120, 2, &mut rng);
+        let fac = LowRank::random_init(8, 8, 3, &mut rng);
+        let w = Weights { dense: vec![], lr: vec![LrWeight::Factored(fac.clone())] };
+        let via_grad = prob.grad(1, &w, LrWant::Coeff, 0);
+        let mut out = vec![Matrix::zeros(3, 3)];
+        let loss = prob.grad_coeff_into(1, &w, 0, &mut out).expect("fast path");
+        assert_eq!(loss.to_bits(), via_grad.loss.to_bits());
+        assert_eq!(&out[0], via_grad.lr[0].coeff());
+        // Second call (warm cache) is bitwise identical.
+        let loss2 = prob.grad_coeff_into(1, &w, 0, &mut out).expect("fast path");
+        assert_eq!(loss2.to_bits(), loss.to_bits());
+        // Mismatched buffer shape falls back gracefully.
+        let mut bad = vec![Matrix::zeros(2, 2)];
+        assert!(prob.grad_coeff_into(1, &w, 0, &mut bad).is_none());
     }
 
     #[test]

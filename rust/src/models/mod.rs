@@ -43,7 +43,25 @@ impl LrWeight {
         }
     }
 
+    /// Mutable access to the factorization — the client inner loop
+    /// trains `S̃` in place instead of rebuilding `Weights` per step.
+    pub fn as_factored_mut(&mut self) -> &mut LowRank {
+        match self {
+            LrWeight::Factored(f) => f,
+            LrWeight::Dense(_) => panic!("expected factored weight"),
+        }
+    }
+
     pub fn as_dense(&self) -> &Matrix {
+        match self {
+            LrWeight::Dense(m) => m,
+            LrWeight::Factored(_) => panic!("expected dense weight"),
+        }
+    }
+
+    /// Mutable access to the dense representation (dense baselines'
+    /// in-place client iterations).
+    pub fn as_dense_mut(&mut self) -> &mut Matrix {
         match self {
             LrWeight::Dense(m) => m,
             LrWeight::Factored(_) => panic!("expected dense weight"),
@@ -141,6 +159,27 @@ pub trait FedProblem {
     /// use a deterministic schedule so runs are reproducible); convex
     /// full-batch problems ignore it.
     fn grad(&self, c: usize, w: &Weights, want: LrWant, step: u64) -> Grads;
+
+    /// Allocation-free fast path for the client inner loop: write the
+    /// coefficient gradients `∇_S̃ L_c` into `out` (one preallocated
+    /// `r̃×r̃` matrix per low-rank layer, shapes matching `w`) and
+    /// return the loss.
+    ///
+    /// Returns `None` when the problem has no such path (the caller
+    /// then falls back to [`FedProblem::grad`] with [`LrWant::Coeff`]).
+    /// Implementations must produce exactly the gradients `grad` would
+    /// — this is the same computation minus the per-call allocations,
+    /// which is what makes the steady-state round loop allocation-free
+    /// (asserted by the counting-allocator check in `micro_hotpath`).
+    fn grad_coeff_into(
+        &self,
+        _c: usize,
+        _w: &Weights,
+        _step: u64,
+        _out: &mut [Matrix],
+    ) -> Option<f64> {
+        None
+    }
 
     /// Global loss `L(w) = (1/C) Σ_c L_c(w)` on the full data.
     fn global_loss(&self, w: &Weights) -> f64;

@@ -38,6 +38,13 @@ impl Sgd {
     /// `extra` is an additive gradient correction (the variance
     /// correction term `V_c`), applied before momentum.
     pub fn step(&mut self, w: &mut Matrix, g: &Matrix, lr: f64, extra: Option<&Matrix>) {
+        if extra.is_none() && self.cfg.weight_decay == 0.0 && self.cfg.momentum == 0.0 {
+            // Plain SGD: no effective-gradient copy needed — keeps the
+            // client inner loop allocation-free (bitwise identical to
+            // the general path below).
+            w.axpy(-lr, g);
+            return;
+        }
         let mut eff = g.clone();
         if let Some(e) = extra {
             eff.axpy(1.0, e);

@@ -112,6 +112,14 @@ impl Matrix {
     /// Transpose (copied).
     pub fn t(&self) -> Matrix {
         let mut out = Matrix::zeros(self.cols, self.rows);
+        self.t_into(&mut out);
+        out
+    }
+
+    /// Transpose into a preallocated `cols × rows` matrix (workspace
+    /// reuse in the SVD working-matrix setup).
+    pub fn t_into(&self, out: &mut Matrix) {
+        assert_eq!(out.shape(), (self.cols, self.rows), "t_into: output shape");
         // Blocked transpose for cache friendliness on large matrices.
         const B: usize = 32;
         for ib in (0..self.rows).step_by(B) {
@@ -123,7 +131,6 @@ impl Matrix {
                 }
             }
         }
-        out
     }
 
     /// Frobenius norm.
@@ -241,6 +248,19 @@ impl Matrix {
     /// True if every entry is finite.
     pub fn is_finite(&self) -> bool {
         self.data.iter().all(|x| x.is_finite())
+    }
+
+    /// Consume the matrix and recover its backing buffer (workspace
+    /// recycling — see [`super::workspace::Workspace`]).
+    pub fn into_vec(self) -> Vec<f64> {
+        self.data
+    }
+
+    /// Copy every entry from `other` (shapes must match). Unlike
+    /// `clone`, reuses this matrix's allocation.
+    pub fn copy_from(&mut self, other: &Matrix) {
+        assert_eq!(self.shape(), other.shape(), "copy_from: shape mismatch");
+        self.data.copy_from_slice(&other.data);
     }
 }
 

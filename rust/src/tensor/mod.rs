@@ -1,11 +1,21 @@
-//! Dense matrix substrate: the `Matrix` type and multiplication kernels.
+//! Dense matrix substrate: the `Matrix` type, borrowed views, the
+//! packed deterministic-parallel multiplication kernels, and the
+//! reusable scratch arena.
 //!
-//! See DESIGN.md §System inventory (1). Everything the coordinator
-//! computes — bases, coefficients, gradients, dense baselines — uses
-//! these types; `linalg` builds QR/SVD on top.
+//! See DESIGN.md §System inventory (1) and §Kernel layer. Everything
+//! the coordinator computes — bases, coefficients, gradients, dense
+//! baselines — uses these types; `linalg` builds QR/SVD on top.
 
 pub mod matrix;
 pub mod ops;
+pub mod view;
+pub mod workspace;
 
 pub use matrix::Matrix;
-pub use ops::{matmul, matmul_into, matmul_nt, matmul_tn, matvec, usv};
+pub use ops::{
+    gemm_into, gram, gram_into, kernel_threads, matmul, matmul_into, matmul_into_view,
+    matmul_nt, matmul_nt_into, matmul_nt_into_view, matmul_reference, matmul_tn, matmul_tn_into,
+    matmul_tn_into_view, matmul_tn_scaled_into, matvec, set_kernel_threads, usv, Op,
+};
+pub use view::{MatMut, MatRef};
+pub use workspace::Workspace;

@@ -1,48 +1,682 @@
-//! Matrix-multiplication kernels.
+//! Matrix-multiplication kernels: packed, register-tiled, and
+//! deterministically parallel.
 //!
-//! All FeDLRT linear algebra funnels through these routines, so they are
-//! the L3 hot path. We implement a cache-blocked, register-tiled matmul
-//! (i-k-j loop order over a packed panel of B, which vectorizes well with
-//! rustc's auto-vectorizer on a single core) plus the transposed variants
-//! the low-rank algebra needs — `AᵀB` and `ABᵀ` are computed without
-//! materializing the transpose.
+//! All FeDLRT linear algebra funnels through these routines, so they
+//! are the L3 hot path. The design (see DESIGN.md §Kernel layer):
+//!
+//! * **Packed GEMM** — `C = βC + op(A)·op(B)` over [`MatRef`]/[`MatMut`]
+//!   views. A panels are repacked into column-major `MR`-row
+//!   micro-panels, B panels into row-major `NR`-column micro-panels,
+//!   and a 4×8 register-tiled micro-kernel accumulates 32 unrolled
+//!   products per depth step. Transposed operands (`AᵀB`, `ABᵀ`) are
+//!   handled during packing — no transpose is ever materialized.
+//! * **Deterministic parallelism** — large products split `C` into
+//!   `MR`-aligned row panels across scoped threads. Each output element
+//!   is reduced by exactly one thread in the same serial k-order
+//!   (KC panels ascending, k ascending within a panel), so results are
+//!   **bitwise identical** for every thread count — the same contract
+//!   `engine_determinism.rs` enforces for client executors. Thread
+//!   count comes from [`set_kernel_threads`] (config/CLI
+//!   `--kernel-threads`) or the `FEDLRT_KERNEL_THREADS` env var.
+//! * **Zero-padded-rank fast path** — a depth step whose `MR` packed
+//!   A-values are all zero is skipped: zero-padded rank columns
+//!   (static-shape AOT padding) cost nothing, and the B rows aligned
+//!   with an all-zero A column are never read (so padding garbage —
+//!   even NaN — cannot pollute the product). This is strictly stronger
+//!   than the seed kernel's quad-aligned skip.
+//! * **Small-product path** — below [`PACK_MIN_FLOPS`] the packing
+//!   overhead outweighs the tiling win, so the seed-style direct loops
+//!   run instead; they allocate nothing, which is what keeps the
+//!   steady-state client gradient path allocation-free.
+//!
+//! The seed kernel is preserved as [`matmul_reference`]: it is the
+//! correctness oracle for `rust/tests/kernel_equivalence.rs` and the
+//! perf baseline `benches/micro_hotpath.rs` reports speedups against.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 use super::matrix::Matrix;
+use super::view::{MatMut, MatRef};
 
-/// Loop blocking for the k dimension — fits comfortably in L1 with the
-/// 4-wide j unrolling below.
-const KC: usize = 256;
-/// Row blocking for the i dimension.
+/// Micro-tile rows (A register footprint).
+pub const MR: usize = 4;
+/// Micro-tile columns (B register footprint); MR×NR = 32 f64
+/// accumulators, within the 16 SIMD registers of x86-64 at 2–4 lanes.
+pub const NR: usize = 8;
+/// Row blocking: an MC×KC A panel (128 KiB) lives in L2.
 const MC: usize = 64;
+/// Depth blocking: a KC×NR B micro-panel (16 KiB) streams through L1.
+const KC: usize = 256;
+/// Column blocking: a KC×NC B panel (512 KiB) stays L2/L3-resident.
+const NC: usize = 256;
+/// Below this many flops (2mnk) the direct small-product loops win.
+const PACK_MIN_FLOPS: f64 = 1.0e6;
+/// Below this many flops threading overhead (spawn + duplicate B packs)
+/// outweighs the speedup; stay serial.
+const PAR_MIN_FLOPS: f64 = 8.0e6;
+/// Safety cap on kernel worker threads.
+const MAX_KERNEL_THREADS: usize = 64;
+
+// ---------------------------------------------------------------------
+// Kernel thread-count knob
+// ---------------------------------------------------------------------
+
+/// 0 = unresolved (first reader initializes from the environment).
+static KERNEL_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Set the worker-thread count for large matmuls (1 = serial). Wired to
+/// `TrainConfig::kernel_threads` / CLI `--kernel-threads`. Results are
+/// bitwise independent of this value; only wall-clock changes.
+pub fn set_kernel_threads(n: usize) {
+    KERNEL_THREADS.store(n.max(1).min(MAX_KERNEL_THREADS), Ordering::Relaxed);
+}
+
+/// Current kernel thread count. Defaults to `FEDLRT_KERNEL_THREADS`
+/// (env) or 1 when unset.
+pub fn kernel_threads() -> usize {
+    match KERNEL_THREADS.load(Ordering::Relaxed) {
+        0 => {
+            let n = std::env::var("FEDLRT_KERNEL_THREADS")
+                .ok()
+                .and_then(|s| s.parse::<usize>().ok())
+                .filter(|&n| n >= 1)
+                .unwrap_or(1)
+                .min(MAX_KERNEL_THREADS);
+            KERNEL_THREADS.store(n, Ordering::Relaxed);
+            n
+        }
+        n => n,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Operand forms
+// ---------------------------------------------------------------------
+
+/// A GEMM operand: a view used as-is (`N`) or logically transposed
+/// (`T`). Transposition happens during packing — never materialized.
+#[derive(Clone, Copy, Debug)]
+pub enum Op<'a> {
+    N(MatRef<'a>),
+    T(MatRef<'a>),
+}
+
+impl<'a> Op<'a> {
+    /// Rows of `op(X)`.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        match self {
+            Op::N(m) => m.rows(),
+            Op::T(m) => m.cols(),
+        }
+    }
+
+    /// Columns of `op(X)`.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        match self {
+            Op::N(m) => m.cols(),
+            Op::T(m) => m.rows(),
+        }
+    }
+
+    /// Restrict to rows `[r0, r0+len)` of `op(X)` — a view, no copy.
+    fn row_block(self, r0: usize, len: usize) -> Op<'a> {
+        match self {
+            Op::N(m) => Op::N(m.block(r0, 0, len, m.cols())),
+            Op::T(m) => Op::T(m.block(0, r0, m.rows(), len)),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Public Matrix-level API
+// ---------------------------------------------------------------------
 
 /// `C = A · B`.
 pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
     assert_eq!(a.cols(), b.rows(), "matmul: inner dims {} vs {}", a.cols(), b.rows());
-    let (m, _k) = a.shape();
-    let n = b.cols();
-    let mut c = Matrix::zeros(m, n);
+    let mut c = Matrix::zeros(a.rows(), b.cols());
     matmul_into(a, b, &mut c, 0.0);
     c
 }
 
-/// `C = beta·C + A·B`, writing into preallocated `c`.
-///
-/// The kernel iterates row-panels of A (MC) by depth-panels (KC); within
-/// a panel, each A row broadcasts `a_ik` against B's row `k`, giving a
-/// saxpy over contiguous memory in both B and C — the auto-vectorizable
-/// inner loop.
+/// `C = β·C + A·B`, writing into preallocated `c`.
 pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix, beta: f64) {
-    let (m, kdim) = a.shape();
-    let n = b.cols();
-    assert_eq!(kdim, b.rows(), "matmul_into: inner dims");
-    assert_eq!(c.shape(), (m, n), "matmul_into: output shape");
+    gemm_into(Op::N(a.view()), Op::N(b.view()), c.view_mut(), beta, kernel_threads());
+}
 
+/// `C = Aᵀ · B` without materializing `Aᵀ` (Galerkin projections
+/// `ŨᵀGṼ`, `UᵀW`: A is tall n×r).
+pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.rows(), b.rows(), "matmul_tn: inner dims {} vs {}", a.rows(), b.rows());
+    let mut c = Matrix::zeros(a.cols(), b.cols());
+    matmul_tn_into(a, b, &mut c, 0.0);
+    c
+}
+
+/// `C = β·C + Aᵀ·B` into preallocated `c`.
+pub fn matmul_tn_into(a: &Matrix, b: &Matrix, c: &mut Matrix, beta: f64) {
+    gemm_into(Op::T(a.view()), Op::N(b.view()), c.view_mut(), beta, kernel_threads());
+}
+
+/// `C = A · Bᵀ` without materializing `Bᵀ`.
+pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.cols(), "matmul_nt: inner dims {} vs {}", a.cols(), b.cols());
+    let mut c = Matrix::zeros(a.rows(), b.rows());
+    matmul_nt_into(a, b, &mut c, 0.0);
+    c
+}
+
+/// `C = β·C + A·Bᵀ` into preallocated `c`.
+pub fn matmul_nt_into(a: &Matrix, b: &Matrix, c: &mut Matrix, beta: f64) {
+    gemm_into(Op::N(a.view()), Op::T(b.view()), c.view_mut(), beta, kernel_threads());
+}
+
+/// View-level `C = β·C + A·B` (the workspace-buffer entry point).
+pub fn matmul_into_view(a: MatRef<'_>, b: MatRef<'_>, c: MatMut<'_>, beta: f64) {
+    gemm_into(Op::N(a), Op::N(b), c, beta, kernel_threads());
+}
+
+/// View-level `C = β·C + Aᵀ·B`.
+pub fn matmul_tn_into_view(a: MatRef<'_>, b: MatRef<'_>, c: MatMut<'_>, beta: f64) {
+    gemm_into(Op::T(a), Op::N(b), c, beta, kernel_threads());
+}
+
+/// View-level `C = β·C + A·Bᵀ`.
+pub fn matmul_nt_into_view(a: MatRef<'_>, b: MatRef<'_>, c: MatMut<'_>, beta: f64) {
+    gemm_into(Op::N(a), Op::T(b), c, beta, kernel_threads());
+}
+
+/// `C = β·C + α · Aᵀ · diag(s) · B` — the fused residual-weighted
+/// projection of the least-squares gradients (`∇_W = Pxᵀ diag(res) Py / N`,
+/// `G_S = Aᵀ diag(res) B / N`), computed without materializing the
+/// scaled copy `diag(s)·B` that the seed code cloned per gradient call.
+/// Runs serially (its consumers are per-client and already sharded by
+/// the executor); zero-weight rows are skipped.
+pub fn matmul_tn_scaled_into(
+    a: &Matrix,
+    b: &Matrix,
+    row_scale: &[f64],
+    alpha: f64,
+    c: &mut Matrix,
+    beta: f64,
+) {
+    let kdim = a.rows();
+    assert_eq!(kdim, b.rows(), "matmul_tn_scaled_into: inner dims");
+    assert_eq!(row_scale.len(), kdim, "matmul_tn_scaled_into: scale length");
+    assert_eq!(c.shape(), (a.cols(), b.cols()), "matmul_tn_scaled_into: output shape");
     if beta == 0.0 {
         c.data_mut().fill(0.0);
     } else if beta != 1.0 {
         c.scale_inplace(beta);
     }
+    for k in 0..kdim {
+        let w = alpha * row_scale[k];
+        if w == 0.0 {
+            continue;
+        }
+        let a_row = a.row(k);
+        let b_row = b.row(k);
+        for (i, &aki) in a_row.iter().enumerate() {
+            let f = aki * w;
+            if f == 0.0 {
+                continue;
+            }
+            let c_row = c.row_mut(i);
+            for (cv, &bv) in c_row.iter_mut().zip(b_row) {
+                *cv += f * bv;
+            }
+        }
+    }
+}
 
+/// `C = AᵀA` exploiting symmetry (half the multiplies of
+/// `matmul_tn(a, a)`): upper triangle accumulated, then mirrored.
+pub fn gram(a: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.cols(), a.cols());
+    gram_into(a, &mut c);
+    c
+}
+
+/// `C = AᵀA` into preallocated `c` (overwrites; the mirrored write
+/// makes β-accumulation ill-defined, so none is offered).
+pub fn gram_into(a: &Matrix, c: &mut Matrix) {
+    let (m, n) = a.shape();
+    assert_eq!(c.shape(), (n, n), "gram_into: output shape");
+    c.data_mut().fill(0.0);
+    for k in 0..m {
+        let row = a.row(k);
+        for p in 0..n {
+            let ap = row[p];
+            if ap == 0.0 {
+                continue;
+            }
+            let c_row = &mut c.row_mut(p)[p..];
+            for (cv, &av) in c_row.iter_mut().zip(&row[p..]) {
+                *cv += ap * av;
+            }
+        }
+    }
+    for p in 0..n {
+        for q in (p + 1)..n {
+            c[(q, p)] = c[(p, q)];
+        }
+    }
+}
+
+/// Reconstruct the full weight `W = U · S · Vᵀ` (ordering chosen so the
+/// intermediate is the skinny `U·S ∈ R^{n×r}`).
+pub fn usv(u: &Matrix, s: &Matrix, v: &Matrix) -> Matrix {
+    let us = matmul(u, s);
+    matmul_nt(&us, v)
+}
+
+/// `y = A·x` for a vector `x` (len = A.cols()).
+pub fn matvec(a: &Matrix, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.cols(), x.len(), "matvec: dims");
+    let (m, n) = a.shape();
+    let mut y = vec![0.0; m];
+    for i in 0..m {
+        let row = a.row(i);
+        let mut acc = 0.0;
+        for j in 0..n {
+            acc += row[j] * x[j];
+        }
+        y[i] = acc;
+    }
+    y
+}
+
+// ---------------------------------------------------------------------
+// GEMM core
+// ---------------------------------------------------------------------
+
+/// `C = β·C + op(A)·op(B)` with an explicit worker-thread count.
+///
+/// This is the root kernel entry point; the Matrix-level wrappers pass
+/// [`kernel_threads`]. Results are bitwise identical for every
+/// `threads` value (row-panel split, per-element serial k-order) —
+/// property-tested in `rust/tests/kernel_equivalence.rs`.
+pub fn gemm_into(a: Op<'_>, b: Op<'_>, mut c: MatMut<'_>, beta: f64, threads: usize) {
+    let (m, kdim) = (a.rows(), a.cols());
+    let n = b.cols();
+    assert_eq!(kdim, b.rows(), "gemm: inner dims {} vs {}", kdim, b.rows());
+    assert_eq!(c.shape(), (m, n), "gemm: output shape");
+    if beta == 0.0 {
+        c.fill(0.0);
+    } else if beta != 1.0 {
+        c.scale(beta);
+    }
+    if m == 0 || n == 0 || kdim == 0 {
+        return;
+    }
+    let flops = 2.0 * m as f64 * kdim as f64 * n as f64;
+    if m < MR || n < NR || flops < PACK_MIN_FLOPS {
+        small_gemm(a, b, &mut c);
+        return;
+    }
+    let t = threads.max(1).min(m / MR).min(MAX_KERNEL_THREADS);
+    if t > 1 && c.is_contiguous() && flops >= PAR_MIN_FLOPS {
+        gemm_threaded(a, b, c, t);
+    } else {
+        gemm_serial(a, b, c);
+    }
+}
+
+/// Split C into MR-aligned row panels, one scoped thread per panel.
+///
+/// Determinism argument: panel starts are multiples of MR, so every
+/// micro-panel covers the same global row group `[4j, 4j+4)` as in the
+/// serial kernel — identical zero-skip decisions — and each output
+/// element is accumulated by exactly one thread in the serial k-order.
+fn gemm_threaded(a: Op<'_>, b: Op<'_>, c: MatMut<'_>, threads: usize) {
+    let m = c.rows();
+    let mut chunk = (m + threads - 1) / threads;
+    chunk = ((chunk + MR - 1) / MR) * MR;
+    std::thread::scope(|scope| {
+        let mut rest = c;
+        let mut i0 = 0usize;
+        loop {
+            let remaining = rest.rows();
+            if remaining <= chunk {
+                let a_blk = a.row_block(i0, remaining);
+                scope.spawn(move || gemm_serial(a_blk, b, rest));
+                break;
+            }
+            let (head, tail) = rest.split_rows(chunk);
+            let a_blk = a.row_block(i0, chunk);
+            scope.spawn(move || gemm_serial(a_blk, b, head));
+            rest = tail;
+            i0 += chunk;
+        }
+    });
+}
+
+/// Process-wide pool of packing-buffer pairs. A thread-local would die
+/// with the scoped worker threads [`gemm_threaded`] spawns per call, so
+/// workers check pairs in and out of this pool instead — steady state
+/// performs zero pack-buffer allocations on both the serial and the
+/// threaded path. Pool reuse cannot affect results: every packed slot
+/// is rewritten (padding included) before the micro-kernel reads it.
+/// The uncontended lock is two ~20 ns operations per ≥0.1 ms GEMM.
+static PACK_POOL: Mutex<Vec<(Vec<f64>, Vec<f64>)>> = Mutex::new(Vec::new());
+
+fn take_pack_bufs() -> (Vec<f64>, Vec<f64>) {
+    PACK_POOL.lock().ok().and_then(|mut p| p.pop()).unwrap_or_default()
+}
+
+fn give_pack_bufs(bufs: (Vec<f64>, Vec<f64>)) {
+    if let Ok(mut p) = PACK_POOL.lock() {
+        p.push(bufs);
+    }
+}
+
+/// The BLIS-style loop nest over one (possibly row-restricted) C block.
+fn gemm_serial(a: Op<'_>, b: Op<'_>, mut c: MatMut<'_>) {
+    let m = a.rows();
+    let kdim = a.cols();
+    let n = b.cols();
+    debug_assert_eq!(c.shape(), (m, n));
+    let (mut abuf, mut bbuf) = take_pack_bufs();
+    for jc in (0..n).step_by(NC) {
+        let nc = NC.min(n - jc);
+        for pc in (0..kdim).step_by(KC) {
+            let kc = KC.min(kdim - pc);
+            let bneed = ((nc + NR - 1) / NR) * NR * kc;
+            if bbuf.len() < bneed {
+                bbuf.resize(bneed, 0.0);
+            }
+            pack_b(b, pc, kc, jc, nc, &mut bbuf[..bneed]);
+            for ic in (0..m).step_by(MC) {
+                let mc = MC.min(m - ic);
+                let aneed = ((mc + MR - 1) / MR) * MR * kc;
+                if abuf.len() < aneed {
+                    abuf.resize(aneed, 0.0);
+                }
+                pack_a(a, ic, mc, pc, kc, &mut abuf[..aneed]);
+                macro_kernel(&abuf[..aneed], &bbuf[..bneed], mc, nc, kc, &mut c, ic, jc);
+            }
+        }
+    }
+    give_pack_bufs((abuf, bbuf));
+}
+
+/// Pack the `mc × kc` block of `op(A)` at `(ic, pc)` into MR-row
+/// micro-panels: panel `pi` occupies `buf[pi·MR·kc ..]`, laid out
+/// `k`-major (`buf[base + k·MR + mi]`), edge rows zero-padded.
+fn pack_a(a: Op<'_>, ic: usize, mc: usize, pc: usize, kc: usize, buf: &mut [f64]) {
+    let panels = (mc + MR - 1) / MR;
+    match a {
+        Op::N(m) => {
+            for pi in 0..panels {
+                let base = pi * MR * kc;
+                for mi in 0..MR {
+                    let i = pi * MR + mi;
+                    if i < mc {
+                        let row = &m.row(ic + i)[pc..pc + kc];
+                        for (k, &v) in row.iter().enumerate() {
+                            buf[base + k * MR + mi] = v;
+                        }
+                    } else {
+                        for k in 0..kc {
+                            buf[base + k * MR + mi] = 0.0;
+                        }
+                    }
+                }
+            }
+        }
+        Op::T(src) => {
+            // op(A)[i][k] = src[k][i]: walk source rows (contiguous)
+            // and scatter into the panels.
+            for pi in 0..panels {
+                let base = pi * MR * kc;
+                for k in 0..kc {
+                    let row = src.row(pc + k);
+                    for mi in 0..MR {
+                        let i = pi * MR + mi;
+                        buf[base + k * MR + mi] = if i < mc { row[ic + i] } else { 0.0 };
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Pack the `kc × nc` block of `op(B)` at `(pc, jc)` into NR-column
+/// micro-panels: panel `pj` occupies `buf[pj·NR·kc ..]`, laid out
+/// `k`-major (`buf[base + k·NR + ni]`), edge columns zero-padded.
+fn pack_b(b: Op<'_>, pc: usize, kc: usize, jc: usize, nc: usize, buf: &mut [f64]) {
+    let panels = (nc + NR - 1) / NR;
+    match b {
+        Op::N(m) => {
+            for k in 0..kc {
+                let row = m.row(pc + k);
+                for pj in 0..panels {
+                    let base = pj * NR * kc + k * NR;
+                    for ni in 0..NR {
+                        let j = pj * NR + ni;
+                        buf[base + ni] = if j < nc { row[jc + j] } else { 0.0 };
+                    }
+                }
+            }
+        }
+        Op::T(src) => {
+            // op(B)[k][j] = src[j][k]: walk source rows (contiguous in k).
+            for pj in 0..panels {
+                let base = pj * NR * kc;
+                for ni in 0..NR {
+                    let j = pj * NR + ni;
+                    if j < nc {
+                        let row = &src.row(jc + j)[pc..pc + kc];
+                        for (k, &v) in row.iter().enumerate() {
+                            buf[base + k * NR + ni] = v;
+                        }
+                    } else {
+                        for k in 0..kc {
+                            buf[base + k * NR + ni] = 0.0;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Drive the micro-kernel over every (MR, NR) tile of the packed block
+/// and accumulate into C.
+fn macro_kernel(
+    ap: &[f64],
+    bp: &[f64],
+    mc: usize,
+    nc: usize,
+    kc: usize,
+    c: &mut MatMut<'_>,
+    ic: usize,
+    jc: usize,
+) {
+    let mpanels = (mc + MR - 1) / MR;
+    let npanels = (nc + NR - 1) / NR;
+    for pi in 0..mpanels {
+        let a_panel = &ap[pi * MR * kc..(pi + 1) * MR * kc];
+        let mr = MR.min(mc - pi * MR);
+        for pj in 0..npanels {
+            let b_panel = &bp[pj * NR * kc..(pj + 1) * NR * kc];
+            let nr = NR.min(nc - pj * NR);
+            let acc = micro_kernel(kc, a_panel, b_panel);
+            for (mi, acc_row) in acc.iter().enumerate().take(mr) {
+                let row = c.row_mut(ic + pi * MR + mi);
+                let dst = &mut row[jc + pj * NR..jc + pj * NR + nr];
+                for (d, &v) in dst.iter_mut().zip(&acc_row[..nr]) {
+                    *d += v;
+                }
+            }
+        }
+    }
+}
+
+/// The 4×8 register tile: 32 independent accumulators, 12 loads per
+/// depth step, fully unrolled by the compiler. A depth step whose four
+/// packed A values are all zero is skipped (zero-padded rank columns;
+/// the matching B values are never read).
+#[inline(always)]
+fn micro_kernel(kc: usize, ap: &[f64], bp: &[f64]) -> [[f64; NR]; MR] {
+    debug_assert!(ap.len() >= kc * MR && bp.len() >= kc * NR);
+    let mut acc = [[0.0f64; NR]; MR];
+    for k in 0..kc {
+        let a = &ap[k * MR..k * MR + MR];
+        if a[0] == 0.0 && a[1] == 0.0 && a[2] == 0.0 && a[3] == 0.0 {
+            continue;
+        }
+        let b = &bp[k * NR..k * NR + NR];
+        for mi in 0..MR {
+            let av = a[mi];
+            for (ni, acc_v) in acc[mi].iter_mut().enumerate() {
+                *acc_v += av * b[ni];
+            }
+        }
+    }
+    acc
+}
+
+// ---------------------------------------------------------------------
+// Small-product direct paths (seed-style loops; no packing, no
+// allocation — required by the zero-allocation gradient contract)
+// ---------------------------------------------------------------------
+
+fn small_gemm(a: Op<'_>, b: Op<'_>, c: &mut MatMut<'_>) {
+    match (a, b) {
+        (Op::N(a), Op::N(b)) => small_nn(a, b, c),
+        (Op::T(a), Op::N(b)) => small_tn(a, b, c),
+        (Op::N(a), Op::T(b)) => small_nt(a, b, c),
+        (Op::T(a), Op::T(b)) => small_tt(a, b, c),
+    }
+}
+
+/// `C += A·B`, broadcast-saxpy with 4-wide k quads and zero-quad skip.
+fn small_nn(a: MatRef<'_>, b: MatRef<'_>, c: &mut MatMut<'_>) {
+    let (m, kdim) = a.shape();
+    for i in 0..m {
+        let a_row = a.row(i);
+        let c_row = c.row_mut(i);
+        let mut k = 0;
+        while k + 4 <= kdim {
+            let (a0, a1, a2, a3) = (a_row[k], a_row[k + 1], a_row[k + 2], a_row[k + 3]);
+            if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
+                k += 4;
+                continue;
+            }
+            let b0 = b.row(k);
+            let b1 = b.row(k + 1);
+            let b2 = b.row(k + 2);
+            let b3 = b.row(k + 3);
+            for (j, cv) in c_row.iter_mut().enumerate() {
+                *cv += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+            }
+            k += 4;
+        }
+        while k < kdim {
+            let aik = a_row[k];
+            if aik != 0.0 {
+                let b_row = b.row(k);
+                for (cv, &bv) in c_row.iter_mut().zip(b_row) {
+                    *cv += aik * bv;
+                }
+            }
+            k += 1;
+        }
+    }
+}
+
+/// `C += Aᵀ·B`: iterate A rows (the contraction dim) and scatter saxpys
+/// into C rows indexed by A's columns.
+fn small_tn(a: MatRef<'_>, b: MatRef<'_>, c: &mut MatMut<'_>) {
+    let kdim = a.rows();
+    for k in 0..kdim {
+        let a_row = a.row(k);
+        let b_row = b.row(k);
+        for (i, &aki) in a_row.iter().enumerate() {
+            if aki == 0.0 {
+                continue;
+            }
+            let c_row = c.row_mut(i);
+            for (cv, &bv) in c_row.iter_mut().zip(b_row) {
+                *cv += aki * bv;
+            }
+        }
+    }
+}
+
+/// `C += A·Bᵀ`: row-pair dot products with four accumulators.
+fn small_nt(a: MatRef<'_>, b: MatRef<'_>, c: &mut MatMut<'_>) {
+    let (m, kdim) = a.shape();
+    let n = b.rows();
+    for i in 0..m {
+        let a_row = a.row(i);
+        let c_row = c.row_mut(i);
+        let mut j = 0;
+        while j + 2 <= n {
+            let b0 = b.row(j);
+            let b1 = b.row(j + 1);
+            let (mut s00, mut s01, mut s10, mut s11) = (0.0, 0.0, 0.0, 0.0);
+            let mut k = 0;
+            while k + 2 <= kdim {
+                s00 += a_row[k] * b0[k];
+                s10 += a_row[k] * b1[k];
+                s01 += a_row[k + 1] * b0[k + 1];
+                s11 += a_row[k + 1] * b1[k + 1];
+                k += 2;
+            }
+            if k < kdim {
+                s00 += a_row[k] * b0[k];
+                s10 += a_row[k] * b1[k];
+            }
+            c_row[j] += s00 + s01;
+            c_row[j + 1] += s10 + s11;
+            j += 2;
+        }
+        if j < n {
+            let b_row = b.row(j);
+            let mut acc = 0.0;
+            for k in 0..kdim {
+                acc += a_row[k] * b_row[k];
+            }
+            c_row[j] += acc;
+        }
+    }
+}
+
+/// `C += Aᵀ·Bᵀ` — completeness fallback (no FeDLRT hot path uses it).
+fn small_tt(a: MatRef<'_>, b: MatRef<'_>, c: &mut MatMut<'_>) {
+    let kdim = a.rows();
+    let m = a.cols();
+    let n = b.rows();
+    for i in 0..m {
+        let c_row = c.row_mut(i);
+        for j in 0..n {
+            let b_row = b.row(j);
+            let mut acc = 0.0;
+            for k in 0..kdim {
+                acc += a.get(k, i) * b_row[k];
+            }
+            c_row[j] += acc;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Seed kernel, preserved as the correctness/perf reference
+// ---------------------------------------------------------------------
+
+/// The seed repo's blocked broadcast-saxpy matmul, kept verbatim as the
+/// correctness oracle for `kernel_equivalence.rs` and the baseline the
+/// packed kernel's speedup is measured against in `micro_hotpath`.
+pub fn matmul_reference(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.rows(), "matmul_reference: inner dims");
+    let (m, kdim) = a.shape();
+    let n = b.cols();
+    let mut c = Matrix::zeros(m, n);
     let a_data = a.data();
     let b_data = b.data();
     for i0 in (0..m).step_by(MC) {
@@ -52,9 +686,6 @@ pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix, beta: f64) {
             for i in i0..i1 {
                 let a_row = &a_data[i * kdim..(i + 1) * kdim];
                 let c_row = &mut c.data_mut()[i * n..(i + 1) * n];
-                // Process four k per pass over c_row: quarters the number
-                // of traversals of the store-bound C stream (B's rows are
-                // L1/L2-resident inside a KC panel).
                 let mut k = k0;
                 while k + 4 <= k1 {
                     let a0 = a_row[k];
@@ -62,8 +693,6 @@ pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix, beta: f64) {
                     let a2 = a_row[k + 2];
                     let a3 = a_row[k + 3];
                     if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
-                        // Zero-padded rank columns (static-shape AOT
-                        // padding) are skipped for free.
                         k += 4;
                         continue;
                     }
@@ -89,105 +718,7 @@ pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix, beta: f64) {
             }
         }
     }
-}
-
-/// `C = Aᵀ · B` without materializing `Aᵀ`.
-///
-/// Used for the Galerkin projections `G_S = Ũᵀ G Ṽ` and `UᵀW`: A is tall
-/// (n×r), so `AᵀB` iterates A rows (contiguous) and scatters into C rows
-/// indexed by A's columns — still a contiguous saxpy over B's row.
-pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
-    assert_eq!(a.rows(), b.rows(), "matmul_tn: inner dims {} vs {}", a.rows(), b.rows());
-    let (kdim, m) = a.shape();
-    let n = b.cols();
-    let mut c = Matrix::zeros(m, n);
-    let a_data = a.data();
-    let b_data = b.data();
-    for k in 0..kdim {
-        let a_row = &a_data[k * m..(k + 1) * m];
-        let b_row = &b_data[k * n..(k + 1) * n];
-        for (i, &aki) in a_row.iter().enumerate() {
-            if aki == 0.0 {
-                continue;
-            }
-            let c_row = &mut c.data_mut()[i * n..(i + 1) * n];
-            for j in 0..n {
-                c_row[j] += aki * b_row[j];
-            }
-        }
-    }
     c
-}
-
-/// `C = A · Bᵀ` without materializing `Bᵀ`.
-///
-/// Inner product of row i of A with row j of B — both contiguous.
-pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
-    assert_eq!(a.cols(), b.cols(), "matmul_nt: inner dims {} vs {}", a.cols(), b.cols());
-    let (m, kdim) = a.shape();
-    let n = b.rows();
-    let mut c = Matrix::zeros(m, n);
-    let a_data = a.data();
-    let b_data = b.data();
-    for i in 0..m {
-        let a_row = &a_data[i * kdim..(i + 1) * kdim];
-        let c_row = &mut c.data_mut()[i * n..(i + 1) * n];
-        // Two B rows per pass: A's row is streamed once for both dot
-        // products, and four accumulators hide FMA latency.
-        let mut j = 0;
-        while j + 2 <= n {
-            let b0 = &b_data[j * kdim..(j + 1) * kdim];
-            let b1 = &b_data[(j + 1) * kdim..(j + 2) * kdim];
-            let (mut s00, mut s01, mut s10, mut s11) = (0.0, 0.0, 0.0, 0.0);
-            let mut k = 0;
-            while k + 2 <= kdim {
-                s00 += a_row[k] * b0[k];
-                s10 += a_row[k] * b1[k];
-                s01 += a_row[k + 1] * b0[k + 1];
-                s11 += a_row[k + 1] * b1[k + 1];
-                k += 2;
-            }
-            if k < kdim {
-                s00 += a_row[k] * b0[k];
-                s10 += a_row[k] * b1[k];
-            }
-            c_row[j] = s00 + s01;
-            c_row[j + 1] = s10 + s11;
-            j += 2;
-        }
-        if j < n {
-            let b_row = &b_data[j * kdim..(j + 1) * kdim];
-            let mut acc = 0.0;
-            for k in 0..kdim {
-                acc += a_row[k] * b_row[k];
-            }
-            c_row[j] = acc;
-        }
-    }
-    c
-}
-
-/// Reconstruct the full weight `W = U · S · Vᵀ` (ordering chosen so the
-/// intermediate is the skinny `U·S ∈ R^{n×r}`).
-pub fn usv(u: &Matrix, s: &Matrix, v: &Matrix) -> Matrix {
-    let us = matmul(u, s);
-    matmul_nt(&us, v)
-}
-
-/// `y = A·x` for a vector `x` (len = A.cols()).
-pub fn matvec(a: &Matrix, x: &[f64]) -> Vec<f64> {
-    assert_eq!(a.cols(), x.len(), "matvec: dims");
-    let (m, n) = a.shape();
-    let mut y = vec![0.0; m];
-    for i in 0..m {
-        let row = a.row(i);
-        let mut acc = 0.0;
-        for j in 0..n {
-            acc += row[j] * x[j];
-        }
-        y[i] = acc;
-    }
-    y
 }
 
 #[cfg(test)]
@@ -224,6 +755,24 @@ mod tests {
     }
 
     #[test]
+    fn packed_path_matches_naive() {
+        // Sizes above PACK_MIN_FLOPS exercise the packed kernel,
+        // including edge tiles (dims not multiples of MR/NR).
+        let mut rng = Rng::new(19);
+        for &(m, k, n) in &[(96, 96, 96), (101, 83, 97), (128, 300, 65)] {
+            let a = Matrix::randn(m, k, &mut rng);
+            let b = Matrix::randn(k, n, &mut rng);
+            let c = matmul(&a, &b);
+            let want = naive(&a, &b);
+            let tol = 1e-12 * (k as f64) * (1.0 + want.max_abs());
+            assert!(c.sub(&want).max_abs() < tol, "({m},{k},{n})");
+            // And the preserved seed kernel agrees too.
+            let seed = matmul_reference(&a, &b);
+            assert!(c.sub(&seed).max_abs() < tol, "seed ({m},{k},{n})");
+        }
+    }
+
+    #[test]
     fn transposed_variants_match() {
         let mut rng = Rng::new(23);
         let a = Matrix::randn(40, 13, &mut rng);
@@ -238,6 +787,22 @@ mod tests {
     }
 
     #[test]
+    fn transposed_variants_match_packed() {
+        let mut rng = Rng::new(27);
+        let a = Matrix::randn(200, 90, &mut rng);
+        let b = Matrix::randn(200, 110, &mut rng);
+        let tn = matmul_tn(&a, &b);
+        let want = naive(&a.t(), &b);
+        assert!(tn.sub(&want).max_abs() < 1e-10 * (1.0 + want.max_abs()));
+
+        let c = Matrix::randn(150, 170, &mut rng);
+        let d = Matrix::randn(140, 170, &mut rng);
+        let nt = matmul_nt(&c, &d);
+        let want = naive(&c, &d.t());
+        assert!(nt.sub(&want).max_abs() < 1e-10 * (1.0 + want.max_abs()));
+    }
+
+    #[test]
     fn matmul_into_beta() {
         let mut rng = Rng::new(29);
         let a = Matrix::randn(8, 9, &mut rng);
@@ -247,6 +812,78 @@ mod tests {
         matmul_into(&a, &b, &mut c, 1.0);
         let want = c0.add(&naive(&a, &b));
         assert!(c.sub(&want).max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn tn_nt_into_beta() {
+        let mut rng = Rng::new(33);
+        let a = Matrix::randn(11, 5, &mut rng);
+        let b = Matrix::randn(11, 6, &mut rng);
+        let mut c = Matrix::randn(5, 6, &mut rng);
+        let c0 = c.clone();
+        matmul_tn_into(&a, &b, &mut c, 2.0);
+        let want = c0.scale(2.0).add(&naive(&a.t(), &b));
+        assert!(c.sub(&want).max_abs() < 1e-10);
+
+        let mut d = Matrix::randn(11, 11, &mut rng);
+        let d0 = d.clone();
+        matmul_nt_into(&a, &b, &mut d, 1.0);
+        let want = d0.add(&naive(&a, &b.t()));
+        assert!(d.sub(&want).max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn scaled_tn_matches_explicit_diag() {
+        let mut rng = Rng::new(37);
+        let a = Matrix::randn(30, 7, &mut rng);
+        let b = Matrix::randn(30, 9, &mut rng);
+        let s = rng.normal_vec(30);
+        let alpha = 0.25;
+        let mut c = Matrix::zeros(7, 9);
+        matmul_tn_scaled_into(&a, &b, &s, alpha, &mut c, 0.0);
+        // Reference: Aᵀ · diag(α·s) · B built explicitly.
+        let mut sb = b.clone();
+        for i in 0..30 {
+            let w = alpha * s[i];
+            for v in sb.row_mut(i) {
+                *v *= w;
+            }
+        }
+        let want = matmul_tn(&a, &sb);
+        assert!(c.sub(&want).max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn gram_matches_tn_self() {
+        let mut rng = Rng::new(41);
+        for &(m, n) in &[(5, 3), (30, 8), (12, 12), (3, 17)] {
+            let a = Matrix::randn(m, n, &mut rng);
+            let g = gram(&a);
+            let want = matmul_tn(&a, &a);
+            assert!(g.sub(&want).max_abs() < 1e-10, "({m},{n})");
+            // exact symmetry by construction
+            for p in 0..n {
+                for q in 0..n {
+                    assert_eq!(g[(p, q)].to_bits(), g[(q, p)].to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_matches_serial_bitwise() {
+        let mut rng = Rng::new(43);
+        let a = Matrix::randn(180, 170, &mut rng);
+        let b = Matrix::randn(170, 190, &mut rng);
+        let mut c1 = Matrix::zeros(180, 190);
+        gemm_into(Op::N(a.view()), Op::N(b.view()), c1.view_mut(), 0.0, 1);
+        for threads in [2usize, 3, 7] {
+            let mut ct = Matrix::zeros(180, 190);
+            gemm_into(Op::N(a.view()), Op::N(b.view()), ct.view_mut(), 0.0, threads);
+            for (x, y) in c1.data().iter().zip(ct.data()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "threads={threads}");
+            }
+        }
     }
 
     #[test]
@@ -286,5 +923,40 @@ mod tests {
             bp
         };
         assert!(matmul(&a_pad, &b_pad).sub(&matmul(&a, &b)).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_padded_columns_never_read_b() {
+        // The packed kernel must never touch B rows aligned with an
+        // all-zero A column — NaN garbage in the padding region cannot
+        // pollute the product.
+        let mut rng = Rng::new(47);
+        let (m, k, n, pad) = (96, 64, 96, 32);
+        let a = Matrix::randn(m, k, &mut rng);
+        let a_pad = a.hcat(&Matrix::zeros(m, pad));
+        let b = Matrix::randn(k, n, &mut rng);
+        let mut b_pad = Matrix::zeros(k + pad, n);
+        b_pad.set_block(0, 0, &b);
+        for i in k..k + pad {
+            for v in b_pad.row_mut(i) {
+                *v = f64::NAN;
+            }
+        }
+        let c_pad = matmul(&a_pad, &b_pad);
+        let c = matmul(&a, &b);
+        assert!(c_pad.is_finite(), "NaN leaked from padded B rows");
+        for (x, y) in c_pad.data().iter().zip(c.data()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn kernel_thread_knob_roundtrip() {
+        // Results are thread-count invariant, so mutating the global
+        // knob is safe even with concurrently running tests.
+        set_kernel_threads(3);
+        assert_eq!(kernel_threads(), 3);
+        set_kernel_threads(0); // clamps to 1
+        assert_eq!(kernel_threads(), 1);
     }
 }

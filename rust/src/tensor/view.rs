@@ -1,0 +1,314 @@
+//! Borrowed matrix views: `MatRef` / `MatMut`.
+//!
+//! A view is `(data, rows, cols, row_stride)` over a row-major `f64`
+//! buffer — the unit-column-stride subset of BLAS's general stride
+//! model, which is all the FeDLRT algebra needs (sub-blocks, row
+//! panels, and column ranges of `U/S/V`; transposes are handled by the
+//! kernels' `Aᵀ·B` / `A·Bᵀ` entry points without materializing copies).
+//! Views are what let the kernel layer slice factors and workspaces
+//! without per-call `Matrix` allocations: every `_into` op in
+//! [`super::ops`] bottoms out on these types.
+//!
+//! `MatMut::split_rows` is the primitive behind the deterministic
+//! parallel GEMM: it partitions the output into disjoint row panels
+//! that scoped threads can write concurrently without aliasing (see
+//! DESIGN.md §Kernel layer).
+
+use super::matrix::Matrix;
+
+/// Immutable view of a row-major matrix block.
+#[derive(Clone, Copy, Debug)]
+pub struct MatRef<'a> {
+    data: &'a [f64],
+    rows: usize,
+    cols: usize,
+    row_stride: usize,
+}
+
+impl<'a> MatRef<'a> {
+    /// View over `data` with explicit shape and row stride.
+    pub fn new(data: &'a [f64], rows: usize, cols: usize, row_stride: usize) -> MatRef<'a> {
+        assert!(cols == 0 || row_stride >= cols, "row_stride {row_stride} < cols {cols}");
+        if rows > 0 && cols > 0 {
+            assert!(
+                (rows - 1) * row_stride + cols <= data.len(),
+                "view {rows}x{cols} (stride {row_stride}) exceeds buffer of {}",
+                data.len()
+            );
+        }
+        MatRef { data, rows, cols, row_stride }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    #[inline]
+    pub fn row_stride(&self) -> usize {
+        self.row_stride
+    }
+
+    /// Row `i` as a slice (length `cols`).
+    #[inline]
+    pub fn row(&self, i: usize) -> &'a [f64] {
+        debug_assert!(i < self.rows);
+        &self.data[i * self.row_stride..i * self.row_stride + self.cols]
+    }
+
+    /// Entry `(i, j)`.
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.row_stride + j]
+    }
+
+    /// Sub-block view starting at `(r0, c0)` — no copy.
+    pub fn block(&self, r0: usize, c0: usize, rows: usize, cols: usize) -> MatRef<'a> {
+        assert!(r0 + rows <= self.rows && c0 + cols <= self.cols, "block out of range");
+        let off = r0 * self.row_stride + c0;
+        let end = if rows == 0 || cols == 0 {
+            off
+        } else {
+            off + (rows - 1) * self.row_stride + cols
+        };
+        MatRef { data: &self.data[off..end], rows, cols, row_stride: self.row_stride }
+    }
+
+    /// Leading `cols` columns — no copy.
+    pub fn first_cols(&self, cols: usize) -> MatRef<'a> {
+        self.block(0, 0, self.rows, cols)
+    }
+}
+
+/// Mutable view of a row-major matrix block.
+#[derive(Debug)]
+pub struct MatMut<'a> {
+    data: &'a mut [f64],
+    rows: usize,
+    cols: usize,
+    row_stride: usize,
+}
+
+impl<'a> MatMut<'a> {
+    /// Mutable view over `data` with explicit shape and row stride.
+    pub fn new(data: &'a mut [f64], rows: usize, cols: usize, row_stride: usize) -> MatMut<'a> {
+        assert!(cols == 0 || row_stride >= cols, "row_stride {row_stride} < cols {cols}");
+        if rows > 0 && cols > 0 {
+            assert!(
+                (rows - 1) * row_stride + cols <= data.len(),
+                "view {rows}x{cols} (stride {row_stride}) exceeds buffer of {}",
+                data.len()
+            );
+        }
+        MatMut { data, rows, cols, row_stride }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    #[inline]
+    pub fn row_stride(&self) -> usize {
+        self.row_stride
+    }
+
+    /// Rows are contiguous (no inter-row gap) — required for
+    /// `split_rows`-based parallel dispatch.
+    #[inline]
+    pub fn is_contiguous(&self) -> bool {
+        self.row_stride == self.cols
+    }
+
+    /// Row `i` as a mutable slice (length `cols`).
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        debug_assert!(i < self.rows);
+        &mut self.data[i * self.row_stride..i * self.row_stride + self.cols]
+    }
+
+    /// Row `i` as an immutable slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        debug_assert!(i < self.rows);
+        &self.data[i * self.row_stride..i * self.row_stride + self.cols]
+    }
+
+    /// Entry `(i, j)`.
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.row_stride + j]
+    }
+
+    /// Set entry `(i, j)`.
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.row_stride + j] = v;
+    }
+
+    /// Downgrade to an immutable view (reborrow).
+    pub fn as_ref(&self) -> MatRef<'_> {
+        MatRef { data: &*self.data, rows: self.rows, cols: self.cols, row_stride: self.row_stride }
+    }
+
+    /// Fill every entry with `v` (row-aware: skips inter-row gaps).
+    pub fn fill(&mut self, v: f64) {
+        if self.is_contiguous() {
+            let len = self.rows * self.cols;
+            self.data[..len].fill(v);
+        } else {
+            for i in 0..self.rows {
+                self.row_mut(i).fill(v);
+            }
+        }
+    }
+
+    /// Scale every entry by `alpha`.
+    pub fn scale(&mut self, alpha: f64) {
+        for i in 0..self.rows {
+            for x in self.row_mut(i) {
+                *x *= alpha;
+            }
+        }
+    }
+
+    /// Split into two disjoint row panels `[0, r)` and `[r, rows)`.
+    ///
+    /// Both halves keep the original row stride; `r` must be interior
+    /// (`0 < r < rows`) so neither side is empty. This is the aliasing
+    /// boundary the parallel GEMM hands to scoped threads.
+    pub fn split_rows(self, r: usize) -> (MatMut<'a>, MatMut<'a>) {
+        assert!(r > 0 && r < self.rows, "split_rows: r={r} not interior to {}", self.rows);
+        let (head, tail) = self.data.split_at_mut(r * self.row_stride);
+        (
+            MatMut { data: head, rows: r, cols: self.cols, row_stride: self.row_stride },
+            MatMut { data: tail, rows: self.rows - r, cols: self.cols, row_stride: self.row_stride },
+        )
+    }
+}
+
+impl Matrix {
+    /// Borrow the whole matrix as an immutable view.
+    #[inline]
+    pub fn view(&self) -> MatRef<'_> {
+        MatRef::new(self.data(), self.rows(), self.cols(), self.cols())
+    }
+
+    /// Borrow the whole matrix as a mutable view.
+    #[inline]
+    pub fn view_mut(&mut self) -> MatMut<'_> {
+        let (rows, cols) = self.shape();
+        MatMut::new(self.data_mut(), rows, cols, cols)
+    }
+
+    /// Borrow a sub-block as a view — the no-copy counterpart of
+    /// [`Matrix::sub_block`].
+    pub fn sub_view(&self, r0: usize, c0: usize, rows: usize, cols: usize) -> MatRef<'_> {
+        self.view().block(r0, c0, rows, cols)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn numbered(rows: usize, cols: usize) -> Matrix {
+        Matrix::from_fn(rows, cols, |i, j| (i * 100 + j) as f64)
+    }
+
+    #[test]
+    fn whole_matrix_view_roundtrip() {
+        let m = numbered(4, 5);
+        let v = m.view();
+        assert_eq!(v.shape(), (4, 5));
+        assert_eq!(v.get(2, 3), 203.0);
+        assert_eq!(v.row(1), m.row(1));
+    }
+
+    #[test]
+    fn block_views_share_storage() {
+        let m = numbered(6, 7);
+        let b = m.sub_view(2, 3, 3, 2);
+        assert_eq!(b.shape(), (3, 2));
+        assert_eq!(b.row_stride(), 7);
+        assert_eq!(b.get(0, 0), 203.0);
+        assert_eq!(b.get(2, 1), 404.0);
+        // Nested block of a block.
+        let bb = b.block(1, 1, 2, 1);
+        assert_eq!(bb.get(0, 0), 304.0);
+        assert_eq!(bb.get(1, 0), 404.0);
+    }
+
+    #[test]
+    fn mut_view_writes_through() {
+        let mut m = numbered(3, 3);
+        {
+            let mut v = m.view_mut();
+            v.set(1, 2, -1.0);
+            v.row_mut(0)[0] = -2.0;
+        }
+        assert_eq!(m[(1, 2)], -1.0);
+        assert_eq!(m[(0, 0)], -2.0);
+    }
+
+    #[test]
+    fn split_rows_partitions() {
+        let mut m = numbered(5, 4);
+        {
+            let v = m.view_mut();
+            let (mut a, mut b) = v.split_rows(2);
+            assert_eq!(a.shape(), (2, 4));
+            assert_eq!(b.shape(), (3, 4));
+            a.fill(1.0);
+            b.fill(2.0);
+        }
+        assert_eq!(m[(1, 3)], 1.0);
+        assert_eq!(m[(2, 0)], 2.0);
+        assert_eq!(m[(4, 3)], 2.0);
+    }
+
+    #[test]
+    fn fill_and_scale_respect_strides() {
+        let mut m = numbered(4, 4);
+        {
+            let mut blk = MatMut::new(m.data_mut(), 2, 2, 4); // top-left 2x2
+            blk.fill(9.0);
+            blk.scale(2.0);
+        }
+        assert_eq!(m[(0, 0)], 18.0);
+        assert_eq!(m[(1, 1)], 18.0);
+        // outside the block untouched
+        assert_eq!(m[(0, 2)], 2.0);
+        assert_eq!(m[(2, 0)], 200.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds buffer")]
+    fn oversized_view_panics() {
+        let m = numbered(2, 2);
+        let _ = MatRef::new(m.data(), 3, 2, 2);
+    }
+}

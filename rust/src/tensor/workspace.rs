@@ -1,0 +1,134 @@
+//! Reusable scratch-buffer arena for the round hot path.
+//!
+//! FeDLRT's steady state repeats the same shapes every local iteration
+//! and every round: projections `P_x U`, products `A·S̃`, Householder
+//! reflector stacks, Jacobi working matrices, mean-gradient
+//! accumulators. A [`Workspace`] keeps the backing `Vec<f64>` buffers
+//! alive between uses so that, once warm, `take`/`give` cycles perform
+//! **zero heap allocations** (asserted by the counting-allocator check
+//! in `benches/micro_hotpath.rs`).
+//!
+//! Ownership rules (see DESIGN.md §Kernel layer):
+//! * whoever calls `take`/`take_mat` must `give`/`give_mat` the buffer
+//!   back on every exit path — a dropped buffer is not an error, just a
+//!   re-allocation next round;
+//! * round *state* (factors, records, returned gradients) is never
+//!   workspace-backed — only transient scratch is;
+//! * a workspace is single-owner: clients each own one (behind their
+//!   per-client lock), the coordinator owns one for the server steps.
+//!   Workspaces are never shared across threads.
+
+use super::matrix::Matrix;
+
+/// A pool of reusable `f64` buffers.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    pool: Vec<Vec<f64>>,
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace { pool: Vec::new() }
+    }
+
+    /// Number of pooled (idle) buffers — diagnostics/tests.
+    pub fn pooled(&self) -> usize {
+        self.pool.len()
+    }
+
+    /// Borrow a zero-filled buffer of exactly `len` elements.
+    ///
+    /// Prefers a pooled buffer whose capacity already covers `len`
+    /// (steady state: no allocation); otherwise grows the largest
+    /// pooled buffer or allocates fresh.
+    pub fn take(&mut self, len: usize) -> Vec<f64> {
+        let slot = self.pool.iter().position(|b| b.capacity() >= len);
+        let mut buf = match slot {
+            Some(i) => self.pool.swap_remove(i),
+            None => match self.pool.pop() {
+                Some(b) => b,
+                None => Vec::new(),
+            },
+        };
+        buf.clear();
+        buf.resize(len, 0.0);
+        buf
+    }
+
+    /// Return a buffer to the pool for reuse.
+    pub fn give(&mut self, buf: Vec<f64>) {
+        if buf.capacity() > 0 {
+            self.pool.push(buf);
+        }
+    }
+
+    /// Borrow a zero-filled `rows × cols` matrix backed by pooled
+    /// storage.
+    pub fn take_mat(&mut self, rows: usize, cols: usize) -> Matrix {
+        Matrix::from_vec(rows, cols, self.take(rows * cols))
+    }
+
+    /// Return a [`take_mat`](Workspace::take_mat) matrix to the pool.
+    pub fn give_mat(&mut self, m: Matrix) {
+        self.give(m.into_vec());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_is_zero_filled_and_sized() {
+        let mut ws = Workspace::new();
+        let mut b = ws.take(8);
+        assert_eq!(b.len(), 8);
+        assert!(b.iter().all(|&x| x == 0.0));
+        b[3] = 5.0;
+        ws.give(b);
+        // Reused buffer is re-zeroed.
+        let b2 = ws.take(8);
+        assert!(b2.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn steady_state_reuses_capacity() {
+        let mut ws = Workspace::new();
+        let b = ws.take(100);
+        let cap = b.capacity();
+        let ptr = b.as_ptr() as usize;
+        ws.give(b);
+        // Same-size take must reuse the very same backing allocation.
+        let b2 = ws.take(100);
+        assert_eq!(b2.capacity(), cap);
+        assert_eq!(b2.as_ptr() as usize, ptr);
+        ws.give(b2);
+        // A smaller take also fits in the pooled buffer.
+        let b3 = ws.take(10);
+        assert_eq!(b3.as_ptr() as usize, ptr);
+    }
+
+    #[test]
+    fn take_mat_roundtrip() {
+        let mut ws = Workspace::new();
+        let mut m = ws.take_mat(3, 4);
+        assert_eq!(m.shape(), (3, 4));
+        m[(2, 3)] = 7.0;
+        ws.give_mat(m);
+        assert_eq!(ws.pooled(), 1);
+        let m2 = ws.take_mat(4, 3);
+        assert_eq!(m2.max_abs(), 0.0);
+        assert_eq!(ws.pooled(), 0);
+    }
+
+    #[test]
+    fn distinct_outstanding_buffers() {
+        let mut ws = Workspace::new();
+        let a = ws.take(16);
+        let b = ws.take(16);
+        assert_ne!(a.as_ptr(), b.as_ptr());
+        ws.give(a);
+        ws.give(b);
+        assert_eq!(ws.pooled(), 2);
+    }
+}

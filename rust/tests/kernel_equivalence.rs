@@ -1,0 +1,291 @@
+//! Kernel-equivalence properties for the packed/parallel GEMM layer.
+//!
+//! Three contracts (see DESIGN.md §Kernel layer):
+//!
+//! 1. **Correctness** — the packed kernels agree with the naive
+//!    triple-loop reference (and with the preserved seed kernel) across
+//!    adversarial shapes: degenerate 1×k×1, prime dims, tall-skinny
+//!    n×2r, and shapes straddling the small↔packed dispatch threshold.
+//! 2. **Determinism** — serial ≡ threaded **bitwise** for every
+//!    threaded kernel entry point and every thread count; the serial
+//!    kernels are bitwise reproducible call-to-call.
+//! 3. **Padding semantics** — all-zero A columns (static-shape rank
+//!    padding) are skipped: results are bitwise identical to the
+//!    unpadded product, and the B rows aligned with zero columns are
+//!    never read (NaN garbage cannot leak).
+
+use fedlrt::tensor::{
+    gemm_into, gram, matmul, matmul_nt, matmul_nt_into, matmul_reference, matmul_tn,
+    matmul_tn_into, matmul_tn_scaled_into, set_kernel_threads, Matrix, Op, Workspace,
+};
+use fedlrt::linalg::{orthonormality_error, qr_thin, qr_thin_ws};
+use fedlrt::util::rng::Rng;
+
+/// Naive triple-loop oracle.
+fn naive(a: &Matrix, b: &Matrix) -> Matrix {
+    let (m, k) = a.shape();
+    let n = b.cols();
+    let mut c = Matrix::zeros(m, n);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0;
+            for p in 0..k {
+                acc += a[(i, p)] * b[(p, j)];
+            }
+            c[(i, j)] = acc;
+        }
+    }
+    c
+}
+
+fn assert_close(got: &Matrix, want: &Matrix, k: usize, what: &str) {
+    let tol = 1e-12 * (1.0 + k as f64) * (1.0 + want.max_abs());
+    let diff = got.sub(want).max_abs();
+    assert!(diff < tol, "{what}: diff {diff} > tol {tol}");
+}
+
+fn assert_bitwise(a: &Matrix, b: &Matrix, what: &str) {
+    assert_eq!(a.shape(), b.shape(), "{what}: shapes");
+    for (i, (x, y)) in a.data().iter().zip(b.data()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: entry {i} differs ({x} vs {y})");
+    }
+}
+
+/// Adversarial shapes: degenerate, prime, tall-skinny n×2r, edge tiles,
+/// and both sides of the small↔packed dispatch boundary.
+const SHAPES: &[(usize, usize, usize)] = &[
+    (1, 1, 1),
+    (1, 17, 1),
+    (7, 1, 7),
+    (2, 3, 1),
+    (5, 8, 13),
+    (17, 19, 23),
+    (31, 37, 29),
+    (64, 2, 64),
+    (512, 8, 16),
+    (100, 3, 100),
+    (33, 65, 9),
+    (96, 96, 96),
+    (101, 83, 97),
+    (130, 260, 70),
+];
+
+#[test]
+fn matmul_matches_naive_across_adversarial_shapes() {
+    let mut rng = Rng::new(9001);
+    for &(m, k, n) in SHAPES {
+        let a = Matrix::randn(m, k, &mut rng);
+        let b = Matrix::randn(k, n, &mut rng);
+        let got = matmul(&a, &b);
+        let want = naive(&a, &b);
+        assert_close(&got, &want, k, &format!("matmul ({m},{k},{n})"));
+        let seed = matmul_reference(&a, &b);
+        assert_close(&got, &seed, k, &format!("matmul vs seed kernel ({m},{k},{n})"));
+    }
+}
+
+#[test]
+fn transposed_kernels_match_naive_across_adversarial_shapes() {
+    let mut rng = Rng::new(9003);
+    for &(m, k, n) in SHAPES {
+        // Aᵀ·B with A stored k×m.
+        let a = Matrix::randn(k, m, &mut rng);
+        let b = Matrix::randn(k, n, &mut rng);
+        let got = matmul_tn(&a, &b);
+        let want = naive(&a.t(), &b);
+        assert_close(&got, &want, k, &format!("matmul_tn ({m},{k},{n})"));
+        // A·Bᵀ with B stored n×k.
+        let a2 = Matrix::randn(m, k, &mut rng);
+        let b2 = Matrix::randn(n, k, &mut rng);
+        let got2 = matmul_nt(&a2, &b2);
+        let want2 = naive(&a2, &b2.t());
+        assert_close(&got2, &want2, k, &format!("matmul_nt ({m},{k},{n})"));
+    }
+}
+
+fn with_threads(aop: Op<'_>, bop: Op<'_>, threads: usize) -> Matrix {
+    let mut c = Matrix::zeros(aop.rows(), bop.cols());
+    gemm_into(aop, bop, c.view_mut(), 0.0, threads);
+    c
+}
+
+#[test]
+fn serial_equals_threaded_bitwise_for_all_entry_points() {
+    // The row-panel determinism contract: every thread count yields the
+    // serial result bit for bit, for NN, TN, and NT operand forms.
+    let mut rng = Rng::new(9005);
+    for &(m, k, n) in &[(64, 64, 64), (101, 83, 97), (260, 190, 170), (512, 16, 64)] {
+        let a_nn = Matrix::randn(m, k, &mut rng);
+        let a_tn = Matrix::randn(k, m, &mut rng);
+        let b_nn = Matrix::randn(k, n, &mut rng);
+        let b_nt = Matrix::randn(n, k, &mut rng);
+        let cases: [(&str, Op<'_>, Op<'_>); 3] = [
+            ("nn", Op::N(a_nn.view()), Op::N(b_nn.view())),
+            ("tn", Op::T(a_tn.view()), Op::N(b_nn.view())),
+            ("nt", Op::N(a_nn.view()), Op::T(b_nt.view())),
+        ];
+        for (label, aop, bop) in cases {
+            let serial = with_threads(aop, bop, 1);
+            for threads in [2usize, 3, 5, 16] {
+                let par = with_threads(aop, bop, threads);
+                assert_bitwise(
+                    &serial,
+                    &par,
+                    &format!("{label} ({m},{k},{n}) threads={threads}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn global_thread_knob_does_not_change_results() {
+    let mut rng = Rng::new(9007);
+    let a = Matrix::randn(150, 140, &mut rng);
+    let b = Matrix::randn(140, 160, &mut rng);
+    set_kernel_threads(1);
+    let serial = matmul(&a, &b);
+    set_kernel_threads(4);
+    let par = matmul(&a, &b);
+    set_kernel_threads(1);
+    assert_bitwise(&serial, &par, "global kernel-thread knob");
+}
+
+#[test]
+fn padded_zero_columns_small_path_quad_aligned() {
+    // Small-product path: quad-aligned zero padding is skipped, so the
+    // result is bitwise the unpadded product and NaN rows of B under
+    // the padding are never touched.
+    let mut rng = Rng::new(9009);
+    let (m, k, pad, n) = (10, 8, 8, 6);
+    let a = Matrix::randn(m, k, &mut rng);
+    let b = Matrix::randn(k, n, &mut rng);
+    let a_pad = a.hcat(&Matrix::zeros(m, pad));
+    let mut b_pad = Matrix::zeros(k + pad, n);
+    b_pad.set_block(0, 0, &b);
+    for i in k..k + pad {
+        for v in b_pad.row_mut(i) {
+            *v = f64::NAN;
+        }
+    }
+    let got = matmul(&a_pad, &b_pad);
+    assert!(got.is_finite(), "NaN leaked through quad-aligned padding");
+    assert_bitwise(&got, &matmul(&a, &b), "small-path padded product");
+}
+
+#[test]
+fn padded_zero_columns_packed_path_any_alignment() {
+    // Packed path: the micro-kernel skips any all-zero A depth column
+    // regardless of alignment (strictly stronger than the seed quad
+    // skip) — NaN under non-quad-aligned padding stays quarantined.
+    let mut rng = Rng::new(9011);
+    let (m, k, pad, n) = (96, 61, 35, 96); // 61 is not a multiple of 4
+    let a = Matrix::randn(m, k, &mut rng);
+    let b = Matrix::randn(k, n, &mut rng);
+    let a_pad = a.hcat(&Matrix::zeros(m, pad));
+    let mut b_pad = Matrix::zeros(k + pad, n);
+    b_pad.set_block(0, 0, &b);
+    for i in k..k + pad {
+        for v in b_pad.row_mut(i) {
+            *v = f64::NAN;
+        }
+    }
+    let got = matmul(&a_pad, &b_pad);
+    assert!(got.is_finite(), "NaN leaked through non-aligned padding");
+    assert_bitwise(&got, &matmul(&a, &b), "packed-path padded product");
+    // Threaded over the padded input too.
+    let par = with_threads(Op::N(a_pad.view()), Op::N(b_pad.view()), 3);
+    assert_bitwise(&got, &par, "packed-path padded product, threaded");
+}
+
+#[test]
+fn scaled_tn_kernel_matches_explicit_diag_and_is_deterministic() {
+    let mut rng = Rng::new(9013);
+    for &(rows, p, q) in &[(1usize, 1usize, 1usize), (17, 5, 9), (200, 20, 12)] {
+        let a = Matrix::randn(rows, p, &mut rng);
+        let b = Matrix::randn(rows, q, &mut rng);
+        let mut s = rng.normal_vec(rows);
+        if rows > 2 {
+            s[1] = 0.0; // zero-weight rows are skipped
+        }
+        let alpha = 1.0 / rows as f64;
+        let mut c1 = Matrix::zeros(p, q);
+        matmul_tn_scaled_into(&a, &b, &s, alpha, &mut c1, 0.0);
+        // Reference: scale B's rows explicitly, then Aᵀ·B.
+        let mut sb = b.clone();
+        for i in 0..rows {
+            let w = alpha * s[i];
+            for v in sb.row_mut(i) {
+                *v *= w;
+            }
+        }
+        assert_close(&c1, &matmul_tn(&a, &sb), rows, &format!("scaled_tn ({rows},{p},{q})"));
+        // Serial kernel: repeated calls are bitwise reproducible.
+        let mut c2 = Matrix::zeros(p, q);
+        matmul_tn_scaled_into(&a, &b, &s, alpha, &mut c2, 0.0);
+        assert_bitwise(&c1, &c2, "scaled_tn repeatability");
+    }
+}
+
+#[test]
+fn gram_matches_tn_and_handles_zero_columns() {
+    let mut rng = Rng::new(9015);
+    for &(m, n) in &[(1usize, 1usize), (40, 7), (13, 13), (5, 31)] {
+        let mut a = Matrix::randn(m, n, &mut rng);
+        if n > 2 {
+            for i in 0..m {
+                a[(i, n / 2)] = 0.0; // zero column exercises the skip
+            }
+        }
+        let g = gram(&a);
+        assert_close(&g, &matmul_tn(&a, &a), m, &format!("gram ({m},{n})"));
+        for p in 0..n {
+            for q in 0..n {
+                assert_eq!(g[(p, q)].to_bits(), g[(q, p)].to_bits(), "gram symmetry");
+            }
+        }
+    }
+}
+
+#[test]
+fn beta_accumulation_is_consistent_across_paths() {
+    // C = β·C + A·B must hold on both the small and packed paths.
+    let mut rng = Rng::new(9017);
+    for &(m, k, n) in &[(6usize, 7usize, 5usize), (120, 110, 90)] {
+        let a = Matrix::randn(m, k, &mut rng);
+        let b = Matrix::randn(k, n, &mut rng);
+        let c0 = Matrix::randn(m, n, &mut rng);
+        let mut c = c0.clone();
+        fedlrt::tensor::matmul_into(&a, &b, &mut c, 0.5);
+        let want = c0.scale(0.5).add(&naive(&a, &b));
+        assert_close(&c, &want, k, &format!("beta nn ({m},{k},{n})"));
+
+        let at = Matrix::randn(k, m, &mut rng);
+        let mut c = c0.clone();
+        matmul_tn_into(&at, &b, &mut c, 1.0);
+        let want = c0.add(&naive(&at.t(), &b));
+        assert_close(&c, &want, k, &format!("beta tn ({m},{k},{n})"));
+
+        let bt = Matrix::randn(n, k, &mut rng);
+        let mut c = c0.clone();
+        matmul_nt_into(&a, &bt, &mut c, 1.0);
+        let want = c0.add(&naive(&a, &bt.t()));
+        assert_close(&c, &want, k, &format!("beta nt ({m},{k},{n})"));
+    }
+}
+
+#[test]
+fn qr_flat_workspace_matches_fresh_and_stays_orthonormal() {
+    // The flat-reflector QR must be insensitive to workspace reuse:
+    // interleave shapes, rerun, compare bitwise against a fresh call.
+    let mut rng = Rng::new(9019);
+    let mut ws = Workspace::new();
+    for &(m, n) in &[(30usize, 6usize), (64, 64), (9, 12), (30, 6), (200, 16)] {
+        let a = Matrix::randn(m, n, &mut rng);
+        let (q_fresh, r_fresh) = qr_thin(&a);
+        let (q_ws, r_ws) = qr_thin_ws(&a, &mut ws);
+        assert_bitwise(&q_fresh, &q_ws, &format!("qr Q ({m},{n})"));
+        assert_bitwise(&r_fresh, &r_ws, &format!("qr R ({m},{n})"));
+        assert!(orthonormality_error(&q_ws) < 1e-9, "({m},{n})");
+    }
+}
