@@ -1,0 +1,111 @@
+//! Fig 5 reproduction on the **native MLP backend** — the offline path
+//! for the §4.2 vision benchmarks (no PJRT artifacts required), three
+//! comparison rows:
+//!
+//!   top:    FeDLRT w/o variance correction  vs FedAvg
+//!   middle: FeDLRT full variance correction vs FedLin
+//!   bottom: FeDLRT simplified var. corr.    vs FedLin
+//!
+//! Each row sweeps client counts with s* = 240/C local iterations
+//! (scaled in the default CPU run) and appends one machine-readable
+//! line per (vc, C) cell to `results/fig5_mlp.jsonl` — accuracy,
+//! compression, communication saving, final rank, bytes on wire.
+//!
+//! Run: `cargo bench --bench fig5_mlp`
+//! CI smoke: `FEDLRT_BENCH_SMOKE=1 cargo bench --bench fig5_mlp`
+//! Paper-scale: `FEDLRT_BENCH_FULL=1 cargo bench --bench fig5_mlp`
+
+use std::io::Write as _;
+use std::path::Path;
+
+use fedlrt::bench::full_scale;
+use fedlrt::coordinator::presets::mlp_presets;
+use fedlrt::coordinator::VarCorrection;
+use fedlrt::nn::experiment::{assert_figure_shape, print_rows, run_mlp_sweep, VisionRow};
+use fedlrt::util::json::Json;
+
+fn smoke() -> bool {
+    std::env::var("FEDLRT_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
+fn append_rows(path: &Path, vc: VarCorrection, rows: &[VisionRow]) {
+    if let Some(parent) = path.parent() {
+        let _ = std::fs::create_dir_all(parent);
+    }
+    let f = std::fs::OpenOptions::new().create(true).append(true).open(path);
+    if let Ok(mut f) = f {
+        for row in rows {
+            let mut j = Json::obj();
+            j.set("bench", "fig5_mlp")
+                .set("vc", vc.label())
+                .set("clients", row.clients)
+                .set("fedlrt_acc", row.fedlrt_acc)
+                .set("dense_acc", row.dense_acc)
+                .set("compression", row.compression)
+                .set("comm_saving", row.comm_saving)
+                .set("fedlrt_rank", row.fedlrt_rank)
+                .set("fedlrt_floats", row.fedlrt.total_comm_floats())
+                .set("dense_floats", row.dense.total_comm_floats())
+                .set("fedlrt_bytes", row.fedlrt.total_bytes())
+                .set("dense_bytes", row.dense.total_bytes())
+                .set("smoke", smoke())
+                .set("full_scale", full_scale());
+            let _ = writeln!(f, "{}", j.to_string_compact());
+        }
+    }
+}
+
+fn main() {
+    let full = full_scale();
+    let out = Path::new("results/fig5_mlp.jsonl");
+    let preset = mlp_presets().into_iter().find(|p| p.figure == "fig5_mlp").unwrap();
+    let clients: Vec<usize> = if full {
+        vec![1, 2, 4, 8, 16]
+    } else if smoke() {
+        vec![2]
+    } else {
+        vec![1, 2, 4]
+    };
+    println!(
+        "Fig 5 (native MLP) — {} / {} analogue ({}×{:?}→{}, C sweep {:?})",
+        preset.paper_net, preset.paper_data, preset.d_in, preset.hidden, preset.classes, clients
+    );
+
+    let rows_nvc = run_mlp_sweep(&preset, &clients, VarCorrection::None, full, 5);
+    print_rows("row 1: FeDLRT w/o var-corr vs FedAvg", "fedavg acc", &rows_nvc);
+    assert_figure_shape(&rows_nvc, preset.classes);
+    append_rows(out, VarCorrection::None, &rows_nvc);
+
+    let rows_fvc = run_mlp_sweep(&preset, &clients, VarCorrection::Full, full, 5);
+    print_rows("row 2: FeDLRT full var-corr vs FedLin", "fedlin acc", &rows_fvc);
+    assert_figure_shape(&rows_fvc, preset.classes);
+    append_rows(out, VarCorrection::Full, &rows_fvc);
+
+    let rows_svc = run_mlp_sweep(&preset, &clients, VarCorrection::Simplified, full, 5);
+    print_rows("row 3: FeDLRT simplified var-corr vs FedLin", "fedlin acc", &rows_svc);
+    assert_figure_shape(&rows_svc, preset.classes);
+    append_rows(out, VarCorrection::Simplified, &rows_svc);
+
+    // The acceptance headline: well above 2× chance, > 50% comm saving.
+    let chance = 1.0 / preset.classes as f64;
+    for rows in [&rows_nvc, &rows_fvc, &rows_svc] {
+        for row in rows.iter() {
+            assert!(
+                row.fedlrt_acc > 2.0 * chance,
+                "C={}: acc {:.3} ≤ 2× chance",
+                row.clients,
+                row.fedlrt_acc
+            );
+        }
+    }
+    // The simplified variant must match the full one at lower cost.
+    let last = clients.len() - 1;
+    let comm_s = rows_svc[last].fedlrt.total_comm_floats();
+    let comm_f = rows_fvc[last].fedlrt.total_comm_floats();
+    assert!(comm_s < comm_f, "simplified vc must communicate less than full vc");
+    println!(
+        "\nC={}: acc no-vc {:.4} / full-vc {:.4}; simplified comm {comm_s} < full {comm_f} ✓",
+        rows_nvc[last].clients, rows_nvc[last].fedlrt_acc, rows_fvc[last].fedlrt_acc
+    );
+    println!("\nfig5_mlp OK (rows appended to {})", out.display());
+}

@@ -328,14 +328,15 @@ fn main() {
     let lsq_fac = LowRank::random_init(20, 20, 8, &mut prng);
     let w = Weights { dense: vec![], lr: vec![LrWeight::Factored(lsq_fac)] };
     let mut g_buf = vec![Matrix::zeros(8, 8)];
-    let warm_loss =
-        prob.grad_coeff_into(0, &w, 0, &mut g_buf).expect("LeastSquares offers the fast path");
+    let warm_loss = prob
+        .grad_coeff_into(0, &w, 0, &mut g_buf, &mut [])
+        .expect("LeastSquares offers the fast path");
     std::hint::black_box(warm_loss);
     let grad_iters = 200u64;
     let watch = Stopwatch::start();
     let (gc, gb) = measure_allocs(|| {
         for _ in 0..grad_iters {
-            std::hint::black_box(prob.grad_coeff_into(0, &w, 0, &mut g_buf));
+            std::hint::black_box(prob.grad_coeff_into(0, &w, 0, &mut g_buf, &mut []));
         }
     });
     let per_call_us = watch.elapsed_s() / grad_iters as f64 * 1e6;
@@ -355,6 +356,75 @@ fn main() {
         gc, 0,
         "steady-state gradient path must be allocation-free \
          ({gc} allocs / {gb} bytes over {grad_iters} calls)"
+    );
+
+    // --- steady-state MLP coefficient gradient: the same contract on
+    // the native multi-layer backend. The fast path fills coefficient
+    // AND dense (bias/head) gradients into caller buffers; with warm
+    // per-client scratch the counting allocator must observe ZERO heap
+    // allocations across repeated calls — batches, activations, deltas
+    // and projections all live in reused buffers.
+    let mut mrng = Rng::new(17);
+    let mlp = fedlrt::models::mlp::MlpProblem::new(fedlrt::models::mlp::MlpOptions {
+        d_in: 32,
+        hidden: vec![64, 64],
+        classes: 10,
+        num_clients: 2,
+        train_n: if smoke() { 256 } else { 512 },
+        test_n: 64,
+        eval_cap: 128,
+        batch: 64,
+        seed: 3,
+        augment: true,
+        dirichlet_alpha: None,
+    });
+    let mlp_spec = mlp.spec();
+    let w_mlp = Weights {
+        dense: mlp_spec
+            .dense_shapes
+            .iter()
+            .map(|&(m, nn)| Matrix::randn(m, nn, &mut mrng).scale(0.1))
+            .collect(),
+        lr: mlp_spec
+            .lr_shapes
+            .iter()
+            .map(|&(m, nn)| LrWeight::Factored(LowRank::random_init(m, nn, 8, &mut mrng)))
+            .collect(),
+    };
+    let mut g_lr: Vec<Matrix> =
+        w_mlp.lr.iter().map(|_| Matrix::zeros(8, 8)).collect();
+    let mut g_dense: Vec<Matrix> =
+        mlp_spec.dense_shapes.iter().map(|&(m, nn)| Matrix::zeros(m, nn)).collect();
+    // Warm: grow every scratch buffer once (two steps exercise two
+    // distinct batches of the schedule).
+    for step in 0..2u64 {
+        mlp.grad_coeff_into(0, &w_mlp, step, &mut g_lr, &mut g_dense)
+            .expect("MLP offers the fast path");
+    }
+    let mlp_iters = 200u64;
+    let watch = Stopwatch::start();
+    let (mc, mb) = measure_allocs(|| {
+        for s in 0..mlp_iters {
+            std::hint::black_box(mlp.grad_coeff_into(0, &w_mlp, s % 4, &mut g_lr, &mut g_dense));
+        }
+    });
+    let per_call_us = watch.elapsed_s() / mlp_iters as f64 * 1e6;
+    println!(
+        "mlp grad_coeff_into (steady state)       {per_call_us:>10.3} µs/call, {mc} allocs / {mb} B over {mlp_iters} calls"
+    );
+    let mut mrow = Json::obj();
+    mrow.set("bench", "micro_hotpath")
+        .set("name", "mlp_grad_coeff_into_steady")
+        .set("iters", mlp_iters)
+        .set("mean_s", per_call_us / 1e6)
+        .set("allocs_per_call", mc as f64 / mlp_iters as f64)
+        .set("bytes_per_call", mb as f64 / mlp_iters as f64)
+        .set("smoke", smoke());
+    append_row(out, &mrow);
+    assert_eq!(
+        mc, 0,
+        "steady-state MLP gradient path must be allocation-free \
+         ({mc} allocs / {mb} bytes over {mlp_iters} calls)"
     );
 
     // --- one full FeDLRT round on the Fig-4 problem ---

@@ -66,11 +66,13 @@ pub fn run_dense<P: FedProblem + Sync>(
     cfg.apply_kernel_threads();
     let mut record = RunRecord::new(algo.label(), experiment, c_num, cfg.seed);
     record.config = cfg.to_json();
+    // Per-client local-step counters (see `run_fedlrt`): straggler-
+    // shortened rounds resume their batch schedule instead of skipping.
+    let mut next_step: Vec<u64> = vec![0; c_num];
 
     for t in 0..cfg.rounds {
         let watch = Stopwatch::start();
         let lr_t = cfg.lr.at(t);
-        let step0 = (t * cfg.local_iters) as u64;
         let plan = RoundPlan::build(cfg, c_num, t, |c| problem.client_weight(c));
         let a_num = plan.len();
         net.set_active_clients(a_num);
@@ -92,7 +94,7 @@ pub fn run_dense<P: FedProblem + Sync>(
                     lr: lr_bc.iter().cloned().map(LrWeight::Dense).collect(),
                 };
                 let report = executor.execute(&plan, |task| {
-                    problem.grad(task.client_id, &w_t, LrWant::Dense, step0)
+                    problem.grad(task.client_id, &w_t, LrWant::Dense, next_step[task.client_id])
                 });
                 client_wall_s += report.wall_s;
                 client_serial_s += report.serial_s;
@@ -144,6 +146,7 @@ pub fn run_dense<P: FedProblem + Sync>(
         // `Weights` on every local iteration.
         let report = executor.execute(&plan, |task| {
             let c = task.client_id;
+            let step0_c = next_step[c];
             let mut w_c = Weights {
                 dense: dense_bc.clone(),
                 lr: lr_bc.iter().cloned().map(LrWeight::Dense).collect(),
@@ -153,7 +156,7 @@ pub fn run_dense<P: FedProblem + Sync>(
             let mut opt_d: Vec<ClientOptimizer> =
                 (0..w_c.dense.len()).map(|_| ClientOptimizer::new(cfg.opt)).collect();
             for s in 0..task.local_iters {
-                let g = problem.grad(c, &w_c, LrWant::Dense, step0 + s as u64);
+                let g = problem.grad(c, &w_c, LrWant::Dense, step0_c + s as u64);
                 for l in 0..w_c.lr.len() {
                     let corr = corrections.as_ref().map(|cs| &cs[task.ordinal].0[l]);
                     opt_lr[l].step(w_c.lr[l].as_dense_mut(), g.lr[l].dense(), lr_t, corr);
@@ -187,6 +190,9 @@ pub fn run_dense<P: FedProblem + Sync>(
             }
         }
         net.end_round_trip();
+        for task in &plan.tasks {
+            next_step[task.client_id] += task.local_iters as u64;
+        }
         lr_w = lr_accum;
         dense = dense_accum;
 

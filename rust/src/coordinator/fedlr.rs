@@ -56,11 +56,13 @@ pub fn run_fedlr<P: FedProblem + Sync>(
     cfg.apply_kernel_threads();
     let mut record = RunRecord::new("fedlr", experiment, c_num, cfg.seed);
     record.config = cfg.to_json();
+    // Per-client local-step counters (see `run_fedlrt`): straggler-
+    // shortened rounds resume their batch schedule instead of skipping.
+    let mut next_step: Vec<u64> = vec![0; c_num];
 
     for t in 0..cfg.rounds {
         let watch = Stopwatch::start();
         let lr_t = cfg.lr.at(t);
-        let step0 = (t * cfg.local_iters) as u64;
         let plan = RoundPlan::build(cfg, c_num, t, |c| problem.client_weight(c));
         net.set_active_clients(plan.len());
 
@@ -86,8 +88,9 @@ pub fn run_fedlr<P: FedProblem + Sync>(
             let mut wts =
                 Weights { dense: vec![], lr: vec![LrWeight::Dense(w_compressed.clone())] };
             let mut opt = ClientOptimizer::new(cfg.opt);
+            let step0_c = next_step[task.client_id];
             for s in 0..task.local_iters {
-                let g = problem.grad(task.client_id, &wts, LrWant::Dense, step0 + s as u64);
+                let g = problem.grad(task.client_id, &wts, LrWant::Dense, step0_c + s as u64);
                 opt.step(wts.lr[0].as_dense_mut(), g.lr[0].dense(), lr_t, None);
             }
             let w_c = match wts.lr.pop() {
@@ -120,6 +123,9 @@ pub fn run_fedlr<P: FedProblem + Sync>(
             w_next.axpy(task.weight, &w_c_approx);
         }
         net.end_round_trip();
+        for task in &plan.tasks {
+            next_step[task.client_id] += task.local_iters as u64;
+        }
         w = w_next;
 
         // Metrics — rank reported as the numerical rank of the average

@@ -74,11 +74,15 @@ pub fn run_fedlrt<P: FedProblem + Sync>(
     let algo = format!("fedlrt_{}", cfg.var_correction.label());
     let mut record = RunRecord::new(&algo, experiment, c_num, cfg.seed);
     record.config = cfg.to_json();
+    // Per-client local-step counters: each client's batch schedule
+    // continues where *it* left off, so straggler-shortened rounds and
+    // partial participation never skip mini-batches (with uniform full
+    // participation this is exactly the old `t · s*`).
+    let mut next_step: Vec<u64> = vec![0; c_num];
 
     for t in 0..cfg.rounds {
         let watch = Stopwatch::start();
         let lr_t = cfg.lr.at(t);
-        let step0 = (t * cfg.local_iters) as u64;
         // Round schedule: participation sampling, dropout, straggler
         // iteration counts, and normalized aggregation weights, all in
         // one deterministic plan.
@@ -116,8 +120,9 @@ pub fn run_fedlrt<P: FedProblem + Sync>(
             dense: dense_bc.clone(),
             lr: bc.iter().cloned().map(LrWeight::Factored).collect(),
         };
-        let report = executor
-            .execute(&plan, |task| problem.grad(task.client_id, &w_t, LrWant::Factors, step0));
+        let report = executor.execute(&plan, |task| {
+            problem.grad(task.client_id, &w_t, LrWant::Factors, next_step[task.client_id])
+        });
         client_wall_s += report.wall_s;
         client_serial_s += report.serial_s;
         let per_client = report.results;
@@ -246,7 +251,7 @@ pub fn run_fedlrt<P: FedProblem + Sync>(
                     lr: augs_c.iter().map(|a| LrWeight::Factored(a.as_factorization())).collect(),
                 };
                 let report = executor.execute(&plan, |task| {
-                    problem.grad(task.client_id, &w_aug, LrWant::Coeff, step0)
+                    problem.grad(task.client_id, &w_aug, LrWant::Coeff, next_step[task.client_id])
                 });
                 client_wall_s += report.wall_s;
                 client_serial_s += report.serial_s;
@@ -294,13 +299,17 @@ pub fn run_fedlrt<P: FedProblem + Sync>(
         // Client state is assembled ONCE per client per round: the
         // augmented factorization is trained *in place* (only S̃ changes
         // between iterations — the seed re-cloned Ũ/Ṽ and the dense
-        // params every step), and the coefficient gradients land in
-        // per-layer buffers reused across all s* iterations through the
-        // problem's allocation-free `grad_coeff_into` fast path
-        // (LeastSquares implements it; PJRT problems fall back to
-        // `grad`).
+        // params every step), and the coefficient AND dense gradients
+        // land in per-layer buffers reused across all s* iterations
+        // through the problem's allocation-free `grad_coeff_into` fast
+        // path (LeastSquares and MlpProblem implement it; PJRT problems
+        // fall back to `grad`). The fast path fills the dense-gradient
+        // buffers too, so dense params (biases, heads) take exactly the
+        // same optimizer steps on either path — regression-tested by
+        // `fast_path_trains_dense_params` below.
         let report = executor.execute(&plan, |task| {
             let c = task.client_id;
+            let step0_c = next_step[c];
             let mut w_c = Weights {
                 dense: dense_bc.clone(),
                 lr: augs_c
@@ -316,39 +325,39 @@ pub fn run_fedlrt<P: FedProblem + Sync>(
             };
             let mut g_coeff: Vec<Matrix> =
                 augs_c.iter().map(|a| Matrix::zeros(a.rank(), a.rank())).collect();
+            let mut g_dense: Vec<Matrix> =
+                dense.iter().map(|d| Matrix::zeros(d.rows(), d.cols())).collect();
             let mut opt_s: Vec<ClientOptimizer> =
                 (0..num_lr).map(|_| ClientOptimizer::new(cfg.opt)).collect();
             let mut opt_d: Vec<ClientOptimizer> =
                 (0..dense.len()).map(|_| ClientOptimizer::new(cfg.opt)).collect();
             let mut first_loss = 0.0;
-            let fast_ok = dense.is_empty();
             for s in 0..task.local_iters {
-                let step = step0 + s as u64;
-                let mut loss = f64::NAN;
-                let mut used_fast = false;
-                if fast_ok {
-                    if let Some(l0) = problem.grad_coeff_into(c, &w_c, step, &mut g_coeff) {
-                        loss = l0;
-                        used_fast = true;
+                let step = step0_c + s as u64;
+                let loss = match problem.grad_coeff_into(c, &w_c, step, &mut g_coeff, &mut g_dense)
+                {
+                    Some(l0) => l0,
+                    None => {
+                        let g = problem.grad(c, &w_c, LrWant::Coeff, step);
+                        for (buf, gl) in g_coeff.iter_mut().zip(&g.lr) {
+                            buf.copy_from(gl.coeff());
+                        }
+                        for (buf, gd) in g_dense.iter_mut().zip(&g.dense) {
+                            buf.copy_from(gd);
+                        }
+                        g.loss
                     }
-                }
-                if !used_fast {
-                    let g = problem.grad(c, &w_c, LrWant::Coeff, step);
-                    loss = g.loss;
-                    for (buf, gl) in g_coeff.iter_mut().zip(&g.lr) {
-                        buf.copy_from(gl.coeff());
-                    }
-                    for (dl, gd) in g.dense.iter().enumerate() {
-                        opt_d[dl].step(
-                            &mut w_c.dense[dl],
-                            gd,
-                            lr_t,
-                            dense_corrections[task.ordinal][dl].as_ref(),
-                        );
-                    }
-                }
+                };
                 if s == 0 {
                     first_loss = loss;
+                }
+                for (dl, gd) in g_dense.iter().enumerate() {
+                    opt_d[dl].step(
+                        &mut w_c.dense[dl],
+                        gd,
+                        lr_t,
+                        dense_corrections[task.ordinal][dl].as_ref(),
+                    );
                 }
                 for l in 0..num_lr {
                     let fac_c = w_c.lr[l].as_factored_mut();
@@ -374,9 +383,14 @@ pub fn run_fedlrt<P: FedProblem + Sync>(
             augs.iter().map(|a| ws.take_mat(a.rank(), a.rank())).collect();
         let mut dense_accum: Vec<Matrix> =
             dense.iter().map(|d| Matrix::zeros(d.rows(), d.cols())).collect();
-        let mut local_loss_sum = 0.0;
+        // Between-eval loss estimate: the *weighted* mean of the
+        // first-iteration client losses, using the plan's normalized
+        // weights — an unweighted mean would bias the recorded
+        // trajectory whenever `client_weight` is non-uniform (e.g.
+        // Dirichlet-sized MLP shards).
+        let mut local_loss_w = 0.0;
         for (task, (s_c, dense_c, first_loss)) in plan.tasks.iter().zip(&report.results) {
-            local_loss_sum += *first_loss;
+            local_loss_w += task.weight * *first_loss;
             for l in 0..num_lr {
                 s_accum[l].axpy(task.weight, &net.aggregate_mat("S_tilde_c", &s_c[l]));
             }
@@ -385,6 +399,12 @@ pub fn run_fedlrt<P: FedProblem + Sync>(
             }
         }
         net.end_round_trip();
+        // Advance each participating client's batch schedule by the
+        // iterations it actually ran (stragglers advance less; absentees
+        // not at all) — the next round resumes where this one stopped.
+        for task in &plan.tasks {
+            next_step[task.client_id] += task.local_iters as u64;
+        }
 
         // (17)-(18) Automatic compression: 2r×2r SVD + truncation
         // (SVD scratch drawn from the cross-round workspace).
@@ -422,7 +442,7 @@ pub fn run_fedlrt<P: FedProblem + Sync>(
         let global_loss = if should_eval {
             problem.global_loss(&w_eval)
         } else {
-            local_loss_sum / a_num as f64
+            local_loss_w
         };
         record.rounds.push(RoundMetrics {
             round: t,
@@ -595,6 +615,113 @@ mod tests {
         // staying numerically alive.
         assert!(f16.final_loss().is_finite() && q8.final_loss().is_finite());
         assert_ne!(dense.final_loss().to_bits(), q8.final_loss().to_bits());
+    }
+
+    /// A problem with one low-rank layer AND a dense parameter that
+    /// offers the `grad_coeff_into` fast path. `grad(LrWant::Coeff)`
+    /// panics, so the test can only pass if the coordinator actually
+    /// uses the fast path — and only if it steps the dense parameter
+    /// from the fast path's dense-gradient buffer does the loss fall.
+    ///
+    /// `L_c(W, D) = ½‖D − T_c‖² + ½‖W‖²_F` with `W = U S Vᵀ`.
+    struct DenseRider {
+        targets: Vec<Matrix>,
+    }
+
+    impl crate::models::FedProblem for DenseRider {
+        fn spec(&self) -> crate::models::ProblemSpec {
+            crate::models::ProblemSpec {
+                dense_shapes: vec![(2, 2)],
+                lr_shapes: vec![(6, 6)],
+            }
+        }
+
+        fn num_clients(&self) -> usize {
+            self.targets.len()
+        }
+
+        fn grad(
+            &self,
+            c: usize,
+            w: &Weights,
+            want: LrWant,
+            _step: u64,
+        ) -> crate::models::Grads {
+            let f = match want {
+                LrWant::Factors => w.lr[0].as_factored(),
+                LrWant::Coeff => panic!(
+                    "inner loop fell back to grad(Coeff) — fast path with dense params broken"
+                ),
+                LrWant::Dense => unreachable!("dense baselines not under test"),
+            };
+            // ∇_W = W ⇒ G_U = U S Sᵀ, G_V = V Sᵀ S, G_S = S (orthonormal bases).
+            let us = crate::tensor::matmul(&f.u, &f.s);
+            let g_u = crate::tensor::matmul_nt(&us, &f.s);
+            let g_v = crate::tensor::matmul(&f.v, &crate::tensor::matmul_tn(&f.s, &f.s));
+            let g_s = f.s.clone();
+            let d_res = w.dense[0].sub(&self.targets[c]);
+            let loss = 0.5 * (d_res.fro_norm().powi(2) + f.s.fro_norm().powi(2));
+            crate::models::Grads {
+                loss,
+                dense: vec![d_res],
+                lr: vec![LrGrad::Factors { g_u, g_v, g_s }],
+            }
+        }
+
+        fn grad_coeff_into(
+            &self,
+            c: usize,
+            w: &Weights,
+            _step: u64,
+            out: &mut [Matrix],
+            out_dense: &mut [Matrix],
+        ) -> Option<f64> {
+            let f = w.lr[0].as_factored();
+            if out[0].shape() != f.s.shape() || out_dense.len() != 1 {
+                return None;
+            }
+            out[0].copy_from(&f.s);
+            out_dense[0].copy_from(&w.dense[0]);
+            out_dense[0].axpy(-1.0, &self.targets[c]);
+            Some(0.5 * (out_dense[0].fro_norm().powi(2) + f.s.fro_norm().powi(2)))
+        }
+
+        fn global_loss(&self, w: &Weights) -> f64 {
+            let w_norm2 = match &w.lr[0] {
+                LrWeight::Factored(f) => f.s.fro_norm().powi(2),
+                LrWeight::Dense(m) => m.fro_norm().powi(2),
+            };
+            let c = self.targets.len() as f64;
+            self.targets
+                .iter()
+                .map(|t| 0.5 * (w.dense[0].sub(t).fro_norm().powi(2) + w_norm2))
+                .sum::<f64>()
+                / c
+        }
+    }
+
+    #[test]
+    fn fast_path_trains_dense_params() {
+        // Regression for the `dense.is_empty()` fast-path gate: dense
+        // parameters must move under FeDLRT when `grad_coeff_into` is
+        // implemented. If the fast path skipped dense steps, `D` would
+        // stay at its random init and the loss could not fall below the
+        // frozen-dense floor; if the coordinator fell back to
+        // grad(Coeff), DenseRider panics.
+        let mut rng = Rng::new(881);
+        // One shared target: the dense optimum is exactly T, so the loss
+        // floor is ~0 — any residual means D never moved.
+        let t0 = Matrix::randn(2, 2, &mut rng).scale(2.0);
+        let prob = DenseRider { targets: vec![t0; 3] };
+        let mut cfg = quick_cfg(30, 5, VarCorrection::None);
+        cfg.lr = LrSchedule::Constant(0.1);
+        let rec = run_fedlrt(&prob, &cfg, "dense_rider");
+        let first = rec.rounds.first().unwrap().global_loss;
+        let last = rec.final_loss();
+        // The lr-layer term decays regardless; only a trained D drives
+        // the loss to ~0 (the target term dominates the initial loss).
+        assert!(last < 0.1 * first, "dense params frozen? {first} -> {last}");
+        assert!(last.is_finite());
     }
 
     #[test]

@@ -47,11 +47,13 @@ pub fn run_fedlrt_naive<P: FedProblem + Sync>(
     cfg.apply_kernel_threads();
     let mut record = RunRecord::new("fedlrt_naive", experiment, c_num, cfg.seed);
     record.config = cfg.to_json();
+    // Per-client local-step counters (see `run_fedlrt`): straggler-
+    // shortened rounds resume their batch schedule instead of skipping.
+    let mut next_step: Vec<u64> = vec![0; c_num];
 
     for t in 0..cfg.rounds {
         let watch = Stopwatch::start();
         let lr_t = cfg.lr.at(t);
-        let step0 = (t * cfg.local_iters) as u64;
         let plan = RoundPlan::build(cfg, c_num, t, |c| problem.client_weight(c));
         net.set_active_clients(plan.len());
 
@@ -69,8 +71,9 @@ pub fn run_fedlrt_naive<P: FedProblem + Sync>(
         // so each client is one hermetic work item.
         let report = executor.execute(&plan, |task| {
             let c = task.client_id;
+            let step0_c = next_step[c];
             let w_c = Weights { dense: vec![], lr: vec![LrWeight::Factored(fac_c.clone())] };
-            let g = problem.grad(c, &w_c, LrWant::Factors, step0);
+            let g = problem.grad(c, &w_c, LrWant::Factors, step0_c);
             let (g_u, g_v) = match &g.lr[0] {
                 LrGrad::Factors { g_u, g_v, .. } => (g_u.clone(), g_v.clone()),
                 _ => unreachable!(),
@@ -92,8 +95,8 @@ pub fn run_fedlrt_naive<P: FedProblem + Sync>(
             let mut g_coeff = vec![Matrix::zeros(r2, r2)];
             let mut opt = ClientOptimizer::new(cfg.opt);
             for s in 0..task.local_iters {
-                let step = step0 + s as u64;
-                if problem.grad_coeff_into(c, &w_loc, step, &mut g_coeff).is_none() {
+                let step = step0_c + s as u64;
+                if problem.grad_coeff_into(c, &w_loc, step, &mut g_coeff, &mut []).is_none() {
                     let gg = problem.grad(c, &w_loc, LrWant::Coeff, step);
                     g_coeff[0].copy_from(gg.lr[0].coeff());
                 }
@@ -127,6 +130,9 @@ pub fn run_fedlrt_naive<P: FedProblem + Sync>(
             w_star.axpy(task.weight, &w_c_dense);
         }
         net.end_round_trip();
+        for task in &plan.tasks {
+            next_step[task.client_id] += task.local_iters as u64;
+        }
 
         // Server: full n×n SVD to recover a low-rank factorization —
         // the O(n³) cost shared bases avoid.

@@ -8,6 +8,7 @@
 //! measurements.
 
 pub mod partition;
+pub mod schedule;
 pub mod vision;
 
 pub use partition::{dirichlet_partition, uniform_partition};

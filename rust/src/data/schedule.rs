@@ -1,0 +1,87 @@
+//! Deterministic mini-batch scheduling, shared by every stochastic
+//! backend (`nn::NnProblem` and `models::mlp::MlpProblem`).
+//!
+//! A client's shard is consumed in fixed-size batches indexed by the
+//! local step counter: `epoch = step / num_batches`,
+//! `bi = step % num_batches`. The batch count **rounds up** —
+//! `⌈len/b⌉` — so the shard tail is cycled into the final batch of each
+//! epoch (wrapping back to the shard start for filler) instead of being
+//! silently dropped. The earlier floor division meant samples beyond
+//! `⌊len/b⌋·b` were never visited by any epoch; with the ceil schedule
+//! every sample is visited at least once per epoch (see the
+//! `every_sample_visited_each_epoch` test).
+//!
+//! Both backends draw from these functions so their batch schedules are
+//! identical given the same `(shard, batch, step)`.
+
+/// Batches per epoch: `⌈shard_len / batch⌉`, at least 1.
+pub fn num_batches(shard_len: usize, batch: usize) -> usize {
+    assert!(batch > 0, "batch size must be positive");
+    ((shard_len + batch - 1) / batch).max(1)
+}
+
+/// `(epoch, batch-index)` for local step counter `step`.
+pub fn batch_slot(shard_len: usize, batch: usize, step: u64) -> (u64, usize) {
+    let nb = num_batches(shard_len, batch) as u64;
+    (step / nb, (step % nb) as usize)
+}
+
+/// Position within the shard of slot `k` of batch `bi` (the final batch
+/// wraps past the tail to the shard start).
+pub fn sample_index(shard_len: usize, batch: usize, bi: usize, k: usize) -> usize {
+    (bi * batch + k) % shard_len.max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_batch_count() {
+        assert_eq!(num_batches(100, 32), 4); // 3×32 + tail of 4
+        assert_eq!(num_batches(96, 32), 3);
+        assert_eq!(num_batches(5, 32), 1);
+        assert_eq!(num_batches(0, 32), 1);
+    }
+
+    #[test]
+    fn every_sample_visited_each_epoch() {
+        // The tail (indices 96..100) must be visited — the floor
+        // schedule never touched them.
+        let (len, b) = (100usize, 32usize);
+        let nb = num_batches(len, b);
+        let mut seen = vec![false; len];
+        for bi in 0..nb {
+            for k in 0..b {
+                seen[sample_index(len, b, bi, k)] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "schedule drops samples: {seen:?}");
+    }
+
+    #[test]
+    fn tail_batch_wraps_to_start() {
+        // Batch 3 of (len=100, b=32) covers 96..100 then wraps to 0..28.
+        let idx: Vec<usize> = (0..32).map(|k| sample_index(100, 32, 3, k)).collect();
+        assert_eq!(&idx[..4], &[96, 97, 98, 99]);
+        assert_eq!(idx[4], 0);
+        assert_eq!(idx[31], 27);
+    }
+
+    #[test]
+    fn slot_is_deterministic_in_step() {
+        let (len, b) = (100usize, 32usize);
+        assert_eq!(batch_slot(len, b, 0), (0, 0));
+        assert_eq!(batch_slot(len, b, 3), (0, 3));
+        assert_eq!(batch_slot(len, b, 4), (1, 0));
+        assert_eq!(batch_slot(len, b, 9), (2, 1));
+    }
+
+    #[test]
+    fn tiny_shard_wraps() {
+        // Shard smaller than the batch: one batch per epoch, wrapping.
+        let idx: Vec<usize> = (0..8).map(|k| sample_index(5, 8, 0, k)).collect();
+        assert_eq!(idx, vec![0, 1, 2, 3, 4, 0, 1, 2]);
+        assert_eq!(batch_slot(5, 8, 7), (7, 0));
+    }
+}

@@ -110,7 +110,7 @@ impl VisionDataset {
     /// `(epoch, i)`): random feature-block sign flip + Gaussian jitter.
     pub fn augmented_row(&self, i: usize, epoch: u64, out: &mut [f32]) {
         let row = self.train.x.row(i);
-        let mut rng = Rng::new(0xA06_0000 ^ (epoch << 24) ^ i as u64);
+        let mut rng = Self::augment_rng(i, epoch);
         let flip = rng.uniform() < 0.5;
         let half = row.len() / 2;
         for (j, o) in out.iter_mut().enumerate() {
@@ -118,6 +118,26 @@ impl VisionDataset {
             let src = if flip && j < half { half - 1 - j } else { j };
             *o = (row[src] + 0.05 * rng.normal()) as f32;
         }
+    }
+
+    /// [`augmented_row`](Self::augmented_row) at f64 precision for the
+    /// native Rust backends: identical RNG stream and flip/jitter
+    /// schedule, so the f32 variant is exactly this value cast down.
+    /// Allocation-free (the MLP fast path fills batches through it).
+    pub fn augmented_row_f64(&self, i: usize, epoch: u64, out: &mut [f64]) {
+        let row = self.train.x.row(i);
+        let mut rng = Self::augment_rng(i, epoch);
+        let flip = rng.uniform() < 0.5;
+        let half = row.len() / 2;
+        for (j, o) in out.iter_mut().enumerate() {
+            let src = if flip && j < half { half - 1 - j } else { j };
+            *o = row[src] + 0.05 * rng.normal();
+        }
+    }
+
+    /// The per-(sample, epoch) augmentation stream both precisions share.
+    fn augment_rng(i: usize, epoch: u64) -> Rng {
+        Rng::new(0xA06_0000 ^ (epoch << 24) ^ i as u64)
     }
 
     /// Label histogram of a set of training indices (diagnostics).
@@ -198,6 +218,22 @@ mod tests {
         }
         let acc = correct as f64 / ds.test.len() as f64;
         assert!(acc > 0.4, "linear probe accuracy {acc} ≤ chance-ish");
+    }
+
+    #[test]
+    fn f64_augmentation_matches_f32_stream() {
+        // The two precisions must draw the same flips and jitter — the
+        // f32 row is the f64 row cast down, element for element.
+        let ds = VisionDataset::synthesize(18, 3, 60, 10, 5);
+        let mut a32 = vec![0f32; 18];
+        let mut a64 = vec![0f64; 18];
+        for (i, epoch) in [(0usize, 0u64), (7, 3), (59, 11)] {
+            ds.augmented_row(i, epoch, &mut a32);
+            ds.augmented_row_f64(i, epoch, &mut a64);
+            for (x, y) in a32.iter().zip(&a64) {
+                assert_eq!(*x, *y as f32);
+            }
+        }
     }
 
     #[test]

@@ -9,8 +9,16 @@
 //! * `costs` — Table 1 / Fig 3 cost model at a chosen operating point.
 //! * `info`  — runtime + artifact inventory.
 //!
+//! Invoking with `--problem <mlp|lsq>` (no subcommand) runs the chosen
+//! problem family end to end: `--problem mlp` trains the native
+//! multi-layer MLP backend on the Fig-5 preset offline (no artifacts)
+//! against its dense baseline and verifies the headline claims
+//! (accuracy above chance, communication saving, compression).
+//!
 //! Examples:
 //! ```text
+//! fedlrt --problem mlp
+//! fedlrt --problem mlp --figure fig6_mlp --clients 8 --vc full
 //! fedlrt lsq --mode homogeneous --clients 8
 //! fedlrt train --model resnet18_head --clients 4 --rounds 40 --vc full
 //! fedlrt costs --n 512 --r 32
@@ -24,6 +32,7 @@ use fedlrt::coordinator::{
 };
 use fedlrt::engine::ExecutorKind;
 use fedlrt::models::least_squares::LeastSquares;
+use fedlrt::nn::experiment::{print_rows, run_mlp_sweep};
 use fedlrt::nn::{NnOptions, NnProblem};
 use fedlrt::opt::{LrSchedule, OptimizerKind, SgdConfig};
 use fedlrt::runtime::Runtime;
@@ -32,12 +41,23 @@ use fedlrt::util::rng::Rng;
 
 fn main() -> Result<()> {
     let raw: Vec<String> = std::env::args().skip(1).collect();
+    let usage = "usage: fedlrt <train|lsq|costs|info> [options] | fedlrt --problem <mlp|lsq>\n\
+                 (--help per subcommand)";
     let (sub, rest) = match raw.split_first() {
         Some((s, rest)) if !s.starts_with("--") => (s.as_str(), rest.to_vec()),
-        _ => {
-            eprintln!(
-                "usage: fedlrt <train|lsq|costs|info> [options]   (--help per subcommand)"
-            );
+        Some((s, _)) if s == "--help" || s == "-h" => {
+            println!("{usage}");
+            return Ok(());
+        }
+        // Bare-option invocation: `fedlrt --problem mlp [...]`. Only
+        // `--problem` selects this path — any other bare option is a
+        // typo'd command line and gets the usage text, not a training
+        // run.
+        Some(_) if raw.iter().any(|a| a == "--problem" || a.starts_with("--problem=")) => {
+            ("problem", raw.clone())
+        }
+        Some(_) | None => {
+            eprintln!("{usage}");
             std::process::exit(2);
         }
     };
@@ -46,11 +66,108 @@ fn main() -> Result<()> {
         "lsq" => cmd_lsq(&rest),
         "costs" => cmd_costs(&rest),
         "info" => cmd_info(),
+        "problem" => cmd_problem(&rest),
         other => {
             eprintln!("unknown subcommand '{other}' (expected train|lsq|costs|info)");
             std::process::exit(2);
         }
     }
+}
+
+/// `fedlrt --problem mlp` — the native multi-layer backend, end to end:
+/// trains the chosen Fig-5/Fig-6 MLP preset with FeDLRT and its dense
+/// baseline offline and checks the headline claims.
+fn cmd_problem(rest: &[String]) -> Result<()> {
+    // Split off the family selection BEFORE option parsing: the
+    // remaining arguments belong to the selected family's own CLI
+    // (`--problem lsq --mode heterogeneous` must reach cmd_lsq's
+    // parser, which owns `--mode`; parsing them here would reject
+    // them as unknown options).
+    let mut fwd: Vec<String> = Vec::new();
+    let mut family: Option<String> = None;
+    let mut it = rest.iter();
+    while let Some(arg) = it.next() {
+        if arg == "--problem" {
+            family = it.next().cloned();
+        } else if let Some(v) = arg.strip_prefix("--problem=") {
+            family = Some(v.to_string());
+        } else {
+            fwd.push(arg.clone());
+        }
+    }
+    match family.as_deref() {
+        Some("mlp") | None => {}
+        Some("lsq") => return cmd_lsq(&fwd),
+        Some(other) => {
+            eprintln!("unknown --problem '{other}' (mlp|lsq)");
+            std::process::exit(2);
+        }
+    }
+    let cli = Cli::new("fedlrt --problem mlp", "run the native MLP problem end to end")
+        .opt("figure", "fig5_mlp", "MLP preset: fig5_mlp|fig6_mlp")
+        .opt("clients", "4", "number of clients")
+        .opt("vc", "simplified", "variance correction: none|simplified|full")
+        .opt("seed", "0", "random seed")
+        .flag("full", "paper-scale rounds/data (default: smoke scale)")
+        .opt("out", "results/problem_mlp.jsonl", "JSONL output path");
+    let a = cli.parse(&fwd).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2)
+    });
+    let figure = a.str("figure").to_string();
+    let preset = fedlrt::coordinator::presets::mlp_presets()
+        .into_iter()
+        .find(|p| p.figure == figure)
+        .unwrap_or_else(|| {
+            eprintln!("unknown --figure '{figure}' (fig5_mlp|fig6_mlp)");
+            std::process::exit(2)
+        });
+    let clients = a.usize("clients");
+    let vc = parse_vc(a.str("vc"));
+    let full = a.flag("full");
+    let seed = a.u64("seed");
+    println!(
+        "--problem mlp: {} / {} analogue — {}×{:?}→{} MLP, C={}, vc={}, {} scale",
+        preset.paper_net,
+        preset.paper_data,
+        preset.d_in,
+        preset.hidden,
+        preset.classes,
+        clients,
+        vc.label(),
+        if full { "paper" } else { "smoke" }
+    );
+    let rows = run_mlp_sweep(&preset, &[clients], vc, full, seed);
+    let dense_label = if vc == VarCorrection::None { "fedavg acc" } else { "fedlin acc" };
+    print_rows(&format!("{} (native MLP backend)", preset.figure), dense_label, &rows);
+    let row = &rows[0];
+    let chance = 1.0 / preset.classes as f64;
+    // Acceptance gates: a ≥2-hidden-layer MLP trained offline to well
+    // above chance, with large FeDLRT communication savings.
+    assert!(preset.hidden.len() >= 2, "preset must have ≥ 2 hidden layers");
+    assert!(
+        row.fedlrt_acc > 2.0 * chance,
+        "FeDLRT accuracy {:.3} ≤ 2× chance {:.3}",
+        row.fedlrt_acc,
+        2.0 * chance
+    );
+    assert!(
+        row.comm_saving > 0.5,
+        "comm saving {:.3} ≤ 50% vs dense baseline",
+        row.comm_saving
+    );
+    println!(
+        "\nOK: acc {:.3} > 2×chance {:.3}, comm saving {:.1}% > 50%, compression {:.1}x",
+        row.fedlrt_acc,
+        2.0 * chance,
+        100.0 * row.comm_saving,
+        row.compression
+    );
+    let out = std::path::Path::new(a.str("out"));
+    row.fedlrt.append_jsonl(out)?;
+    row.dense.append_jsonl(out)?;
+    println!("records appended to {}", out.display());
+    Ok(())
 }
 
 fn parse_executor(s: &str) -> ExecutorKind {

@@ -607,6 +607,7 @@ impl FedProblem for LeastSquares {
         w: &Weights,
         _step: u64,
         out: &mut [Matrix],
+        _out_dense: &mut [Matrix],
     ) -> Option<f64> {
         if !w.dense.is_empty() || w.lr.len() != 1 || out.len() != 1 {
             return None;
@@ -728,15 +729,15 @@ mod tests {
         let w = Weights { dense: vec![], lr: vec![LrWeight::Factored(fac.clone())] };
         let via_grad = prob.grad(1, &w, LrWant::Coeff, 0);
         let mut out = vec![Matrix::zeros(3, 3)];
-        let loss = prob.grad_coeff_into(1, &w, 0, &mut out).expect("fast path");
+        let loss = prob.grad_coeff_into(1, &w, 0, &mut out, &mut []).expect("fast path");
         assert_eq!(loss.to_bits(), via_grad.loss.to_bits());
         assert_eq!(&out[0], via_grad.lr[0].coeff());
         // Second call (warm cache) is bitwise identical.
-        let loss2 = prob.grad_coeff_into(1, &w, 0, &mut out).expect("fast path");
+        let loss2 = prob.grad_coeff_into(1, &w, 0, &mut out, &mut []).expect("fast path");
         assert_eq!(loss2.to_bits(), loss.to_bits());
         // Mismatched buffer shape falls back gracefully.
         let mut bad = vec![Matrix::zeros(2, 2)];
-        assert!(prob.grad_coeff_into(1, &w, 0, &mut bad).is_none());
+        assert!(prob.grad_coeff_into(1, &w, 0, &mut bad, &mut []).is_none());
     }
 
     #[test]

@@ -1,0 +1,893 @@
+//! Native multi-layer perceptron backend for the §4.2 vision benchmarks.
+//!
+//! [`MlpProblem`] implements [`FedProblem`] entirely in Rust: an L-layer
+//! MLP (configurable hidden widths, ReLU activations, softmax
+//! cross-entropy) over the synthetic [`VisionDataset`]. Every hidden
+//! weight `W_i` is a low-rank-capable layer; the per-layer biases and
+//! the classifier head are dense parameters riding along with FedAvg /
+//! FedLin updates, exactly as the paper trains "the fully connected
+//! layers" with FeDLRT and the rest conventionally. Unlike
+//! `nn::NnProblem`, no PJRT artifacts are required — this is the
+//! offline path for Figs 5–8.
+//!
+//! ## Gradient forms
+//!
+//! With activations `a_0 = x`, `z_i = a_{i-1} W_i + b_i`,
+//! `a_i = relu(z_i)` and backpropagated errors `δ_i = ∂L/∂z_i`, the
+//! dense layer gradient is `∇_{W_i} = a_{i-1}ᵀ δ_i`. For a factored
+//! layer `W = U S Vᵀ` the three forms follow by the chain rule without
+//! ever materializing `∇_W` (the paper's client-cost argument, Table 1):
+//!
+//! ```text
+//! A = a_{i-1} U  (b×r)      D = δ_i V  (b×r)
+//! G_S = Aᵀ D                        = Uᵀ (∇_W) V
+//! G_U = a_{i-1}ᵀ (D Sᵀ)             = (∇_W) V Sᵀ
+//! G_V = δ_iᵀ (A S)                  = (∇_W)ᵀ U S
+//! δ_{i-1} = ((D Sᵀ) Uᵀ) ⊙ relu'(z_{i-1})
+//! ```
+//!
+//! all at `O(b·n·r)` skinny products through the packed `_into`
+//! kernels.
+//!
+//! ## Performance structure
+//!
+//! Each client owns an [`MlpScratch`] behind its own lock: the batch
+//! buffer, per-layer activation / projection / delta buffers, and the
+//! softmax workspace, all rebuilt in place. The coefficient-gradient
+//! fast path ([`FedProblem::grad_coeff_into`]) fills both the `r̃×r̃`
+//! coefficient gradients **and** the dense-parameter gradients (biases,
+//! head) into caller buffers and performs **zero heap allocations** in
+//! steady state — asserted by the counting-allocator check in
+//! `benches/micro_hotpath.rs`.
+//!
+//! Mini-batches are scheduled deterministically from `(client, step)`
+//! via [`crate::data::schedule`] (shared with `NnProblem`, tail-cycling
+//! included) with the existing feature-flip augmentation.
+
+use std::sync::Mutex;
+
+use crate::data::schedule;
+use crate::data::{dirichlet_partition, uniform_partition, VisionDataset};
+use crate::tensor::{
+    matmul_into_view, matmul_nt_into_view, matmul_tn_into_view, MatMut, MatRef, Matrix,
+};
+use crate::util::rng::Rng;
+
+use super::{FedProblem, Grads, LrGrad, LrWant, LrWeight, ProblemSpec, Weights};
+
+/// Options for constructing an [`MlpProblem`].
+#[derive(Debug, Clone)]
+pub struct MlpOptions {
+    /// Input feature dimension.
+    pub d_in: usize,
+    /// Hidden-layer widths; each hidden weight is low-rank-capable.
+    /// Must be non-empty (the §4.2 networks have ≥ 2 hidden layers).
+    pub hidden: Vec<usize>,
+    /// Number of classes (softmax width).
+    pub classes: usize,
+    pub num_clients: usize,
+    pub train_n: usize,
+    pub test_n: usize,
+    /// Cap on samples used for the per-round global-loss estimate
+    /// (full test set is always used for accuracy).
+    pub eval_cap: usize,
+    /// Mini-batch size.
+    pub batch: usize,
+    pub seed: u64,
+    /// Feature-augmentation on training batches (paper's flips).
+    pub augment: bool,
+    /// `None` = the paper's uniform shards; `Some(α)` = Dirichlet label
+    /// skew. Skewed shards also skew [`FedProblem::client_weight`]
+    /// (proportional to shard size).
+    pub dirichlet_alpha: Option<f64>,
+}
+
+impl Default for MlpOptions {
+    fn default() -> Self {
+        MlpOptions {
+            d_in: 32,
+            hidden: vec![64, 64],
+            classes: 10,
+            num_clients: 4,
+            train_n: 2048,
+            test_n: 512,
+            eval_cap: 1024,
+            batch: 64,
+            seed: 0,
+            augment: true,
+            dirichlet_alpha: None,
+        }
+    }
+}
+
+/// Per-client reusable numeric state: the batch buffers plus every
+/// forward/backward intermediate. One lock *per client* so thread-pool
+/// clients never contend; all buffers are grown once and reused, which
+/// is what keeps the steady-state fast path allocation-free.
+#[derive(Debug, Default)]
+struct MlpScratch {
+    /// Batch features, flat `b×d_in`.
+    x: Vec<f64>,
+    /// Batch labels.
+    labels: Vec<usize>,
+    /// Post-ReLU activations `a_1 … a_L`, flat `b×n_i` each.
+    acts: Vec<Vec<f64>>,
+    /// Per factored layer: `A = a_{i-1} U`, flat `b×r`.
+    au: Vec<Vec<f64>>,
+    /// Per factored layer: `A·S`, flat `b×r`.
+    aus: Vec<Vec<f64>>,
+    /// Logits, then (in place) softmax deltas, flat `b×classes`.
+    logits: Vec<f64>,
+    /// Backpropagated error ping-pong buffers, flat `b×n_i`.
+    delta_a: Vec<f64>,
+    delta_b: Vec<f64>,
+    /// `D = δ V` scratch, flat `b×r`.
+    dv: Vec<f64>,
+    /// `D Sᵀ` scratch, flat `b×r`.
+    dst: Vec<f64>,
+}
+
+/// Where the backward pass puts the low-rank layer gradients.
+enum LrSink<'a> {
+    /// Forward only (loss / accuracy evaluation).
+    None,
+    /// Coefficient gradients `G_S` written into prealloc `r̃×r̃` buffers
+    /// (the zero-allocation client-inner-loop path).
+    Coeff(&'a mut [Matrix]),
+    /// Full factor triples `(G_U, G_V, G_S)`, freshly allocated.
+    Factors(&'a mut Vec<LrGrad>),
+    /// Dense layer gradients `∇_W`, freshly allocated.
+    Dense(&'a mut Vec<LrGrad>),
+}
+
+/// The federated MLP problem.
+#[derive(Debug)]
+pub struct MlpProblem {
+    opts: MlpOptions,
+    /// Layer widths `[d_in, h_1, …, h_L]`.
+    widths: Vec<usize>,
+    /// Dense-parameter shapes `[b_1 … b_L, W_head, b_head]`.
+    dense_shapes: Vec<(usize, usize)>,
+    dataset: VisionDataset,
+    shards: Vec<Vec<usize>>,
+    scratch: Vec<Mutex<MlpScratch>>,
+}
+
+impl MlpProblem {
+    /// Build the problem: synthesize + partition the dataset.
+    pub fn new(opts: MlpOptions) -> MlpProblem {
+        assert!(!opts.hidden.is_empty(), "MLP needs at least one hidden layer");
+        assert!(opts.classes >= 2 && opts.batch >= 1 && opts.num_clients >= 1);
+        let dataset = VisionDataset::synthesize(
+            opts.d_in,
+            opts.classes,
+            opts.train_n,
+            opts.test_n,
+            opts.seed,
+        );
+        let mut rng = Rng::new(opts.seed ^ 0x5A4D);
+        let shards = match opts.dirichlet_alpha {
+            None => uniform_partition(opts.train_n, opts.num_clients, &mut rng),
+            Some(alpha) => dirichlet_partition(
+                &dataset.train.y,
+                opts.classes,
+                opts.num_clients,
+                alpha,
+                opts.batch.min(opts.train_n / opts.num_clients),
+                &mut rng,
+            ),
+        };
+        for s in &shards {
+            assert!(!s.is_empty(), "empty client shard");
+        }
+        let mut widths = Vec::with_capacity(opts.hidden.len() + 1);
+        widths.push(opts.d_in);
+        widths.extend_from_slice(&opts.hidden);
+        let mut dense_shapes: Vec<(usize, usize)> =
+            opts.hidden.iter().map(|&h| (1, h)).collect();
+        dense_shapes.push((*widths.last().unwrap(), opts.classes));
+        dense_shapes.push((1, opts.classes));
+        let scratch = (0..opts.num_clients).map(|_| Mutex::new(MlpScratch::default())).collect();
+        MlpProblem { opts, widths, dense_shapes, dataset, shards, scratch }
+    }
+
+    pub fn options(&self) -> &MlpOptions {
+        &self.opts
+    }
+
+    pub fn dataset(&self) -> &VisionDataset {
+        &self.dataset
+    }
+
+    /// Fill the scratch batch buffers for client `c` at local step
+    /// `step` — deterministic schedule shared with `NnProblem`
+    /// ([`crate::data::schedule`]), allocation-free once warm.
+    fn fill_batch(&self, c: usize, step: u64, scr: &mut MlpScratch) {
+        let shard = &self.shards[c];
+        let b = self.opts.batch;
+        let d = self.opts.d_in;
+        let (epoch, bi) = schedule::batch_slot(shard.len(), b, step);
+        scr.x.resize(b * d, 0.0);
+        scr.labels.resize(b, 0);
+        for k in 0..b {
+            let idx = shard[schedule::sample_index(shard.len(), b, bi, k)];
+            let row = &mut scr.x[k * d..(k + 1) * d];
+            if self.opts.augment {
+                self.dataset.augmented_row_f64(idx, epoch, row);
+            } else {
+                row.copy_from_slice(self.dataset.train.x.row(idx));
+            }
+            scr.labels[k] = self.dataset.train.y[idx] as usize;
+        }
+    }
+
+    /// One forward (and optional backward) pass over the batch staged in
+    /// `scr` (`rows` samples). Returns the mean cross-entropy loss;
+    /// counts correct argmax predictions into `correct`; writes
+    /// dense-parameter gradients into `g_dense` (order: biases, head
+    /// weight, head bias) and low-rank layer gradients into `lr_sink`.
+    ///
+    /// All intermediates live in `scr`; with grown buffers this function
+    /// performs zero heap allocations for the `None`/`Coeff` sinks.
+    fn batch_run(
+        &self,
+        w: &Weights,
+        scr: &mut MlpScratch,
+        rows: usize,
+        mut correct: Option<&mut usize>,
+        g_dense: Option<&mut [Matrix]>,
+        mut lr_sink: LrSink<'_>,
+    ) -> f64 {
+        let l_num = self.opts.hidden.len();
+        let classes = self.opts.classes;
+        let b = rows;
+        assert_eq!(w.lr.len(), l_num, "weight/layer count mismatch");
+        assert_eq!(w.dense.len(), l_num + 2, "dense parameter count mismatch");
+        let MlpScratch { x, labels, acts, au, aus, logits, delta_a, delta_b, dv, dst } = scr;
+        acts.resize_with(l_num, Vec::new);
+        au.resize_with(l_num, Vec::new);
+        aus.resize_with(l_num, Vec::new);
+
+        // ---- Forward ----
+        for i in 0..l_num {
+            let (n_in, n_out) = (self.widths[i], self.widths[i + 1]);
+            let (done, rest) = acts.split_at_mut(i);
+            let a_prev: &[f64] = if i == 0 { x.as_slice() } else { &done[i - 1] };
+            let a_prev = MatRef::new(a_prev, b, n_in, n_in);
+            let a_i = &mut rest[0];
+            a_i.resize(b * n_out, 0.0);
+            match &w.lr[i] {
+                LrWeight::Factored(f) => {
+                    let r = f.rank();
+                    au[i].resize(b * r, 0.0);
+                    matmul_into_view(a_prev, f.u.view(), MatMut::new(&mut au[i], b, r, r), 0.0);
+                    aus[i].resize(b * r, 0.0);
+                    matmul_into_view(
+                        MatRef::new(&au[i], b, r, r),
+                        f.s.view(),
+                        MatMut::new(&mut aus[i], b, r, r),
+                        0.0,
+                    );
+                    matmul_nt_into_view(
+                        MatRef::new(&aus[i], b, r, r),
+                        f.v.view(),
+                        MatMut::new(a_i, b, n_out, n_out),
+                        0.0,
+                    );
+                }
+                LrWeight::Dense(m) => {
+                    matmul_into_view(a_prev, m.view(), MatMut::new(a_i, b, n_out, n_out), 0.0);
+                }
+            }
+            // Bias + ReLU in place.
+            let bias = &w.dense[i];
+            for row in 0..b {
+                let z = &mut a_i[row * n_out..(row + 1) * n_out];
+                for (zv, bv) in z.iter_mut().zip(bias.row(0)) {
+                    *zv = (*zv + bv).max(0.0);
+                }
+            }
+        }
+
+        // ---- Head + softmax cross-entropy ----
+        let n_last = *self.widths.last().unwrap();
+        let a_last = MatRef::new(&acts[l_num - 1], b, n_last, n_last);
+        let w_head = &w.dense[l_num];
+        let b_head = &w.dense[l_num + 1];
+        logits.resize(b * classes, 0.0);
+        matmul_into_view(a_last, w_head.view(), MatMut::new(logits, b, classes, classes), 0.0);
+        let want_grads = g_dense.is_some();
+        let mut loss = 0.0;
+        for row in 0..b {
+            let lrow = &mut logits[row * classes..(row + 1) * classes];
+            for (lv, bv) in lrow.iter_mut().zip(b_head.row(0)) {
+                *lv += bv;
+            }
+            let y = labels[row];
+            let m = lrow.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let zy = lrow[y] - m;
+            let mut sum = 0.0;
+            let mut argmax = 0usize;
+            let mut best = f64::NEG_INFINITY;
+            for (j, v) in lrow.iter_mut().enumerate() {
+                if *v > best {
+                    best = *v;
+                    argmax = j;
+                }
+                *v = (*v - m).exp();
+                sum += *v;
+            }
+            // ln Σe^{z−m} − (z_y − m): the log-sum-exp form stays finite
+            // even when the true class's softmax mass underflows.
+            loss += sum.ln() - zy;
+            if let Some(ref mut cnt) = correct {
+                if argmax == y {
+                    **cnt += 1;
+                }
+            }
+            if want_grads {
+                // δ_logits = (softmax − onehot) / b, written in place.
+                let inv = 1.0 / (sum * b as f64);
+                for v in lrow.iter_mut() {
+                    *v *= inv;
+                }
+                lrow[y] -= 1.0 / b as f64;
+            }
+        }
+        loss /= b as f64;
+        let g_dense = match g_dense {
+            Some(g) => g,
+            None => return loss,
+        };
+        assert_eq!(g_dense.len(), l_num + 2, "dense gradient buffer count");
+
+        // ---- Backward ----
+        let delta = MatRef::new(logits, b, classes, classes);
+        matmul_tn_into_view(a_last, delta, g_dense[l_num].view_mut(), 0.0);
+        col_sums_into(logits, b, classes, &mut g_dense[l_num + 1]);
+        delta_a.resize(b * n_last, 0.0);
+        matmul_nt_into_view(delta, w_head.view(), MatMut::new(delta_a, b, n_last, n_last), 0.0);
+        relu_mask(delta_a, &acts[l_num - 1]);
+        let mut cur_is_a = true;
+        for i in (0..l_num).rev() {
+            let (n_in, n_out) = (self.widths[i], self.widths[i + 1]);
+            let (cur, next) = if cur_is_a {
+                (&mut *delta_a, &mut *delta_b)
+            } else {
+                (&mut *delta_b, &mut *delta_a)
+            };
+            col_sums_into(cur, b, n_out, &mut g_dense[i]);
+            let delta_i = MatRef::new(cur, b, n_out, n_out);
+            let a_prev: &[f64] = if i == 0 { x.as_slice() } else { &acts[i - 1] };
+            let a_prev = MatRef::new(a_prev, b, n_in, n_in);
+            match &w.lr[i] {
+                LrWeight::Factored(f) => {
+                    let r = f.rank();
+                    dv.resize(b * r, 0.0);
+                    matmul_into_view(delta_i, f.v.view(), MatMut::new(dv, b, r, r), 0.0);
+                    let d_view = MatRef::new(dv, b, r, r);
+                    // `dst = D·Sᵀ` is shared between G_U and the delta
+                    // propagation; compute it at most once per layer.
+                    let mut dst_ready = false;
+                    match &mut lr_sink {
+                        LrSink::Coeff(out) => {
+                            matmul_tn_into_view(
+                                MatRef::new(&au[i], b, r, r),
+                                d_view,
+                                out[i].view_mut(),
+                                0.0,
+                            );
+                        }
+                        LrSink::Factors(out) => {
+                            let mut g_s = Matrix::zeros(r, r);
+                            matmul_tn_into_view(
+                                MatRef::new(&au[i], b, r, r),
+                                d_view,
+                                g_s.view_mut(),
+                                0.0,
+                            );
+                            dst.resize(b * r, 0.0);
+                            matmul_nt_into_view(d_view, f.s.view(), MatMut::new(dst, b, r, r), 0.0);
+                            dst_ready = true;
+                            let mut g_u = Matrix::zeros(n_in, r);
+                            matmul_tn_into_view(
+                                a_prev,
+                                MatRef::new(dst, b, r, r),
+                                g_u.view_mut(),
+                                0.0,
+                            );
+                            let mut g_v = Matrix::zeros(n_out, r);
+                            matmul_tn_into_view(
+                                delta_i,
+                                MatRef::new(&aus[i], b, r, r),
+                                g_v.view_mut(),
+                                0.0,
+                            );
+                            out.push(LrGrad::Factors { g_u, g_v, g_s });
+                        }
+                        LrSink::Dense(_) => {
+                            panic!("dense gradient requested at factored weights")
+                        }
+                        LrSink::None => unreachable!("grads wanted without a sink"),
+                    }
+                    if i > 0 {
+                        // δ_{i-1} = ((D Sᵀ) Uᵀ) ⊙ relu'(z_{i-1}).
+                        if !dst_ready {
+                            dst.resize(b * r, 0.0);
+                            matmul_nt_into_view(
+                                MatRef::new(dv, b, r, r),
+                                f.s.view(),
+                                MatMut::new(dst, b, r, r),
+                                0.0,
+                            );
+                        }
+                        next.resize(b * n_in, 0.0);
+                        matmul_nt_into_view(
+                            MatRef::new(dst, b, r, r),
+                            f.u.view(),
+                            MatMut::new(next, b, n_in, n_in),
+                            0.0,
+                        );
+                        relu_mask(next, &acts[i - 1]);
+                    }
+                }
+                LrWeight::Dense(m) => {
+                    match &mut lr_sink {
+                        LrSink::Dense(out) => {
+                            let mut g_w = Matrix::zeros(n_in, n_out);
+                            matmul_tn_into_view(a_prev, delta_i, g_w.view_mut(), 0.0);
+                            out.push(LrGrad::Dense(g_w));
+                        }
+                        LrSink::Coeff(_) | LrSink::Factors(_) => {
+                            panic!("factored gradient requested at dense weights")
+                        }
+                        LrSink::None => unreachable!("grads wanted without a sink"),
+                    }
+                    if i > 0 {
+                        next.resize(b * n_in, 0.0);
+                        matmul_nt_into_view(
+                            delta_i,
+                            m.view(),
+                            MatMut::new(next, b, n_in, n_in),
+                            0.0,
+                        );
+                        relu_mask(next, &acts[i - 1]);
+                    }
+                }
+            }
+            cur_is_a = !cur_is_a;
+        }
+        // Backward walked layers in reverse; restore layer order.
+        match lr_sink {
+            LrSink::Factors(out) | LrSink::Dense(out) => out.reverse(),
+            _ => {}
+        }
+        loss
+    }
+
+    /// Evaluate `(mean loss, accuracy)` over a split with fresh scratch
+    /// (eval is off the hot path; allocations here are fine). Every
+    /// sample in the (capped) range is visited exactly once — the final
+    /// batch is simply shorter, so tails are neither dropped nor
+    /// double-counted and the full test set really is what accuracy is
+    /// measured on.
+    fn evaluate(&self, w: &Weights, on_test: bool, cap: usize) -> (f64, f64) {
+        let split = if on_test { &self.dataset.test } else { &self.dataset.train };
+        let b = self.opts.batch;
+        let d = self.opts.d_in;
+        let n = split.len().min(cap.max(1)).max(1);
+        let mut scr = MlpScratch::default();
+        let mut loss_sum = 0.0;
+        let mut correct = 0usize;
+        let mut start = 0usize;
+        while start < n {
+            let rows = b.min(n - start);
+            scr.x.resize(rows * d, 0.0);
+            scr.labels.resize(rows, 0);
+            for k in 0..rows {
+                let idx = start + k;
+                scr.x[k * d..(k + 1) * d].copy_from_slice(split.x.row(idx));
+                scr.labels[k] = split.y[idx] as usize;
+            }
+            // batch_run returns the per-batch mean; re-weight by the
+            // batch length so the total is the exact mean over n.
+            loss_sum +=
+                rows as f64 * self.batch_run(w, &mut scr, rows, Some(&mut correct), None, LrSink::None);
+            start += rows;
+        }
+        (loss_sum / n as f64, correct as f64 / n as f64)
+    }
+
+    /// Zero matrices shaped like the dense parameters.
+    fn dense_grad_buffers(&self) -> Vec<Matrix> {
+        self.dense_shapes.iter().map(|&(m, n)| Matrix::zeros(m, n)).collect()
+    }
+}
+
+/// `out` (1×n) = column sums of the flat `b×n` matrix `src`.
+fn col_sums_into(src: &[f64], b: usize, n: usize, out: &mut Matrix) {
+    debug_assert_eq!(out.shape(), (1, n), "bias gradient shape");
+    let o = out.data_mut();
+    o.fill(0.0);
+    for row in 0..b {
+        for (ov, &sv) in o.iter_mut().zip(&src[row * n..(row + 1) * n]) {
+            *ov += sv;
+        }
+    }
+}
+
+/// `δ ⊙ relu'(z)`: zero the error wherever the activation was clamped.
+fn relu_mask(delta: &mut [f64], act: &[f64]) {
+    debug_assert_eq!(delta.len(), act.len());
+    for (d, &a) in delta.iter_mut().zip(act) {
+        if a <= 0.0 {
+            *d = 0.0;
+        }
+    }
+}
+
+impl FedProblem for MlpProblem {
+    fn spec(&self) -> ProblemSpec {
+        ProblemSpec {
+            dense_shapes: self.dense_shapes.clone(),
+            lr_shapes: self.widths.windows(2).map(|w| (w[0], w[1])).collect(),
+        }
+    }
+
+    fn num_clients(&self) -> usize {
+        self.opts.num_clients
+    }
+
+    fn grad(&self, c: usize, w: &Weights, want: LrWant, step: u64) -> Grads {
+        let mut scr = self.scratch[c].lock().expect("client scratch poisoned");
+        self.fill_batch(c, step, &mut scr);
+        let b = self.opts.batch;
+        let mut dense = self.dense_grad_buffers();
+        let (loss, lr) = match want {
+            LrWant::Coeff => {
+                let mut out: Vec<Matrix> = w
+                    .lr
+                    .iter()
+                    .map(|lw| {
+                        let r = lw.as_factored().rank();
+                        Matrix::zeros(r, r)
+                    })
+                    .collect();
+                let loss = self.batch_run(
+                    w,
+                    &mut scr,
+                    b,
+                    None,
+                    Some(&mut dense),
+                    LrSink::Coeff(&mut out),
+                );
+                (loss, out.into_iter().map(LrGrad::Coeff).collect())
+            }
+            LrWant::Factors => {
+                let mut out = Vec::with_capacity(w.lr.len());
+                let loss = self.batch_run(
+                    w,
+                    &mut scr,
+                    b,
+                    None,
+                    Some(&mut dense),
+                    LrSink::Factors(&mut out),
+                );
+                (loss, out)
+            }
+            LrWant::Dense => {
+                let mut out = Vec::with_capacity(w.lr.len());
+                let loss = self.batch_run(
+                    w,
+                    &mut scr,
+                    b,
+                    None,
+                    Some(&mut dense),
+                    LrSink::Dense(&mut out),
+                );
+                (loss, out)
+            }
+        };
+        Grads { loss, dense, lr }
+    }
+
+    fn grad_coeff_into(
+        &self,
+        c: usize,
+        w: &Weights,
+        step: u64,
+        out: &mut [Matrix],
+        out_dense: &mut [Matrix],
+    ) -> Option<f64> {
+        // Deterministic per-layer validation: any mismatch falls back to
+        // the allocating path for the whole call (never a partial fill).
+        if w.lr.len() != self.opts.hidden.len() || out.len() != w.lr.len() {
+            return None;
+        }
+        if out_dense.len() != self.dense_shapes.len() {
+            return None;
+        }
+        for (o, lw) in out.iter().zip(&w.lr) {
+            let f = match lw {
+                LrWeight::Factored(f) => f,
+                LrWeight::Dense(_) => return None,
+            };
+            if o.shape() != (f.rank(), f.rank()) {
+                return None;
+            }
+        }
+        for (o, &shape) in out_dense.iter().zip(&self.dense_shapes) {
+            if o.shape() != shape {
+                return None;
+            }
+        }
+        let mut scr = self.scratch[c].lock().expect("client scratch poisoned");
+        self.fill_batch(c, step, &mut scr);
+        Some(self.batch_run(
+            w,
+            &mut scr,
+            self.opts.batch,
+            None,
+            Some(out_dense),
+            LrSink::Coeff(out),
+        ))
+    }
+
+    fn global_loss(&self, w: &Weights) -> f64 {
+        self.evaluate(w, false, self.opts.eval_cap).0
+    }
+
+    fn eval_metric(&self, w: &Weights) -> Option<f64> {
+        Some(self.evaluate(w, true, usize::MAX).1)
+    }
+
+    fn client_weight(&self, c: usize) -> f64 {
+        // Proportional to shard size (paper §2's weighted-average
+        // extension); uniform shards yield uniform weights.
+        self.shards[c].len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lowrank::LowRank;
+
+    fn tiny_problem() -> MlpProblem {
+        MlpProblem::new(MlpOptions {
+            d_in: 10,
+            hidden: vec![12, 8],
+            classes: 4,
+            num_clients: 2,
+            train_n: 120,
+            test_n: 40,
+            eval_cap: 120,
+            batch: 16,
+            seed: 9,
+            augment: true,
+            dirichlet_alpha: None,
+        })
+    }
+
+    fn factored_weights(prob: &MlpProblem, rank: usize, seed: u64) -> Weights {
+        let mut rng = Rng::new(seed);
+        let spec = prob.spec();
+        Weights {
+            dense: spec
+                .dense_shapes
+                .iter()
+                .map(|&(m, n)| Matrix::randn(m, n, &mut rng).scale(0.3))
+                .collect(),
+            lr: spec
+                .lr_shapes
+                .iter()
+                .map(|&(m, n)| {
+                    LrWeight::Factored(LowRank::random_init(m, n, rank.min(m.min(n)), &mut rng))
+                })
+                .collect(),
+        }
+    }
+
+    fn dense_weights_from(w: &Weights) -> Weights {
+        Weights {
+            dense: w.dense.clone(),
+            lr: w.lr.iter().map(|lw| LrWeight::Dense(lw.to_dense())).collect(),
+        }
+    }
+
+    /// Loss at `(c, step)`'s batch — gradient evaluation reused for its
+    /// loss output (the FD tests need batch-exact losses).
+    fn batch_loss(prob: &MlpProblem, c: usize, w: &Weights, step: u64) -> f64 {
+        let want = match w.lr.first() {
+            Some(LrWeight::Factored(_)) => LrWant::Coeff,
+            _ => LrWant::Dense,
+        };
+        prob.grad(c, w, want, step).loss
+    }
+
+    #[test]
+    fn spec_shapes_are_consistent() {
+        let prob = tiny_problem();
+        let spec = prob.spec();
+        assert_eq!(spec.lr_shapes, vec![(10, 12), (12, 8)]);
+        assert_eq!(spec.dense_shapes, vec![(1, 12), (1, 8), (8, 4), (1, 4)]);
+        assert_eq!(prob.num_clients(), 2);
+    }
+
+    #[test]
+    fn dense_gradient_matches_finite_difference() {
+        let prob = tiny_problem();
+        let w0 = dense_weights_from(&factored_weights(&prob, 4, 33));
+        let g = prob.grad(0, &w0, LrWant::Dense, 1);
+        assert!(g.loss.is_finite());
+        let eps = 1e-6;
+        // A low-rank-capable layer entry, a bias entry, and a head entry.
+        let checks: Vec<(bool, usize, usize, usize, f64)> = vec![
+            // (is_lr, idx, i, j, analytic)
+            (true, 0, 3, 5, g.lr[0].dense()[(3, 5)]),
+            (true, 1, 7, 2, g.lr[1].dense()[(7, 2)]),
+            (false, 0, 0, 4, g.dense[0][(0, 4)]),
+            (false, 2, 5, 1, g.dense[2][(5, 1)]),
+            (false, 3, 0, 2, g.dense[3][(0, 2)]),
+        ];
+        for (is_lr, idx, i, j, an) in checks {
+            let mut wp = dense_weights_from(&w0);
+            let mut wm = dense_weights_from(&w0);
+            if is_lr {
+                wp.lr[idx].as_dense_mut()[(i, j)] += eps;
+                wm.lr[idx].as_dense_mut()[(i, j)] -= eps;
+            } else {
+                wp.dense[idx][(i, j)] += eps;
+                wm.dense[idx][(i, j)] -= eps;
+            }
+            let fd = (batch_loss(&prob, 0, &wp, 1) - batch_loss(&prob, 0, &wm, 1)) / (2.0 * eps);
+            assert!(
+                (fd - an).abs() < 1e-5 * (1.0 + an.abs()),
+                "lr={is_lr} idx={idx} ({i},{j}): fd {fd} vs analytic {an}"
+            );
+        }
+    }
+
+    #[test]
+    fn factor_gradients_match_finite_difference() {
+        let prob = tiny_problem();
+        let w = factored_weights(&prob, 3, 55);
+        let g = prob.grad(1, &w, LrWant::Factors, 2);
+        let eps = 1e-6;
+        for layer in 0..2 {
+            let (g_u, g_v, g_s) = match &g.lr[layer] {
+                LrGrad::Factors { g_u, g_v, g_s } => (g_u, g_v, g_s),
+                _ => unreachable!(),
+            };
+            for (which, i, j, an) in [
+                ("u", 2usize, 1usize, g_u[(2, 1)]),
+                ("v", 4, 2, g_v[(4, 2)]),
+                ("s", 1, 2, g_s[(1, 2)]),
+            ] {
+                let mut wp = factored_weights(&prob, 3, 55);
+                let mut wm = factored_weights(&prob, 3, 55);
+                for (wt, sign) in [(&mut wp, eps), (&mut wm, -eps)] {
+                    let f = wt.lr[layer].as_factored_mut();
+                    match which {
+                        "u" => f.u[(i, j)] += sign,
+                        "v" => f.v[(i, j)] += sign,
+                        _ => f.s[(i, j)] += sign,
+                    }
+                }
+                let fd =
+                    (batch_loss(&prob, 1, &wp, 2) - batch_loss(&prob, 1, &wm, 2)) / (2.0 * eps);
+                assert!(
+                    (fd - an).abs() < 1e-5 * (1.0 + an.abs()),
+                    "layer {layer} {which}({i},{j}): fd {fd} vs analytic {an}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn coeff_gradient_matches_factors_and_finite_difference() {
+        let prob = tiny_problem();
+        let w = factored_weights(&prob, 3, 77);
+        let g_f = prob.grad(0, &w, LrWant::Factors, 3);
+        let g_c = prob.grad(0, &w, LrWant::Coeff, 3);
+        assert_eq!(g_c.loss.to_bits(), g_f.loss.to_bits());
+        for layer in 0..2 {
+            let g_s = match &g_f.lr[layer] {
+                LrGrad::Factors { g_s, .. } => g_s,
+                _ => unreachable!(),
+            };
+            assert!(g_c.lr[layer].coeff().sub(g_s).max_abs() < 1e-12);
+        }
+        // FD on an S entry through the Coeff path.
+        let an = g_c.lr[1].coeff()[(0, 1)];
+        let eps = 1e-6;
+        let mut wp = factored_weights(&prob, 3, 77);
+        let mut wm = factored_weights(&prob, 3, 77);
+        wp.lr[1].as_factored_mut().s[(0, 1)] += eps;
+        wm.lr[1].as_factored_mut().s[(0, 1)] -= eps;
+        let fd = (batch_loss(&prob, 0, &wp, 3) - batch_loss(&prob, 0, &wm, 3)) / (2.0 * eps);
+        assert!((fd - an).abs() < 1e-5 * (1.0 + an.abs()), "fd {fd} vs {an}");
+    }
+
+    #[test]
+    fn factored_loss_matches_dense_loss() {
+        // The factored forward pass computes the same network as its
+        // dense materialization.
+        let prob = tiny_problem();
+        let w_f = factored_weights(&prob, 4, 11);
+        let w_d = dense_weights_from(&w_f);
+        assert!((prob.global_loss(&w_f) - prob.global_loss(&w_d)).abs() < 1e-10);
+        let a_f = prob.eval_metric(&w_f).unwrap();
+        let a_d = prob.eval_metric(&w_d).unwrap();
+        assert_eq!(a_f, a_d);
+    }
+
+    #[test]
+    fn fast_path_matches_grad_bitwise_and_fills_dense() {
+        let prob = tiny_problem();
+        let w = factored_weights(&prob, 3, 21);
+        let via_grad = prob.grad(1, &w, LrWant::Coeff, 5);
+        let mut out: Vec<Matrix> = vec![Matrix::zeros(3, 3), Matrix::zeros(3, 3)];
+        let mut out_dense = prob.dense_grad_buffers();
+        let loss = prob
+            .grad_coeff_into(1, &w, 5, &mut out, &mut out_dense)
+            .expect("MLP offers the fast path");
+        assert_eq!(loss.to_bits(), via_grad.loss.to_bits());
+        for (o, g) in out.iter().zip(&via_grad.lr) {
+            assert_eq!(o.data(), g.coeff().data());
+        }
+        for (o, g) in out_dense.iter().zip(&via_grad.dense) {
+            assert_eq!(o.data(), g.data());
+        }
+        // Dense gradients are genuinely nonzero — biases and head move.
+        assert!(out_dense.iter().any(|g| g.max_abs() > 1e-8));
+        // Mismatched buffers fall back gracefully.
+        let mut bad = vec![Matrix::zeros(2, 2), Matrix::zeros(3, 3)];
+        assert!(prob.grad_coeff_into(1, &w, 5, &mut bad, &mut out_dense).is_none());
+        let mut short_dense = prob.dense_grad_buffers();
+        short_dense.pop();
+        assert!(prob.grad_coeff_into(1, &w, 5, &mut out, &mut short_dense).is_none());
+    }
+
+    #[test]
+    fn fast_path_handles_augmented_ranks() {
+        // The client inner loop calls the fast path at augmented rank
+        // 2r; buffers sized accordingly must be accepted.
+        let prob = tiny_problem();
+        let w = factored_weights(&prob, 4, 41); // rank 4 ≈ augmented 2·2
+        let mut out = vec![Matrix::zeros(4, 4), Matrix::zeros(4, 4)];
+        let mut out_dense = prob.dense_grad_buffers();
+        let loss = prob.grad_coeff_into(0, &w, 0, &mut out, &mut out_dense);
+        assert!(loss.expect("fast path").is_finite());
+    }
+
+    #[test]
+    fn batches_are_deterministic_and_step_varying() {
+        let prob = tiny_problem();
+        let w = factored_weights(&prob, 3, 61);
+        let a = prob.grad(0, &w, LrWant::Coeff, 7);
+        let b = prob.grad(0, &w, LrWant::Coeff, 7);
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+        let c = prob.grad(0, &w, LrWant::Coeff, 8);
+        assert_ne!(a.loss.to_bits(), c.loss.to_bits());
+    }
+
+    #[test]
+    fn dirichlet_partition_weights_are_shard_sized() {
+        let prob = MlpProblem::new(MlpOptions {
+            d_in: 12,
+            hidden: vec![10],
+            classes: 4,
+            num_clients: 3,
+            train_n: 300,
+            test_n: 40,
+            eval_cap: 100,
+            batch: 16,
+            seed: 5,
+            augment: false,
+            dirichlet_alpha: Some(0.3),
+        });
+        let total: f64 = (0..3).map(|c| prob.client_weight(c)).sum();
+        assert_eq!(total as usize, 300);
+    }
+}

@@ -7,11 +7,14 @@
 //!
 //! * [`least_squares`] — the paper's §4.1 convex tests, with analytic
 //!   gradients computed natively in Rust;
-//! * `nn::NnProblem` — the §4.2 vision benchmarks, whose gradients run
-//!   through the AOT-compiled JAX/Pallas artifacts via PJRT.
+//! * [`mlp`] — native multi-layer perceptrons over the synthetic vision
+//!   data (the §4.2 benchmarks, no artifacts required);
+//! * `nn::NnProblem` — the §4.2 vision benchmarks through the
+//!   AOT-compiled JAX/Pallas artifacts via PJRT (optional path).
 
 pub mod checkpoint;
 pub mod least_squares;
+pub mod mlp;
 pub mod quadratic;
 
 use crate::lowrank::LowRank;
@@ -162,8 +165,16 @@ pub trait FedProblem {
 
     /// Allocation-free fast path for the client inner loop: write the
     /// coefficient gradients `∇_S̃ L_c` into `out` (one preallocated
-    /// `r̃×r̃` matrix per low-rank layer, shapes matching `w`) and
-    /// return the loss.
+    /// `r̃×r̃` matrix per low-rank layer, shapes matching `w`), the
+    /// dense-parameter gradients into `out_dense` (one preallocated
+    /// matrix per entry of `w.dense`, same order), and return the loss.
+    ///
+    /// Problems without dense parameters receive an empty `out_dense`
+    /// and ignore it. Problems **with** dense parameters must either
+    /// fill `out_dense` completely or return `None` — a fast path that
+    /// silently skips dense gradients would freeze biases/heads, since
+    /// the coordinators step dense parameters from these buffers on the
+    /// fast path (regression-tested in `coordinator::fedlrt`).
     ///
     /// Returns `None` when the problem has no such path (the caller
     /// then falls back to [`FedProblem::grad`] with [`LrWant::Coeff`]).
@@ -177,6 +188,7 @@ pub trait FedProblem {
         _w: &Weights,
         _step: u64,
         _out: &mut [Matrix],
+        _out_dense: &mut [Matrix],
     ) -> Option<f64> {
         None
     }

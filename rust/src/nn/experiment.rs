@@ -2,13 +2,20 @@
 //!
 //! Each figure compares FeDLRT variants against their dense counterparts
 //! over a sweep of client counts, reporting compression ratio,
-//! communication-cost reduction, and validation accuracy. This module
-//! hosts the experiment loop so the per-figure benches and the CLI share
-//! one implementation.
+//! communication-cost reduction, and validation accuracy. The core
+//! comparison ([`compare_backends`]) is generic over any
+//! `FedProblem + Sync` backend; two sweep drivers instantiate it:
+//!
+//! * [`run_mlp_sweep`] — the native Rust [`MlpProblem`] backend
+//!   (offline, no artifacts; the default §4.2 path);
+//! * [`run_vision_sweep`] — the PJRT artifact-backed [`NnProblem`]
+//!   (optional; requires `make artifacts`).
 
-use crate::coordinator::presets::VisionPreset;
-use crate::coordinator::{run_dense, run_fedlrt, DenseAlgo, VarCorrection};
+use crate::coordinator::presets::{MlpPreset, VisionPreset};
+use crate::coordinator::{run_dense, run_fedlrt, DenseAlgo, TrainConfig, VarCorrection};
 use crate::metrics::RunRecord;
+use crate::models::mlp::MlpProblem;
+use crate::models::FedProblem;
 use crate::nn::{NnOptions, NnProblem};
 use crate::runtime::Runtime;
 
@@ -19,7 +26,7 @@ pub struct VisionRow {
     pub fedlrt_acc: f64,
     pub dense_acc: f64,
     /// Trained-model compression: dense params / factored params of the
-    /// low-rank layers.
+    /// low-rank layers (at the final per-layer ranks).
     pub compression: f64,
     /// Communication saving of FeDLRT vs the dense baseline (1 − ratio).
     pub comm_saving: f64,
@@ -28,10 +35,74 @@ pub struct VisionRow {
     pub dense: RunRecord,
 }
 
-/// Run one (figure, variance-mode) sweep over client counts.
-///
-/// `vc` selects the FeDLRT variant; the dense baseline is FedAvg when
-/// `vc == None` (paper's top rows) and FedLin otherwise.
+/// Run FeDLRT and its dense counterpart on `problem` and assemble the
+/// figure row. The dense baseline is FedAvg when `vc == None` (paper's
+/// top rows) and FedLin otherwise.
+pub fn compare_backends<P: FedProblem + Sync>(
+    problem: &P,
+    cfg: &TrainConfig,
+    figure: &str,
+    clients: usize,
+) -> VisionRow {
+    let dense_algo = if cfg.var_correction == VarCorrection::None {
+        DenseAlgo::FedAvg
+    } else {
+        DenseAlgo::FedLin
+    };
+    let fedlrt = run_fedlrt(problem, cfg, figure);
+    let dense = run_dense(problem, cfg, dense_algo, figure);
+
+    // Compression from the problem's own layer shapes at the final
+    // per-layer ranks (works for any number of low-rank layers).
+    let spec = problem.spec();
+    let final_ranks: Vec<usize> =
+        fedlrt.rounds.last().map(|r| r.ranks.clone()).unwrap_or_default();
+    let dense_lr: f64 = spec.lr_shapes.iter().map(|&(m, n)| (m * n) as f64).sum();
+    let fac_lr: f64 = spec
+        .lr_shapes
+        .iter()
+        .zip(&final_ranks)
+        .map(|(&(m, n), &r)| (m * r + r * r + n * r) as f64)
+        .sum();
+    let compression = dense_lr / fac_lr.max(1.0);
+    // Paper footnote 6: savings are reported for the compressed
+    // (fully connected low-rank) layers; dense backbone/head traffic
+    // is identical across methods and excluded.
+    let comm_saving = 1.0
+        - fedlrt.total_comm_floats_lr() as f64 / dense.total_comm_floats_lr().max(1) as f64;
+    VisionRow {
+        clients,
+        fedlrt_acc: fedlrt.final_metric().unwrap_or(f64::NAN),
+        dense_acc: dense.final_metric().unwrap_or(f64::NAN),
+        compression,
+        comm_saving,
+        fedlrt_rank: fedlrt.final_rank(),
+        fedlrt,
+        dense,
+    }
+}
+
+/// Run one (figure, variance-mode) sweep over client counts on the
+/// native MLP backend — the offline §4.2 path.
+pub fn run_mlp_sweep(
+    preset: &MlpPreset,
+    clients: &[usize],
+    vc: VarCorrection,
+    full: bool,
+    seed: u64,
+) -> Vec<VisionRow> {
+    clients
+        .iter()
+        .map(|&c| {
+            let problem = MlpProblem::new(preset.options(c, full, seed));
+            let cfg = preset.config(c, vc, full, seed);
+            compare_backends(&problem, &cfg, preset.figure, c)
+        })
+        .collect()
+}
+
+/// Run one (figure, variance-mode) sweep over client counts on the PJRT
+/// artifact-backed backend (requires `make artifacts`).
 pub fn run_vision_sweep(
     preset: &VisionPreset,
     clients: &[usize],
@@ -39,8 +110,6 @@ pub fn run_vision_sweep(
     full: bool,
     seed: u64,
 ) -> anyhow::Result<Vec<VisionRow>> {
-    let dense_algo =
-        if vc == VarCorrection::None { DenseAlgo::FedAvg } else { DenseAlgo::FedLin };
     let mut rows = Vec::new();
     for &c in clients {
         let mut rt = Runtime::new(Runtime::default_dir())?;
@@ -57,29 +126,7 @@ pub fn run_vision_sweep(
         };
         let problem = NnProblem::new(&mut rt, opts)?;
         let cfg = preset.config(c, vc, full, seed);
-        let fedlrt = run_fedlrt(&problem, &cfg, preset.figure);
-        let dense = run_dense(&problem, &cfg, dense_algo, preset.figure);
-
-        let entry = problem.entry();
-        let n = entry.n_core as f64;
-        let r = fedlrt.final_rank() as f64;
-        let compression = (n * n) / (2.0 * n * r + r * r);
-        // Paper footnote 6: savings are reported for the compressed
-        // (fully connected low-rank) layers; dense backbone/head traffic
-        // is identical across methods and excluded.
-        let comm_saving = 1.0
-            - fedlrt.total_comm_floats_lr() as f64
-                / dense.total_comm_floats_lr().max(1) as f64;
-        rows.push(VisionRow {
-            clients: c,
-            fedlrt_acc: fedlrt.final_metric().unwrap_or(f64::NAN),
-            dense_acc: dense.final_metric().unwrap_or(f64::NAN),
-            compression,
-            comm_saving,
-            fedlrt_rank: fedlrt.final_rank(),
-            fedlrt,
-            dense,
-        });
+        rows.push(compare_backends(&problem, &cfg, preset.figure, c));
     }
     Ok(rows)
 }

@@ -12,7 +12,7 @@ pub mod experiment;
 
 use anyhow::{anyhow, Result};
 
-use crate::data::{dirichlet_partition, uniform_partition, VisionDataset};
+use crate::data::{dirichlet_partition, schedule, uniform_partition, VisionDataset};
 use crate::models::{FedProblem, Grads, LrGrad, LrWant, LrWeight, ProblemSpec, Weights};
 use crate::runtime::{Executable, HostTensor, ModelEntry, Runtime};
 use crate::tensor::Matrix;
@@ -132,17 +132,20 @@ impl NnProblem {
     }
 
     /// Training batch for client `c` at local step counter `step`.
+    ///
+    /// The schedule comes from [`crate::data::schedule`] (shared with
+    /// `MlpProblem` so both backends sample identically): `⌈len/b⌉`
+    /// batches per epoch, the tail cycled into the final batch instead
+    /// of dropped.
     fn batch(&self, c: usize, step: u64) -> (HostTensor, HostTensor) {
         let shard = &self.shards[c];
         let b = self.entry.batch;
-        let num_batches = shard.len() / b;
-        let epoch = step / num_batches.max(1) as u64;
-        let bi = (step % num_batches.max(1) as u64) as usize;
+        let (epoch, bi) = schedule::batch_slot(shard.len(), b, step);
         let d = self.entry.d_in;
         let mut x = vec![0f32; b * d];
         let mut y = vec![0i32; b];
         for k in 0..b {
-            let idx = shard[(bi * b + k) % shard.len()];
+            let idx = shard[schedule::sample_index(shard.len(), b, bi, k)];
             if self.opts.augment {
                 self.dataset.augmented_row(idx, epoch, &mut x[k * d..(k + 1) * d]);
             } else {

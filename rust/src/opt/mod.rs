@@ -5,6 +5,14 @@
 //! optimizer state lives on the *client* and is reset at each
 //! aggregation round — matching the paper's setup where local iterations
 //! restart from the broadcast global state.
+//!
+//! Weight decay is **coupled L2 regularization**: the decay term
+//! `wd·w` is added to the gradient *before* the momentum buffer (and
+//! before Adam's moment estimates), i.e. classic `SGD(weight_decay=…)` /
+//! vanilla Adam-with-L2 — *not* AdamW/decoupled decay, which would
+//! apply `w ← (1 − λ·wd)·w` outside the momentum path. This matches
+//! the reference implementations the paper's Table 2 settings come
+//! from; see DESIGN.md §Substitutions.
 
 use crate::tensor::Matrix;
 
@@ -21,8 +29,9 @@ impl Default for SgdConfig {
     }
 }
 
-/// SGD with (optional) momentum and decoupled weight decay for one
-/// parameter tensor.
+/// SGD with (optional) momentum and coupled L2 weight decay for one
+/// parameter tensor (the decay enters the gradient before the momentum
+/// buffer — see the module docs).
 #[derive(Debug, Clone)]
 pub struct Sgd {
     cfg: SgdConfig,
@@ -34,7 +43,8 @@ impl Sgd {
         Sgd { cfg, velocity: None }
     }
 
-    /// One update `w ← w − λ·(g + wd·w)` with momentum buffer.
+    /// One update: effective gradient `g + V_c + wd·w` fed through the
+    /// momentum buffer, then `w ← w − λ·v` (coupled L2, not decoupled).
     /// `extra` is an additive gradient correction (the variance
     /// correction term `V_c`), applied before momentum.
     pub fn step(&mut self, w: &mut Matrix, g: &Matrix, lr: f64, extra: Option<&Matrix>) {

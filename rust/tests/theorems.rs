@@ -215,6 +215,54 @@ fn theorem3_convergence_to_stationary_point() {
 }
 
 #[test]
+fn mlp_full_batch_descent_with_variance_correction() {
+    // Theorem-2-style descent on the native multi-layer backend: with
+    // full-batch client gradients (batch = shard size, no augmentation
+    // ⇒ deterministic), full variance correction, τ = 0 and a small
+    // step size, FeDLRT's global loss must trend monotonically down —
+    // ReLU kinks permit only tiny per-round upticks.
+    use fedlrt::coordinator::{run_fedlrt, RankConfig, TrainConfig, VarCorrection};
+    use fedlrt::models::mlp::{MlpOptions, MlpProblem};
+    use fedlrt::opt::LrSchedule;
+    let prob = MlpProblem::new(MlpOptions {
+        d_in: 12,
+        hidden: vec![16, 12],
+        classes: 3,
+        num_clients: 2,
+        train_n: 128,
+        test_n: 32,
+        eval_cap: 128,
+        batch: 64, // = shard size ⇒ one full batch per local step
+        seed: 4,
+        augment: false,
+        dirichlet_alpha: None,
+    });
+    let cfg = TrainConfig {
+        rounds: 12,
+        local_iters: 4,
+        lr: LrSchedule::Constant(0.02),
+        var_correction: VarCorrection::Full,
+        rank: RankConfig { initial_rank: 4, max_rank: 8, tau: 0.0 },
+        seed: 2,
+        eval_every: 1,
+        ..TrainConfig::default()
+    };
+    let rec = run_fedlrt(&prob, &cfg, "mlp_descent");
+    let first = rec.rounds[0].global_loss;
+    let last = rec.final_loss();
+    assert!(last.is_finite() && first.is_finite());
+    assert!(last < 0.95 * first, "no real descent: {first} -> {last}");
+    for w in rec.rounds.windows(2) {
+        assert!(
+            w[1].global_loss <= w[0].global_loss + 0.05 * first.abs() + 1e-9,
+            "descent trend violated: {} -> {}",
+            w[0].global_loss,
+            w[1].global_loss
+        );
+    }
+}
+
+#[test]
 fn truncation_bias_scales_with_theta() {
     // Theorems 2–4 carry a +Lϑ term: the loss floor should scale with
     // the truncation tolerance. Compare two runs differing only in τ.
