@@ -6,6 +6,10 @@
 //! round cost grows linearly with C while the thread pool amortizes it
 //! across cores — the scenario the `engine::` subsystem exists for.
 //!
+//! Each bench point also records the per-client latency distribution of
+//! the pool run's final round (p50/p95/max and the straggler id from the
+//! telemetry histograms) — the tail is what the thread pool is hiding.
+//!
 //! Run: `cargo bench --bench engine_scaling`
 //! (`FEDLRT_BENCH_FULL=1` for more rounds per point.)
 
@@ -39,8 +43,9 @@ fn main() {
 
     println!("Engine scaling — round wall-clock vs client count ({cores} cores)\n");
     println!(
-        "{:>8} {:>12} {:>12} {:>9} {:>16}",
-        "clients", "serial s", "pool s", "speedup", "client speedup"
+        "{:>8} {:>12} {:>12} {:>9} {:>16} {:>10} {:>10} {:>10} {:>6}",
+        "clients", "serial s", "pool s", "speedup", "client speedup", "lat p50", "lat p95",
+        "lat max", "strag"
     );
 
     let mut rows: Vec<Json> = Vec::new();
@@ -75,9 +80,20 @@ fn main() {
 
         let speedup = serial_s / pool_s.max(1e-12);
         let client_speedup = rec_pool.client_speedup();
+        // The final round's per-client latency distribution (telemetry
+        // histograms): the straggler tail is what pooling hides.
+        let lat = rec_pool.rounds.last().map(|r| r.latency).unwrap_or_default();
         println!(
-            "{:>8} {:>12.4} {:>12.4} {:>8.2}x {:>15.2}x",
-            c, serial_s, pool_s, speedup, client_speedup
+            "{:>8} {:>12.4} {:>12.4} {:>8.2}x {:>15.2}x {:>9.2}ms {:>9.2}ms {:>9.2}ms {:>6}",
+            c,
+            serial_s,
+            pool_s,
+            speedup,
+            client_speedup,
+            lat.p50_s * 1e3,
+            lat.p95_s * 1e3,
+            lat.max_s * 1e3,
+            lat.straggler
         );
 
         let mut row = Json::obj();
@@ -88,7 +104,11 @@ fn main() {
             .set("speedup", speedup)
             .set("client_wall_s", rec_pool.total_client_wall_s())
             .set("client_serial_s", rec_pool.total_client_serial_s())
-            .set("client_speedup", client_speedup);
+            .set("client_speedup", client_speedup)
+            .set("lat_p50_s", lat.p50_s)
+            .set("lat_p95_s", lat.p95_s)
+            .set("lat_max_s", lat.max_s)
+            .set("straggler", lat.straggler);
         rows.push(row);
     }
 

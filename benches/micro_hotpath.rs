@@ -16,16 +16,16 @@
 //! Run: `cargo bench --bench micro_hotpath`
 //! CI smoke: `FEDLRT_BENCH_SMOKE=1 cargo bench --bench micro_hotpath`
 
-use std::alloc::{GlobalAlloc, Layout, System};
 use std::io::Write as _;
 use std::path::Path;
-use std::sync::atomic::{AtomicU64, Ordering};
 
 use fedlrt::bench::{bench, full_scale, BenchStats};
 use fedlrt::linalg::{qr_thin_ws, svd};
 use fedlrt::lowrank::{augment_basis, truncate, LowRank};
 use fedlrt::models::least_squares::LeastSquares;
 use fedlrt::models::{FedProblem, LrWeight, Weights};
+use fedlrt::obsv::alloc::{measure_allocs, CountingAlloc};
+use fedlrt::obsv::{counters_delta, counters_snapshot};
 use fedlrt::tensor::{
     gram, kernel_threads, matmul, matmul_nt, matmul_reference, matmul_tn, set_kernel_threads,
     Matrix, Workspace,
@@ -34,55 +34,12 @@ use fedlrt::util::json::Json;
 use fedlrt::util::rng::Rng;
 use fedlrt::util::Stopwatch;
 
-// ---------------------------------------------------------------------
-// Counting allocator: every heap alloc/realloc in the process is
-// tallied, which is what lets this bench *assert* the zero-allocation
-// steady-state gradient contract instead of merely claiming it.
-// ---------------------------------------------------------------------
-
-struct CountingAlloc;
-
-static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
-static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
-
-unsafe impl GlobalAlloc for CountingAlloc {
-    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
-        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
-        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
-        System.alloc(layout)
-    }
-
-    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
-        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
-        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
-        System.alloc_zeroed(layout)
-    }
-
-    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
-        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
-        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
-        System.realloc(ptr, layout, new_size)
-    }
-
-    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
-        System.dealloc(ptr, layout)
-    }
-}
-
+// The counting allocator (obsv::alloc) tallies every heap alloc/realloc
+// in the process, which is what lets this bench *assert* the
+// zero-allocation steady-state gradient contract instead of merely
+// claiming it. Binaries opt in; the library never installs it.
 #[global_allocator]
 static GLOBAL: CountingAlloc = CountingAlloc;
-
-fn alloc_counts() -> (u64, u64) {
-    (ALLOC_CALLS.load(Ordering::Relaxed), ALLOC_BYTES.load(Ordering::Relaxed))
-}
-
-/// Allocation delta (calls, bytes) across `f()`.
-fn measure_allocs<F: FnMut()>(mut f: F) -> (u64, u64) {
-    let (c0, b0) = alloc_counts();
-    f();
-    let (c1, b1) = alloc_counts();
-    (c1 - c0, b1 - b0)
-}
 
 fn smoke() -> bool {
     std::env::var("FEDLRT_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
@@ -180,6 +137,29 @@ fn main() {
         Some(speedup_serial),
         1,
     );
+
+    // Kernel counters (obsv layer): one packed matmul must account for
+    // exactly its own 2n³ flops, proving the counters track the math
+    // they claim to measure.
+    let before = counters_snapshot();
+    std::hint::black_box(matmul(&a, &b));
+    let d = counters_delta(&before);
+    println!(
+        "  counters: {} gemm call(s), {:.3e} flops (expected {:.3e}), {} panels packed, ws hwm {} B",
+        d.gemm_calls, d.gemm_flops as f64, flops, d.panels_packed, d.ws_bytes_hwm
+    );
+    assert!(d.gemm_calls >= 1, "gemm counter missed the dispatch");
+    assert!(
+        d.gemm_flops >= flops as u64,
+        "flop counter {} below the dispatched {flops}",
+        d.gemm_flops
+    );
+    let mut crow = Json::obj();
+    crow.set("bench", "micro_hotpath")
+        .set("name", "kernel_counters_matmul_512")
+        .set("counters", d.to_json())
+        .set("smoke", smoke());
+    append_row(out, &crow);
 
     let mut speedup_best = speedup_serial;
     if cores > 1 {

@@ -2,11 +2,19 @@
 //!
 //! Prints the cost rows both symbolically (the asymptotic expressions)
 //! and numerically at the paper's Fig-3 operating point (n=512), plus
-//! the feature flags (variance correction / rank adaptivity).
+//! the feature flags (variance correction / rank adaptivity). A final
+//! section runs a *real* FeDLRT training and puts the telemetry
+//! layer's measured per-phase seconds and counted GEMM flops next to
+//! the model's predictions.
 //!
 //! Run: `cargo bench --bench table1_costs`
 
+use fedlrt::coordinator::{run_fedlrt, RankConfig, TrainConfig, VarCorrection};
 use fedlrt::costmodel::{costs, CostParams, ALL_METHODS};
+use fedlrt::models::least_squares::LeastSquares;
+use fedlrt::obsv::{counters_delta, counters_snapshot, Phase, PhaseSeconds, ALL_PHASES};
+use fedlrt::opt::LrSchedule;
+use fedlrt::util::rng::Rng;
 
 fn fmt(x: f64) -> String {
     if x >= 1e9 {
@@ -71,5 +79,64 @@ fn main() {
     );
     assert!(comm_factor > 5.0, "expected ≥5× comm saving at r/n = 1/16");
     assert!(comp_factor > 3.0, "expected ≥3× compute saving");
+
+    // --- measured vs model: phase profile of a real FeDLRT run ---
+    // The model predicts flops; the telemetry layer measures seconds
+    // per taxonomy phase and counts executed GEMM flops. Putting the
+    // two side by side checks that the implementation's round profile
+    // matches the paper's accounting: client work dominates, and the
+    // server-side phases (QR, 2r×2r SVD, aggregation) stay r-sized.
+    let mut rng = Rng::new(42);
+    let (mn, mr, s_star, clients) = (64usize, 16usize, 10usize, 4usize);
+    let prob = LeastSquares::homogeneous(mn, 8, 2000, clients, &mut rng);
+    let cfg = TrainConfig {
+        rounds: 6,
+        local_iters: s_star,
+        lr: LrSchedule::Constant(1e-3),
+        var_correction: VarCorrection::Simplified,
+        rank: RankConfig { initial_rank: 8, max_rank: mr, tau: 0.1 },
+        seed: 5,
+        ..TrainConfig::default()
+    };
+    let before = counters_snapshot();
+    let rec = run_fedlrt(&prob, &cfg, "table1_measured");
+    let delta = counters_delta(&before);
+    let rounds = rec.rounds.len().max(1);
+    let mut mean = PhaseSeconds::default();
+    for r in &rec.rounds {
+        for ph in ALL_PHASES {
+            mean.add(ph, r.phase_s.get(ph) / rounds as f64);
+        }
+    }
+    let total = mean.sum().max(1e-12);
+    println!(
+        "\nMeasured FeDLRT(simpl) round profile (n={mn}, r≤{mr}, C={clients}, s*={s_star}; mean over {rounds} rounds):"
+    );
+    for ph in ALL_PHASES {
+        let s = mean.get(ph);
+        println!("  {:<20} {:>10.3} ms  {:>5.1}%", ph.label(), s * 1e3, 100.0 * s / total);
+    }
+    let mp = CostParams { n: mn, r: mr, s_star, b: 2000 / clients };
+    let model = costs(fedlrt::costmodel::Method::FedLrtSimplifiedVc, mp);
+    println!(
+        "  model flops/round (client+server) {}  |  measured GEMM flops/round {}  ({} GEMM calls, ws hwm {} B)",
+        fmt(model.client_compute + model.server_compute),
+        fmt(delta.gemm_flops as f64 / rounds as f64),
+        delta.gemm_calls,
+        delta.ws_bytes_hwm
+    );
+    // The model's structural claim, checked on measurements: client
+    // training dominates every server-side r-sized phase.
+    let ct = mean.get(Phase::ClientTrain);
+    assert!(ct > 0.0, "client_train phase never measured");
+    for ph in [Phase::AugmentQr, Phase::TruncateSvd] {
+        assert!(
+            ct > mean.get(ph),
+            "client_train {:.3e}s should dominate {} {:.3e}s",
+            ct,
+            ph.label(),
+            mean.get(ph)
+        );
+    }
     println!("table1_costs OK");
 }

@@ -1,0 +1,137 @@
+//! Trace-export smoke check: one short Fig-1 FeDLRT run with the full
+//! telemetry stack (phase spans + latency histograms + Chrome trace
+//! capture), validating the exporters end to end:
+//!
+//! * the trace file parses as Chrome trace-event JSON (metadata events
+//!   naming the process/threads, complete `"X"` events with µs
+//!   timestamps) — the format Perfetto / `chrome://tracing` loads;
+//! * every round's `phase_s` carries the complete taxonomy key set;
+//! * phase attribution covers the round: `sum(phase_s) ≥ 0.9 · wall_s`
+//!   summed over the run (the taxonomy brackets essentially the whole
+//!   round body, so unattributed time is timer noise, not gaps);
+//! * the round-metrics JSONL row exposes `phase_s` and the latency
+//!   quantile fields.
+//!
+//! Run: `cargo bench --bench trace_smoke`
+//! CI smoke: `FEDLRT_BENCH_SMOKE=1 cargo bench --bench trace_smoke`
+
+use std::path::Path;
+
+use fedlrt::coordinator::presets::fig1_config;
+use fedlrt::coordinator::run_fedlrt_obs;
+use fedlrt::models::least_squares::LeastSquares;
+use fedlrt::obsv::{Recorder, ALL_PHASES};
+use fedlrt::util::json::{parse, Json};
+use fedlrt::util::rng::Rng;
+
+fn smoke() -> bool {
+    std::env::var("FEDLRT_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
+fn main() {
+    // Fig-1 operating point (n=10, C=4, s*=100, full variance
+    // correction — the taxonomy's busiest coordinator), few rounds.
+    let mut rng = Rng::new(1);
+    let prob = LeastSquares::heterogeneous(10, if smoke() { 800 } else { 2_000 }, 4, &mut rng);
+    let mut cfg = fig1_config(false);
+    cfg.rounds = if smoke() { 3 } else { 8 };
+
+    let obs = Recorder::with_trace();
+    let rec = run_fedlrt_obs(&prob, &cfg, "trace_smoke", &obs);
+    assert_eq!(rec.rounds.len(), cfg.rounds);
+
+    // --- exporter 1: phase_s + latency in the round metrics ---
+    let mut sum_phase = 0.0;
+    let mut sum_wall = 0.0;
+    for r in &rec.rounds {
+        sum_phase += r.phase_s.sum();
+        sum_wall += r.wall_s;
+        assert!(
+            r.phase_s.sum() <= r.wall_s + 1e-6,
+            "round {}: phase sum {} exceeds wall {}",
+            r.round,
+            r.phase_s.sum(),
+            r.wall_s
+        );
+        assert_eq!(r.latency.n, 4, "round {}: expected 4 clients in histogram", r.round);
+    }
+    let coverage = sum_phase / sum_wall.max(1e-12);
+    println!("phase coverage: {:.1}% of wall-clock attributed", 100.0 * coverage);
+    assert!(
+        coverage >= 0.9,
+        "phase taxonomy covers {:.1}% of the round wall-clock (< 90%)",
+        100.0 * coverage
+    );
+    let row = rec.to_json();
+    let round0 = &row.get("rounds").and_then(|r| r.as_arr()).expect("rounds array")[0];
+    let phase_obj = round0.get("phase_s").expect("phase_s in round JSON");
+    for p in ALL_PHASES {
+        assert!(
+            phase_obj.get(p.label()).is_some(),
+            "phase_s missing taxonomy key '{}'",
+            p.label()
+        );
+    }
+    for key in ["lat_p50_s", "lat_p95_s", "lat_max_s", "straggler"] {
+        assert!(round0.get(key).is_some(), "round JSON missing '{key}'");
+    }
+
+    // --- exporter 2: the Chrome trace file ---
+    let trace_path = Path::new("results/trace_smoke.json");
+    obs.write_trace(trace_path).expect("writing trace");
+    let raw = std::fs::read_to_string(trace_path).expect("reading trace back");
+    let doc = parse(&raw).expect("trace file must be valid JSON");
+    let events = doc.get("traceEvents").and_then(|e| e.as_arr()).expect("traceEvents array");
+    let metas = events.iter().filter(|e| e.str_or("ph", "") == "M").count();
+    let spans = events.iter().filter(|e| e.str_or("ph", "") == "X").count();
+    println!(
+        "trace: {} events ({} metadata, {} spans) in {}",
+        events.len(),
+        metas,
+        spans,
+        trace_path.display()
+    );
+    // Process name + coordinator track + ≥1 worker track.
+    assert!(metas >= 3, "expected process/thread metadata events, got {metas}");
+    // Per round: ≥8 phase spans + 4 tasks × ≥2 executor calls + 1 round
+    // event — conservatively, more than 8 events per round.
+    assert!(
+        spans >= cfg.rounds * 8,
+        "expected ≥{} span events, got {spans}",
+        cfg.rounds * 8
+    );
+    for e in events {
+        if e.str_or("ph", "") != "X" {
+            continue;
+        }
+        assert!(e.get("name").and_then(|n| n.as_str()).is_some(), "X event without name");
+        assert!(e.f64_or("ts", -1.0) >= 0.0, "X event without ts");
+        assert!(e.f64_or("dur", -1.0) >= 0.0, "X event without dur");
+    }
+    // Round events land on the coordinator track, tasks on worker tracks.
+    assert!(events
+        .iter()
+        .any(|e| e.str_or("name", "").starts_with("round ") && e.f64_or("tid", -1.0) == 0.0));
+    assert!(events.iter().any(|e| e.f64_or("tid", -1.0) >= 1.0 && e.str_or("ph", "") == "X"));
+
+    // --- bench row ---
+    let mut out = Json::obj();
+    out.set("bench", "trace_smoke")
+        .set("rounds", cfg.rounds)
+        .set("phase_coverage", coverage)
+        .set("trace_events", events.len())
+        .set("final_loss", rec.final_loss())
+        .set("smoke", smoke());
+    let path = Path::new("results/trace_smoke.jsonl");
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent).expect("creating results dir");
+    }
+    use std::io::Write as _;
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+        .expect("opening bench output");
+    writeln!(f, "{}", out.to_string_compact()).expect("writing bench output");
+    println!("trace_smoke OK (row appended to {})", path.display());
+}

@@ -15,6 +15,7 @@ use crate::comm::Network;
 use crate::engine::{ClientExecutor, Executor, RoundPlan};
 use crate::metrics::{RoundMetrics, RunRecord};
 use crate::models::{FedProblem, LrWant, LrWeight, Weights};
+use crate::obsv::{Phase, Recorder};
 use crate::opt::ClientOptimizer;
 use crate::tensor::Matrix;
 use crate::util::rng::Rng;
@@ -38,12 +39,23 @@ impl DenseAlgo {
     }
 }
 
-/// Run FedAvg or FedLin on `problem`.
+/// Run FedAvg or FedLin on `problem` (default telemetry recorder).
 pub fn run_dense<P: FedProblem + Sync>(
     problem: &P,
     cfg: &TrainConfig,
     algo: DenseAlgo,
     experiment: &str,
+) -> RunRecord {
+    run_dense_obs(problem, cfg, algo, experiment, &Recorder::new())
+}
+
+/// [`run_dense`] with an explicit telemetry [`Recorder`].
+pub fn run_dense_obs<P: FedProblem + Sync>(
+    problem: &P,
+    cfg: &TrainConfig,
+    algo: DenseAlgo,
+    experiment: &str,
+    obs: &Recorder,
 ) -> RunRecord {
     let spec = problem.spec();
     let c_num = problem.num_clients();
@@ -72,20 +84,27 @@ pub fn run_dense<P: FedProblem + Sync>(
 
     for t in 0..cfg.rounds {
         let watch = Stopwatch::start();
+        obs.begin_round(t);
         let lr_t = cfg.lr.at(t);
+        let sp_plan = obs.span(Phase::Io);
         let plan = RoundPlan::build(cfg, c_num, t, |c| problem.client_weight(c));
         let a_num = plan.len();
         net.set_active_clients(a_num);
+        drop(sp_plan);
         let mut client_wall_s = 0.0;
         let mut client_serial_s = 0.0;
 
         // Broadcast the full weights through the wire codec; clients
         // train on the decoded copies.
+        let sp_bc = obs.span(Phase::Broadcast);
         let lr_bc: Vec<Matrix> = lr_w.iter().map(|w| net.broadcast_mat("W_lr", w)).collect();
         let dense_bc: Vec<Matrix> =
             dense.iter().map(|w| net.broadcast_mat("W_dense", w)).collect();
+        drop(sp_bc);
 
-        // FedLin: one extra round trip for the global gradient.
+        // FedLin: one extra round trip for the global gradient — the
+        // whole correction block is the `variance_correction` phase.
+        let sp_vc = obs.span(Phase::VarianceCorrection);
         let corrections: Option<Vec<(Vec<Matrix>, Vec<Matrix>)>> = match algo {
             DenseAlgo::FedAvg => None,
             DenseAlgo::FedLin => {
@@ -96,6 +115,7 @@ pub fn run_dense<P: FedProblem + Sync>(
                 let report = executor.execute(&plan, |task| {
                     problem.grad(task.client_id, &w_t, LrWant::Dense, next_step[task.client_id])
                 });
+                obs.record_exec("vc_grad", &plan, &report.timing);
                 client_wall_s += report.wall_s;
                 client_serial_s += report.serial_s;
                 let per_client = report.results;
@@ -138,12 +158,14 @@ pub fn run_dense<P: FedProblem + Sync>(
                 )
             }
         };
+        drop(sp_vc);
 
         // Local iterations as executor work items, then aggregate the
         // weighted mean in plan order (executor-independent bitwise).
         // The client's weight set is assembled once and trained in
         // place — the seed re-cloned every n×n matrix into a fresh
         // `Weights` on every local iteration.
+        let sp_local = obs.span(Phase::ClientTrain);
         let report = executor.execute(&plan, |task| {
             let c = task.client_id;
             let step0_c = next_step[c];
@@ -173,8 +195,11 @@ pub fn run_dense<P: FedProblem + Sync>(
             }).collect();
             (lr_c, dense_c)
         });
+        obs.record_exec("local", &plan, &report.timing);
         client_wall_s += report.wall_s;
         client_serial_s += report.serial_s;
+        drop(sp_local);
+        let sp_agg = obs.span(Phase::Aggregate);
         let mut lr_accum: Vec<Matrix> =
             lr_w.iter().map(|w| Matrix::zeros(w.rows(), w.cols())).collect();
         let mut dense_accum: Vec<Matrix> =
@@ -195,18 +220,27 @@ pub fn run_dense<P: FedProblem + Sync>(
         }
         lr_w = lr_accum;
         dense = dense_accum;
+        drop(sp_agg);
 
         // Metrics.
+        let sp_io = obs.span(Phase::Io);
         let comm = net.end_round();
         let (comm_floats, comm_per_client) = (comm.total_floats(), comm.per_client_floats());
         let (bytes_down, bytes_up) = (comm.bytes_down, comm.bytes_up);
         let comm_floats_lr = comm.floats_matching(|l| l.ends_with("_lr"));
+        drop(sp_io);
+        let sp_eval = obs.span(Phase::Eval);
         let should_eval = t % cfg.eval_every == 0 || t + 1 == cfg.rounds;
         let w_eval = Weights {
             dense: dense.clone(),
             lr: lr_w.iter().cloned().map(LrWeight::Dense).collect(),
         };
         let global_loss = if should_eval { problem.global_loss(&w_eval) } else { f64::NAN };
+        let dist_to_opt =
+            if should_eval { problem.distance_to_optimum(&w_eval) } else { None };
+        let eval_metric = if should_eval { problem.eval_metric(&w_eval) } else { None };
+        drop(sp_eval);
+        let round_obs = obs.end_round();
         record.rounds.push(RoundMetrics {
             round: t,
             global_loss,
@@ -216,11 +250,13 @@ pub fn run_dense<P: FedProblem + Sync>(
             bytes_down,
             bytes_up,
             comm_floats_per_client: comm_per_client,
-            dist_to_opt: if should_eval { problem.distance_to_optimum(&w_eval) } else { None },
-            eval_metric: if should_eval { problem.eval_metric(&w_eval) } else { None },
+            dist_to_opt,
+            eval_metric,
             wall_s: watch.elapsed_s(),
             client_wall_s,
             client_serial_s,
+            phase_s: round_obs.phase_s,
+            latency: round_obs.latency,
         });
     }
 

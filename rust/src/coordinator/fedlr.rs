@@ -25,6 +25,7 @@ use crate::linalg::svd;
 use crate::lowrank::LowRank;
 use crate::metrics::{RoundMetrics, RunRecord};
 use crate::models::{FedProblem, LrWant, LrWeight, Weights};
+use crate::obsv::{Phase, Recorder};
 use crate::opt::ClientOptimizer;
 use crate::tensor::Matrix;
 use crate::util::rng::Rng;
@@ -38,6 +39,16 @@ pub fn run_fedlr<P: FedProblem + Sync>(
     problem: &P,
     cfg: &TrainConfig,
     experiment: &str,
+) -> RunRecord {
+    run_fedlr_obs(problem, cfg, experiment, &Recorder::new())
+}
+
+/// [`run_fedlr`] with an explicit telemetry [`Recorder`].
+pub fn run_fedlr_obs<P: FedProblem + Sync>(
+    problem: &P,
+    cfg: &TrainConfig,
+    experiment: &str,
+    obs: &Recorder,
 ) -> RunRecord {
     let spec = problem.spec();
     assert!(
@@ -62,25 +73,33 @@ pub fn run_fedlr<P: FedProblem + Sync>(
 
     for t in 0..cfg.rounds {
         let watch = Stopwatch::start();
+        obs.begin_round(t);
         let lr_t = cfg.lr.at(t);
+        let sp_plan = obs.span(Phase::Io);
         let plan = RoundPlan::build(cfg, c_num, t, |c| problem.client_weight(c));
         net.set_active_clients(plan.len());
+        drop(sp_plan);
 
         // Server-side compression for the downlink (full n×n SVD!).
+        let sp_svd = obs.span(Phase::TruncateSvd);
         let dec = svd(&w);
         let theta = cfg.rank.tau * dec.sigma.iter().map(|x| x * x).sum::<f64>().sqrt();
         let r_dn = dec.rank_for_tolerance(theta).clamp(1, cfg.rank.max_rank);
         let (p, sig, q) = dec.truncate(r_dn);
+        drop(sp_svd);
         // Downlink through the wire codec: clients reconstruct from the
         // decoded factors.
+        let sp_bc = obs.span(Phase::Broadcast);
         let p_bc = net.broadcast_mat("P", &p);
         let sig_bc = net.broadcast_vec("Sigma", &sig);
         let q_bc = net.broadcast_mat("Q", &q);
         let w_compressed =
             crate::tensor::matmul_nt(&crate::tensor::matmul(&p_bc, &Matrix::diag(&sig_bc)), &q_bc);
+        drop(sp_bc);
 
         // Clients: reconstruct, dense local training, compress upload —
         // one hermetic work item per client.
+        let sp_train = obs.span(Phase::ClientTrain);
         let report = executor.execute(&plan, |task| {
             // One weight set per client per round, trained in place —
             // the seed cloned the full n×n matrix into a fresh
@@ -104,8 +123,11 @@ pub fn run_fedlr<P: FedProblem + Sync>(
             let r_up = dec_c.rank_for_tolerance(theta_c).clamp(1, cfg.rank.max_rank);
             dec_c.truncate(r_up)
         });
+        obs.record_exec("local", &plan, &report.timing);
         let client_wall_s = report.wall_s;
         let client_serial_s = report.serial_s;
+        drop(sp_train);
+        let sp_agg = obs.span(Phase::Aggregate);
         // Each client ships its compressed triple {P_c, Σ_c, Q_c} as one
         // coalesced message at its *actual* upload rank (byte-exact — the
         // old accounting charged everyone a uniform upper bound); the
@@ -127,28 +149,39 @@ pub fn run_fedlr<P: FedProblem + Sync>(
             next_step[task.client_id] += task.local_iters as u64;
         }
         w = w_next;
+        drop(sp_agg);
 
         // Metrics — rank reported as the numerical rank of the average
         // (which is generally r_up·C before the next truncation: the
         // "average of low-rank matrices is not low rank" effect).
+        let sp_io = obs.span(Phase::Io);
         let comm = net.end_round();
         let (comm_floats, comm_per_client) = (comm.total_floats(), comm.per_client_floats());
         let (bytes_down, bytes_up) = (comm.bytes_down, comm.bytes_up);
+        drop(sp_io);
+        let sp_eval = obs.span(Phase::Eval);
         let w_eval = Weights { dense: vec![], lr: vec![LrWeight::Dense(w.clone())] };
+        let global_loss = problem.global_loss(&w_eval);
+        let dist_to_opt = problem.distance_to_optimum(&w_eval);
+        let eval_metric = problem.eval_metric(&w_eval);
+        drop(sp_eval);
+        let round_obs = obs.end_round();
         record.rounds.push(RoundMetrics {
             round: t,
-            global_loss: problem.global_loss(&w_eval),
+            global_loss,
             ranks: vec![r_dn],
             comm_floats,
             comm_floats_lr: comm_floats,
             bytes_down,
             bytes_up,
             comm_floats_per_client: comm_per_client,
-            dist_to_opt: problem.distance_to_optimum(&w_eval),
-            eval_metric: problem.eval_metric(&w_eval),
+            dist_to_opt,
+            eval_metric,
             wall_s: watch.elapsed_s(),
             client_wall_s,
             client_serial_s,
+            phase_s: round_obs.phase_s,
+            latency: round_obs.latency,
         });
     }
 

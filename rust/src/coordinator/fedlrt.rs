@@ -29,6 +29,7 @@ use crate::engine::{ClientExecutor, Executor, RoundPlan};
 use crate::lowrank::{augment_basis_ws, truncate_ws, AugmentedBasis, LowRank};
 use crate::metrics::{RoundMetrics, RunRecord};
 use crate::models::{FedProblem, LrGrad, LrWant, LrWeight, Weights};
+use crate::obsv::{Phase, Recorder};
 use crate::opt::ClientOptimizer;
 use crate::tensor::{Matrix, Workspace};
 use crate::util::rng::Rng;
@@ -36,11 +37,24 @@ use crate::util::Stopwatch;
 
 use super::config::{TrainConfig, VarCorrection};
 
-/// Run FeDLRT on `problem` under `cfg`; returns the full run record.
+/// Run FeDLRT on `problem` under `cfg`; returns the full run record
+/// (with default telemetry: per-round `phase_s` + latency summaries).
 pub fn run_fedlrt<P: FedProblem + Sync>(
     problem: &P,
     cfg: &TrainConfig,
     experiment: &str,
+) -> RunRecord {
+    run_fedlrt_obs(problem, cfg, experiment, &Recorder::new())
+}
+
+/// [`run_fedlrt`] with an explicit telemetry [`Recorder`]: the CLI's
+/// `--trace` passes [`Recorder::with_trace`], tests pass
+/// [`Recorder::disabled`] to prove telemetry is a no-op.
+pub fn run_fedlrt_obs<P: FedProblem + Sync>(
+    problem: &P,
+    cfg: &TrainConfig,
+    experiment: &str,
+    obs: &Recorder,
 ) -> RunRecord {
     let spec = problem.spec();
     let c_num = problem.num_clients();
@@ -82,14 +96,17 @@ pub fn run_fedlrt<P: FedProblem + Sync>(
 
     for t in 0..cfg.rounds {
         let watch = Stopwatch::start();
+        obs.begin_round(t);
         let lr_t = cfg.lr.at(t);
         // Round schedule: participation sampling, dropout, straggler
         // iteration counts, and normalized aggregation weights, all in
         // one deterministic plan.
+        let sp_plan = obs.span(Phase::Io);
         let plan = RoundPlan::build(cfg, c_num, t, |c| problem.client_weight(c));
         let a_num = plan.len();
         net.set_active_clients(a_num);
         let weights: Vec<f64> = plan.tasks.iter().map(|task| task.weight).collect();
+        drop(sp_plan);
         let mut client_wall_s = 0.0;
         let mut client_serial_s = 0.0;
 
@@ -97,6 +114,7 @@ pub fn run_fedlrt<P: FedProblem + Sync>(
         // the wire codec: clients compute on the *decoded* copies
         // (decode-on-receive). S is diagonal after truncation, so only
         // its diagonal travels.
+        let sp_bc = obs.span(Phase::Broadcast);
         let bc: Vec<LowRank> = factors
             .iter()
             .map(|f| {
@@ -109,6 +127,7 @@ pub fn run_fedlrt<P: FedProblem + Sync>(
             .collect();
         let dense_bc: Vec<Matrix> =
             dense.iter().map(|d| net.broadcast_mat("dense_w", d)).collect();
+        drop(sp_bc);
 
         // (3)-(4) Clients evaluate basis gradients at the broadcast
         // point; each participating client's upload goes through the
@@ -116,6 +135,7 @@ pub fn run_fedlrt<P: FedProblem + Sync>(
         // order. The simplified-vc variant also needs the non-augmented
         // coefficient gradient G_S — Algorithm 5 folds it into this
         // same round trip.
+        let sp_train = obs.span(Phase::ClientTrain);
         let w_t = Weights {
             dense: dense_bc.clone(),
             lr: bc.iter().cloned().map(LrWeight::Factored).collect(),
@@ -123,12 +143,15 @@ pub fn run_fedlrt<P: FedProblem + Sync>(
         let report = executor.execute(&plan, |task| {
             problem.grad(task.client_id, &w_t, LrWant::Factors, next_step[task.client_id])
         });
+        obs.record_exec("grad", &plan, &report.timing);
+        drop(sp_train);
         client_wall_s += report.wall_s;
         client_serial_s += report.serial_s;
         let per_client = report.results;
         let num_lr = factors.len();
         // Mean basis/coeff gradients per layer (decoded where uplinked)
         // — accumulators drawn from the cross-round workspace pool.
+        let sp_agg = obs.span(Phase::Aggregate);
         let mut g_u_mean: Vec<Matrix> =
             factors.iter().map(|f| ws.take_mat(f.m(), f.rank())).collect();
         let mut g_v_mean: Vec<Matrix> =
@@ -165,12 +188,14 @@ pub fn run_fedlrt<P: FedProblem + Sync>(
             }
         }
         net.end_round_trip();
+        drop(sp_agg);
 
         // (5) Server-side basis augmentation (QR), (6) broadcast Ū, V̄.
         // Clients assemble their augmented factorization from decoded
         // pieces: Ũ_c = [U_c | Ū_c], S̃ = [[S,0],[0,0]] needs no wire
         // (Lemma 1). The server keeps its own exact `augs` for the
         // final reconstruction/truncation step.
+        let sp_qr = obs.span(Phase::AugmentQr);
         let augs: Vec<AugmentedBasis> = (0..num_lr)
             .map(|l| {
                 augment_basis_ws(
@@ -188,6 +213,8 @@ pub fn run_fedlrt<P: FedProblem + Sync>(
         for buf in g_v_mean {
             ws.give_mat(buf);
         }
+        drop(sp_qr);
+        let sp_bc2 = obs.span(Phase::Broadcast);
         let mut augs_c: Vec<AugmentedBasis> = Vec::with_capacity(num_lr);
         let mut g_s_mean_bc: Vec<Matrix> = Vec::new();
         for (l, aug) in augs.iter().enumerate() {
@@ -219,12 +246,16 @@ pub fn run_fedlrt<P: FedProblem + Sync>(
         for buf in g_dense_mean {
             ws.give_mat(buf);
         }
+        drop(sp_bc2);
 
         // (9)-(12) Variance-correction terms V_c per client per layer.
         // Full: V_c = G_S̃ − G_S̃,c at the augmented point (extra round).
         // Simplified: V̌_c = [[G_S − G_S,c, 0],[0,0]] (already available).
         // The mean term is what the server *broadcast* (decoded); each
         // client subtracts its own exact local gradient.
+        // The whole block — including the full mode's extra gradient
+        // round trip — is one `variance_correction` phase span.
+        let sp_vc = obs.span(Phase::VarianceCorrection);
         let corrections: Vec<Vec<Option<Matrix>>> = match cfg.var_correction {
             VarCorrection::None => vec![vec![None; num_lr]; a_num],
             VarCorrection::Simplified => (0..a_num)
@@ -253,6 +284,7 @@ pub fn run_fedlrt<P: FedProblem + Sync>(
                 let report = executor.execute(&plan, |task| {
                     problem.grad(task.client_id, &w_aug, LrWant::Coeff, next_step[task.client_id])
                 });
+                obs.record_exec("vc_grad", &plan, &report.timing);
                 client_wall_s += report.wall_s;
                 client_serial_s += report.serial_s;
                 let grads_aug = report.results;
@@ -290,6 +322,7 @@ pub fn run_fedlrt<P: FedProblem + Sync>(
                 })
                 .collect()
         };
+        drop(sp_vc);
 
         // (13)-(15) Local client iterations on the coefficients (and
         // dense params), expressed as hermetic work items: each task
@@ -307,6 +340,7 @@ pub fn run_fedlrt<P: FedProblem + Sync>(
         // buffers too, so dense params (biases, heads) take exactly the
         // same optimizer steps on either path — regression-tested by
         // `fast_path_trains_dense_params` below.
+        let sp_local = obs.span(Phase::ClientTrain);
         let report = executor.execute(&plan, |task| {
             let c = task.client_id;
             let step0_c = next_step[c];
@@ -373,12 +407,15 @@ pub fn run_fedlrt<P: FedProblem + Sync>(
                 w_c.lr.iter().map(|lw| lw.as_factored().s.clone()).collect();
             (s_c, w_c.dense, first_loss)
         });
+        obs.record_exec("local", &plan, &report.timing);
+        drop(sp_local);
         client_wall_s += report.wall_s;
         client_serial_s += report.serial_s;
         // (16) Each client uploads its S̃_c^{s*} (+ dense params) through
         // the codec; the server averages the *decoded* tensors, weighted
         // (eq. 10 with non-uniform weights) — reduced in plan order so
         // the trajectory is bitwise independent of the executor.
+        let sp_agg2 = obs.span(Phase::Aggregate);
         let mut s_accum: Vec<Matrix> =
             augs.iter().map(|a| ws.take_mat(a.rank(), a.rank())).collect();
         let mut dense_accum: Vec<Matrix> =
@@ -405,9 +442,11 @@ pub fn run_fedlrt<P: FedProblem + Sync>(
         for task in &plan.tasks {
             next_step[task.client_id] += task.local_iters as u64;
         }
+        drop(sp_agg2);
 
         // (17)-(18) Automatic compression: 2r×2r SVD + truncation
         // (SVD scratch drawn from the cross-round workspace).
+        let sp_svd = obs.span(Phase::TruncateSvd);
         let mut discarded_total = 0.0;
         for l in 0..num_lr {
             let theta = cfg.rank.tau * s_accum[l].fro_norm();
@@ -427,13 +466,17 @@ pub fn run_fedlrt<P: FedProblem + Sync>(
             ws.give_mat(buf);
         }
         dense = dense_accum;
+        drop(sp_svd);
 
         // ---- Metrics ----
+        let sp_io = obs.span(Phase::Io);
         let comm = net.end_round();
         let (comm_floats, comm_per_client) = (comm.total_floats(), comm.per_client_floats());
         let (bytes_down, bytes_up) = (comm.bytes_down, comm.bytes_up);
         let comm_floats_lr =
             comm.floats_matching(|l| !matches!(l, "dense_w" | "G_dense"));
+        drop(sp_io);
+        let sp_eval = obs.span(Phase::Eval);
         let should_eval = t % cfg.eval_every == 0 || t + 1 == cfg.rounds;
         let w_eval = Weights {
             dense: dense.clone(),
@@ -444,6 +487,11 @@ pub fn run_fedlrt<P: FedProblem + Sync>(
         } else {
             local_loss_w
         };
+        let dist_to_opt =
+            if should_eval { problem.distance_to_optimum(&w_eval) } else { None };
+        let eval_metric = if should_eval { problem.eval_metric(&w_eval) } else { None };
+        drop(sp_eval);
+        let round_obs = obs.end_round();
         record.rounds.push(RoundMetrics {
             round: t,
             global_loss,
@@ -453,11 +501,13 @@ pub fn run_fedlrt<P: FedProblem + Sync>(
             bytes_down,
             bytes_up,
             comm_floats_per_client: comm_per_client,
-            dist_to_opt: if should_eval { problem.distance_to_optimum(&w_eval) } else { None },
-            eval_metric: if should_eval { problem.eval_metric(&w_eval) } else { None },
+            dist_to_opt,
+            eval_metric,
             wall_s: watch.elapsed_s(),
             client_wall_s,
             client_serial_s,
+            phase_s: round_obs.phase_s,
+            latency: round_obs.latency,
         });
         let _ = discarded_total;
     }

@@ -15,6 +15,7 @@ use crate::linalg::svd;
 use crate::lowrank::{augment_basis, LowRank};
 use crate::metrics::{RoundMetrics, RunRecord};
 use crate::models::{FedProblem, LrGrad, LrWant, LrWeight, Weights};
+use crate::obsv::{Phase, Recorder};
 use crate::opt::ClientOptimizer;
 use crate::tensor::Matrix;
 use crate::util::rng::Rng;
@@ -28,6 +29,16 @@ pub fn run_fedlrt_naive<P: FedProblem + Sync>(
     problem: &P,
     cfg: &TrainConfig,
     experiment: &str,
+) -> RunRecord {
+    run_fedlrt_naive_obs(problem, cfg, experiment, &Recorder::new())
+}
+
+/// [`run_fedlrt_naive`] with an explicit telemetry [`Recorder`].
+pub fn run_fedlrt_naive_obs<P: FedProblem + Sync>(
+    problem: &P,
+    cfg: &TrainConfig,
+    experiment: &str,
+    obs: &Recorder,
 ) -> RunRecord {
     let spec = problem.spec();
     assert!(
@@ -53,22 +64,28 @@ pub fn run_fedlrt_naive<P: FedProblem + Sync>(
 
     for t in 0..cfg.rounds {
         let watch = Stopwatch::start();
+        obs.begin_round(t);
         let lr_t = cfg.lr.at(t);
+        let sp_plan = obs.span(Phase::Io);
         let plan = RoundPlan::build(cfg, c_num, t, |c| problem.client_weight(c));
         net.set_active_clients(plan.len());
+        drop(sp_plan);
 
         // Broadcast the current global factors through the wire codec;
         // clients work on the decoded copies (S is diagonal, so only
         // its diagonal travels).
+        let sp_bc = obs.span(Phase::Broadcast);
         let u_bc = net.broadcast_mat("U", &fac.u);
         let v_bc = net.broadcast_mat("V", &fac.v);
         let s_diag: Vec<f64> = (0..fac.rank()).map(|i| fac.s[(i, i)]).collect();
         let s_bc = Matrix::diag(&net.broadcast_vec("S_diag", &s_diag));
         let fac_c = LowRank { u: u_bc, s: s_bc, v: v_bc };
+        drop(sp_bc);
 
         // Per-client: local augmentation (own QR on own gradients) and
         // local coefficient iterations — no coordination until upload,
         // so each client is one hermetic work item.
+        let sp_train = obs.span(Phase::ClientTrain);
         let report = executor.execute(&plan, |task| {
             let c = task.client_id;
             let step0_c = next_step[c];
@@ -111,8 +128,11 @@ pub fn run_fedlrt_naive<P: FedProblem + Sync>(
             };
             (fac_out.u, fac_out.s, fac_out.v)
         });
+        obs.record_exec("local", &plan, &report.timing);
         let client_wall_s = report.wall_s;
         let client_serial_s = report.serial_s;
+        drop(sp_train);
+        let sp_agg = obs.span(Phase::Aggregate);
         // Every participating client ships its factor triple
         // {Ũ_c, S̃_c, Ṽ_c} as one coalesced message through the wire
         // codec; the server reconstructs the dense average from the
@@ -133,36 +153,49 @@ pub fn run_fedlrt_naive<P: FedProblem + Sync>(
         for task in &plan.tasks {
             next_step[task.client_id] += task.local_iters as u64;
         }
+        drop(sp_agg);
 
         // Server: full n×n SVD to recover a low-rank factorization —
         // the O(n³) cost shared bases avoid.
+        let sp_svd = obs.span(Phase::TruncateSvd);
         let dec = svd(&w_star);
         let theta = cfg.rank.tau
             * dec.sigma.iter().map(|x| x * x).sum::<f64>().sqrt();
         let r1 = dec.rank_for_tolerance(theta).clamp(1, cfg.rank.max_rank);
         let (u, sig, v) = dec.truncate(r1);
         fac = LowRank { u, s: Matrix::diag(&sig), v };
+        drop(sp_svd);
 
         // Metrics.
+        let sp_io = obs.span(Phase::Io);
         let comm = net.end_round();
         let (comm_floats, comm_per_client) = (comm.total_floats(), comm.per_client_floats());
         let (bytes_down, bytes_up) = (comm.bytes_down, comm.bytes_up);
         let comm_floats_lr = comm_floats; // single-layer problems only
+        drop(sp_io);
+        let sp_eval = obs.span(Phase::Eval);
         let w_eval = Weights { dense: vec![], lr: vec![LrWeight::Factored(fac.clone())] };
+        let global_loss = problem.global_loss(&w_eval);
+        let dist_to_opt = problem.distance_to_optimum(&w_eval);
+        let eval_metric = problem.eval_metric(&w_eval);
+        drop(sp_eval);
+        let round_obs = obs.end_round();
         record.rounds.push(RoundMetrics {
             round: t,
-            global_loss: problem.global_loss(&w_eval),
+            global_loss,
             ranks: vec![fac.rank()],
             comm_floats,
             comm_floats_lr,
             bytes_down,
             bytes_up,
             comm_floats_per_client: comm_per_client,
-            dist_to_opt: problem.distance_to_optimum(&w_eval),
-            eval_metric: problem.eval_metric(&w_eval),
+            dist_to_opt,
+            eval_metric,
             wall_s: watch.elapsed_s(),
             client_wall_s,
             client_serial_s,
+            phase_s: round_obs.phase_s,
+            latency: round_obs.latency,
         });
     }
 

@@ -15,6 +15,11 @@
 //! (participation sampling, dropout, stragglers) and submitted to the
 //! configured [`crate::engine::ClientExecutor`] as hermetic work items;
 //! serial and thread-pool execution are bitwise-identical.
+//!
+//! Every engine has a `run_*_obs` variant taking an explicit
+//! [`crate::obsv::Recorder`]; the plain `run_*` entry points use the
+//! default (phases + latency, no trace). Telemetry is observe-only —
+//! see DESIGN.md §Observability for the determinism argument.
 
 pub mod config;
 pub mod dense_baselines;
@@ -25,7 +30,7 @@ pub mod presets;
 pub mod sampling;
 
 pub use config::{RankConfig, TrainConfig, VarCorrection};
-pub use dense_baselines::{run_dense, DenseAlgo};
-pub use fedlr::run_fedlr;
-pub use fedlrt::run_fedlrt;
-pub use fedlrt_naive::run_fedlrt_naive;
+pub use dense_baselines::{run_dense, run_dense_obs, DenseAlgo};
+pub use fedlr::{run_fedlr, run_fedlr_obs};
+pub use fedlrt::{run_fedlrt, run_fedlrt_obs};
+pub use fedlrt_naive::{run_fedlrt_naive, run_fedlrt_naive_obs};

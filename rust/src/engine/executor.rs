@@ -15,7 +15,7 @@
 //! measures both ways (parallel and serial-equivalent) so benches can
 //! report simulation speedup.
 
-use crate::util::Stopwatch;
+use std::time::Instant;
 
 use super::plan::{ClientTask, RoundPlan};
 
@@ -63,6 +63,33 @@ impl ExecutorKind {
     }
 }
 
+/// When one task ran: offsets on the executor call's single monotonic
+/// clock ([`ExecTiming::started`]), measured on the worker that ran it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TaskTiming {
+    /// Seconds from [`ExecTiming::started`] to the task starting.
+    pub start_s: f64,
+    /// Task duration in seconds (`end offset − start offset`, same
+    /// clock — so sums of durations and the latency histograms built
+    /// from them are directly comparable to `serial_s`).
+    pub dur_s: f64,
+    /// Index of the worker (chunk) that ran the task; `0` for the
+    /// serial executor. Trace export maps this to a per-worker track.
+    pub worker: usize,
+}
+
+/// Per-task timings of one executor call, all offsets from one
+/// `Instant` read at call entry.
+#[derive(Debug)]
+pub struct ExecTiming {
+    /// The call's epoch: every [`TaskTiming`] offset is relative to
+    /// this instant, and `wall_s` is its total elapsed.
+    pub started: Instant,
+    /// One entry per [`ClientTask`], in `ordinal` order (same order as
+    /// [`ExecReport::results`]).
+    pub tasks: Vec<TaskTiming>,
+}
+
 /// What an executor hands back: per-task results in task order plus the
 /// two wall-clock views of the same work.
 #[derive(Debug)]
@@ -71,9 +98,16 @@ pub struct ExecReport<R> {
     pub results: Vec<R>,
     /// Elapsed wall-clock of the whole execution (parallel time).
     pub wall_s: f64,
-    /// Serial-equivalent time: Σ over tasks of per-task wall-clock.
-    /// `serial_s / wall_s` is the executor's realized speedup.
+    /// Serial-equivalent time: Σ over tasks of per-task wall-clock,
+    /// folded in task order. Defined as exactly the sum of
+    /// `timing.tasks[i].dur_s` — same monotonic clock, same numbers —
+    /// so for the serial executor this equals the per-client latency
+    /// histogram's total bitwise (tasks are planned in ascending client
+    /// id). `serial_s / wall_s` is the executor's realized speedup.
     pub serial_s: f64,
+    /// Per-task start/duration/worker timings (feeds
+    /// [`crate::obsv::Recorder::record_exec`]).
+    pub timing: ExecTiming,
 }
 
 /// A strategy for executing one round's client work items.
@@ -91,15 +125,22 @@ fn run_serial<R, F>(plan: &RoundPlan, work: &F) -> ExecReport<R>
 where
     F: Fn(&ClientTask) -> R,
 {
-    let watch = Stopwatch::start();
-    let mut serial_s = 0.0;
+    let started = Instant::now();
     let mut results = Vec::with_capacity(plan.tasks.len());
+    let mut tasks = Vec::with_capacity(plan.tasks.len());
     for task in &plan.tasks {
-        let w = Stopwatch::start();
+        let t0 = started.elapsed().as_secs_f64();
         results.push(work(task));
-        serial_s += w.elapsed_s();
+        let t1 = started.elapsed().as_secs_f64();
+        tasks.push(TaskTiming { start_s: t0, dur_s: t1 - t0, worker: 0 });
     }
-    ExecReport { results, wall_s: watch.elapsed_s(), serial_s }
+    let serial_s = tasks.iter().map(|t| t.dur_s).sum();
+    ExecReport {
+        results,
+        wall_s: started.elapsed().as_secs_f64(),
+        serial_s,
+        timing: ExecTiming { started, tasks },
+    }
 }
 
 /// The reference executor: clients run one after another on the calling
@@ -172,21 +213,26 @@ impl ClientExecutor for ThreadPoolExecutor {
         if workers <= 1 || n <= 1 {
             return run_serial(plan, &work);
         }
-        let watch = Stopwatch::start();
+        let started = Instant::now();
         let chunk = (n + workers - 1) / workers;
         let work_ref = &work;
-        let per_chunk: Vec<Vec<(R, f64)>> = std::thread::scope(|scope| {
+        let per_chunk: Vec<Vec<(R, TaskTiming)>> = std::thread::scope(|scope| {
             let handles: Vec<_> = plan
                 .tasks
                 .chunks(chunk)
-                .map(|tasks| {
+                .enumerate()
+                .map(|(worker, tasks)| {
                     scope.spawn(move || {
                         tasks
                             .iter()
                             .map(|task| {
-                                let w = Stopwatch::start();
+                                // Offsets on the shared call epoch: the
+                                // per-task durations land on the same
+                                // monotonic clock as wall_s/serial_s.
+                                let t0 = started.elapsed().as_secs_f64();
                                 let r = work_ref(task);
-                                (r, w.elapsed_s())
+                                let t1 = started.elapsed().as_secs_f64();
+                                (r, TaskTiming { start_s: t0, dur_s: t1 - t0, worker })
                             })
                             .collect::<Vec<_>>()
                     })
@@ -196,13 +242,15 @@ impl ClientExecutor for ThreadPoolExecutor {
         });
         let mut serial_s = 0.0;
         let mut results = Vec::with_capacity(n);
+        let mut tasks = Vec::with_capacity(n);
         for chunk_results in per_chunk {
-            for (r, s) in chunk_results {
-                serial_s += s;
+            for (r, t) in chunk_results {
+                serial_s += t.dur_s;
                 results.push(r);
+                tasks.push(t);
             }
         }
-        ExecReport { results, wall_s: watch.elapsed_s(), serial_s }
+        ExecReport { results, wall_s: started.elapsed().as_secs_f64(), serial_s, timing: ExecTiming { started, tasks } }
     }
 }
 
@@ -289,6 +337,33 @@ mod tests {
         });
         assert_eq!(rep.results.len(), 6);
         assert!(rep.wall_s >= 0.0 && rep.serial_s >= 0.0);
+        assert_eq!(rep.timing.tasks.len(), 6);
+        for t in &rep.timing.tasks {
+            assert!(t.worker < 3);
+            assert!(t.start_s >= 0.0 && t.dur_s >= 0.0);
+            // Every task ran inside the call's wall-clock window (same
+            // monotonic clock, so the comparison is meaningful).
+            assert!(t.start_s + t.dur_s <= rep.wall_s + 1e-6);
+        }
+    }
+
+    #[test]
+    fn serial_s_is_exactly_the_timing_sum() {
+        // Satellite contract: serial_s is *defined* as the task-order
+        // sum of per-task durations on the call's single monotonic
+        // clock — the same samples the latency histograms are built
+        // from — so the equality is bitwise, for both executors.
+        let p = plan(7);
+        for rep in [
+            SerialExecutor.execute(&p, |t| t.seed),
+            ThreadPoolExecutor::new(3).execute(&p, |t| t.seed),
+        ] {
+            let sum: f64 = rep.timing.tasks.iter().map(|t| t.dur_s).sum();
+            assert_eq!(rep.serial_s, sum);
+            assert_eq!(rep.timing.tasks.len(), rep.results.len());
+        }
+        let serial = SerialExecutor.execute(&p, |t| t.seed);
+        assert!(serial.timing.tasks.iter().all(|t| t.worker == 0));
     }
 
     #[test]

@@ -25,6 +25,7 @@ pub mod executor;
 pub mod plan;
 
 pub use executor::{
-    ClientExecutor, ExecReport, Executor, ExecutorKind, SerialExecutor, ThreadPoolExecutor,
+    ClientExecutor, ExecReport, ExecTiming, Executor, ExecutorKind, SerialExecutor, TaskTiming,
+    ThreadPoolExecutor,
 };
 pub use plan::{local_iters_for, sample_active, ClientTask, RoundPlan};

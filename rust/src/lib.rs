@@ -37,6 +37,7 @@ pub mod lowrank;
 pub mod metrics;
 pub mod models;
 pub mod nn;
+pub mod obsv;
 pub mod opt;
 pub mod runtime;
 pub mod tensor;

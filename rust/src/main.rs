@@ -28,9 +28,10 @@
 use anyhow::Result;
 use fedlrt::comm::CodecKind;
 use fedlrt::coordinator::{
-    run_dense, run_fedlrt, DenseAlgo, RankConfig, TrainConfig, VarCorrection,
+    run_dense_obs, run_fedlrt_obs, DenseAlgo, RankConfig, TrainConfig, VarCorrection,
 };
 use fedlrt::engine::ExecutorKind;
+use fedlrt::obsv::Recorder;
 use fedlrt::models::least_squares::LeastSquares;
 use fedlrt::nn::experiment::{print_rows, run_mlp_sweep};
 use fedlrt::nn::{NnOptions, NnProblem};
@@ -170,6 +171,27 @@ fn cmd_problem(rest: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Build the telemetry recorder for a `--trace <path>` argument (empty
+/// = phases/latency only, no event buffering).
+fn recorder_for(trace: &str) -> Recorder {
+    if trace.is_empty() {
+        Recorder::new()
+    } else {
+        Recorder::with_trace()
+    }
+}
+
+/// Flush the buffered Chrome trace when `--trace <path>` was given.
+/// Load the file in Perfetto (ui.perfetto.dev) or `chrome://tracing`.
+fn finish_trace(obs: &Recorder, trace: &str) -> Result<()> {
+    if !trace.is_empty() {
+        let path = std::path::Path::new(trace);
+        obs.write_trace(path)?;
+        println!("trace: {} events written to {}", obs.trace_len(), path.display());
+    }
+    Ok(())
+}
+
 fn parse_executor(s: &str) -> ExecutorKind {
     ExecutorKind::parse(s).unwrap_or_else(|e| {
         eprintln!("{e}");
@@ -221,6 +243,7 @@ fn cmd_train(rest: &[String]) -> Result<()> {
             "0",
             "matmul kernel worker threads (0 = env FEDLRT_KERNEL_THREADS or 1)",
         )
+        .opt("trace", "", "write a Chrome trace-event JSON (Perfetto-loadable) to this path")
         .opt("out", "results/train.jsonl", "JSONL output path");
     let a = cli.parse(rest).unwrap_or_else(|e| {
         eprintln!("{e}");
@@ -263,15 +286,17 @@ fn cmd_train(rest: &[String]) -> Result<()> {
         codec: parse_codec(a.str("codec")),
         kernel_threads: a.usize("kernel-threads"),
     };
+    let obs = recorder_for(a.str("trace"));
     let rec = match a.str("algo") {
-        "fedlrt" => run_fedlrt(&problem, &cfg, "cli_train"),
-        "fedavg" => run_dense(&problem, &cfg, DenseAlgo::FedAvg, "cli_train"),
-        "fedlin" => run_dense(&problem, &cfg, DenseAlgo::FedLin, "cli_train"),
+        "fedlrt" => run_fedlrt_obs(&problem, &cfg, "cli_train", &obs),
+        "fedavg" => run_dense_obs(&problem, &cfg, DenseAlgo::FedAvg, "cli_train", &obs),
+        "fedlin" => run_dense_obs(&problem, &cfg, DenseAlgo::FedLin, "cli_train", &obs),
         other => {
             eprintln!("unknown --algo '{other}'");
             std::process::exit(2);
         }
     };
+    finish_trace(&obs, a.str("trace"))?;
     for r in &rec.rounds {
         if let Some(acc) = r.eval_metric {
             println!(
@@ -313,7 +338,8 @@ fn cmd_lsq(rest: &[String]) -> Result<()> {
             "kernel-threads",
             "0",
             "matmul kernel worker threads (0 = env FEDLRT_KERNEL_THREADS or 1)",
-        );
+        )
+        .opt("trace", "", "write a Chrome trace-event JSON (Perfetto-loadable) to this path");
     let a = cli.parse(rest).unwrap_or_else(|e| {
         eprintln!("{e}");
         std::process::exit(2)
@@ -352,11 +378,13 @@ fn cmd_lsq(rest: &[String]) -> Result<()> {
         kernel_threads: a.usize("kernel-threads"),
         ..TrainConfig::default()
     };
+    let obs = recorder_for(a.str("trace"));
     let rec = match a.str("algo") {
-        "fedavg" => run_dense(&problem, &cfg, DenseAlgo::FedAvg, "cli_lsq"),
-        "fedlin" => run_dense(&problem, &cfg, DenseAlgo::FedLin, "cli_lsq"),
-        _ => run_fedlrt(&problem, &cfg, "cli_lsq"),
+        "fedavg" => run_dense_obs(&problem, &cfg, DenseAlgo::FedAvg, "cli_lsq", &obs),
+        "fedlin" => run_dense_obs(&problem, &cfg, DenseAlgo::FedLin, "cli_lsq", &obs),
+        _ => run_fedlrt_obs(&problem, &cfg, "cli_lsq", &obs),
     };
+    finish_trace(&obs, a.str("trace"))?;
     for r in rec.rounds.iter().step_by((cfg.rounds / 10).max(1)) {
         println!(
             "round {:>4}: loss {:<12.4e} rank {:?} dist {:.4e}",

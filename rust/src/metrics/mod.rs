@@ -39,14 +39,28 @@ pub struct RoundMetrics {
     /// Wall-clock seconds of client-side work under the configured
     /// [`crate::engine::ClientExecutor`] (parallel time).
     pub client_wall_s: f64,
-    /// Serial-equivalent client work: Σ over clients of per-client
-    /// wall-clock. `client_serial_s / client_wall_s` is the round's
-    /// simulation speedup (1.0 under the serial executor). Per-task
-    /// times are measured on the worker threads, so under a thread
-    /// pool this is an estimate with mild upward bias from scheduling
+    /// Serial-equivalent client work: Σ over tasks of per-task
+    /// wall-clock, folded in task order. Per-task times come from the
+    /// executor call's single monotonic clock — the same samples the
+    /// per-client latency histogram is built from — so for the serial
+    /// executor this equals the histogram's `sum_s` (bitwise for
+    /// single-executor-call rounds, whose task order is client-id
+    /// order; see `tests/obsv_telemetry.rs`).
+    /// `client_serial_s / client_wall_s` is the round's simulation
+    /// speedup (1.0 under the serial executor). Under a thread pool
+    /// this is an estimate with mild upward bias from scheduling
     /// overlap; the executor caps workers at the core count to keep
     /// that bias small.
     pub client_serial_s: f64,
+    /// Seconds attributed to each taxonomy phase by the coordinator's
+    /// span recorder (all zeros when telemetry is disabled). Only
+    /// top-level spans accumulate, so `phase_s.sum() ≤ wall_s` up to
+    /// timer resolution.
+    pub phase_s: crate::obsv::PhaseSeconds,
+    /// Per-client latency distribution for the round (exact
+    /// p50/p95/max + straggler id); `latency.n == 0` when telemetry is
+    /// disabled.
+    pub latency: crate::obsv::LatencySummary,
 }
 
 /// A full training run.
@@ -123,8 +137,12 @@ impl RunRecord {
     }
 
     /// Realized client-execution speedup over the run:
-    /// `Σ client_serial_s / Σ client_wall_s` (≈1.0 for the serial
-    /// executor; >1 when a thread pool overlaps client work).
+    /// `Σ client_serial_s / Σ client_wall_s`. Both sums come from the
+    /// same per-executor-call monotonic clock (see
+    /// [`crate::engine::ExecTiming`]), so for the serial executor the
+    /// ratio is ≤1.0 and approaches it from below (the wall-clock adds
+    /// only loop bookkeeping); a thread pool overlapping client work
+    /// drives it above 1.
     pub fn client_speedup(&self) -> f64 {
         let wall = self.total_client_wall_s();
         if wall > 0.0 {
@@ -161,7 +179,14 @@ impl RunRecord {
                     .set("comm_floats_per_client", r.comm_floats_per_client)
                     .set("wall_s", r.wall_s)
                     .set("client_wall_s", r.client_wall_s)
-                    .set("client_serial_s", r.client_serial_s);
+                    .set("client_serial_s", r.client_serial_s)
+                    .set("phase_s", r.phase_s.to_json());
+                if r.latency.n > 0 {
+                    ro.set("lat_p50_s", r.latency.p50_s)
+                        .set("lat_p95_s", r.latency.p95_s)
+                        .set("lat_max_s", r.latency.max_s)
+                        .set("straggler", r.latency.straggler);
+                }
                 if let Some(d) = r.dist_to_opt {
                     ro.set("dist_to_opt", d);
                 }
@@ -176,37 +201,60 @@ impl RunRecord {
     }
 
     /// Append as one JSON line to `path` (creates parents).
+    ///
+    /// The line (newline included) is built in memory and written with
+    /// a **single** `write_all`: parallel bench processes share
+    /// `results/*.jsonl` files in append mode, and on POSIX an
+    /// O_APPEND write of one buffer lands atomically, whereas the old
+    /// `writeln!` issued separate payload/newline writes that could
+    /// interleave partial lines.
     pub fn append_jsonl(&self, path: &Path) -> std::io::Result<()> {
         if let Some(parent) = path.parent() {
             std::fs::create_dir_all(parent)?;
         }
+        let mut line = self.to_json().to_string_compact();
+        line.push('\n');
         let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
-        writeln!(f, "{}", self.to_json().to_string_compact())
+        f.write_all(line.as_bytes())
     }
 }
 
 /// Median trajectory across seeds: per-round medians of loss / rank /
 /// distance (the paper reports medians over 20 random initializations).
+///
+/// Runs may have unequal lengths (early stopping, rounds-to-ε
+/// sweeps). **Minimum-quorum rule:** round `t` is reported while at
+/// least `⌈N/2⌉` of the `N` runs reach it, and each reported median is
+/// taken over exactly the runs that reach `t` — nothing past
+/// `min(len)` is silently dropped, but a tail backed by fewer than
+/// half the seeds is cut rather than reported as a "median" of a
+/// shrinking minority. The distance median is `Some` only when every
+/// run reaching `t` carries `dist_to_opt` there.
 pub fn median_trajectory(runs: &[RunRecord]) -> Vec<(usize, f64, f64, Option<f64>)> {
     if runs.is_empty() {
         return vec![];
     }
-    let num_rounds = runs.iter().map(|r| r.rounds.len()).min().unwrap_or(0);
-    (0..num_rounds)
-        .map(|t| {
-            let losses: Vec<f64> = runs.iter().map(|r| r.rounds[t].global_loss).collect();
-            let ranks: Vec<f64> = runs
+    let quorum = (runs.len() + 1) / 2;
+    let max_rounds = runs.iter().map(|r| r.rounds.len()).max().unwrap_or(0);
+    (0..max_rounds)
+        .map_while(|t| {
+            let reached: Vec<&RoundMetrics> =
+                runs.iter().filter_map(|r| r.rounds.get(t)).collect();
+            if reached.len() < quorum {
+                return None;
+            }
+            let losses: Vec<f64> = reached.iter().map(|r| r.global_loss).collect();
+            let ranks: Vec<f64> = reached
                 .iter()
-                .map(|r| r.rounds[t].ranks.first().copied().unwrap_or(0) as f64)
+                .map(|r| r.ranks.first().copied().unwrap_or(0) as f64)
                 .collect();
-            let dists: Vec<f64> =
-                runs.iter().filter_map(|r| r.rounds[t].dist_to_opt).collect();
-            let d = if dists.len() == runs.len() {
+            let dists: Vec<f64> = reached.iter().filter_map(|r| r.dist_to_opt).collect();
+            let d = if dists.len() == reached.len() {
                 Some(crate::util::median(&dists))
             } else {
                 None
             };
-            (t, crate::util::median(&losses), crate::util::median(&ranks), d)
+            Some((t, crate::util::median(&losses), crate::util::median(&ranks), d))
         })
         .collect()
 }
@@ -232,6 +280,8 @@ mod tests {
                 wall_s: 0.0,
                 client_wall_s: 0.0,
                 client_serial_s: 0.0,
+                phase_s: crate::obsv::PhaseSeconds::default(),
+                latency: crate::obsv::LatencySummary::default(),
             });
         }
         r
@@ -266,5 +316,55 @@ mod tests {
         assert_eq!(traj.len(), 2);
         assert_eq!(traj[0].1, 2.0);
         assert_eq!(traj[1].1, 0.5);
+    }
+
+    #[test]
+    fn median_trajectory_unequal_lengths_quorum() {
+        // N=3 → quorum 2: rounds backed by ≥2 runs are reported (over
+        // exactly the runs that reach them), the 1-run tail is cut.
+        let runs = vec![
+            record(&[1.0, 0.4]),
+            record(&[3.0, 0.6, 0.3, 0.1]),
+            record(&[2.0, 0.5, 0.2]),
+        ];
+        let traj = median_trajectory(&runs);
+        assert_eq!(traj.len(), 3, "round 2 reaches quorum, round 3 does not");
+        assert_eq!(traj[0].1, 2.0);
+        assert_eq!(traj[1].1, 0.5);
+        // Round 2: median over the two surviving runs.
+        assert_eq!(traj[2].1, 0.25);
+        assert_eq!(traj[2].0, 2);
+        // dist_to_opt present on every surviving run → still Some.
+        assert!(traj[2].3.is_some());
+        // A single run reports its full length (quorum 1).
+        let solo = vec![record(&[1.0, 0.5, 0.25])];
+        assert_eq!(median_trajectory(&solo).len(), 3);
+    }
+
+    #[test]
+    fn round_json_has_full_phase_schema_and_latency_gating() {
+        let mut r = record(&[1.0]);
+        r.rounds[0].phase_s.add(crate::obsv::Phase::Eval, 0.125);
+        let j = r.to_json();
+        let rounds = j.get("rounds").unwrap().as_arr().unwrap();
+        let ps = rounds[0].get("phase_s").unwrap();
+        for p in crate::obsv::ALL_PHASES {
+            assert!(ps.get(p.label()).is_some(), "phase_s missing key {}", p.label());
+        }
+        assert_eq!(ps.get("eval").unwrap().as_f64().unwrap(), 0.125);
+        // latency.n == 0 → no latency keys emitted.
+        assert!(rounds[0].get("lat_p50_s").is_none());
+        r.rounds[0].latency = crate::obsv::LatencySummary {
+            n: 4,
+            p50_s: 0.5,
+            p95_s: 0.75,
+            max_s: 0.75,
+            sum_s: 2.0,
+            straggler: 3,
+        };
+        let j = r.to_json();
+        let rounds = j.get("rounds").unwrap().as_arr().unwrap();
+        assert_eq!(rounds[0].get("lat_p95_s").unwrap().as_f64().unwrap(), 0.75);
+        assert_eq!(rounds[0].get("straggler").unwrap().as_usize().unwrap(), 3);
     }
 }

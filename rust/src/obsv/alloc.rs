@@ -1,0 +1,83 @@
+//! Reusable counting-allocator instrument (promoted from
+//! `benches/micro_hotpath.rs` so every bench and test can assert
+//! allocation contracts with the same tool).
+//!
+//! Rust allows exactly one `#[global_allocator]`, chosen by the final
+//! binary — a library cannot install one. So this module ships the
+//! *instrument* and each binary opts in:
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static GLOBAL: fedlrt::obsv::alloc::CountingAlloc = CountingAlloc;
+//! ```
+//!
+//! When no binary installs it, [`counts`] stays at zero and the
+//! telemetry layer simply reports no allocation data — there is no
+//! penalty for the instrument existing. When installed, every
+//! alloc/realloc is two `Relaxed` atomic adds on top of the system
+//! allocator.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// A `GlobalAlloc` that tallies every allocation before delegating to
+/// [`System`]. Deallocations are not counted — the contracts under test
+/// are "how much did this path *ask for*".
+pub struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+/// Cumulative `(calls, bytes)` observed since process start — zeros
+/// unless the running binary installed [`CountingAlloc`].
+pub fn counts() -> (u64, u64) {
+    (ALLOC_CALLS.load(Ordering::Relaxed), ALLOC_BYTES.load(Ordering::Relaxed))
+}
+
+/// Allocation delta `(calls, bytes)` across `f()`.
+pub fn measure_allocs<F: FnMut()>(mut f: F) -> (u64, u64) {
+    let (c0, b0) = counts();
+    f();
+    let (c1, b1) = counts();
+    (c1 - c0, b1 - b0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The test binary does not install CountingAlloc, so the counters
+    // stay flat and measure_allocs sees a zero delta even for real
+    // allocations — exactly the "not installed" contract.
+    #[test]
+    fn uninstalled_counts_are_flat() {
+        let (dc, db) = measure_allocs(|| {
+            std::hint::black_box(vec![0u8; 4096]);
+        });
+        assert_eq!((dc, db), (0, 0));
+    }
+}

@@ -1,0 +1,149 @@
+//! Always-on atomic counters fed from the tensor layer.
+//!
+//! These are process-global `Relaxed` atomics — the same pattern as the
+//! kernel's `KERNEL_THREADS` knob — so the hot path pays a few
+//! nanoseconds per GEMM call and **zero allocations** (the
+//! `micro_hotpath` zero-allocation gate runs with these compiled in).
+//! Consumers take a [`counters_snapshot`] before a region of interest
+//! and diff with [`counters_delta`] after; `benches/table1_costs.rs`
+//! uses this to put measured FLOPs next to the paper's cost model.
+//!
+//! Counters are cumulative per process and shared across threads, so
+//! deltas around a multi-threaded region attribute *all* threads' work
+//! to the region — which is what a cost table wants. They are
+//! observe-only and never feed back into training state.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static GEMM_CALLS: AtomicU64 = AtomicU64::new(0);
+static GEMM_FLOPS: AtomicU64 = AtomicU64::new(0);
+static PANELS_PACKED: AtomicU64 = AtomicU64::new(0);
+static WS_BYTES_OUT: AtomicU64 = AtomicU64::new(0);
+static WS_BYTES_HWM: AtomicU64 = AtomicU64::new(0);
+
+/// Note one GEMM dispatch of shape `m×k · k×n` (2mnk flops).
+#[inline]
+pub fn note_gemm(m: usize, k: usize, n: usize) {
+    GEMM_CALLS.fetch_add(1, Ordering::Relaxed);
+    GEMM_FLOPS.fetch_add(2 * (m as u64) * (k as u64) * (n as u64), Ordering::Relaxed);
+}
+
+/// Note `count` A/B panels packed by the blocked kernel.
+#[inline]
+pub fn note_panels_packed(count: u64) {
+    if count > 0 {
+        PANELS_PACKED.fetch_add(count, Ordering::Relaxed);
+    }
+}
+
+/// Note `bytes` of workspace storage going outstanding (a `take`).
+/// Updates the process-wide high-water mark.
+#[inline]
+pub fn note_workspace_take(bytes: u64) {
+    let now = WS_BYTES_OUT.fetch_add(bytes, Ordering::Relaxed) + bytes;
+    WS_BYTES_HWM.fetch_max(now, Ordering::Relaxed);
+}
+
+/// Note `bytes` of workspace storage returning to a pool (a `give`).
+#[inline]
+pub fn note_workspace_give(bytes: u64) {
+    // Saturating: a buffer dropped instead of given back (legal per the
+    // workspace ownership rules) leaves the outstanding estimate high
+    // rather than wrapping.
+    let _ = WS_BYTES_OUT.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+        Some(v.saturating_sub(bytes))
+    });
+}
+
+/// Point-in-time view of the process counters. Diff two snapshots with
+/// [`counters_delta`] to attribute work to a region.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CounterSnapshot {
+    /// GEMM dispatches (packed kernel and small-matrix fallback alike).
+    pub gemm_calls: u64,
+    /// Multiply-add flops (2mnk per GEMM).
+    pub gemm_flops: u64,
+    /// A/B panels packed by the blocked kernel.
+    pub panels_packed: u64,
+    /// Workspace bytes outstanding right now (approximate: buffers
+    /// dropped instead of given back stay counted).
+    pub ws_bytes_out: u64,
+    /// High-water mark of outstanding workspace bytes.
+    pub ws_bytes_hwm: u64,
+    /// Heap allocations observed by [`super::alloc::CountingAlloc`]
+    /// (zero unless the binary installed it as `#[global_allocator]`).
+    pub alloc_calls: u64,
+    /// Heap bytes requested, same caveat as `alloc_calls`.
+    pub alloc_bytes: u64,
+}
+
+/// Read all counters. `Relaxed` loads: values are exact once the
+/// threads that did the work have been joined.
+pub fn counters_snapshot() -> CounterSnapshot {
+    let (alloc_calls, alloc_bytes) = super::alloc::counts();
+    CounterSnapshot {
+        gemm_calls: GEMM_CALLS.load(Ordering::Relaxed),
+        gemm_flops: GEMM_FLOPS.load(Ordering::Relaxed),
+        panels_packed: PANELS_PACKED.load(Ordering::Relaxed),
+        ws_bytes_out: WS_BYTES_OUT.load(Ordering::Relaxed),
+        ws_bytes_hwm: WS_BYTES_HWM.load(Ordering::Relaxed),
+        alloc_calls,
+        alloc_bytes,
+    }
+}
+
+/// Work done since `since` (high-water marks report the current mark,
+/// not a difference — a mark has no meaningful delta).
+pub fn counters_delta(since: &CounterSnapshot) -> CounterSnapshot {
+    let now = counters_snapshot();
+    CounterSnapshot {
+        gemm_calls: now.gemm_calls - since.gemm_calls,
+        gemm_flops: now.gemm_flops - since.gemm_flops,
+        panels_packed: now.panels_packed - since.panels_packed,
+        ws_bytes_out: now.ws_bytes_out,
+        ws_bytes_hwm: now.ws_bytes_hwm,
+        alloc_calls: now.alloc_calls - since.alloc_calls,
+        alloc_bytes: now.alloc_bytes - since.alloc_bytes,
+    }
+}
+
+impl CounterSnapshot {
+    /// JSON export for bench rows.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        let mut o = crate::util::json::Json::obj();
+        o.set("gemm_calls", self.gemm_calls)
+            .set("gemm_flops", self.gemm_flops)
+            .set("panels_packed", self.panels_packed)
+            .set("ws_bytes_hwm", self.ws_bytes_hwm)
+            .set("alloc_calls", self.alloc_calls)
+            .set("alloc_bytes", self.alloc_bytes);
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_counter_accumulates_flops() {
+        let before = counters_snapshot();
+        note_gemm(4, 8, 2);
+        note_gemm(1, 1, 1);
+        let d = counters_delta(&before);
+        // Other tests may run concurrently, so assert lower bounds.
+        assert!(d.gemm_calls >= 2);
+        assert!(d.gemm_flops >= 2 * 4 * 8 * 2 + 2);
+    }
+
+    #[test]
+    fn workspace_hwm_tracks_peak() {
+        note_workspace_take(1 << 20);
+        let snap = counters_snapshot();
+        assert!(snap.ws_bytes_hwm >= 1 << 20);
+        note_workspace_give(1 << 20);
+        // give never wraps below zero even if unbalanced.
+        note_workspace_give(u64::MAX / 2);
+        assert!(counters_snapshot().ws_bytes_hwm >= snap.ws_bytes_hwm);
+    }
+}

@@ -1,0 +1,174 @@
+//! Per-client latency distributions with exact quantiles.
+//!
+//! The engine executors time every [`crate::engine::ClientTask`] on the
+//! worker that ran it; the coordinator feeds those timings here keyed
+//! by **client id**, so a client that runs in several executor calls
+//! within one round (e.g. basis-gradient round + local iterations)
+//! accumulates its total seconds. Keying by client id makes the merge
+//! order-independent: serial and thread-pool executors produce the same
+//! histogram contents for the same per-task durations regardless of
+//! completion order.
+//!
+//! Quantiles are **exact** (nearest-rank over the sorted samples), not
+//! bucketed estimates — client counts are metrics-sized, so sorting a
+//! copy is cheap and the tests can assert exact values.
+
+/// Accumulated per-client latencies for one round.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyHist {
+    /// `client id → accumulated seconds`, kept sorted by client id.
+    samples: Vec<(usize, f64)>,
+}
+
+impl LatencyHist {
+    pub fn new() -> LatencyHist {
+        LatencyHist::default()
+    }
+
+    /// Add `secs` to `client`'s accumulated latency.
+    pub fn add(&mut self, client: usize, secs: f64) {
+        match self.samples.binary_search_by_key(&client, |&(c, _)| c) {
+            Ok(i) => self.samples[i].1 += secs,
+            Err(i) => self.samples.insert(i, (client, secs)),
+        }
+    }
+
+    /// Number of distinct clients observed.
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Sum of all per-client latencies, folded in client-id order.
+    ///
+    /// For a single serial executor call this equals the executor's
+    /// `serial_s` bitwise: tasks are planned in ascending client id, so
+    /// both sums fold the same numbers in the same order on the same
+    /// monotonic clock.
+    pub fn total_s(&self) -> f64 {
+        self.samples.iter().map(|&(_, s)| s).sum()
+    }
+
+    /// Exact nearest-rank quantile: the smallest sample `x` such that
+    /// at least `q·n` samples are ≤ `x`. `quantile(1.0)` is the max.
+    pub fn quantile(&self, q: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&q), "quantile out of range: {q}");
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut v: Vec<f64> = self.samples.iter().map(|&(_, s)| s).collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = v.len();
+        let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
+        v[rank - 1]
+    }
+
+    /// The slowest client this round: `(client id, seconds)`.
+    pub fn straggler(&self) -> Option<(usize, f64)> {
+        self.samples
+            .iter()
+            .copied()
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+    }
+
+    /// Collapse into the per-round summary exported with the metrics.
+    pub fn summary(&self) -> LatencySummary {
+        if self.samples.is_empty() {
+            return LatencySummary::default();
+        }
+        let (straggler, max_s) = self.straggler().unwrap();
+        LatencySummary {
+            n: self.len(),
+            p50_s: self.quantile(0.50),
+            p95_s: self.quantile(0.95),
+            max_s,
+            sum_s: self.total_s(),
+            straggler,
+        }
+    }
+
+    /// Reset for the next round, keeping capacity.
+    pub fn clear(&mut self) {
+        self.samples.clear();
+    }
+}
+
+/// Per-round latency-distribution summary (exported in round JSON as
+/// `lat_p50_s` / `lat_p95_s` / `lat_max_s` / `straggler` when `n > 0`).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LatencySummary {
+    /// Distinct clients observed; `0` means "no latency data".
+    pub n: usize,
+    /// Median per-client latency (exact nearest-rank).
+    pub p50_s: f64,
+    /// 95th-percentile per-client latency (exact nearest-rank).
+    pub p95_s: f64,
+    /// Slowest client's latency.
+    pub max_s: f64,
+    /// Sum of per-client latencies (client-id fold order; equals the
+    /// serial executor's `serial_s` for single-call rounds).
+    pub sum_s: f64,
+    /// Client id of the slowest client (the round's straggler).
+    pub straggler: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_exact_on_known_inputs() {
+        // 1..=100 seconds: nearest-rank p50 = 50, p95 = 95, max = 100.
+        let mut h = LatencyHist::new();
+        for c in 0..100 {
+            h.add(c, (c + 1) as f64);
+        }
+        assert_eq!(h.quantile(0.50), 50.0);
+        assert_eq!(h.quantile(0.95), 95.0);
+        assert_eq!(h.quantile(1.0), 100.0);
+        assert_eq!(h.straggler(), Some((99, 100.0)));
+        let s = h.summary();
+        assert_eq!((s.n, s.p50_s, s.p95_s, s.max_s), (100, 50.0, 95.0, 100.0));
+    }
+
+    #[test]
+    fn identical_work_collapses_quantiles() {
+        let mut h = LatencyHist::new();
+        for c in 0..7 {
+            h.add(c, 0.25);
+        }
+        let s = h.summary();
+        assert_eq!(s.p50_s, s.p95_s);
+        assert_eq!(s.p95_s, s.max_s);
+        assert_eq!(s.sum_s, 7.0 * 0.25);
+    }
+
+    #[test]
+    fn merge_is_order_independent() {
+        let timings = [(3usize, 0.5), (1, 0.25), (2, 0.125), (1, 0.0625)];
+        let mut fwd = LatencyHist::new();
+        for &(c, s) in &timings {
+            fwd.add(c, s);
+        }
+        let mut rev = LatencyHist::new();
+        for &(c, s) in timings.iter().rev() {
+            rev.add(c, s);
+        }
+        assert_eq!(fwd.samples, rev.samples);
+        assert_eq!(fwd.summary(), rev.summary());
+    }
+
+    #[test]
+    fn small_and_empty_hists() {
+        let h = LatencyHist::new();
+        assert_eq!(h.summary(), LatencySummary::default());
+        assert_eq!(h.quantile(0.5), 0.0);
+        let mut one = LatencyHist::new();
+        one.add(4, 2.0);
+        let s = one.summary();
+        assert_eq!((s.p50_s, s.p95_s, s.max_s, s.straggler), (2.0, 2.0, 2.0, 4));
+    }
+}

@@ -1,0 +1,178 @@
+//! Observability layer: phase spans, per-client latency distributions,
+//! kernel counters, and trace export.
+//!
+//! The paper's headline claim is a *cost* claim — client compute and
+//! communication cut by up to an order of magnitude — so the repo needs
+//! to attribute time to the algorithm's named phases from real runs,
+//! not only from cost-model formulas. This subsystem provides four
+//! instruments (see DESIGN.md §Observability):
+//!
+//! * [`Recorder`]/[`Span`] — hierarchical span timers over a **static
+//!   phase taxonomy** (`round > {broadcast, client_train, aggregate,
+//!   augment_qr, variance_correction, truncate_svd, eval, io}`) that
+//!   every coordinator wraps its stages in;
+//! * [`LatencyHist`] — per-client latency distributions (exact
+//!   p50/p95/max + straggler id) built from the engine executors'
+//!   per-task timings, exposed per round;
+//! * [`counters`] — lightweight always-on atomic counters fed from the
+//!   tensor layer (GEMM calls, FLOPs, panels packed, workspace bytes
+//!   high-water mark) plus the reusable counting allocator in
+//!   [`alloc`];
+//! * exporters — per-phase seconds folded into
+//!   [`crate::metrics::RoundMetrics`] as a `phase_s` map, and an
+//!   optional Chrome trace-event JSON file (`--trace <path>`, loadable
+//!   in Perfetto / `chrome://tracing`) with one track per worker
+//!   thread.
+//!
+//! **Invariants.** Telemetry is observe-only: it never touches round
+//! state, so the bitwise serial≡threaded determinism contract is
+//! unaffected (asserted by `tests/engine_determinism.rs`). The
+//! per-client histogram is keyed by client id, so merging thread-pool
+//! timings is order-independent. A [`Recorder::disabled`] recorder is a
+//! no-op behind the same API: spans read no clock and allocate nothing
+//! (the `micro_hotpath` zero-allocation gate runs with this layer
+//! compiled in).
+
+pub mod alloc;
+pub mod counters;
+pub mod hist;
+pub mod span;
+pub mod trace;
+
+pub use counters::{counters_delta, counters_snapshot, CounterSnapshot};
+pub use hist::{LatencyHist, LatencySummary};
+pub use span::{Recorder, RoundObs, Span};
+pub use trace::{write_chrome_trace, TraceEvent};
+
+/// The static phase taxonomy every coordinator reports against.
+///
+/// `Io` is the catch-all for scheduling, record bookkeeping, and
+/// exporter I/O — everything in a round that is neither algorithm math
+/// nor communication.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Server→client transfers: encode + wire accounting + decode.
+    Broadcast,
+    /// Client-side work submitted to the executor (basis-gradient
+    /// rounds and local coefficient iterations).
+    ClientTrain,
+    /// Client→server transfers and the coordinator's fold of uploads.
+    Aggregate,
+    /// Basis augmentation `qr([U | proj])` (FeDLRT Alg 1 line 5).
+    AugmentQr,
+    /// Variance-correction assembly (simplified or full; includes the
+    /// full mode's extra gradient round trip).
+    VarianceCorrection,
+    /// Rank truncation via the small `2r×2r` SVD.
+    TruncateSvd,
+    /// Global loss / validation-metric evaluation.
+    Eval,
+    /// Scheduling, bookkeeping, and exporter I/O.
+    Io,
+}
+
+/// Number of phases in the taxonomy (array size for accumulators).
+pub const PHASE_COUNT: usize = 8;
+
+/// All phases, in stable display/export order.
+pub const ALL_PHASES: [Phase; PHASE_COUNT] = [
+    Phase::Broadcast,
+    Phase::ClientTrain,
+    Phase::Aggregate,
+    Phase::AugmentQr,
+    Phase::VarianceCorrection,
+    Phase::TruncateSvd,
+    Phase::Eval,
+    Phase::Io,
+];
+
+impl Phase {
+    /// Stable snake_case label used for JSON keys and trace events.
+    pub fn label(self) -> &'static str {
+        match self {
+            Phase::Broadcast => "broadcast",
+            Phase::ClientTrain => "client_train",
+            Phase::Aggregate => "aggregate",
+            Phase::AugmentQr => "augment_qr",
+            Phase::VarianceCorrection => "variance_correction",
+            Phase::TruncateSvd => "truncate_svd",
+            Phase::Eval => "eval",
+            Phase::Io => "io",
+        }
+    }
+
+    /// Index into a `[_; PHASE_COUNT]` accumulator.
+    pub fn index(self) -> usize {
+        match self {
+            Phase::Broadcast => 0,
+            Phase::ClientTrain => 1,
+            Phase::Aggregate => 2,
+            Phase::AugmentQr => 3,
+            Phase::VarianceCorrection => 4,
+            Phase::TruncateSvd => 5,
+            Phase::Eval => 6,
+            Phase::Io => 7,
+        }
+    }
+}
+
+/// Per-round seconds attributed to each taxonomy phase.
+///
+/// Only **top-level** spans accumulate here (nested spans show up in
+/// the trace but are already covered by their parent), so for every
+/// round `sum() ≤ wall_s` up to timer resolution.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PhaseSeconds(pub [f64; PHASE_COUNT]);
+
+impl PhaseSeconds {
+    pub fn get(&self, p: Phase) -> f64 {
+        self.0[p.index()]
+    }
+
+    pub fn add(&mut self, p: Phase, secs: f64) {
+        self.0[p.index()] += secs;
+    }
+
+    /// Total attributed seconds across all phases.
+    pub fn sum(&self) -> f64 {
+        self.0.iter().sum()
+    }
+
+    /// JSON object `{label: seconds}` with every taxonomy key present
+    /// (zeros included, so downstream consumers see a fixed schema).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        let mut o = crate::util::json::Json::obj();
+        for p in ALL_PHASES {
+            o.set(p.label(), self.get(p));
+        }
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_index_label_stable() {
+        for (i, p) in ALL_PHASES.iter().enumerate() {
+            assert_eq!(p.index(), i);
+        }
+        assert_eq!(Phase::VarianceCorrection.label(), "variance_correction");
+    }
+
+    #[test]
+    fn phase_seconds_accumulate_and_export() {
+        let mut ps = PhaseSeconds::default();
+        ps.add(Phase::Broadcast, 0.25);
+        ps.add(Phase::Broadcast, 0.25);
+        ps.add(Phase::Eval, 0.5);
+        assert_eq!(ps.get(Phase::Broadcast), 0.5);
+        assert_eq!(ps.sum(), 1.0);
+        let j = ps.to_json();
+        for p in ALL_PHASES {
+            assert!(j.get(p.label()).is_some(), "missing key {}", p.label());
+        }
+        assert_eq!(j.get("eval").unwrap().as_f64().unwrap(), 0.5);
+    }
+}

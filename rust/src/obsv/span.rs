@@ -1,0 +1,325 @@
+//! Hierarchical span timers over the static phase taxonomy.
+//!
+//! One [`Recorder`] per run, owned by the coordinator's driver and
+//! passed down by shared reference (interior mutability; spans only
+//! ever open and close on the coordinator thread — executor workers
+//! never touch the recorder, their timings arrive post-join via
+//! [`Recorder::record_exec`], which keeps the merge order-independent
+//! and the determinism contract trivially intact).
+//!
+//! Spans nest: only the **top-level** span open at any instant
+//! accumulates into the round's [`PhaseSeconds`], so per-round
+//! `sum(phase_s) ≤ wall_s` holds by construction; nested spans still
+//! appear in the trace for drill-down. RAII closes spans on every exit
+//! path.
+//!
+//! Three operating points, same API (zero-overhead argument in
+//! DESIGN.md §Observability):
+//!
+//! * [`Recorder::disabled`] — spans carry no recorder reference, read
+//!   no clock, and allocate nothing;
+//! * [`Recorder::new`] — phase seconds + latency histograms (a clock
+//!   read per span edge, a fixed-size accumulator, no per-span
+//!   allocation) — the default for every run;
+//! * [`Recorder::with_trace`] — additionally buffers one
+//!   [`TraceEvent`] per span/task for `--trace` export.
+
+use std::cell::RefCell;
+use std::path::Path;
+use std::time::Instant;
+
+use crate::engine::executor::ExecTiming;
+use crate::engine::plan::RoundPlan;
+
+use super::hist::{LatencyHist, LatencySummary};
+use super::trace::{write_chrome_trace, TraceEvent};
+use super::{Phase, PhaseSeconds};
+
+/// What one round's telemetry collapses to (folded into
+/// [`crate::metrics::RoundMetrics`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct RoundObs {
+    pub phase_s: PhaseSeconds,
+    pub latency: LatencySummary,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    /// Currently open spans; accumulation happens only when the
+    /// closing span returns the depth to zero.
+    depth: u32,
+    round: usize,
+    round_start: Option<Instant>,
+    phase_acc: PhaseSeconds,
+    hist: LatencyHist,
+    trace: Vec<TraceEvent>,
+}
+
+/// Run-scoped telemetry recorder. See the module docs for ownership
+/// and overhead; construction picks the operating point.
+#[derive(Debug)]
+pub struct Recorder {
+    collect: bool,
+    tracing: bool,
+    epoch: Instant,
+    inner: RefCell<Inner>,
+}
+
+impl Recorder {
+    /// The no-op recorder: same API, no clock reads, no allocations.
+    pub fn disabled() -> Recorder {
+        Recorder {
+            collect: false,
+            tracing: false,
+            epoch: Instant::now(),
+            inner: RefCell::new(Inner::default()),
+        }
+    }
+
+    /// Phase seconds + per-client latency histograms (the default for
+    /// every run; overhead is a clock read per span edge).
+    pub fn new() -> Recorder {
+        Recorder { collect: true, ..Recorder::disabled() }
+    }
+
+    /// Everything in [`Recorder::new`] plus Chrome trace-event capture
+    /// for [`Recorder::write_trace`].
+    pub fn with_trace() -> Recorder {
+        Recorder { collect: true, tracing: true, ..Recorder::disabled() }
+    }
+
+    /// Whether phase/latency collection is on.
+    pub fn is_enabled(&self) -> bool {
+        self.collect
+    }
+
+    /// Whether trace events are being buffered.
+    pub fn is_tracing(&self) -> bool {
+        self.tracing
+    }
+
+    /// Open a phase span; closing is RAII (drop the guard).
+    pub fn span(&self, phase: Phase) -> Span<'_> {
+        if !self.collect {
+            // `epoch` is a copy, not a clock read: disabled spans are
+            // inert values.
+            return Span { rec: None, phase, start: self.epoch };
+        }
+        self.inner.borrow_mut().depth += 1;
+        Span { rec: Some(self), phase, start: Instant::now() }
+    }
+
+    fn finish(&self, phase: Phase, start: Instant) {
+        let dur_s = start.elapsed().as_secs_f64();
+        let mut inner = self.inner.borrow_mut();
+        inner.depth -= 1;
+        if inner.depth == 0 {
+            inner.phase_acc.add(phase, dur_s);
+        }
+        if self.tracing {
+            let ts_us = start.duration_since(self.epoch).as_secs_f64() * 1e6;
+            inner.trace.push(TraceEvent {
+                name: phase.label().to_string(),
+                ts_us,
+                dur_us: dur_s * 1e6,
+                tid: 0,
+            });
+        }
+    }
+
+    /// Mark the start of round `round` (resets the per-round
+    /// accumulators; the matching [`Recorder::end_round`] collapses
+    /// them).
+    pub fn begin_round(&self, round: usize) {
+        if !self.collect {
+            return;
+        }
+        let mut inner = self.inner.borrow_mut();
+        inner.round = round;
+        inner.round_start = Some(Instant::now());
+        inner.phase_acc = PhaseSeconds::default();
+        inner.hist.clear();
+    }
+
+    /// Fold an executor call's per-task timings into the round's
+    /// per-client latency histogram (and, when tracing, one worker-track
+    /// event per task). `label` names the call in the trace (`grad`,
+    /// `local`, `vc_grad`).
+    pub fn record_exec(&self, label: &str, plan: &RoundPlan, timing: &ExecTiming) {
+        if !self.collect {
+            return;
+        }
+        let mut inner = self.inner.borrow_mut();
+        for (task, t) in plan.tasks.iter().zip(&timing.tasks) {
+            inner.hist.add(task.client_id, t.dur_s);
+        }
+        if self.tracing {
+            let base_us = timing.started.duration_since(self.epoch).as_secs_f64() * 1e6;
+            for (task, t) in plan.tasks.iter().zip(&timing.tasks) {
+                inner.trace.push(TraceEvent {
+                    name: format!("{label} c{}", task.client_id),
+                    ts_us: base_us + t.start_s * 1e6,
+                    dur_us: t.dur_s * 1e6,
+                    tid: t.worker as u32 + 1,
+                });
+            }
+        }
+    }
+
+    /// Close the round: returns its phase seconds + latency summary and
+    /// resets the accumulators. When tracing, also emits the enclosing
+    /// `round N` event on the coordinator track.
+    pub fn end_round(&self) -> RoundObs {
+        if !self.collect {
+            return RoundObs::default();
+        }
+        let mut inner = self.inner.borrow_mut();
+        let obs = RoundObs { phase_s: inner.phase_acc, latency: inner.hist.summary() };
+        if self.tracing {
+            if let Some(start) = inner.round_start.take() {
+                let name = format!("round {}", inner.round);
+                inner.trace.push(TraceEvent {
+                    name,
+                    ts_us: start.duration_since(self.epoch).as_secs_f64() * 1e6,
+                    dur_us: start.elapsed().as_secs_f64() * 1e6,
+                    tid: 0,
+                });
+            }
+        }
+        inner.phase_acc = PhaseSeconds::default();
+        inner.hist.clear();
+        obs
+    }
+
+    /// Number of trace events buffered so far.
+    pub fn trace_len(&self) -> usize {
+        self.inner.borrow().trace.len()
+    }
+
+    /// Write the buffered events as a Chrome trace (no-op buffer when
+    /// tracing was off — the file is still valid, just empty of spans).
+    pub fn write_trace(&self, path: &Path) -> std::io::Result<()> {
+        write_chrome_trace(path, &self.inner.borrow().trace)
+    }
+}
+
+impl Default for Recorder {
+    fn default() -> Recorder {
+        Recorder::new()
+    }
+}
+
+/// RAII guard for one phase span (see [`Recorder::span`]).
+#[must_use = "a span measures the scope it is bound to — bind it to a variable"]
+pub struct Span<'a> {
+    rec: Option<&'a Recorder>,
+    phase: Phase,
+    start: Instant,
+}
+
+impl Drop for Span<'_> {
+    fn drop(&mut self) {
+        if let Some(rec) = self.rec {
+            rec.finish(self.phase, self.start);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::TrainConfig;
+    use crate::engine::executor::TaskTiming;
+    use crate::util::Stopwatch;
+
+    fn spin(us: u64) {
+        let t0 = Instant::now();
+        while t0.elapsed().as_micros() < us as u128 {
+            std::hint::spin_loop();
+        }
+    }
+
+    #[test]
+    fn top_level_spans_accumulate_nested_do_not() {
+        let rec = Recorder::new();
+        rec.begin_round(0);
+        let outer = Stopwatch::start();
+        {
+            let _s = rec.span(Phase::Broadcast);
+            spin(200);
+            {
+                let _inner = rec.span(Phase::Eval); // nested: trace-only
+                spin(200);
+            }
+        }
+        {
+            let _s = rec.span(Phase::TruncateSvd);
+            spin(100);
+        }
+        let wall = outer.elapsed_s();
+        let obs = rec.end_round();
+        assert!(obs.phase_s.get(Phase::Broadcast) > 0.0);
+        // The nested Eval span must not double-count.
+        assert_eq!(obs.phase_s.get(Phase::Eval), 0.0);
+        assert!(obs.phase_s.get(Phase::TruncateSvd) > 0.0);
+        assert!(
+            obs.phase_s.sum() <= wall + 1e-6,
+            "phase sum {} exceeds wall {}",
+            obs.phase_s.sum(),
+            wall
+        );
+    }
+
+    #[test]
+    fn disabled_recorder_is_inert() {
+        let rec = Recorder::disabled();
+        rec.begin_round(3);
+        {
+            let _s = rec.span(Phase::ClientTrain);
+        }
+        let obs = rec.end_round();
+        assert_eq!(obs, RoundObs::default());
+        assert_eq!(rec.trace_len(), 0);
+        assert!(!rec.is_enabled() && !rec.is_tracing());
+    }
+
+    #[test]
+    fn exec_timings_feed_histogram_and_trace() {
+        let cfg = TrainConfig { seed: 5, ..TrainConfig::default() };
+        let plan = RoundPlan::build(&cfg, 3, 0, |_| 1.0);
+        let timing = ExecTiming {
+            started: Instant::now(),
+            tasks: vec![
+                TaskTiming { start_s: 0.0, dur_s: 0.5, worker: 0 },
+                TaskTiming { start_s: 0.0, dur_s: 0.25, worker: 1 },
+                TaskTiming { start_s: 0.5, dur_s: 1.0, worker: 0 },
+            ],
+        };
+        let rec = Recorder::with_trace();
+        rec.begin_round(0);
+        rec.record_exec("grad", &plan, &timing);
+        let obs = rec.end_round();
+        assert_eq!(obs.latency.n, 3);
+        assert_eq!(obs.latency.max_s, 1.0);
+        assert_eq!(obs.latency.straggler, 2);
+        assert_eq!(obs.latency.sum_s, 1.75);
+        // 3 task events + 1 round event.
+        assert_eq!(rec.trace_len(), 4);
+    }
+
+    #[test]
+    fn round_reset_between_rounds() {
+        let rec = Recorder::new();
+        rec.begin_round(0);
+        {
+            let _s = rec.span(Phase::Eval);
+            spin(50);
+        }
+        let first = rec.end_round();
+        assert!(first.phase_s.get(Phase::Eval) > 0.0);
+        rec.begin_round(1);
+        let second = rec.end_round();
+        assert_eq!(second.phase_s.sum(), 0.0);
+        assert_eq!(second.latency.n, 0);
+    }
+}

@@ -1,0 +1,122 @@
+//! Chrome trace-event JSON export (Perfetto / `chrome://tracing`).
+//!
+//! Schema (see DESIGN.md §Observability): the file is a JSON object
+//! `{"traceEvents": [...], "displayTimeUnit": "ms"}`. Every span is a
+//! **complete event** (`"ph": "X"`) with microsecond `ts`/`dur`
+//! measured from the recorder's epoch, `pid` fixed at 1, and `tid`
+//! selecting the track:
+//!
+//! * `tid 0` — the coordinator thread: one enclosing `round N` event
+//!   per round with the taxonomy phase spans nested inside it;
+//! * `tid k+1` — executor worker `k`: one `<label> cN` event per
+//!   client task it ran (`label` names the executor call, e.g. `grad`,
+//!   `local`, `vc_grad`; `cN` is the client id).
+//!
+//! Thread-name metadata events (`"ph": "M"`) label the tracks. Events
+//! are emitted in recording order; trace viewers sort by `ts`.
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// One complete ("X") span on some track.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    /// Display name (phase label, `round N`, or `<label> cN`).
+    pub name: String,
+    /// Microseconds from the recorder's epoch.
+    pub ts_us: f64,
+    /// Duration in microseconds.
+    pub dur_us: f64,
+    /// Track: 0 = coordinator, k+1 = executor worker k.
+    pub tid: u32,
+}
+
+impl TraceEvent {
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("name", self.name.as_str())
+            .set("cat", "fedlrt")
+            .set("ph", "X")
+            .set("ts", self.ts_us)
+            .set("dur", self.dur_us)
+            .set("pid", 1usize)
+            .set("tid", self.tid as usize);
+        o
+    }
+}
+
+fn thread_name_meta(tid: u32, name: &str) -> Json {
+    let mut args = Json::obj();
+    args.set("name", name);
+    let mut o = Json::obj();
+    o.set("name", "thread_name")
+        .set("ph", "M")
+        .set("pid", 1usize)
+        .set("tid", tid as usize)
+        .set("args", args);
+    o
+}
+
+/// Serialize `events` as a Chrome trace and write it to `path` with a
+/// single `write_all` (creates parent directories).
+pub fn write_chrome_trace(path: &Path, events: &[TraceEvent]) -> std::io::Result<()> {
+    let mut arr: Vec<Json> = Vec::with_capacity(events.len() + 8);
+    // Track labels first: the coordinator plus every worker track any
+    // event references.
+    let mut args = Json::obj();
+    args.set("name", "fedlrt");
+    let mut proc_meta = Json::obj();
+    proc_meta
+        .set("name", "process_name")
+        .set("ph", "M")
+        .set("pid", 1usize)
+        .set("tid", 0usize)
+        .set("args", args);
+    arr.push(proc_meta);
+    let max_tid = events.iter().map(|e| e.tid).max().unwrap_or(0);
+    arr.push(thread_name_meta(0, "coordinator"));
+    for w in 1..=max_tid {
+        arr.push(thread_name_meta(w, &format!("client-worker-{}", w - 1)));
+    }
+    arr.extend(events.iter().map(TraceEvent::to_json));
+    let mut root = Json::obj();
+    root.set("traceEvents", Json::Arr(arr)).set("displayTimeUnit", "ms");
+    let body = root.to_string_compact();
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(body.as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_file_is_well_formed() {
+        let events = vec![
+            TraceEvent { name: "round 0".into(), ts_us: 0.0, dur_us: 100.0, tid: 0 },
+            TraceEvent { name: "broadcast".into(), ts_us: 1.0, dur_us: 10.0, tid: 0 },
+            TraceEvent { name: "grad c3".into(), ts_us: 12.0, dur_us: 30.0, tid: 2 },
+        ];
+        let dir = std::env::temp_dir().join("fedlrt_obsv_trace_test");
+        let path = dir.join("trace.json");
+        write_chrome_trace(&path, &events).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        let evs = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        // 1 process meta + 3 thread metas (coordinator + 2 workers) + 3 events.
+        assert_eq!(evs.len(), 7);
+        let phases: Vec<&str> =
+            evs.iter().map(|e| e.get("ph").unwrap().as_str().unwrap()).collect();
+        assert_eq!(phases.iter().filter(|&&p| p == "M").count(), 4);
+        assert_eq!(phases.iter().filter(|&&p| p == "X").count(), 3);
+        let last = evs.last().unwrap();
+        assert_eq!(last.get("name").unwrap().as_str().unwrap(), "grad c3");
+        assert_eq!(last.get("tid").unwrap().as_usize().unwrap(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -312,6 +312,9 @@ pub fn gemm_into(a: Op<'_>, b: Op<'_>, mut c: MatMut<'_>, beta: f64, threads: us
     if m == 0 || n == 0 || kdim == 0 {
         return;
     }
+    // Observe-only cost accounting (one relaxed atomic add per call;
+    // see `obsv::counters`).
+    crate::obsv::counters::note_gemm(m, kdim, n);
     let flops = 2.0 * m as f64 * kdim as f64 * n as f64;
     if m < MR || n < NR || flops < PACK_MIN_FLOPS {
         small_gemm(a, b, &mut c);
@@ -380,6 +383,7 @@ fn gemm_serial(a: Op<'_>, b: Op<'_>, mut c: MatMut<'_>) {
     let n = b.cols();
     debug_assert_eq!(c.shape(), (m, n));
     let (mut abuf, mut bbuf) = take_pack_bufs();
+    let mut panels: u64 = 0;
     for jc in (0..n).step_by(NC) {
         let nc = NC.min(n - jc);
         for pc in (0..kdim).step_by(KC) {
@@ -389,6 +393,7 @@ fn gemm_serial(a: Op<'_>, b: Op<'_>, mut c: MatMut<'_>) {
                 bbuf.resize(bneed, 0.0);
             }
             pack_b(b, pc, kc, jc, nc, &mut bbuf[..bneed]);
+            panels += ((nc + NR - 1) / NR) as u64;
             for ic in (0..m).step_by(MC) {
                 let mc = MC.min(m - ic);
                 let aneed = ((mc + MR - 1) / MR) * MR * kc;
@@ -396,11 +401,14 @@ fn gemm_serial(a: Op<'_>, b: Op<'_>, mut c: MatMut<'_>) {
                     abuf.resize(aneed, 0.0);
                 }
                 pack_a(a, ic, mc, pc, kc, &mut abuf[..aneed]);
+                panels += ((mc + MR - 1) / MR) as u64;
                 macro_kernel(&abuf[..aneed], &bbuf[..bneed], mc, nc, kc, &mut c, ic, jc);
             }
         }
     }
     give_pack_bufs((abuf, bbuf));
+    // One atomic add per gemm_serial call, tallied locally above.
+    crate::obsv::counters::note_panels_packed(panels);
 }
 
 /// Pack the `mc × kc` block of `op(A)` at `(ic, pc)` into MR-row

@@ -52,11 +52,15 @@ impl Workspace {
         };
         buf.clear();
         buf.resize(len, 0.0);
+        // Observe-only: track outstanding workspace bytes across all
+        // workspaces for the process high-water mark (obsv::counters).
+        crate::obsv::counters::note_workspace_take(8 * len as u64);
         buf
     }
 
     /// Return a buffer to the pool for reuse.
     pub fn give(&mut self, buf: Vec<f64>) {
+        crate::obsv::counters::note_workspace_give(8 * buf.len() as u64);
         if buf.capacity() > 0 {
             self.pool.push(buf);
         }

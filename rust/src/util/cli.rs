@@ -83,12 +83,18 @@ impl Cli {
             if o.is_flag {
                 let _ = writeln!(s, "  --{:<22} {}", o.name, o.help);
             } else {
+                // An empty default marks an optional value (e.g.
+                // `--trace <path>`: omitted = feature off).
+                let suffix = match o.default.as_deref() {
+                    Some("") | None => "(optional)".to_string(),
+                    Some(d) => format!("(default: {d})"),
+                };
                 let _ = writeln!(
                     s,
-                    "  --{:<22} {} (default: {})",
+                    "  --{:<22} {} {}",
                     format!("{} <v>", o.name),
                     o.help,
-                    o.default.as_deref().unwrap_or("")
+                    suffix
                 );
             }
         }
@@ -252,5 +258,12 @@ mod tests {
         let u = cli().usage();
         assert!(u.contains("--n"));
         assert!(u.contains("--verbose"));
+    }
+
+    #[test]
+    fn empty_default_reads_as_optional() {
+        let u = Cli::new("t", "test").opt("trace", "", "trace path").usage();
+        assert!(u.contains("(optional)"), "{u}");
+        assert!(!u.contains("(default: )"), "{u}");
     }
 }

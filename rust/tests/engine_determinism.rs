@@ -304,6 +304,29 @@ fn thread_count_does_not_matter() {
 }
 
 #[test]
+fn telemetry_is_a_bitwise_noop_on_trajectories() {
+    // Observability is observe-only: running the same training with the
+    // no-op recorder, the default recorder, and full trace capture must
+    // yield bitwise-identical trajectories — under both executors.
+    use fedlrt::coordinator::run_fedlrt_obs;
+    use fedlrt::obsv::Recorder;
+    let mut rng = Rng::new(81);
+    let prob = LeastSquares::heterogeneous(8, 320, 5, &mut rng);
+    for executor in [ExecutorKind::Serial, ExecutorKind::ThreadPool { threads: 3 }] {
+        let cfg = lsq_cfg(81, executor);
+        let off = run_fedlrt_obs(&prob, &cfg, "det", &Recorder::disabled());
+        let on = run_fedlrt_obs(&prob, &cfg, "det", &Recorder::new());
+        let traced = run_fedlrt_obs(&prob, &cfg, "det", &Recorder::with_trace());
+        assert_trajectories_identical(&off, &on, "telemetry off vs on");
+        assert_trajectories_identical(&off, &traced, "telemetry off vs --trace");
+        // The disabled recorder reports nothing; the others report
+        // every round.
+        assert!(off.rounds.iter().all(|r| r.phase_s.sum() == 0.0 && r.latency.n == 0));
+        assert!(on.rounds.iter().all(|r| r.phase_s.sum() > 0.0 && r.latency.n == 5));
+    }
+}
+
+#[test]
 fn executor_choice_is_recorded_in_config_echo() {
     let mut rng = Rng::new(71);
     let prob = LeastSquares::homogeneous(8, 2, 200, 2, &mut rng);

@@ -1,0 +1,194 @@
+//! Telemetry invariants on real training runs (the observability
+//! layer's integration contract):
+//!
+//! * per round, `sum(phase_s) ≤ wall_s` — only top-level spans
+//!   accumulate, so phase attribution can never exceed the measured
+//!   round;
+//! * the exported round JSON always carries the complete phase
+//!   taxonomy, and latency quantiles gate on data being present;
+//! * quantiles are exact: a single-client round collapses
+//!   p50 = p95 = max bitwise;
+//! * `client_serial_s` equals the latency histogram's `sum_s` bitwise
+//!   for single-executor-call serial rounds (FedAvg) — both fold the
+//!   same per-task durations, read from the same monotonic clock, in
+//!   the same order (tasks are planned in ascending client id).
+
+use fedlrt::coordinator::{
+    run_dense, run_fedlrt, DenseAlgo, RankConfig, TrainConfig, VarCorrection,
+};
+use fedlrt::engine::ExecutorKind;
+use fedlrt::models::least_squares::LeastSquares;
+use fedlrt::obsv::{Phase, ALL_PHASES};
+use fedlrt::opt::LrSchedule;
+use fedlrt::util::rng::Rng;
+
+fn cfg(seed: u64, vc: VarCorrection) -> TrainConfig {
+    TrainConfig {
+        rounds: 5,
+        local_iters: 6,
+        lr: LrSchedule::Constant(5e-3),
+        var_correction: vc,
+        rank: RankConfig { initial_rank: 3, max_rank: 6, tau: 0.05 },
+        seed,
+        ..TrainConfig::default()
+    }
+}
+
+#[test]
+fn phase_sums_are_bounded_by_wall_clock() {
+    let mut rng = Rng::new(201);
+    let prob = LeastSquares::heterogeneous(8, 320, 4, &mut rng);
+    for vc in [VarCorrection::None, VarCorrection::Simplified, VarCorrection::Full] {
+        let rec = run_fedlrt(&prob, &cfg(201, vc), "obsv");
+        for r in &rec.rounds {
+            let sum = r.phase_s.sum();
+            assert!(sum > 0.0, "{}: round {} recorded no phases", vc.label(), r.round);
+            assert!(
+                sum <= r.wall_s + 1e-6,
+                "{}: round {} phase sum {} exceeds wall {}",
+                vc.label(),
+                r.round,
+                sum,
+                r.wall_s
+            );
+        }
+    }
+}
+
+#[test]
+fn fedlrt_phases_match_the_algorithm() {
+    // The coordinator's round structure shows up in the attribution:
+    // every FeDLRT round broadcasts, trains, aggregates, augments, and
+    // truncates; variance correction is attributed only when enabled.
+    let mut rng = Rng::new(203);
+    let prob = LeastSquares::heterogeneous(8, 320, 4, &mut rng);
+    let none = run_fedlrt(&prob, &cfg(203, VarCorrection::None), "obsv");
+    let full = run_fedlrt(&prob, &cfg(203, VarCorrection::Full), "obsv");
+    for r in &none.rounds {
+        for ph in [
+            Phase::Broadcast,
+            Phase::ClientTrain,
+            Phase::Aggregate,
+            Phase::AugmentQr,
+            Phase::TruncateSvd,
+            Phase::Eval,
+        ] {
+            assert!(
+                r.phase_s.get(ph) > 0.0,
+                "round {}: phase '{}' never measured",
+                r.round,
+                ph.label()
+            );
+        }
+    }
+    let vc_none: f64 = none.rounds.iter().map(|r| r.phase_s.get(Phase::VarianceCorrection)).sum();
+    let vc_full: f64 = full.rounds.iter().map(|r| r.phase_s.get(Phase::VarianceCorrection)).sum();
+    // The None mode still assembles (empty) corrections, but the Full
+    // mode's extra gradient round trip must dominate it clearly.
+    assert!(vc_full > vc_none, "full vc {vc_full} should exceed none {vc_none}");
+}
+
+#[test]
+fn round_json_carries_full_taxonomy_and_latency() {
+    let mut rng = Rng::new(205);
+    let prob = LeastSquares::homogeneous(8, 2, 240, 3, &mut rng);
+    let rec = run_fedlrt(&prob, &cfg(205, VarCorrection::Simplified), "obsv");
+    let json = rec.to_json();
+    let rounds = json.get("rounds").and_then(|r| r.as_arr()).expect("rounds array");
+    assert_eq!(rounds.len(), rec.rounds.len());
+    for r in rounds {
+        let ps = r.get("phase_s").expect("phase_s key");
+        for p in ALL_PHASES {
+            assert!(ps.get(p.label()).is_some(), "phase_s missing '{}'", p.label());
+        }
+        for key in ["lat_p50_s", "lat_p95_s", "lat_max_s", "straggler"] {
+            assert!(r.get(key).is_some(), "round JSON missing '{key}'");
+        }
+    }
+}
+
+#[test]
+fn single_client_collapses_quantiles_bitwise() {
+    // Exact nearest-rank quantiles: with one sample, every quantile IS
+    // that sample — p50 = p95 = max = sum, bitwise.
+    let mut rng = Rng::new(207);
+    let prob = LeastSquares::homogeneous(8, 2, 160, 1, &mut rng);
+    let rec = run_fedlrt(&prob, &cfg(207, VarCorrection::Simplified), "obsv");
+    for r in &rec.rounds {
+        assert_eq!(r.latency.n, 1);
+        assert_eq!(r.latency.p50_s.to_bits(), r.latency.p95_s.to_bits());
+        assert_eq!(r.latency.p95_s.to_bits(), r.latency.max_s.to_bits());
+        assert_eq!(r.latency.max_s.to_bits(), r.latency.sum_s.to_bits());
+        assert_eq!(r.latency.straggler, 0);
+    }
+}
+
+#[test]
+fn latency_quantiles_are_ordered_and_populated() {
+    let mut rng = Rng::new(209);
+    let prob = LeastSquares::heterogeneous(8, 400, 6, &mut rng);
+    let rec = run_fedlrt(&prob, &cfg(209, VarCorrection::Simplified), "obsv");
+    for r in &rec.rounds {
+        let l = &r.latency;
+        assert_eq!(l.n, 6, "round {}: expected all 6 clients", r.round);
+        assert!(l.p50_s > 0.0 && l.p50_s <= l.p95_s && l.p95_s <= l.max_s);
+        assert!(l.sum_s >= l.max_s);
+        assert!(l.straggler < 6);
+        // Per-client latencies also bound the coordinator's aggregate
+        // client-time accounting from below.
+        assert!(l.sum_s <= r.client_serial_s + 1e-9);
+    }
+}
+
+#[test]
+fn client_serial_s_equals_histogram_sum_for_serial_fedavg() {
+    // FedAvg does exactly one executor call per round; under the serial
+    // executor `serial_s` is the task-order sum of per-task durations
+    // and the histogram folds the same numbers in client-id order —
+    // which IS task order (plans sort by client id). Bitwise equal.
+    let mut rng = Rng::new(211);
+    let prob = LeastSquares::homogeneous(8, 2, 320, 5, &mut rng);
+    let mut c = cfg(211, VarCorrection::None);
+    c.executor = ExecutorKind::Serial;
+    let rec = run_dense(&prob, &c, DenseAlgo::FedAvg, "obsv");
+    for r in &rec.rounds {
+        assert_eq!(
+            r.client_serial_s.to_bits(),
+            r.latency.sum_s.to_bits(),
+            "round {}: client_serial_s {} != histogram sum {}",
+            r.round,
+            r.client_serial_s,
+            r.latency.sum_s
+        );
+    }
+    // FedLin makes two executor calls per round; the totals then agree
+    // only up to f64 fold order, not bitwise.
+    let lin = run_dense(&prob, &c, DenseAlgo::FedLin, "obsv");
+    for r in &lin.rounds {
+        let diff = (r.client_serial_s - r.latency.sum_s).abs();
+        assert!(
+            diff <= 1e-9 * r.client_serial_s.max(1.0),
+            "round {}: FedLin totals diverge: {} vs {}",
+            r.round,
+            r.client_serial_s,
+            r.latency.sum_s
+        );
+    }
+}
+
+#[test]
+fn client_speedup_is_consistent_with_latency_totals() {
+    // `client_speedup()` = serial_s / wall_s over the whole run; under
+    // the serial executor wall ≈ serial, so the ratio sits at 1 (from
+    // below, up to loop overhead between tasks).
+    let mut rng = Rng::new(213);
+    let prob = LeastSquares::homogeneous(8, 2, 320, 4, &mut rng);
+    let mut c = cfg(213, VarCorrection::Simplified);
+    c.executor = ExecutorKind::Serial;
+    let rec = run_fedlrt(&prob, &c, "obsv");
+    let speedup = rec.client_speedup();
+    assert!(
+        speedup > 0.5 && speedup <= 1.0 + 1e-9,
+        "serial client speedup should be ≈1 from below, got {speedup}"
+    );
+}
