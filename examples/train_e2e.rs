@@ -83,6 +83,7 @@ fn main() -> anyhow::Result<()> {
             .unwrap_or_else(|e| panic!("{e}")),
         codec: fedlrt::comm::CodecKind::DenseF32,
         kernel_threads: 0,
+        ..TrainConfig::default()
     };
 
     println!(

@@ -196,6 +196,28 @@ impl Network {
         Matrix::from_vec(m.rows(), m.cols(), decoded)
     }
 
+    /// Serialize `values` through the wire codec **without recording any
+    /// traffic**: returns `(measured bytes, decoded receive-side values)`.
+    ///
+    /// For buffered (K-of-N) aggregation the codec must apply when an
+    /// update *arrives* (decode-on-receive numerics are a property of
+    /// the transfer) while the round's upload accounting must bill only
+    /// the K updates actually *consumed* — a held or discarded straggler
+    /// is not part of this aggregation's `bytes_up`. Callers pair this
+    /// with [`Network::note_upload`] at consumption time.
+    pub fn transcode_vec(&self, values: &[f64]) -> (u64, Vec<f64>) {
+        self.transcode(values)
+    }
+
+    /// Bill one consumed upload (previously transcoded via
+    /// [`Network::transcode_vec`]) into the current round's aggregate
+    /// accounting.
+    pub fn note_upload(&mut self, label: &'static str, floats: u64, bytes: u64) {
+        self.current.aggregate_floats += floats;
+        self.current.bytes_up += bytes;
+        self.current.log.push((Direction::Aggregate, label, floats, bytes));
+    }
+
     /// One client's upload of several tensors coalesced into a single
     /// *message* (one log entry, e.g. the naive-FeDLRT factor triple);
     /// returns the decoded parts in input order. Each part is encoded
@@ -424,6 +446,41 @@ mod tests {
         assert_eq!(r2.participants, 4);
         assert_eq!(r2.aggregate_floats, 40);
         assert!((r2.per_client_floats() - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn buffered_aggregation_bills_only_consumed_updates() {
+        // Satellite regression: under K-of-N buffering, N in-flight
+        // clients transcode their uploads on arrival, but only the
+        // K consumed this aggregation may appear in bytes_up /
+        // aggregate_floats, and per_client_floats must divide by K —
+        // not by all N in flight.
+        let (k, n) = (2usize, 5usize);
+        let mut net = Network::new(100);
+        let update = [1.0; 10];
+        // All N arrivals transcode (decode-on-receive) without billing.
+        let arrivals: Vec<(u64, Vec<f64>)> =
+            (0..n).map(|_| net.transcode_vec(&update)).collect();
+        assert_eq!(arrivals[0].1, update.to_vec());
+        // Only K are consumed by this aggregation.
+        for (bytes, _) in arrivals.iter().take(k) {
+            net.note_upload("dS", update.len() as u64, *bytes);
+        }
+        net.broadcast_vec("w", &[1.0; 8]);
+        net.set_active_clients(k);
+        net.end_round_trip();
+        let r = net.end_round();
+        assert_eq!(r.participants, k);
+        assert_eq!(r.aggregate_floats, (k * 10) as u64);
+        assert_eq!(r.bytes_up, (k * 10 * 4) as u64);
+        // Each consumed client pays the download plus its own upload —
+        // NOT (k·10)/n.
+        assert!((r.per_client_floats() - (8.0 + 10.0)).abs() < 1e-12);
+        // The log carries one entry per consumed update only.
+        let consumed = r.log.iter().filter(|(d, l, _, _)| {
+            *d == Direction::Aggregate && *l == "dS"
+        });
+        assert_eq!(consumed.count(), k);
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! Training configuration shared by all federated algorithms.
 
 use crate::comm::CodecKind;
-use crate::engine::ExecutorKind;
+use crate::engine::{ExecutorKind, TimingModel};
 use crate::opt::{LrSchedule, OptimizerKind, SgdConfig};
 use crate::util::json::Json;
 
@@ -24,6 +24,80 @@ impl VarCorrection {
             VarCorrection::None => "no_vc",
             VarCorrection::Full => "full_vc",
             VarCorrection::Simplified => "simpl_vc",
+        }
+    }
+}
+
+/// Federation schedule: when client updates are folded into the model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Schedule {
+    /// Lockstep synchronous rounds (the paper's setting): every sampled
+    /// client's update is awaited before aggregation.
+    Sync,
+    /// FedBuff-style buffered asynchrony: aggregate as soon as K
+    /// coefficient updates have arrived; stragglers are discarded or
+    /// held per [`AsyncConfig::max_staleness`] / [`AsyncConfig::hold_stale`].
+    FedBuff,
+    /// Staleness-weighted asynchrony: every arrival is consumed,
+    /// down-weighted by `1/(1+staleness)^p`.
+    AsyncStale,
+}
+
+impl Schedule {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Schedule::Sync => "sync",
+            Schedule::FedBuff => "fedbuff",
+            Schedule::AsyncStale => "async",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Schedule, String> {
+        match s {
+            "sync" => Ok(Schedule::Sync),
+            "fedbuff" => Ok(Schedule::FedBuff),
+            "async" | "stale" | "async_stale" => Ok(Schedule::AsyncStale),
+            other => Err(format!("unknown schedule '{other}' (sync|fedbuff|async)")),
+        }
+    }
+}
+
+/// Knobs of the event-driven async server (ignored under
+/// [`Schedule::Sync`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AsyncConfig {
+    /// Buffer size K: updates consumed per aggregation.
+    pub buffer_k: usize,
+    /// In-flight dispatch slots (concurrent clients).
+    pub concurrency: usize,
+    /// Staleness-weight exponent `p` in `1/(1+σ)^p`
+    /// ([`Schedule::AsyncStale`] only).
+    pub staleness_p: f64,
+    /// FedBuff staleness bound: arrivals with `σ > max_staleness` are
+    /// discarded (or held, see `hold_stale`). 0 = unbounded.
+    pub max_staleness: u64,
+    /// FedBuff policy for over-stale arrivals: `true` admits them to
+    /// the buffer anyway (never lose data, accept the staleness),
+    /// `false` discards them on arrival.
+    pub hold_stale: bool,
+    /// Refresh the shared low-rank basis (re-orthogonalize + truncate
+    /// via the small SVD) every this many aggregations. 1 = every
+    /// aggregation.
+    pub basis_every: usize,
+    /// Server-side step size applied to the aggregated update.
+    pub server_lr: f64,
+}
+
+impl Default for AsyncConfig {
+    fn default() -> Self {
+        AsyncConfig {
+            buffer_k: 8,
+            concurrency: 16,
+            staleness_p: 1.0,
+            max_staleness: 0,
+            hold_stale: false,
+            basis_every: 1,
+            server_lr: 1.0,
         }
     }
 }
@@ -93,6 +167,21 @@ pub struct TrainConfig {
     /// bitwise independent of this value — the row-panel determinism
     /// contract of [`crate::tensor::ops`] — so it only moves wall-clock.
     pub kernel_threads: usize,
+    /// Federation schedule. [`Schedule::Sync`] is the lockstep round
+    /// loop every existing coordinator runs; the async schedules route
+    /// through `coordinator::async_server` instead. Under async
+    /// schedules, `rounds` counts *aggregations*.
+    pub schedule: Schedule,
+    /// Async-server knobs (ignored under [`Schedule::Sync`]).
+    pub async_cfg: AsyncConfig,
+    /// Virtual-clock timing model for the async event simulator
+    /// (arrival / compute / link distributions + heterogeneity).
+    pub timing: TimingModel,
+    /// Registered client population for async schedules. 0 = use the
+    /// problem's `num_clients()`. May vastly exceed the problem's data
+    /// shards (clients map onto shards modulo `num_clients()`), which
+    /// is how a 10-shard problem simulates 10^6 registered clients.
+    pub population: usize,
 }
 
 impl Default for TrainConfig {
@@ -112,6 +201,10 @@ impl Default for TrainConfig {
             executor: ExecutorKind::Serial,
             codec: CodecKind::DenseF32,
             kernel_threads: 0,
+            schedule: Schedule::Sync,
+            async_cfg: AsyncConfig::default(),
+            timing: TimingModel::default(),
+            population: 0,
         }
     }
 }
@@ -139,7 +232,19 @@ impl TrainConfig {
             .set("dropout", self.dropout)
             .set("executor", self.executor.label())
             .set("codec", self.codec.label())
-            .set("kernel_threads", self.kernel_threads);
+            .set("kernel_threads", self.kernel_threads)
+            .set("schedule", self.schedule.label());
+        if self.schedule != Schedule::Sync {
+            o.set("buffer_k", self.async_cfg.buffer_k)
+                .set("concurrency", self.async_cfg.concurrency)
+                .set("staleness_p", self.async_cfg.staleness_p)
+                .set("max_staleness", self.async_cfg.max_staleness as usize)
+                .set("hold_stale", self.async_cfg.hold_stale)
+                .set("basis_every", self.async_cfg.basis_every)
+                .set("server_lr", self.async_cfg.server_lr)
+                .set("timing", self.timing.label())
+                .set("population", self.population);
+        }
         match self.opt {
             OptimizerKind::Sgd(sgd) => {
                 o.set("optimizer", "sgd")
@@ -181,5 +286,31 @@ mod tests {
         assert_eq!(j.str_or("var_correction", ""), "full_vc");
         assert_eq!(j.str_or("codec", ""), "dense");
         assert_eq!(j.usize_or("kernel_threads", 99), 0);
+        assert_eq!(j.str_or("schedule", ""), "sync");
+        // Async knobs stay out of sync-run config echoes.
+        assert_eq!(j.usize_or("buffer_k", 777), 777);
+    }
+
+    #[test]
+    fn schedule_parse_label_roundtrip() {
+        for s in [Schedule::Sync, Schedule::FedBuff, Schedule::AsyncStale] {
+            assert_eq!(Schedule::parse(s.label()).unwrap(), s);
+        }
+        assert_eq!(Schedule::parse("stale").unwrap(), Schedule::AsyncStale);
+        assert!(Schedule::parse("semi-sync").is_err());
+    }
+
+    #[test]
+    fn async_config_echoed_for_async_schedules() {
+        let cfg = TrainConfig {
+            schedule: Schedule::FedBuff,
+            population: 1_000_000,
+            ..TrainConfig::default()
+        };
+        let j = cfg.to_json();
+        assert_eq!(j.str_or("schedule", ""), "fedbuff");
+        assert_eq!(j.usize_or("buffer_k", 0), AsyncConfig::default().buffer_k);
+        assert_eq!(j.usize_or("population", 0), 1_000_000);
+        assert!(j.str_or("timing", "").contains("arrival=constant:1"));
     }
 }

@@ -182,6 +182,8 @@ pub fn run_fedlr_obs<P: FedProblem + Sync>(
             client_serial_s,
             phase_s: round_obs.phase_s,
             latency: round_obs.latency,
+            staleness: round_obs.staleness,
+            virtual_s: 0.0,
         });
     }
 

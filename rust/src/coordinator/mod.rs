@@ -7,6 +7,7 @@
 //! | [`fedlrt`] | FeDLRT, all three variance-correction modes | Alg 1 / Alg 5 / eq. 7 |
 //! | [`dense_baselines`] | FedAvg, FedLin | Alg 3 / Alg 4 |
 //! | [`fedlrt_naive`] | per-client-basis low-rank FL | Alg 6 |
+//! | [`async_server`] | event-driven async FeDLRT (FedBuff-style buffered K-of-N and staleness-weighted) | §async extension |
 //!
 //! All engines are generic over [`crate::models::FedProblem`], route
 //! every transfer through [`crate::comm::Network`] for exact
@@ -21,6 +22,7 @@
 //! default (phases + latency, no trace). Telemetry is observe-only —
 //! see DESIGN.md §Observability for the determinism argument.
 
+pub mod async_server;
 pub mod config;
 pub mod dense_baselines;
 pub mod fedlr;
@@ -29,7 +31,8 @@ pub mod fedlrt_naive;
 pub mod presets;
 pub mod sampling;
 
-pub use config::{RankConfig, TrainConfig, VarCorrection};
+pub use async_server::{run_async, run_async_obs, run_async_traced, EventKind, EventTraceRow};
+pub use config::{AsyncConfig, RankConfig, Schedule, TrainConfig, VarCorrection};
 pub use dense_baselines::{run_dense, run_dense_obs, DenseAlgo};
 pub use fedlr::{run_fedlr, run_fedlr_obs};
 pub use fedlrt::{run_fedlrt, run_fedlrt_obs};

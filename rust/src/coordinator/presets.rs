@@ -29,6 +29,7 @@ pub fn fig4_config(full: bool) -> TrainConfig {
         executor: ExecutorKind::Serial,
         codec: CodecKind::DenseF32,
         kernel_threads: 0,
+        ..TrainConfig::default()
     }
 }
 
@@ -54,6 +55,7 @@ pub fn fig1_config(full: bool) -> TrainConfig {
         executor: ExecutorKind::Serial,
         codec: CodecKind::DenseF32,
         kernel_threads: 0,
+        ..TrainConfig::default()
     }
 }
 
@@ -175,6 +177,7 @@ impl VisionPreset {
             executor: ExecutorKind::Serial,
             codec: CodecKind::DenseF32,
             kernel_threads: 0,
+            ..TrainConfig::default()
         }
     }
 }
@@ -310,6 +313,7 @@ impl MlpPreset {
             executor: ExecutorKind::Serial,
             codec: CodecKind::DenseF32,
             kernel_threads: 0,
+            ..TrainConfig::default()
         }
     }
 }

@@ -1,0 +1,276 @@
+//! Client-timing distributions shared by the sync and async paths.
+//!
+//! One abstraction covers both timing models in the engine: the sync
+//! round loop's straggler iteration scaling ([`Dist::StragglerScale`],
+//! bit-for-bit the legacy `s*·(1 − jitter·u)` multiplier) and the
+//! async event simulator's arrival / compute / link draws
+//! ([`TimingModel`]). Every draw is a pure function of
+//! `(run seed, salt, stream index)` through the same splittable RNG the
+//! per-client task streams use, with *distinct* salts per purpose —
+//! adding async timing draws cannot perturb any sync-path stream.
+
+use crate::util::rng::Rng;
+
+/// A one-dimensional sampling distribution for virtual client timing.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Dist {
+    /// Always `value`; consumes **no** randomness (so a constant
+    /// distribution is stream-transparent, preserving legacy RNG
+    /// consumption bitwise).
+    Constant(f64),
+    /// Uniform on `[lo, hi)`.
+    Uniform { lo: f64, hi: f64 },
+    /// `exp(μ + σ·N(0,1))` — heavy-tailed latencies (median `e^μ`).
+    LogNormal { mu: f64, sigma: f64 },
+    /// The legacy straggler multiplier `1 − clamp(jitter,0,1)·u` with
+    /// `u ~ U[0,1)`: kept as its own variant (not `Uniform`) because
+    /// `lo + (hi−lo)·u` is **not** bitwise-equal to `1 − j·u` in
+    /// floating point. `jitter ≤ 0` consumes no randomness.
+    StragglerScale { jitter: f64 },
+}
+
+impl Dist {
+    /// Draw one sample, advancing `rng` only when the distribution is
+    /// actually random (constant draws are stream-transparent).
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        match *self {
+            Dist::Constant(v) => v,
+            Dist::Uniform { lo, hi } => rng.uniform_in(lo, hi),
+            Dist::LogNormal { mu, sigma } => (mu + sigma * rng.normal()).exp(),
+            Dist::StragglerScale { jitter } => {
+                if jitter <= 0.0 {
+                    1.0
+                } else {
+                    1.0 - jitter.clamp(0.0, 1.0) * rng.uniform()
+                }
+            }
+        }
+    }
+
+    /// True when every sample is exactly `1.0` without touching the
+    /// RNG — the "no timing skew" fast path (legacy `jitter ≤ 0`
+    /// early-return, preserved bitwise).
+    pub fn is_unit(&self) -> bool {
+        matches!(*self, Dist::Constant(v) if v == 1.0)
+            || matches!(*self, Dist::StragglerScale { jitter } if jitter <= 0.0)
+    }
+
+    /// Stable label, inverse of [`Dist::parse`].
+    pub fn label(&self) -> String {
+        match *self {
+            Dist::Constant(v) => format!("constant:{v}"),
+            Dist::Uniform { lo, hi } => format!("uniform:{lo},{hi}"),
+            Dist::LogNormal { mu, sigma } => format!("lognormal:{mu},{sigma}"),
+            Dist::StragglerScale { jitter } => format!("straggler:{jitter}"),
+        }
+    }
+
+    /// Parse a CLI spelling: `constant:V`, `uniform:LO,HI`,
+    /// `lognormal:MU,SIGMA`, or `straggler:J`. A bare number is
+    /// shorthand for `constant:`.
+    pub fn parse(s: &str) -> Result<Dist, String> {
+        if let Ok(v) = s.parse::<f64>() {
+            return Ok(Dist::Constant(v));
+        }
+        let (kind, args) = s
+            .split_once(':')
+            .ok_or_else(|| format!("bad distribution '{s}' (expected kind:args)"))?;
+        let nums: Vec<f64> = args
+            .split(',')
+            .map(|a| a.trim().parse::<f64>())
+            .collect::<Result<_, _>>()
+            .map_err(|_| format!("bad distribution args in '{s}'"))?;
+        match (kind, nums.as_slice()) {
+            ("constant", [v]) => Ok(Dist::Constant(*v)),
+            ("uniform", [lo, hi]) if lo <= hi => Ok(Dist::Uniform { lo: *lo, hi: *hi }),
+            ("lognormal", [mu, sigma]) if *sigma >= 0.0 => {
+                Ok(Dist::LogNormal { mu: *mu, sigma: *sigma })
+            }
+            ("straggler", [j]) => Ok(Dist::StragglerScale { jitter: *j }),
+            _ => Err(format!(
+                "bad distribution '{s}' (constant:V | uniform:LO,HI | lognormal:MU,SIGMA | straggler:J)"
+            )),
+        }
+    }
+}
+
+// Purpose salts for the timing RNG streams. Distinct from every salt the
+// sync path uses (`0x5E1E_C700` sampling, `0x57A6_6000` stragglers,
+// `0xD809_0FF1` dropout, SplitMix task seeds), so async timing draws
+// never alias a sync stream.
+const SALT_ARRIVAL: u64 = 0xA11D_A7E5;
+const SALT_COMPUTE: u64 = 0xC0FF_EE00;
+const SALT_LINK: u64 = 0x11CC_4A7B;
+const SALT_HET: u64 = 0x4E7E_0561;
+
+/// The virtual-clock timing model of one simulated deployment: when
+/// clients arrive, how long they compute, and how long their uplink
+/// takes — plus an optional frozen per-client heterogeneity multiplier.
+///
+/// All times are virtual seconds; draws are deterministic functions of
+/// `(seed, client, stream index)` so the event timeline is identical
+/// under any executor or thread count.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TimingModel {
+    /// Gap between a slot freeing and its next client arriving.
+    pub arrival: Dist,
+    /// Client compute duration for one dispatch (whole local run).
+    pub compute: Dist,
+    /// Uplink latency of one update transfer.
+    pub link: Dist,
+    /// σ of the per-client lognormal speed multiplier `exp(σ·N(0,1))`,
+    /// frozen at first contact (0 = homogeneous fleet). Multiplies the
+    /// compute draw — the "per-client heterogeneous" distribution.
+    pub het_sigma: f64,
+}
+
+impl Default for TimingModel {
+    fn default() -> Self {
+        TimingModel {
+            arrival: Dist::Constant(1.0),
+            compute: Dist::Constant(1.0),
+            link: Dist::Constant(0.0),
+            het_sigma: 0.0,
+        }
+    }
+}
+
+impl TimingModel {
+    /// The client's frozen speed multiplier (1.0 when `het_sigma = 0`;
+    /// consumes no randomness in that case).
+    pub fn client_speed(&self, seed: u64, client: usize) -> f64 {
+        if self.het_sigma <= 0.0 {
+            return 1.0;
+        }
+        let mut rng = Rng::new(seed ^ SALT_HET).split(client as u64);
+        (self.het_sigma * rng.normal()).exp()
+    }
+
+    /// Arrival gap before global dispatch number `dispatch`.
+    pub fn arrival_gap(&self, seed: u64, dispatch: u64) -> f64 {
+        let mut rng = Rng::new(seed ^ SALT_ARRIVAL).split(dispatch);
+        self.arrival.sample(&mut rng).max(0.0)
+    }
+
+    /// Compute duration of dispatch `dispatch` on `client`, including
+    /// the client's frozen heterogeneity multiplier.
+    pub fn compute_time(&self, seed: u64, client: usize, dispatch: u64) -> f64 {
+        let mut rng = Rng::new(seed ^ SALT_COMPUTE).split(dispatch);
+        (self.compute.sample(&mut rng) * self.client_speed(seed, client)).max(0.0)
+    }
+
+    /// Uplink latency of dispatch `dispatch` from `client`.
+    pub fn link_time(&self, seed: u64, client: usize, dispatch: u64) -> f64 {
+        let _ = client;
+        let mut rng = Rng::new(seed ^ SALT_LINK).split(dispatch);
+        self.link.sample(&mut rng).max(0.0)
+    }
+
+    /// Stable label for config echoes.
+    pub fn label(&self) -> String {
+        format!(
+            "arrival={};compute={};link={};het={}",
+            self.arrival.label(),
+            self.compute.label(),
+            self.link.label(),
+            self.het_sigma
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_consumes_no_randomness() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        assert_eq!(Dist::Constant(2.5).sample(&mut a), 2.5);
+        // The stream is untouched: the next draw matches a fresh one.
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn straggler_scale_matches_legacy_arithmetic_bitwise() {
+        // The exact legacy expression, recomputed by hand with the same
+        // RNG stream — the refactor's bitwise-preservation contract.
+        for (seed, jitter) in [(3u64, 0.3f64), (11, 0.7), (42, 1.5)] {
+            let mut r1 = Rng::new(seed);
+            let mut r2 = Rng::new(seed);
+            let got = Dist::StragglerScale { jitter }.sample(&mut r1);
+            let want = 1.0 - jitter.clamp(0.0, 1.0) * r2.uniform();
+            assert_eq!(got.to_bits(), want.to_bits());
+        }
+        // jitter ≤ 0: unit sample, stream untouched.
+        let d = Dist::StragglerScale { jitter: 0.0 };
+        assert!(d.is_unit());
+        let mut a = Rng::new(5);
+        let mut b = Rng::new(5);
+        assert_eq!(d.sample(&mut a), 1.0);
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn uniform_is_not_bitwise_straggler() {
+        // Documents WHY StragglerScale exists: the algebraically equal
+        // Uniform{1−j, 1} draw differs in the last bits for j < 0.5.
+        let j = 0.3;
+        let mut r1 = Rng::new(9);
+        let mut r2 = Rng::new(9);
+        let s = Dist::StragglerScale { jitter: j }.sample(&mut r1);
+        let u = Dist::Uniform { lo: 1.0 - j, hi: 1.0 }.sample(&mut r2);
+        assert!((s - u).abs() < 1e-15, "same value up to rounding");
+        assert_ne!(s.to_bits(), u.to_bits(), "but not bitwise");
+    }
+
+    #[test]
+    fn samples_land_in_range() {
+        let mut rng = Rng::new(1);
+        for _ in 0..200 {
+            let u = Dist::Uniform { lo: 0.5, hi: 2.0 }.sample(&mut rng);
+            assert!((0.5..2.0).contains(&u));
+            let l = Dist::LogNormal { mu: 0.0, sigma: 0.5 }.sample(&mut rng);
+            assert!(l > 0.0 && l.is_finite());
+            let s = Dist::StragglerScale { jitter: 0.4 }.sample(&mut rng);
+            assert!(s > 0.6 - 1e-12 && s <= 1.0);
+        }
+    }
+
+    #[test]
+    fn parse_label_roundtrip() {
+        for s in ["constant:1.5", "uniform:0.5,2", "lognormal:0,0.5", "straggler:0.3"] {
+            let d = Dist::parse(s).unwrap();
+            assert_eq!(Dist::parse(&d.label()).unwrap(), d);
+        }
+        assert_eq!(Dist::parse("2.5").unwrap(), Dist::Constant(2.5));
+        assert!(Dist::parse("uniform:2,1").is_err());
+        assert!(Dist::parse("gamma:1,2").is_err());
+        assert!(Dist::parse("uniform:a,b").is_err());
+    }
+
+    #[test]
+    fn timing_model_is_deterministic_and_heterogeneous() {
+        let tm = TimingModel {
+            arrival: Dist::Uniform { lo: 0.1, hi: 0.5 },
+            compute: Dist::LogNormal { mu: 0.0, sigma: 0.3 },
+            link: Dist::Constant(0.05),
+            het_sigma: 0.5,
+        };
+        // Same (seed, client, dispatch) → same draw, bitwise.
+        assert_eq!(
+            tm.compute_time(7, 3, 11).to_bits(),
+            tm.compute_time(7, 3, 11).to_bits()
+        );
+        // Frozen speed: stable per client, varies across clients.
+        let s3 = tm.client_speed(7, 3);
+        assert_eq!(s3.to_bits(), tm.client_speed(7, 3).to_bits());
+        let distinct = (0..20).any(|c| tm.client_speed(7, c).to_bits() != s3.to_bits());
+        assert!(distinct);
+        // Homogeneous fleet: multiplier is exactly 1.
+        let hom = TimingModel { het_sigma: 0.0, ..tm };
+        assert_eq!(hom.client_speed(7, 3), 1.0);
+        assert!(tm.link_time(7, 0, 0) >= 0.0);
+        assert!(tm.arrival_gap(7, 0) >= 0.0);
+    }
+}

@@ -20,12 +20,29 @@
 //!    wall-clock and the serial-equivalent (sum of per-client) time, so
 //!    [`crate::metrics::RoundMetrics`] can report simulation speedup
 //!    without contaminating the paper's communication metrics.
+//!
+//! Beyond the lockstep round loop, the engine also hosts the
+//! **event-driven async layer**: a virtual-clock discrete-event queue
+//! ([`EventQueue`], deterministic `(time, seq)` total order), the
+//! client-timing distributions shared by sync stragglers and async
+//! arrival/compute/link draws ([`Dist`] / [`TimingModel`]), and the
+//! sharded lazily-materialized client registry ([`ClientRegistry`])
+//! that scales registration to C = 10^6 while keeping resident state
+//! proportional to the number of *in-flight* clients. The async
+//! coordinator (`coordinator::async_server`) composes these with the
+//! same executors and per-task RNG streams as the sync path.
 
+pub mod dist;
+pub mod event;
 pub mod executor;
 pub mod plan;
+pub mod registry;
 
+pub use dist::{Dist, TimingModel};
+pub use event::{Event, EventQueue};
 pub use executor::{
     ClientExecutor, ExecReport, ExecTiming, Executor, ExecutorKind, SerialExecutor, TaskTiming,
     ThreadPoolExecutor,
 };
-pub use plan::{local_iters_for, sample_active, ClientTask, RoundPlan};
+pub use plan::{local_iters_for, sample_active, task_seed, ClientTask, RoundPlan};
+pub use registry::{ClientRecord, ClientRegistry};

@@ -9,6 +9,7 @@
 //! reproducible under any executor.
 
 use crate::coordinator::config::TrainConfig;
+use crate::engine::dist::Dist;
 use crate::util::rng::Rng;
 
 /// The clients participating in round `t`: a uniformly random subset of
@@ -26,16 +27,18 @@ pub fn sample_active(c_num: usize, fraction: f64, seed: u64, round: usize) -> Ve
 }
 
 /// Local iterations for client `c` in round `t` under the straggler
-/// model: `s*·(1 − jitter·u)` with `u ~ U[0,1)` per (round, client).
+/// model: `s*` scaled by a draw from the shared timing-distribution
+/// abstraction ([`Dist::StragglerScale`], i.e. `1 − jitter·u` with
+/// `u ~ U[0,1)` per (round, client) — bitwise the historical model).
 pub fn local_iters_for(cfg: &TrainConfig, round: usize, client: usize) -> usize {
-    if cfg.straggler_jitter <= 0.0 {
+    let dist = Dist::StragglerScale { jitter: cfg.straggler_jitter };
+    if dist.is_unit() {
         return cfg.local_iters;
     }
     let mut rng =
         Rng::new(cfg.seed ^ 0x57A6_6000).split((round as u64) << 20 | client as u64);
-    let u = rng.uniform();
-    let scaled = cfg.local_iters as f64 * (1.0 - cfg.straggler_jitter.clamp(0.0, 1.0) * u);
-    (scaled.round() as usize).max(1)
+    let scale = dist.sample(&mut rng);
+    ((cfg.local_iters as f64 * scale).round() as usize).max(1)
 }
 
 /// Whether a sampled client drops out of round `t` *after* receiving the
@@ -52,7 +55,10 @@ fn drops_out(seed: u64, round: usize, client: usize, dropout: f64) -> bool {
 /// Deterministic per-task RNG stream seed: a SplitMix64 finalizer over
 /// `(run_seed, round, client)`. Distinct tasks get decorrelated streams;
 /// the same task always gets the same stream regardless of executor.
-fn task_seed(run_seed: u64, round: usize, client: usize) -> u64 {
+/// Public because the async dispatcher derives per-client base seeds
+/// from the same function (at `round = 0`) so a client's stream is
+/// stable across schedules.
+pub fn task_seed(run_seed: u64, round: usize, client: usize) -> u64 {
     let mut z = run_seed
         ^ 0x9E37_79B9_7F4A_7C15
         ^ ((round as u64) << 32)
@@ -225,6 +231,34 @@ mod tests {
         let total: f64 = plan.tasks.iter().map(|t| t.weight).sum();
         assert!((total - 1.0).abs() < 1e-12);
         assert!(plan.tasks[3].weight > plan.tasks[0].weight);
+    }
+
+    #[test]
+    fn straggler_refactor_preserves_legacy_iters_bitwise() {
+        // The historical closed form, recomputed by hand: routing
+        // local_iters_for through Dist::StragglerScale must not change
+        // a single iteration count under any (seed, round, client).
+        for (seed, jitter) in [(3u64, 0.3f64), (17, 0.75), (99, 1.0)] {
+            let cfg = TrainConfig {
+                seed,
+                straggler_jitter: jitter,
+                local_iters: 20,
+                ..TrainConfig::default()
+            };
+            for round in 0..6 {
+                for client in 0..12 {
+                    let mut rng = Rng::new(seed ^ 0x57A6_6000)
+                        .split((round as u64) << 20 | client as u64);
+                    let u = rng.uniform();
+                    let scaled = 20.0 * (1.0 - jitter.clamp(0.0, 1.0) * u);
+                    let want = (scaled.round() as usize).max(1);
+                    assert_eq!(local_iters_for(&cfg, round, client), want);
+                }
+            }
+        }
+        // jitter = 0 keeps the untouched early return (no .max(1)).
+        let cfg = TrainConfig { straggler_jitter: 0.0, local_iters: 0, ..TrainConfig::default() };
+        assert_eq!(local_iters_for(&cfg, 0, 0), 0);
     }
 
     #[test]

@@ -28,16 +28,17 @@
 use anyhow::Result;
 use fedlrt::comm::CodecKind;
 use fedlrt::coordinator::{
-    run_dense_obs, run_fedlrt_obs, DenseAlgo, RankConfig, TrainConfig, VarCorrection,
+    run_async_obs, run_dense_obs, run_fedlrt_obs, DenseAlgo, RankConfig, Schedule, TrainConfig,
+    VarCorrection,
 };
-use fedlrt::engine::ExecutorKind;
+use fedlrt::engine::{Dist, ExecutorKind, TimingModel};
 use fedlrt::obsv::Recorder;
 use fedlrt::models::least_squares::LeastSquares;
 use fedlrt::nn::experiment::{print_rows, run_mlp_sweep};
 use fedlrt::nn::{NnOptions, NnProblem};
 use fedlrt::opt::{LrSchedule, OptimizerKind, SgdConfig};
 use fedlrt::runtime::Runtime;
-use fedlrt::util::cli::Cli;
+use fedlrt::util::cli::{Args, Cli};
 use fedlrt::util::rng::Rng;
 
 fn main() -> Result<()> {
@@ -218,6 +219,54 @@ fn parse_vc(s: &str) -> VarCorrection {
     }
 }
 
+/// The event-driven federation options shared by `train` and `lsq`
+/// (see `coordinator::async_server`; all ignored under `--schedule
+/// sync`).
+fn async_opts(cli: Cli) -> Cli {
+    cli.opt("schedule", "sync", "federation schedule: sync|fedbuff|async")
+        .opt("population", "0", "registered async client population (0 = problem clients)")
+        .opt("buffer-k", "8", "async: aggregate when K updates are buffered")
+        .opt("concurrency", "16", "async: in-flight dispatch slots (concurrent clients)")
+        .opt("staleness-p", "1.0", "async: staleness-weight exponent p in 1/(1+σ)^p")
+        .opt("max-staleness", "0", "fedbuff: discard arrivals staler than this (0 = unbounded)")
+        .flag("hold-stale", "fedbuff: admit over-stale arrivals instead of discarding them")
+        .opt("basis-every", "1", "async: refresh the shared basis every N aggregations")
+        .opt("server-lr", "1.0", "async: server step size on the aggregated update")
+        .opt("arrival", "constant:1", "async arrival-gap distribution (constant:V|uniform:LO,HI|lognormal:MU,SIGMA)")
+        .opt("compute", "constant:1", "async client compute-time distribution")
+        .opt("link", "constant:0", "async link-latency distribution")
+        .opt("het-sigma", "0", "async per-client lognormal speed heterogeneity σ")
+}
+
+fn parse_dist(a: &Args, name: &str) -> Dist {
+    Dist::parse(a.str(name)).unwrap_or_else(|e| {
+        eprintln!("--{name}: {e}");
+        std::process::exit(2);
+    })
+}
+
+/// Fold the parsed async options into `cfg`.
+fn apply_async_opts(cfg: &mut TrainConfig, a: &Args) {
+    cfg.schedule = Schedule::parse(a.str("schedule")).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    cfg.population = a.usize("population");
+    cfg.async_cfg.buffer_k = a.usize("buffer-k");
+    cfg.async_cfg.concurrency = a.usize("concurrency");
+    cfg.async_cfg.staleness_p = a.f64("staleness-p");
+    cfg.async_cfg.max_staleness = a.u64("max-staleness");
+    cfg.async_cfg.hold_stale = a.flag("hold-stale");
+    cfg.async_cfg.basis_every = a.usize("basis-every");
+    cfg.async_cfg.server_lr = a.f64("server-lr");
+    cfg.timing = TimingModel {
+        arrival: parse_dist(a, "arrival"),
+        compute: parse_dist(a, "compute"),
+        link: parse_dist(a, "link"),
+        het_sigma: a.f64("het-sigma"),
+    };
+}
+
 fn cmd_train(rest: &[String]) -> Result<()> {
     let cli = Cli::new("fedlrt train", "federated NN training via PJRT artifacts")
         .opt("model", "resnet18_head", "artifact config name")
@@ -245,6 +294,7 @@ fn cmd_train(rest: &[String]) -> Result<()> {
         )
         .opt("trace", "", "write a Chrome trace-event JSON (Perfetto-loadable) to this path")
         .opt("out", "results/train.jsonl", "JSONL output path");
+    let cli = async_opts(cli);
     let a = cli.parse(rest).unwrap_or_else(|e| {
         eprintln!("{e}");
         std::process::exit(2)
@@ -266,7 +316,7 @@ fn cmd_train(rest: &[String]) -> Result<()> {
         },
     )?;
     let rounds = a.usize("rounds");
-    let cfg = TrainConfig {
+    let mut cfg = TrainConfig {
         rounds,
         local_iters: a.usize("iters"),
         lr: LrSchedule::Cosine { start: a.f64("lr"), end: a.f64("lr") * 0.01, total: rounds },
@@ -285,15 +335,25 @@ fn cmd_train(rest: &[String]) -> Result<()> {
         executor: parse_executor(a.str("executor")),
         codec: parse_codec(a.str("codec")),
         kernel_threads: a.usize("kernel-threads"),
+        ..TrainConfig::default()
     };
+    apply_async_opts(&mut cfg, &a);
     let obs = recorder_for(a.str("trace"));
-    let rec = match a.str("algo") {
-        "fedlrt" => run_fedlrt_obs(&problem, &cfg, "cli_train", &obs),
-        "fedavg" => run_dense_obs(&problem, &cfg, DenseAlgo::FedAvg, "cli_train", &obs),
-        "fedlin" => run_dense_obs(&problem, &cfg, DenseAlgo::FedLin, "cli_train", &obs),
-        other => {
-            eprintln!("unknown --algo '{other}'");
+    let rec = if cfg.schedule != Schedule::Sync {
+        if a.str("algo") != "fedlrt" {
+            eprintln!("--schedule {} requires --algo fedlrt", cfg.schedule.label());
             std::process::exit(2);
+        }
+        run_async_obs(&problem, &cfg, "cli_train", &obs)
+    } else {
+        match a.str("algo") {
+            "fedlrt" => run_fedlrt_obs(&problem, &cfg, "cli_train", &obs),
+            "fedavg" => run_dense_obs(&problem, &cfg, DenseAlgo::FedAvg, "cli_train", &obs),
+            "fedlin" => run_dense_obs(&problem, &cfg, DenseAlgo::FedLin, "cli_train", &obs),
+            other => {
+                eprintln!("unknown --algo '{other}'");
+                std::process::exit(2);
+            }
         }
     };
     finish_trace(&obs, a.str("trace"))?;
@@ -340,6 +400,7 @@ fn cmd_lsq(rest: &[String]) -> Result<()> {
             "matmul kernel worker threads (0 = env FEDLRT_KERNEL_THREADS or 1)",
         )
         .opt("trace", "", "write a Chrome trace-event JSON (Perfetto-loadable) to this path");
+    let cli = async_opts(cli);
     let a = cli.parse(rest).unwrap_or_else(|e| {
         eprintln!("{e}");
         std::process::exit(2)
@@ -361,7 +422,7 @@ fn cmd_lsq(rest: &[String]) -> Result<()> {
             &mut rng,
         ),
     };
-    let cfg = TrainConfig {
+    let mut cfg = TrainConfig {
         rounds: a.usize("rounds"),
         local_iters: a.usize("iters"),
         lr: LrSchedule::Constant(a.f64("lr")),
@@ -378,11 +439,20 @@ fn cmd_lsq(rest: &[String]) -> Result<()> {
         kernel_threads: a.usize("kernel-threads"),
         ..TrainConfig::default()
     };
+    apply_async_opts(&mut cfg, &a);
     let obs = recorder_for(a.str("trace"));
-    let rec = match a.str("algo") {
-        "fedavg" => run_dense_obs(&problem, &cfg, DenseAlgo::FedAvg, "cli_lsq", &obs),
-        "fedlin" => run_dense_obs(&problem, &cfg, DenseAlgo::FedLin, "cli_lsq", &obs),
-        _ => run_fedlrt_obs(&problem, &cfg, "cli_lsq", &obs),
+    let rec = if cfg.schedule != Schedule::Sync {
+        if matches!(a.str("algo"), "fedavg" | "fedlin") {
+            eprintln!("--schedule {} requires --algo fedlrt", cfg.schedule.label());
+            std::process::exit(2);
+        }
+        run_async_obs(&problem, &cfg, "cli_lsq", &obs)
+    } else {
+        match a.str("algo") {
+            "fedavg" => run_dense_obs(&problem, &cfg, DenseAlgo::FedAvg, "cli_lsq", &obs),
+            "fedlin" => run_dense_obs(&problem, &cfg, DenseAlgo::FedLin, "cli_lsq", &obs),
+            _ => run_fedlrt_obs(&problem, &cfg, "cli_lsq", &obs),
+        }
     };
     finish_trace(&obs, a.str("trace"))?;
     for r in rec.rounds.iter().step_by((cfg.rounds / 10).max(1)) {

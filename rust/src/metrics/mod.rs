@@ -61,6 +61,13 @@ pub struct RoundMetrics {
     /// p50/p95/max + straggler id); `latency.n == 0` when telemetry is
     /// disabled.
     pub latency: crate::obsv::LatencySummary,
+    /// Staleness distribution of the updates consumed by this
+    /// aggregation (async schedules); `staleness.n == 0` for sync runs.
+    pub staleness: crate::obsv::StalenessSummary,
+    /// Virtual-clock timestamp of this aggregation (seconds on the
+    /// event simulator's clock); `0.0` for sync runs, whose notion of
+    /// time is the round index.
+    pub virtual_s: f64,
 }
 
 /// A full training run.
@@ -187,6 +194,16 @@ impl RunRecord {
                         .set("lat_max_s", r.latency.max_s)
                         .set("straggler", r.latency.straggler);
                 }
+                if r.staleness.n > 0 {
+                    ro.set("stale_n", r.staleness.n)
+                        .set("stale_p50", r.staleness.p50)
+                        .set("stale_p95", r.staleness.p95)
+                        .set("stale_max", r.staleness.max)
+                        .set("stale_mean", r.staleness.mean);
+                }
+                if r.virtual_s > 0.0 {
+                    ro.set("virtual_s", r.virtual_s);
+                }
                 if let Some(d) = r.dist_to_opt {
                     ro.set("dist_to_opt", d);
                 }
@@ -282,6 +299,8 @@ mod tests {
                 client_serial_s: 0.0,
                 phase_s: crate::obsv::PhaseSeconds::default(),
                 latency: crate::obsv::LatencySummary::default(),
+                staleness: crate::obsv::StalenessSummary::default(),
+                virtual_s: 0.0,
             });
         }
         r
@@ -366,5 +385,17 @@ mod tests {
         let rounds = j.get("rounds").unwrap().as_arr().unwrap();
         assert_eq!(rounds[0].get("lat_p95_s").unwrap().as_f64().unwrap(), 0.75);
         assert_eq!(rounds[0].get("straggler").unwrap().as_usize().unwrap(), 3);
+        // staleness.n == 0 and virtual_s == 0 → async keys stay out of
+        // sync-run lines.
+        assert!(rounds[0].get("stale_p50").is_none());
+        assert!(rounds[0].get("virtual_s").is_none());
+        r.rounds[0].staleness =
+            crate::obsv::StalenessSummary { n: 5, p50: 1.0, p95: 3.0, max: 4.0, mean: 1.6 };
+        r.rounds[0].virtual_s = 12.5;
+        let j = r.to_json();
+        let rounds = j.get("rounds").unwrap().as_arr().unwrap();
+        assert_eq!(rounds[0].get("stale_p95").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(rounds[0].get("stale_n").unwrap().as_usize().unwrap(), 5);
+        assert_eq!(rounds[0].get("virtual_s").unwrap().as_f64().unwrap(), 12.5);
     }
 }

@@ -1,39 +1,54 @@
-//! Per-client latency distributions with exact quantiles.
+//! Keyed sample distributions with exact quantiles: one merge core,
+//! two views (per-client latency, per-dispatch staleness).
 //!
 //! The engine executors time every [`crate::engine::ClientTask`] on the
 //! worker that ran it; the coordinator feeds those timings here keyed
 //! by **client id**, so a client that runs in several executor calls
 //! within one round (e.g. basis-gradient round + local iterations)
-//! accumulates its total seconds. Keying by client id makes the merge
+//! accumulates its total seconds. Keying by a stable id makes the merge
 //! order-independent: serial and thread-pool executors produce the same
-//! histogram contents for the same per-task durations regardless of
-//! completion order.
+//! histogram contents for the same per-task values regardless of
+//! completion order. The async server reuses the identical core keyed
+//! by **dispatch sequence number** for staleness — one accumulation and
+//! merge implementation, not two copies ([`KeyedHist`]).
 //!
 //! Quantiles are **exact** (nearest-rank over the sorted samples), not
 //! bucketed estimates — client counts are metrics-sized, so sorting a
 //! copy is cheap and the tests can assert exact values.
 
-/// Accumulated per-client latencies for one round.
-#[derive(Debug, Clone, Default)]
-pub struct LatencyHist {
-    /// `client id → accumulated seconds`, kept sorted by client id.
+/// The shared accumulation core: `key → accumulated value`, kept sorted
+/// by key. Adds are binary-search accumulations, so any interleaving of
+/// the same `(key, value)` multiset yields identical contents — the
+/// order-independence both wrapping histograms rely on.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct KeyedHist {
     samples: Vec<(usize, f64)>,
 }
 
-impl LatencyHist {
-    pub fn new() -> LatencyHist {
-        LatencyHist::default()
+impl KeyedHist {
+    pub fn new() -> KeyedHist {
+        KeyedHist::default()
     }
 
-    /// Add `secs` to `client`'s accumulated latency.
-    pub fn add(&mut self, client: usize, secs: f64) {
-        match self.samples.binary_search_by_key(&client, |&(c, _)| c) {
-            Ok(i) => self.samples[i].1 += secs,
-            Err(i) => self.samples.insert(i, (client, secs)),
+    /// Add `value` to `key`'s accumulated total.
+    pub fn add(&mut self, key: usize, value: f64) {
+        match self.samples.binary_search_by_key(&key, |&(k, _)| k) {
+            Ok(i) => self.samples[i].1 += value,
+            Err(i) => self.samples.insert(i, (key, value)),
         }
     }
 
-    /// Number of distinct clients observed.
+    /// Fold another histogram's contents in, key by key. Because adds
+    /// accumulate per key, `a.merge(&b)` equals `b.merge(&a)` up to
+    /// per-key addition order — and is exactly order-independent when
+    /// key sets are disjoint (the async case: dispatch seqs are unique).
+    pub fn merge(&mut self, other: &KeyedHist) {
+        for &(k, v) in &other.samples {
+            self.add(k, v);
+        }
+    }
+
+    /// Number of distinct keys observed.
     pub fn len(&self) -> usize {
         self.samples.len()
     }
@@ -42,18 +57,14 @@ impl LatencyHist {
         self.samples.is_empty()
     }
 
-    /// Sum of all per-client latencies, folded in client-id order.
-    ///
-    /// For a single serial executor call this equals the executor's
-    /// `serial_s` bitwise: tasks are planned in ascending client id, so
-    /// both sums fold the same numbers in the same order on the same
-    /// monotonic clock.
-    pub fn total_s(&self) -> f64 {
-        self.samples.iter().map(|&(_, s)| s).sum()
+    /// Sum of all accumulated values, folded in key order.
+    pub fn total(&self) -> f64 {
+        self.samples.iter().map(|&(_, v)| v).sum()
     }
 
-    /// Exact nearest-rank quantile: the smallest sample `x` such that
-    /// at least `q·n` samples are ≤ `x`. `quantile(1.0)` is the max.
+    /// Exact nearest-rank quantile over the per-key values: the
+    /// smallest value `x` such that at least `q·n` values are ≤ `x`.
+    /// `quantile(1.0)` is the max.
     pub fn quantile(&self, q: f64) -> f64 {
         assert!((0.0..=1.0).contains(&q), "quantile out of range: {q}");
         if self.samples.is_empty() {
@@ -66,17 +77,74 @@ impl LatencyHist {
         v[rank - 1]
     }
 
-    /// The slowest client this round: `(client id, seconds)`.
-    pub fn straggler(&self) -> Option<(usize, f64)> {
+    /// The `(key, value)` pair with the largest value.
+    pub fn max_entry(&self) -> Option<(usize, f64)> {
         self.samples
             .iter()
             .copied()
             .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
     }
 
+    /// Reset, keeping capacity.
+    pub fn clear(&mut self) {
+        self.samples.clear();
+    }
+}
+
+/// Accumulated per-client latencies for one round (a [`KeyedHist`]
+/// keyed by client id).
+#[derive(Debug, Clone, Default)]
+pub struct LatencyHist {
+    hist: KeyedHist,
+}
+
+impl LatencyHist {
+    pub fn new() -> LatencyHist {
+        LatencyHist::default()
+    }
+
+    /// Add `secs` to `client`'s accumulated latency.
+    pub fn add(&mut self, client: usize, secs: f64) {
+        self.hist.add(client, secs);
+    }
+
+    /// Fold another round fragment's latencies in (order-independent).
+    pub fn merge(&mut self, other: &LatencyHist) {
+        self.hist.merge(&other.hist);
+    }
+
+    /// Number of distinct clients observed.
+    pub fn len(&self) -> usize {
+        self.hist.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.hist.is_empty()
+    }
+
+    /// Sum of all per-client latencies, folded in client-id order.
+    ///
+    /// For a single serial executor call this equals the executor's
+    /// `serial_s` bitwise: tasks are planned in ascending client id, so
+    /// both sums fold the same numbers in the same order on the same
+    /// monotonic clock.
+    pub fn total_s(&self) -> f64 {
+        self.hist.total()
+    }
+
+    /// Exact nearest-rank quantile (see [`KeyedHist::quantile`]).
+    pub fn quantile(&self, q: f64) -> f64 {
+        self.hist.quantile(q)
+    }
+
+    /// The slowest client this round: `(client id, seconds)`.
+    pub fn straggler(&self) -> Option<(usize, f64)> {
+        self.hist.max_entry()
+    }
+
     /// Collapse into the per-round summary exported with the metrics.
     pub fn summary(&self) -> LatencySummary {
-        if self.samples.is_empty() {
+        if self.hist.is_empty() {
             return LatencySummary::default();
         }
         let (straggler, max_s) = self.straggler().unwrap();
@@ -92,7 +160,7 @@ impl LatencyHist {
 
     /// Reset for the next round, keeping capacity.
     pub fn clear(&mut self) {
-        self.samples.clear();
+        self.hist.clear();
     }
 }
 
@@ -113,6 +181,79 @@ pub struct LatencySummary {
     pub sum_s: f64,
     /// Client id of the slowest client (the round's straggler).
     pub straggler: usize,
+}
+
+/// Staleness distribution of the updates consumed by one async
+/// aggregation: a [`KeyedHist`] keyed by **dispatch sequence number**
+/// (unique per update, so adds never collide and the merge is exactly
+/// order-independent), valued in model-version staleness σ.
+#[derive(Debug, Clone, Default)]
+pub struct StalenessHist {
+    hist: KeyedHist,
+}
+
+impl StalenessHist {
+    pub fn new() -> StalenessHist {
+        StalenessHist::default()
+    }
+
+    /// Record that the update from dispatch `dispatch` was consumed at
+    /// staleness `sigma` (server versions elapsed since its dispatch).
+    pub fn add(&mut self, dispatch: u64, sigma: u64) {
+        self.hist.add(dispatch as usize, sigma as f64);
+    }
+
+    /// Fold another fragment in (order-independent; shared core).
+    pub fn merge(&mut self, other: &StalenessHist) {
+        self.hist.merge(&other.hist);
+    }
+
+    pub fn len(&self) -> usize {
+        self.hist.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.hist.is_empty()
+    }
+
+    /// Exact nearest-rank staleness quantile.
+    pub fn quantile(&self, q: f64) -> f64 {
+        self.hist.quantile(q)
+    }
+
+    /// Collapse into the per-aggregation summary exported with metrics.
+    pub fn summary(&self) -> StalenessSummary {
+        if self.hist.is_empty() {
+            return StalenessSummary::default();
+        }
+        StalenessSummary {
+            n: self.len(),
+            p50: self.quantile(0.50),
+            p95: self.quantile(0.95),
+            max: self.quantile(1.0),
+            mean: self.hist.total() / self.len() as f64,
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.hist.clear();
+    }
+}
+
+/// Per-aggregation staleness summary (exported in round JSON as
+/// `stale_p50` / `stale_p95` / `stale_max` / `stale_mean` when `n > 0`).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StalenessSummary {
+    /// Updates consumed; `0` means "no staleness data" (sync runs).
+    pub n: usize,
+    /// Median staleness (server versions).
+    pub p50: f64,
+    /// 95th-percentile staleness.
+    pub p95: f64,
+    /// Largest staleness consumed.
+    pub max: f64,
+    /// Mean staleness.
+    pub mean: f64,
 }
 
 #[cfg(test)]
@@ -157,8 +298,56 @@ mod tests {
         for &(c, s) in timings.iter().rev() {
             rev.add(c, s);
         }
-        assert_eq!(fwd.samples, rev.samples);
+        assert_eq!(fwd.hist, rev.hist);
         assert_eq!(fwd.summary(), rev.summary());
+    }
+
+    #[test]
+    fn keyed_merge_equals_elementwise_adds() {
+        // Building from fragments via merge == building in one pass —
+        // the reuse contract the staleness histogram depends on.
+        let parts = [[(10usize, 1.0), (11, 2.0)], [(12, 4.0), (10, 8.0)]];
+        let mut merged = KeyedHist::new();
+        for part in &parts {
+            let mut frag = KeyedHist::new();
+            for &(k, v) in part {
+                frag.add(k, v);
+            }
+            merged.merge(&frag);
+        }
+        let mut flat = KeyedHist::new();
+        for &(k, v) in parts.iter().flatten() {
+            flat.add(k, v);
+        }
+        assert_eq!(merged, flat);
+        assert_eq!(merged.total(), 15.0);
+        assert_eq!(merged.max_entry(), Some((10, 9.0)));
+    }
+
+    #[test]
+    fn staleness_summary_exact() {
+        let mut h = StalenessHist::new();
+        // Dispatch seqs are unique — values never accumulate.
+        for (d, s) in [(7u64, 0u64), (3, 1), (11, 1), (20, 4)] {
+            h.add(d, s);
+        }
+        let s = h.summary();
+        assert_eq!(s.n, 4);
+        assert_eq!(s.p50, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert_eq!(s.mean, 1.5);
+        // Merge of disjoint fragments in either order is identical.
+        let mut a = StalenessHist::new();
+        a.add(1, 2);
+        let mut b = StalenessHist::new();
+        b.add(2, 3);
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab.hist, ba.hist);
+        h.clear();
+        assert_eq!(h.summary(), StalenessSummary::default());
     }
 
     #[test]

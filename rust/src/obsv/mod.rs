@@ -11,9 +11,12 @@
 //!   phase taxonomy** (`round > {broadcast, client_train, aggregate,
 //!   augment_qr, variance_correction, truncate_svd, eval, io}`) that
 //!   every coordinator wraps its stages in;
-//! * [`LatencyHist`] — per-client latency distributions (exact
-//!   p50/p95/max + straggler id) built from the engine executors'
-//!   per-task timings, exposed per round;
+//! * [`LatencyHist`] / [`StalenessHist`] — per-client latency and
+//!   per-dispatch staleness distributions (exact p50/p95/max +
+//!   straggler id) over one shared order-independent accumulation core
+//!   ([`KeyedHist`]), built from the engine executors' per-task timings
+//!   and the async server's consumed-update staleness, exposed per
+//!   round;
 //! * [`counters`] — lightweight always-on atomic counters fed from the
 //!   tensor layer (GEMM calls, FLOPs, panels packed, workspace bytes
 //!   high-water mark) plus the reusable counting allocator in
@@ -40,7 +43,7 @@ pub mod span;
 pub mod trace;
 
 pub use counters::{counters_delta, counters_snapshot, CounterSnapshot};
-pub use hist::{LatencyHist, LatencySummary};
+pub use hist::{KeyedHist, LatencyHist, LatencySummary, StalenessHist, StalenessSummary};
 pub use span::{Recorder, RoundObs, Span};
 pub use trace::{write_chrome_trace, TraceEvent};
 

@@ -31,7 +31,7 @@ use std::time::Instant;
 use crate::engine::executor::ExecTiming;
 use crate::engine::plan::RoundPlan;
 
-use super::hist::{LatencyHist, LatencySummary};
+use super::hist::{LatencyHist, LatencySummary, StalenessHist, StalenessSummary};
 use super::trace::{write_chrome_trace, TraceEvent};
 use super::{Phase, PhaseSeconds};
 
@@ -41,6 +41,9 @@ use super::{Phase, PhaseSeconds};
 pub struct RoundObs {
     pub phase_s: PhaseSeconds,
     pub latency: LatencySummary,
+    /// Staleness of the updates consumed this aggregation (async
+    /// schedules only; `n = 0` for sync rounds).
+    pub staleness: StalenessSummary,
 }
 
 #[derive(Debug, Default)]
@@ -52,6 +55,7 @@ struct Inner {
     round_start: Option<Instant>,
     phase_acc: PhaseSeconds,
     hist: LatencyHist,
+    staleness: StalenessHist,
     trace: Vec<TraceEvent>,
 }
 
@@ -139,6 +143,18 @@ impl Recorder {
         inner.round_start = Some(Instant::now());
         inner.phase_acc = PhaseSeconds::default();
         inner.hist.clear();
+        inner.staleness.clear();
+    }
+
+    /// Record that the update from dispatch `dispatch` was consumed at
+    /// model-version staleness `sigma` (async aggregation; keyed by
+    /// dispatch sequence so the fold is order-independent — the same
+    /// [`super::hist::KeyedHist`] core as the latency histogram).
+    pub fn record_staleness(&self, dispatch: u64, sigma: u64) {
+        if !self.collect {
+            return;
+        }
+        self.inner.borrow_mut().staleness.add(dispatch, sigma);
     }
 
     /// Fold an executor call's per-task timings into the round's
@@ -174,7 +190,11 @@ impl Recorder {
             return RoundObs::default();
         }
         let mut inner = self.inner.borrow_mut();
-        let obs = RoundObs { phase_s: inner.phase_acc, latency: inner.hist.summary() };
+        let obs = RoundObs {
+            phase_s: inner.phase_acc,
+            latency: inner.hist.summary(),
+            staleness: inner.staleness.summary(),
+        };
         if self.tracing {
             if let Some(start) = inner.round_start.take() {
                 let name = format!("round {}", inner.round);
@@ -188,6 +208,7 @@ impl Recorder {
         }
         inner.phase_acc = PhaseSeconds::default();
         inner.hist.clear();
+        inner.staleness.clear();
         obs
     }
 
@@ -305,6 +326,28 @@ mod tests {
         assert_eq!(obs.latency.sum_s, 1.75);
         // 3 task events + 1 round event.
         assert_eq!(rec.trace_len(), 4);
+    }
+
+    #[test]
+    fn staleness_records_fold_into_round_obs() {
+        let rec = Recorder::new();
+        rec.begin_round(0);
+        rec.record_staleness(10, 0);
+        rec.record_staleness(11, 2);
+        rec.record_staleness(12, 4);
+        let obs = rec.end_round();
+        assert_eq!(obs.staleness.n, 3);
+        assert_eq!(obs.staleness.p50, 2.0);
+        assert_eq!(obs.staleness.max, 4.0);
+        assert_eq!(obs.staleness.mean, 2.0);
+        // Cleared for the next round.
+        rec.begin_round(1);
+        assert_eq!(rec.end_round().staleness.n, 0);
+        // Disabled recorder stays inert.
+        let off = Recorder::disabled();
+        off.begin_round(0);
+        off.record_staleness(1, 7);
+        assert_eq!(off.end_round().staleness.n, 0);
     }
 
     #[test]

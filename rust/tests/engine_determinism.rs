@@ -326,6 +326,104 @@ fn telemetry_is_a_bitwise_noop_on_trajectories() {
     }
 }
 
+fn async_cfg(seed: u64, schedule: fedlrt::coordinator::Schedule) -> TrainConfig {
+    use fedlrt::engine::{Dist, TimingModel};
+    let mut cfg = TrainConfig {
+        rounds: 10,
+        local_iters: 4,
+        lr: LrSchedule::Constant(5e-3),
+        var_correction: VarCorrection::Simplified,
+        rank: RankConfig { initial_rank: 3, max_rank: 6, tau: 0.05 },
+        seed,
+        schedule,
+        ..TrainConfig::default()
+    };
+    cfg.async_cfg.buffer_k = 4;
+    cfg.async_cfg.concurrency = 8;
+    cfg.async_cfg.basis_every = 2;
+    cfg.timing = TimingModel {
+        arrival: Dist::Uniform { lo: 0.02, hi: 0.15 },
+        compute: Dist::LogNormal { mu: 0.0, sigma: 0.5 },
+        link: Dist::Uniform { lo: 0.01, hi: 0.05 },
+        het_sigma: 0.4,
+    };
+    cfg
+}
+
+#[test]
+fn async_server_serial_equals_thread_pool_across_seeds_and_policies() {
+    // The tentpole's determinism contract: for both async aggregation
+    // policies, a fixed seed yields bitwise-identical event traces,
+    // loss/rank/byte trajectories, AND staleness histograms at any
+    // executor — across ≥3 seeds.
+    use fedlrt::coordinator::{run_async_traced, Schedule};
+    use fedlrt::obsv::Recorder;
+    for seed in [101u64, 102, 103] {
+        let mut rng = Rng::new(seed);
+        let prob = LeastSquares::heterogeneous(8, 320, 6, &mut rng);
+        for schedule in [Schedule::FedBuff, Schedule::AsyncStale] {
+            let cfg_serial = async_cfg(seed, schedule);
+            let mut cfg_pool = cfg_serial.clone();
+            cfg_pool.executor = ExecutorKind::ThreadPool { threads: 3 };
+            let what = format!("async/{}/seed{seed}", schedule.label());
+            let (a, trace_a) = run_async_traced(&prob, &cfg_serial, "det", &Recorder::new());
+            let (b, trace_b) = run_async_traced(&prob, &cfg_pool, "det", &Recorder::new());
+            assert_eq!(trace_a, trace_b, "{what}: event traces diverged");
+            assert!(!trace_a.is_empty(), "{what}: empty event trace");
+            assert_trajectories_identical(&a, &b, &what);
+            for (x, y) in a.rounds.iter().zip(&b.rounds) {
+                assert_eq!(
+                    x.staleness, y.staleness,
+                    "{what}: staleness summary differs at aggregation {}",
+                    x.round
+                );
+                assert_eq!(
+                    x.virtual_s.to_bits(),
+                    y.virtual_s.to_bits(),
+                    "{what}: virtual clock differs at aggregation {}",
+                    x.round
+                );
+                // Every aggregation consumed exactly K updates.
+                assert_eq!(x.staleness.n, 4, "{what}: buffer size violated");
+            }
+        }
+    }
+}
+
+#[test]
+fn async_server_kernel_thread_count_does_not_matter() {
+    // The event order is tie-broken on (time, seq), so even the kernel
+    // thread pool setting (which reorders nothing but perturbs timing)
+    // cannot move the trajectory.
+    use fedlrt::coordinator::{run_async, Schedule};
+    let mut rng = Rng::new(111);
+    let prob = LeastSquares::homogeneous(10, 3, 400, 5, &mut rng);
+    let reference = run_async(&prob, &async_cfg(111, Schedule::FedBuff), "det");
+    for threads in [1usize, 2, 5] {
+        let mut cfg = async_cfg(111, Schedule::FedBuff);
+        cfg.executor = ExecutorKind::ThreadPool { threads };
+        let rec = run_async(&prob, &cfg, "det");
+        assert_trajectories_identical(&reference, &rec, &format!("async-threads={threads}"));
+    }
+}
+
+#[test]
+fn async_population_exceeding_shards_stays_deterministic() {
+    // A population far beyond the problem's data shards (clients map
+    // onto shards modulo num_clients) still satisfies the contract.
+    use fedlrt::coordinator::{run_async, Schedule};
+    let mut rng = Rng::new(121);
+    let prob = LeastSquares::homogeneous(8, 2, 320, 4, &mut rng);
+    let mut cfg_serial = async_cfg(121, Schedule::AsyncStale);
+    cfg_serial.population = 50_000;
+    let mut cfg_pool = cfg_serial.clone();
+    cfg_pool.executor = ExecutorKind::ThreadPool { threads: 4 };
+    let a = run_async(&prob, &cfg_serial, "det");
+    let b = run_async(&prob, &cfg_pool, "det");
+    assert_trajectories_identical(&a, &b, "async-population-50k");
+    assert!(a.final_loss().is_finite());
+}
+
 #[test]
 fn executor_choice_is_recorded_in_config_echo() {
     let mut rng = Rng::new(71);
