@@ -1,0 +1,226 @@
+//! Drift-correction matrix: every coordinator × correction strategy ×
+//! hostile scenario, appended to `results/drift_correction.jsonl`.
+//!
+//! The grid answers the refactor's two claims empirically:
+//!
+//! * under a hostile preset (label skew, byzantine or noisy clients),
+//!   at least one drift correction strictly improves the final loss
+//!   over `none` — asserted over the whole grid, so CI catches a
+//!   strategy that silently stops doing anything;
+//! * SCAFFOLD's control variates ride the real wire codecs, so every
+//!   scaffold cell must show strictly more `bytes_down` *and*
+//!   `bytes_up` than its `none` sibling.
+//!
+//! Each row self-validates against [`SCHEMA_KEYS`] before it is
+//! written (the CI smoke schema gate).
+//!
+//! Run: `cargo bench --bench drift_correction`
+//! CI smoke: `FEDLRT_BENCH_SMOKE=1 cargo bench --bench drift_correction`
+//! Full grid: `FEDLRT_BENCH_FULL=1 cargo bench --bench drift_correction`
+
+use std::io::Write as _;
+use std::path::Path;
+
+use fedlrt::client::Correction;
+use fedlrt::coordinator::{
+    run_async, run_dense, run_fedlr, run_fedlrt, run_fedlrt_naive, DenseAlgo, RankConfig,
+    Schedule, TrainConfig, VarCorrection,
+};
+use fedlrt::engine::ScenarioConfig;
+use fedlrt::metrics::RunRecord;
+use fedlrt::models::quadratic::Quadratic;
+use fedlrt::opt::LrSchedule;
+use fedlrt::util::json::{parse, Json};
+use fedlrt::util::rng::Rng;
+use fedlrt::util::Stopwatch;
+
+const ALL_COORDINATORS: [&str; 6] =
+    ["fedlrt", "fedlrt_naive", "fedlr", "fedavg", "fedlin", "async"];
+const SMOKE_COORDINATORS: [&str; 3] = ["fedlrt", "fedavg", "async"];
+const ALL_SCENARIOS: [&str; 4] = ["calm", "skew", "byzantine", "noisy"];
+const SMOKE_SCENARIOS: [&str; 2] = ["calm", "byzantine"];
+
+fn corrections() -> [Correction; 4] {
+    [
+        Correction::None,
+        Correction::FedProx { mu: 0.1 },
+        Correction::FedDyn { alpha: 0.1 },
+        Correction::Scaffold { strength: 1.0 },
+    ]
+}
+
+fn cfg(rounds: usize, correction: Correction, scenario: ScenarioConfig) -> TrainConfig {
+    TrainConfig {
+        rounds,
+        local_iters: 5,
+        lr: LrSchedule::Constant(2e-2),
+        var_correction: VarCorrection::Simplified,
+        rank: RankConfig { initial_rank: 2, max_rank: 6, tau: 0.05 },
+        seed: 13,
+        correction,
+        scenario,
+        ..TrainConfig::default()
+    }
+}
+
+fn run_one(prob: &Quadratic, coordinator: &str, cfg: &TrainConfig) -> RunRecord {
+    match coordinator {
+        "fedlrt" => run_fedlrt(prob, cfg, "drift_correction"),
+        "fedlrt_naive" => run_fedlrt_naive(prob, cfg, "drift_correction"),
+        "fedlr" => run_fedlr(prob, cfg, "drift_correction"),
+        "fedavg" => run_dense(prob, cfg, DenseAlgo::FedAvg, "drift_correction"),
+        "fedlin" => run_dense(prob, cfg, DenseAlgo::FedLin, "drift_correction"),
+        "async" => {
+            let mut c = cfg.clone();
+            c.schedule = Schedule::FedBuff;
+            c.async_cfg.buffer_k = 4;
+            c.async_cfg.concurrency = 6;
+            run_async(prob, &c, "drift_correction")
+        }
+        other => panic!("unknown coordinator '{other}'"),
+    }
+}
+
+/// Every key a downstream consumer of `drift_correction.jsonl` reads;
+/// each row is re-parsed and checked against this list before it is
+/// written (the CI smoke schema gate).
+const SCHEMA_KEYS: [&str; 10] = [
+    "bench",
+    "coordinator",
+    "correction",
+    "scenario",
+    "rounds",
+    "final_loss",
+    "bytes_down",
+    "bytes_up",
+    "comm_floats",
+    "wall_s",
+];
+
+fn validate_schema(line: &str) {
+    let j = parse(line).expect("drift_correction row must be valid JSON");
+    for key in SCHEMA_KEYS {
+        assert!(j.get(key).is_some(), "drift_correction row missing key '{key}': {line}");
+    }
+    assert_eq!(j.get("bench").and_then(|v| v.as_str()), Some("drift_correction"));
+    let loss = j.get("final_loss").and_then(|v| v.as_f64()).expect("final_loss numeric");
+    assert!(loss.is_finite(), "non-finite final_loss in row: {line}");
+}
+
+fn main() {
+    let smoke = std::env::var("FEDLRT_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let full = std::env::var("FEDLRT_BENCH_FULL").map(|v| v == "1").unwrap_or(false);
+    let coordinators: &[&str] =
+        if smoke && !full { &SMOKE_COORDINATORS } else { &ALL_COORDINATORS };
+    let scenarios: &[&str] = if smoke && !full { &SMOKE_SCENARIOS } else { &ALL_SCENARIOS };
+    let rounds = if smoke { 6 } else { 16 };
+
+    // Heterogeneous quadratic: per-client targets, so client drift is
+    // real and the corrections have something to correct.
+    let mut rng = Rng::new(13);
+    let prob = Quadratic::random(10, 2, 4, &mut rng);
+
+    println!("Drift-correction matrix — {rounds} rounds per cell\n");
+    println!(
+        "{:>12} {:>12} {:>10} {:>12} {:>12} {:>10} {:>8}",
+        "coordinator", "correction", "scenario", "final loss", "vs none", "kB up", "wall s"
+    );
+
+    let mut lines: Vec<String> = Vec::new();
+    // (scenario, coordinator, correction label) → strictly better than
+    // `none` in a hostile scenario?
+    let mut hostile_wins: Vec<(String, f64)> = Vec::new();
+    for &scenario_name in scenarios {
+        let scenario = ScenarioConfig::parse(scenario_name).expect("known scenario preset");
+        for &coordinator in coordinators {
+            let mut none_loss = f64::NAN;
+            let mut none_bytes = (0u64, 0u64);
+            for correction in corrections() {
+                let c = cfg(rounds, correction, scenario);
+                let watch = Stopwatch::start();
+                let rec = run_one(&prob, coordinator, &c);
+                let wall_s = watch.elapsed_s();
+                let loss = rec.final_loss();
+                assert!(
+                    loss.is_finite(),
+                    "{coordinator}/{}/{scenario_name} diverged",
+                    correction.label()
+                );
+                let (down, up) = (rec.total_bytes_down(), rec.total_bytes_up());
+                if correction == Correction::None {
+                    none_loss = loss;
+                    none_bytes = (down, up);
+                } else if scenario_name != "calm" && loss < none_loss {
+                    hostile_wins.push((
+                        format!("{coordinator}/{}/{scenario_name}", correction.label()),
+                        none_loss - loss,
+                    ));
+                }
+                if matches!(correction, Correction::Scaffold { .. }) {
+                    // Byte-visibility contract: the control variates are
+                    // real payloads, not free metadata.
+                    assert!(
+                        down > none_bytes.0 && up > none_bytes.1,
+                        "{coordinator}/{scenario_name}: scaffold bytes invisible \
+                         (down {down} vs {}, up {up} vs {})",
+                        none_bytes.0,
+                        none_bytes.1
+                    );
+                }
+                let mut row = Json::obj();
+                row.set("bench", "drift_correction")
+                    .set("coordinator", coordinator)
+                    .set("correction", correction.label())
+                    .set("correction_knob", correction.knob())
+                    .set("scenario", scenario_name)
+                    .set("rounds", rec.rounds.len())
+                    .set("final_loss", loss)
+                    .set("bytes_down", down)
+                    .set("bytes_up", up)
+                    .set("comm_floats", rec.total_comm_floats())
+                    .set("wall_s", wall_s);
+                println!(
+                    "{:>12} {:>12} {:>10} {:>12.6} {:>+12.2e} {:>10.1} {:>8.2}",
+                    coordinator,
+                    correction.label(),
+                    scenario_name,
+                    loss,
+                    loss - none_loss,
+                    up as f64 / 1e3,
+                    wall_s
+                );
+                lines.push(row.to_string_compact());
+            }
+        }
+    }
+
+    assert!(
+        !hostile_wins.is_empty(),
+        "no hostile cell where a drift correction strictly beat `none` — \
+         the strategy family is not earning its keep"
+    );
+    hostile_wins.sort_by(|a, b| b.1.total_cmp(&a.1));
+    let (best_cell, best_gain) = &hostile_wins[0];
+    println!(
+        "\n{} hostile cells improved on `none`; best: {best_cell} (loss gain {best_gain:.3e})",
+        hostile_wins.len()
+    );
+
+    for line in &lines {
+        validate_schema(line);
+    }
+
+    let path = Path::new("results/drift_correction.jsonl");
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent).expect("creating results dir");
+    }
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+        .expect("opening bench output");
+    for line in &lines {
+        writeln!(f, "{line}").expect("writing bench output");
+    }
+    println!("wrote {} rows to {path:?} (schema validated)", lines.len());
+}

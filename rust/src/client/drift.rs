@@ -1,0 +1,668 @@
+//! The drift-correction strategy family: FedProx, FedDyn, SCAFFOLD.
+//!
+//! FeDLRT's variance correction (eq. 9) removes the *gradient estimate*
+//! drift between clients; this module adds the orthogonal, widely used
+//! *local objective* corrections that fight client drift during the
+//! `s*` local iterations themselves:
+//!
+//! * **FedProx** (Li et al.): proximal term `μ/2 ‖S̃_c − S̃‖_F²` added to
+//!   the local objective — a stateless pull toward the broadcast point,
+//!   entering the optimizer as the additive gradient `μ(S̃_c − S̃)`.
+//! * **FedDyn** (Acar et al., arXiv:2111.04263): dynamic regularization
+//!   with per-client state `h_c`; local gradient modifier
+//!   `−h_c + α(S̃_c − S̃)`, post-round update `h_c ← h_c − α(S̃_c^K − S̃)`.
+//! * **SCAFFOLD** (Karimireddy et al.): control variates — server `c`
+//!   and per-client `c_c`; local gradient modifier `strength·(c − c_c)`
+//!   (constant over the round), post-round
+//!   `c_c ← c_c + strength·(−c + (S̃ − S̃_c^K)/(K·η))`, with the delta
+//!   uploaded so the server can fold `c ← c + (1/N) Σ δ_c`. Both
+//!   directions travel through the real wire codecs so the extra byte
+//!   cost is *measured*, not assumed.
+//!
+//! All three operate in whatever parameter space the coordinator trains
+//! in: the augmented coefficient space `S̃ ∈ ℝ^{2r×2r}` for FeDLRT, the
+//! full matrix space for the dense baselines. Strategies are
+//! deliberately ignorant of bases — carrying state across a server
+//! basis refresh is the *coordinator's* job, via the r×r
+//! change-of-coordinates projection [`change_coords`] (the same map the
+//! async server applies to stale ΔS updates; see DESIGN.md §Client
+//! update layer for the space bookkeeping rule).
+//!
+//! The neutral settings (μ = 0, α = 0, strength = 0) are collapsed to
+//! [`Correction::None`] by [`Correction::normalized`], so a "zero
+//! correction" is *structurally* disabled: the driver passes literal
+//! `None` extras to the optimizer, preserving both the allocation-free
+//! SGD fast path and bitwise-exact trajectories (a `Some(zeros)` extra
+//! would route through the general path and can flip `-0.0` signs).
+
+use crate::comm::Network;
+use crate::tensor::{matmul, matmul_tn, Matrix};
+
+/// Which drift correction a run uses (`--correction`).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum Correction {
+    /// No correction — bitwise-identical to the pre-refactor loops.
+    #[default]
+    None,
+    /// Proximal term `μ/2 ‖w − w₀‖²` toward the broadcast point.
+    FedProx { mu: f64 },
+    /// Dynamic regularization with per-client state `h_c`.
+    FedDyn { alpha: f64 },
+    /// Server/client control variates, scaled by `strength`
+    /// (`strength = 1` is the textbook method).
+    Scaffold { strength: f64 },
+}
+
+impl Correction {
+    /// Short label for result rows and config echoes.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Correction::None => "none",
+            Correction::FedProx { .. } => "fedprox",
+            Correction::FedDyn { .. } => "feddyn",
+            Correction::Scaffold { .. } => "scaffold",
+        }
+    }
+
+    /// The strategy's knob value (μ / α / strength; 0 for `None`).
+    pub fn knob(&self) -> f64 {
+        match *self {
+            Correction::None => 0.0,
+            Correction::FedProx { mu } => mu,
+            Correction::FedDyn { alpha } => alpha,
+            Correction::Scaffold { strength } => strength,
+        }
+    }
+
+    /// Collapse neutral settings to `None`: FedProx μ=0, FedDyn α=0 and
+    /// SCAFFOLD strength=0 modify no gradient, so they are *structurally*
+    /// disabled rather than fed through as zero matrices. This is what
+    /// makes "neutral knob ≡ none" hold bitwise (see module docs).
+    pub fn normalized(&self) -> Correction {
+        if self.knob() == 0.0 {
+            Correction::None
+        } else {
+            *self
+        }
+    }
+
+    /// Parse `--correction` syntax: `none`, `fedprox[:μ]`, `feddyn[:α]`,
+    /// `scaffold[:strength]`.
+    pub fn parse(s: &str) -> Result<Correction, String> {
+        let (name, knob) = match s.split_once(':') {
+            Some((n, k)) => {
+                let v: f64 = k
+                    .parse()
+                    .map_err(|_| format!("bad correction knob '{k}' in '{s}'"))?;
+                (n, Some(v))
+            }
+            None => (s, None),
+        };
+        match name {
+            "none" => Ok(Correction::None),
+            "fedprox" => Ok(Correction::FedProx { mu: knob.unwrap_or(0.1) }),
+            "feddyn" => Ok(Correction::FedDyn { alpha: knob.unwrap_or(0.1) }),
+            "scaffold" => Ok(Correction::Scaffold { strength: knob.unwrap_or(1.0) }),
+            _ => Err(format!(
+                "unknown correction '{s}' (expected none|fedprox[:mu]|feddyn[:alpha]|scaffold[:strength])"
+            )),
+        }
+    }
+}
+
+/// A per-client (or server-side) correction state: one matrix per
+/// low-rank layer — in the space the owning coordinator currently
+/// trains that layer in — plus one per dense parameter tensor.
+#[derive(Debug, Clone, Default)]
+pub struct DriftState {
+    pub lr: Vec<Matrix>,
+    pub dense: Vec<Matrix>,
+}
+
+impl DriftState {
+    /// All-zero state at the given shapes.
+    pub fn zeros(lr_shapes: &[(usize, usize)], dense_shapes: &[(usize, usize)]) -> DriftState {
+        DriftState {
+            lr: lr_shapes.iter().map(|&(m, n)| Matrix::zeros(m, n)).collect(),
+            dense: dense_shapes.iter().map(|&(m, n)| Matrix::zeros(m, n)).collect(),
+        }
+    }
+
+    /// Total float count (for wire accounting by callers).
+    pub fn float_count(&self) -> u64 {
+        self.lr
+            .iter()
+            .chain(self.dense.iter())
+            .map(|m| (m.rows() * m.cols()) as u64)
+            .sum()
+    }
+}
+
+/// What a strategy hands back after the local loop.
+#[derive(Debug, Default)]
+pub struct CorrectionUpdate {
+    /// Updated per-client state to persist (FedDyn `h_c`, SCAFFOLD
+    /// `c_c`), in the local training space.
+    pub state: Option<DriftState>,
+    /// SCAFFOLD's control-variate delta `c_c⁺ − c_c`, to be uploaded
+    /// through the codec and folded into the server variate.
+    pub ctrl_delta: Option<DriftState>,
+}
+
+/// A pluggable local-objective modifier, driven by
+/// [`crate::client::LocalUpdate`] around the inner loop.
+///
+/// Contract: [`DriftCorrection::lr_term`] / `dense_term` write the
+/// additive gradient term for the current iterate into `buf` and return
+/// `true`, or return `false` to signal "no term" — in which case the
+/// driver passes its variance-correction extra through *untouched*
+/// (literal `None` when there is none), which is what keeps the
+/// inactive path bitwise-identical to the legacy loops. `w0` is the
+/// decoded broadcast parameter the local run started from.
+pub trait DriftCorrection {
+    /// Whether any per-step term may be produced. `false` short-circuits
+    /// all per-step strategy work in the driver.
+    fn active(&self) -> bool;
+
+    /// Whether the driver must snapshot the initial weights (`w0` for
+    /// proximal anchors and post-round updates).
+    fn needs_w0(&self) -> bool {
+        self.active()
+    }
+
+    /// Whether [`DriftCorrection::finish`] must be called with the
+    /// final iterate (strategies that persist state or upload deltas).
+    fn stateful(&self) -> bool {
+        false
+    }
+
+    /// Write the term for low-rank layer `l` at current coefficient
+    /// `cur` (started from `w0`) into `buf`; `false` = no term.
+    fn lr_term(&mut self, _l: usize, _cur: &Matrix, _w0: &Matrix, _buf: &mut Matrix) -> bool {
+        false
+    }
+
+    /// Write the term for dense tensor `dl` into `buf`; `false` = no term.
+    fn dense_term(&mut self, _dl: usize, _cur: &Matrix, _w0: &Matrix, _buf: &mut Matrix) -> bool {
+        false
+    }
+
+    /// Post-loop hook: `w0`/`end` are the initial and final local
+    /// iterates, `iters` the local steps actually run at learning rate
+    /// `lr_t`.
+    fn finish(
+        &mut self,
+        _w0: &DriftState,
+        _end: &DriftState,
+        _iters: usize,
+        _lr_t: f64,
+    ) -> CorrectionUpdate {
+        CorrectionUpdate::default()
+    }
+}
+
+/// The `Correction::None` strategy: every hook is a no-op, the driver
+/// takes the legacy bitwise path.
+pub struct NoCorrection;
+
+impl DriftCorrection for NoCorrection {
+    fn active(&self) -> bool {
+        false
+    }
+}
+
+/// FedProx: stateless proximal pull `μ(w − w₀)` toward the broadcast.
+pub struct FedProx {
+    pub mu: f64,
+}
+
+impl DriftCorrection for FedProx {
+    fn active(&self) -> bool {
+        true
+    }
+
+    fn lr_term(&mut self, _l: usize, cur: &Matrix, w0: &Matrix, buf: &mut Matrix) -> bool {
+        buf.copy_from(cur);
+        buf.axpy(-1.0, w0);
+        buf.scale_inplace(self.mu);
+        true
+    }
+
+    fn dense_term(&mut self, _dl: usize, cur: &Matrix, w0: &Matrix, buf: &mut Matrix) -> bool {
+        buf.copy_from(cur);
+        buf.axpy(-1.0, w0);
+        buf.scale_inplace(self.mu);
+        true
+    }
+}
+
+/// FedDyn: gradient modifier `−h_c + α(w − w₀)`; after the round
+/// `h_c ← h_c − α(w_K − w₀)`. `h = None` means a fresh client (all-zero
+/// state) — the update then materializes it.
+pub struct FedDyn {
+    pub alpha: f64,
+    pub h: Option<DriftState>,
+}
+
+impl FedDyn {
+    fn term(&self, stored: Option<&Matrix>, cur: &Matrix, w0: &Matrix, buf: &mut Matrix) {
+        buf.copy_from(cur);
+        buf.axpy(-1.0, w0);
+        buf.scale_inplace(self.alpha);
+        if let Some(h) = stored {
+            buf.axpy(-1.0, h);
+        }
+    }
+}
+
+impl DriftCorrection for FedDyn {
+    fn active(&self) -> bool {
+        true
+    }
+
+    fn stateful(&self) -> bool {
+        true
+    }
+
+    fn lr_term(&mut self, l: usize, cur: &Matrix, w0: &Matrix, buf: &mut Matrix) -> bool {
+        let stored = self.h.as_ref().map(|h| &h.lr[l]);
+        self.term(stored, cur, w0, buf);
+        true
+    }
+
+    fn dense_term(&mut self, dl: usize, cur: &Matrix, w0: &Matrix, buf: &mut Matrix) -> bool {
+        let stored = self.h.as_ref().map(|h| &h.dense[dl]);
+        self.term(stored, cur, w0, buf);
+        true
+    }
+
+    fn finish(
+        &mut self,
+        w0: &DriftState,
+        end: &DriftState,
+        _iters: usize,
+        _lr_t: f64,
+    ) -> CorrectionUpdate {
+        let upd = |stored: Option<&Matrix>, end_m: &Matrix, w0_m: &Matrix| {
+            let mut d = end_m.sub(w0_m);
+            d.scale_inplace(-self.alpha);
+            if let Some(h) = stored {
+                d.axpy(1.0, h);
+            }
+            d
+        };
+        let lr = end
+            .lr
+            .iter()
+            .enumerate()
+            .map(|(l, e)| upd(self.h.as_ref().map(|h| &h.lr[l]), e, &w0.lr[l]))
+            .collect();
+        let dense = end
+            .dense
+            .iter()
+            .enumerate()
+            .map(|(dl, e)| upd(self.h.as_ref().map(|h| &h.dense[dl]), e, &w0.dense[dl]))
+            .collect();
+        CorrectionUpdate { state: Some(DriftState { lr, dense }), ctrl_delta: None }
+    }
+}
+
+/// SCAFFOLD: constant per-round gradient modifier `strength·(c − c_c)`,
+/// precomputed at construction; post-round the client variate moves to
+/// `c_c + strength·((w₀ − w_K)/(K·η) − c)` and the delta is reported for
+/// uplink.
+pub struct Scaffold {
+    strength: f64,
+    /// Server variate `c` (decoded broadcast), in the local space.
+    c: DriftState,
+    /// Client variate `c_c`; `None` = fresh client (zeros).
+    ci: Option<DriftState>,
+    term_lr: Vec<Matrix>,
+    term_dense: Vec<Matrix>,
+}
+
+impl Scaffold {
+    pub fn new(strength: f64, c: DriftState, ci: Option<DriftState>) -> Scaffold {
+        let term = |cm: &Matrix, cim: Option<&Matrix>| {
+            let mut t = cm.clone();
+            if let Some(ci) = cim {
+                t.axpy(-1.0, ci);
+            }
+            t.scale_inplace(strength);
+            t
+        };
+        let term_lr = c
+            .lr
+            .iter()
+            .enumerate()
+            .map(|(l, cm)| term(cm, ci.as_ref().map(|s| &s.lr[l])))
+            .collect();
+        let term_dense = c
+            .dense
+            .iter()
+            .enumerate()
+            .map(|(dl, cm)| term(cm, ci.as_ref().map(|s| &s.dense[dl])))
+            .collect();
+        Scaffold { strength, c, ci, term_lr, term_dense }
+    }
+}
+
+impl DriftCorrection for Scaffold {
+    fn active(&self) -> bool {
+        true
+    }
+
+    fn stateful(&self) -> bool {
+        true
+    }
+
+    fn lr_term(&mut self, l: usize, _cur: &Matrix, _w0: &Matrix, buf: &mut Matrix) -> bool {
+        buf.copy_from(&self.term_lr[l]);
+        true
+    }
+
+    fn dense_term(&mut self, dl: usize, _cur: &Matrix, _w0: &Matrix, buf: &mut Matrix) -> bool {
+        buf.copy_from(&self.term_dense[dl]);
+        true
+    }
+
+    fn finish(
+        &mut self,
+        w0: &DriftState,
+        end: &DriftState,
+        iters: usize,
+        lr_t: f64,
+    ) -> CorrectionUpdate {
+        if iters == 0 || lr_t == 0.0 {
+            // No local progress to estimate a gradient from; the
+            // variates stay put.
+            return CorrectionUpdate::default();
+        }
+        let inv = 1.0 / (iters as f64 * lr_t);
+        let delta = |w0_m: &Matrix, end_m: &Matrix, c_m: &Matrix| {
+            // strength·((w₀ − w_K)/(K·η) − c)
+            let mut d = w0_m.sub(end_m);
+            d.scale_inplace(inv);
+            d.axpy(-1.0, c_m);
+            d.scale_inplace(self.strength);
+            d
+        };
+        let d_lr: Vec<Matrix> = w0
+            .lr
+            .iter()
+            .zip(&end.lr)
+            .zip(&self.c.lr)
+            .map(|((a, b), c)| delta(a, b, c))
+            .collect();
+        let d_dense: Vec<Matrix> = w0
+            .dense
+            .iter()
+            .zip(&end.dense)
+            .zip(&self.c.dense)
+            .map(|((a, b), c)| delta(a, b, c))
+            .collect();
+        let new_state = |old: Option<&DriftState>| {
+            let lr = d_lr
+                .iter()
+                .enumerate()
+                .map(|(l, d)| {
+                    let mut s = d.clone();
+                    if let Some(o) = old {
+                        s.axpy(1.0, &o.lr[l]);
+                    }
+                    s
+                })
+                .collect();
+            let dense = d_dense
+                .iter()
+                .enumerate()
+                .map(|(dl, d)| {
+                    let mut s = d.clone();
+                    if let Some(o) = old {
+                        s.axpy(1.0, &o.dense[dl]);
+                    }
+                    s
+                })
+                .collect();
+            DriftState { lr, dense }
+        };
+        let state = new_state(self.ci.as_ref());
+        CorrectionUpdate {
+            state: Some(state),
+            ctrl_delta: Some(DriftState { lr: d_lr, dense: d_dense }),
+        }
+    }
+}
+
+/// Build the strategy instance for one client task. `drift_in` is the
+/// client's stored state and `ctrl` the decoded server control variate,
+/// both already mapped into the local training space by the coordinator
+/// (see DESIGN.md §Client update layer).
+pub fn make_strategy(
+    kind: Correction,
+    drift_in: Option<&DriftState>,
+    ctrl: Option<&DriftState>,
+) -> Box<dyn DriftCorrection> {
+    match kind {
+        Correction::None => Box::new(NoCorrection),
+        Correction::FedProx { mu } => Box::new(FedProx { mu }),
+        Correction::FedDyn { alpha } => Box::new(FedDyn { alpha, h: drift_in.cloned() }),
+        Correction::Scaffold { strength } => {
+            let c = ctrl
+                .expect("scaffold local update requires the broadcast server control variate")
+                .clone();
+            Box::new(Scaffold::new(strength, c, drift_in.cloned()))
+        }
+    }
+}
+
+/// Change of coordinates for an r×r coefficient-space tensor between
+/// two factorizations of the same layer:
+/// `(U_curᵀ U_disp) · X · (V_dispᵀ V_cur)`.
+///
+/// This is exactly the projection the async server applies to stale ΔS
+/// updates across basis refreshes (`coordinator::async_server` now
+/// delegates here); the drift-correction layer reuses it to carry
+/// FedDyn/SCAFFOLD state whenever the server basis changes — stored
+/// state lives in the *current* server space at all times, and both
+/// ends of a basis change project through this map.
+pub fn change_coords(
+    u_cur: &Matrix,
+    v_cur: &Matrix,
+    u_disp: &Matrix,
+    v_disp: &Matrix,
+    x: &Matrix,
+) -> Matrix {
+    matmul(&matmul_tn(u_cur, u_disp), &matmul(x, &matmul_tn(v_disp, v_cur)))
+}
+
+/// Server-side home of the drift-correction configuration and, for
+/// SCAFFOLD, the server control variate `c`. Coordinator-agnostic: the
+/// coordinators own billing (their wire topologies differ) and basis
+/// bookkeeping; the engine owns the normalized kind and the variate's
+/// storage.
+pub struct CorrectionEngine {
+    kind: Correction,
+    ctrl: Option<DriftState>,
+}
+
+impl CorrectionEngine {
+    pub fn new(kind: Correction) -> CorrectionEngine {
+        CorrectionEngine { kind: kind.normalized(), ctrl: None }
+    }
+
+    /// The normalized correction kind this run uses.
+    pub fn kind(&self) -> Correction {
+        self.kind
+    }
+
+    pub fn is_active(&self) -> bool {
+        self.kind != Correction::None
+    }
+
+    /// Whether per-client state must be stored and projected
+    /// (FedDyn / SCAFFOLD).
+    pub fn is_stateful(&self) -> bool {
+        matches!(self.kind, Correction::FedDyn { .. } | Correction::Scaffold { .. })
+    }
+
+    pub fn is_scaffold(&self) -> bool {
+        matches!(self.kind, Correction::Scaffold { .. })
+    }
+
+    /// The current server control variate, if any.
+    pub fn ctrl(&self) -> Option<&DriftState> {
+        self.ctrl.as_ref()
+    }
+
+    /// Lazily initialize (at the given shapes) and return the server
+    /// control variate. Only meaningful under SCAFFOLD.
+    pub fn ensure_ctrl(
+        &mut self,
+        lr_shapes: &[(usize, usize)],
+        dense_shapes: &[(usize, usize)],
+    ) -> &DriftState {
+        if self.ctrl.is_none() {
+            self.ctrl = Some(DriftState::zeros(lr_shapes, dense_shapes));
+        }
+        self.ctrl.as_ref().unwrap()
+    }
+
+    /// Replace the stored server variate (after the coordinator folded
+    /// deltas and/or projected it into a new basis).
+    pub fn set_ctrl(&mut self, ctrl: DriftState) {
+        self.ctrl = Some(ctrl);
+    }
+
+    /// Broadcast the server variate through the wire codec (billing
+    /// downlink bytes) and return the *decoded* copy clients see.
+    /// Returns `None` unless the run is SCAFFOLD.
+    pub fn broadcast_ctrl(
+        &mut self,
+        net: &mut Network,
+        lr_shapes: &[(usize, usize)],
+        dense_shapes: &[(usize, usize)],
+    ) -> Option<DriftState> {
+        if !self.is_scaffold() {
+            return None;
+        }
+        let ctrl = self.ensure_ctrl(lr_shapes, dense_shapes);
+        let lr = ctrl.lr.iter().map(|m| net.broadcast_mat("ctrl", m)).collect();
+        let dense = ctrl.dense.iter().map(|m| net.broadcast_mat("ctrl_dense", m)).collect();
+        Some(DriftState { lr, dense })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_label_knob_roundtrip() {
+        assert_eq!(Correction::parse("none").unwrap(), Correction::None);
+        assert_eq!(
+            Correction::parse("fedprox:0.05").unwrap(),
+            Correction::FedProx { mu: 0.05 }
+        );
+        assert_eq!(Correction::parse("fedprox").unwrap(), Correction::FedProx { mu: 0.1 });
+        assert_eq!(Correction::parse("feddyn:0.2").unwrap(), Correction::FedDyn { alpha: 0.2 });
+        assert_eq!(
+            Correction::parse("scaffold:0.5").unwrap(),
+            Correction::Scaffold { strength: 0.5 }
+        );
+        assert!(Correction::parse("fedavg").is_err());
+        assert!(Correction::parse("fedprox:x").is_err());
+        for s in ["none", "fedprox", "feddyn", "scaffold"] {
+            assert_eq!(Correction::parse(s).unwrap().label(), s);
+        }
+    }
+
+    #[test]
+    fn neutral_knobs_normalize_to_none() {
+        assert_eq!(Correction::FedProx { mu: 0.0 }.normalized(), Correction::None);
+        assert_eq!(Correction::FedDyn { alpha: 0.0 }.normalized(), Correction::None);
+        assert_eq!(Correction::Scaffold { strength: 0.0 }.normalized(), Correction::None);
+        assert_eq!(
+            Correction::FedProx { mu: 0.3 }.normalized(),
+            Correction::FedProx { mu: 0.3 }
+        );
+    }
+
+    #[test]
+    fn fedprox_pulls_toward_anchor() {
+        let mut s = FedProx { mu: 0.5 };
+        let w0 = Matrix::from_vec(1, 2, vec![1.0, 2.0]);
+        let cur = Matrix::from_vec(1, 2, vec![3.0, 0.0]);
+        let mut buf = Matrix::zeros(1, 2);
+        assert!(s.lr_term(0, &cur, &w0, &mut buf));
+        assert_eq!(buf.data(), &[1.0, -1.0]);
+        assert!(!s.stateful());
+    }
+
+    #[test]
+    fn feddyn_state_accumulates_negative_displacement() {
+        let mut s = FedDyn { alpha: 0.5, h: None };
+        let w0 = DriftState { lr: vec![Matrix::zeros(1, 1)], dense: vec![] };
+        let end = DriftState { lr: vec![Matrix::from_vec(1, 1, vec![2.0])], dense: vec![] };
+        // Fresh client: term = α(cur − w0) with no stored h.
+        let mut buf = Matrix::zeros(1, 1);
+        s.lr_term(0, &end.lr[0], &w0.lr[0], &mut buf);
+        assert_eq!(buf.data(), &[1.0]);
+        // h⁺ = −α(end − w0) = −1.
+        let upd = s.finish(&w0, &end, 3, 0.1);
+        let h = upd.state.unwrap();
+        assert_eq!(h.lr[0].data(), &[-1.0]);
+        // Second round with stored h: term gains −h = +1.
+        let mut s2 = FedDyn { alpha: 0.5, h: Some(h) };
+        s2.lr_term(0, &end.lr[0], &w0.lr[0], &mut buf);
+        assert_eq!(buf.data(), &[2.0]);
+    }
+
+    #[test]
+    fn scaffold_delta_matches_textbook_update() {
+        // K=2 steps at η=0.25, w0=0, w_K=1 ⇒ (w0−wK)/(Kη) = −2.
+        // c = 0.5 ⇒ δ = strength·(−2 − 0.5) = −2.5 at strength 1.
+        let c = DriftState { lr: vec![Matrix::from_vec(1, 1, vec![0.5])], dense: vec![] };
+        let mut s = Scaffold::new(1.0, c, None);
+        let w0 = DriftState { lr: vec![Matrix::zeros(1, 1)], dense: vec![] };
+        let end = DriftState { lr: vec![Matrix::from_vec(1, 1, vec![1.0])], dense: vec![] };
+        // Term for a fresh client is strength·(c − 0) = 0.5.
+        let mut buf = Matrix::zeros(1, 1);
+        s.lr_term(0, &end.lr[0], &w0.lr[0], &mut buf);
+        assert_eq!(buf.data(), &[0.5]);
+        let upd = s.finish(&w0, &end, 2, 0.25);
+        assert_eq!(upd.ctrl_delta.as_ref().unwrap().lr[0].data(), &[-2.5]);
+        // Fresh client: c_c⁺ = 0 + δ.
+        assert_eq!(upd.state.unwrap().lr[0].data(), &[-2.5]);
+    }
+
+    #[test]
+    fn change_coords_is_identity_on_same_basis() {
+        let mut rng = crate::util::rng::Rng::new(5);
+        let f = crate::lowrank::LowRank::random_init(8, 6, 3, &mut rng);
+        let x = Matrix::randn(3, 3, &mut rng);
+        let y = change_coords(&f.u, &f.v, &f.u, &f.v, &x);
+        // Orthonormal bases ⇒ UᵀU = VᵀV = I up to fp error.
+        for (a, b) in x.data().iter().zip(y.data()) {
+            assert!((a - b).abs() < 1e-10, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn engine_normalizes_and_stores_ctrl() {
+        let e = CorrectionEngine::new(Correction::Scaffold { strength: 0.0 });
+        assert!(!e.is_active());
+        let mut e = CorrectionEngine::new(Correction::Scaffold { strength: 1.0 });
+        assert!(e.is_scaffold() && e.is_stateful());
+        assert!(e.ctrl().is_none());
+        e.ensure_ctrl(&[(3, 3)], &[(2, 1)]);
+        let c = e.ctrl().unwrap();
+        assert_eq!(c.lr[0].shape(), (3, 3));
+        assert_eq!(c.dense[0].shape(), (2, 1));
+        assert_eq!(c.float_count(), 11);
+        let e = CorrectionEngine::new(Correction::FedDyn { alpha: 0.1 });
+        assert!(e.is_stateful() && !e.is_scaffold());
+        let e = CorrectionEngine::new(Correction::FedProx { mu: 0.1 });
+        assert!(e.is_active() && !e.is_stateful());
+    }
+}

@@ -1,0 +1,394 @@
+//! The one client inner loop: batch schedule, gradient fast path,
+//! optimizer stepping, drift correction, and fault injection.
+//!
+//! Before this layer, the `s*`-iteration local training loop was
+//! copy-pasted across all five coordinators (fedlrt, fedlrt_naive,
+//! fedlr, dense_baselines, async_server) — five near-identical blocks
+//! of `grad_coeff_into` calls, per-layer optimizer stepping, and
+//! batch-counter bookkeeping. [`LocalUpdate`] is that loop, once,
+//! parameterized by:
+//!
+//! * [`GradMode`] — coefficient-space training (FeDLRT family: dense
+//!   params step before the low-rank coefficients, gradients come from
+//!   the allocation-free [`FedProblem::grad_coeff_into`] fast path with
+//!   a `grad(LrWant::Coeff)` fallback) vs dense-space training
+//!   (FedAvg/FedLin/FeDLR: one `grad(LrWant::Dense)` per step, low-rank
+//!   layers step before dense params) — each reproducing its legacy
+//!   loop bitwise;
+//! * fixed per-round variance-correction extras (`vc_lr`/`vc_dense`,
+//!   FedLin eq. 9) and/or a broadcast mean gradient (`g_bar`) from
+//!   which FedLin-style extras are derived at the first local step (the
+//!   async server's variant);
+//! * a [`DriftCorrection`] strategy (FedProx/FedDyn/SCAFFOLD) composed
+//!   *additively* with the variance-correction extra;
+//! * a [`ClientFault`] applied to the trained tensors after the loop —
+//!   so byzantine/noisy clients corrupt exactly what they upload (and,
+//!   deliberately, their own correction state: a compromised device
+//!   poisons its variates too).
+//!
+//! The `Correction::None` + `ClientFault::None` path takes literal
+//! `None` extras and skips every hook, keeping the legacy bitwise
+//! trajectories (regression-pinned in `tests/client_layer.rs`).
+
+use crate::engine::ClientFault;
+use crate::models::{FedProblem, LrWant, Weights};
+use crate::opt::{ClientOptimizer, OptimizerKind};
+use crate::tensor::Matrix;
+use crate::util::rng::Rng;
+
+use super::drift::{make_strategy, Correction, DriftState};
+
+/// Which gradient form the local loop trains with.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GradMode {
+    /// Low-rank layers are factored; train the coefficients `S̃` via the
+    /// `grad_coeff_into` fast path (dense params step first — the
+    /// FeDLRT family's historical order).
+    Coeff,
+    /// Low-rank layers are dense matrices; train via `grad(Dense)`
+    /// (low-rank layers step first — the dense baselines' order).
+    Dense,
+}
+
+/// Everything a client run hands back besides the trained weights
+/// (which are mutated in place).
+#[derive(Debug, Default)]
+pub struct LocalOutcome {
+    /// Loss at the first local step (the coordinators' between-eval
+    /// estimate); `0.0` when no iterations ran.
+    pub first_loss: f64,
+    /// First-step gradients `(lr, dense)` when requested
+    /// (`capture_first_grad`) — the async server's `g_c(w)` upload.
+    pub g_first: Option<(Vec<Matrix>, Vec<Matrix>)>,
+    /// Updated per-client drift state to persist (FedDyn/SCAFFOLD), in
+    /// the local training space.
+    pub drift_out: Option<DriftState>,
+    /// SCAFFOLD control-variate delta for uplink, in the local space.
+    pub ctrl_delta: Option<DriftState>,
+}
+
+/// Fault RNG stream salt: disjoint from the plan/timing salts
+/// (`0x5E1E_C700`, `0xD809_0FF1`, `0x57A6_6000`, `0xD15C_A7C4`) so a
+/// faulty client's noise never correlates with its scheduling draws.
+const SALT_FAULT_STREAM: u64 = 0xFA01_7557;
+
+/// One client's local update for one round/dispatch: the driver that
+/// replaces the five hand-rolled coordinator loops.
+///
+/// Construct per task (cheap — all fields are scalars or borrows),
+/// then [`LocalUpdate::run`] against the client's assembled round
+/// weights.
+pub struct LocalUpdate<'a> {
+    /// Client optimizer family (fresh instances per tensor, per round —
+    /// local optimizer state resets at each aggregation, as the paper
+    /// prescribes).
+    pub opt: OptimizerKind,
+    /// Learning rate for this round.
+    pub lr_t: f64,
+    /// Local iterations `s*_c` (straggler model already applied).
+    pub iters: usize,
+    /// First batch-schedule step — the client's persistent `next_step`
+    /// counter (see [`crate::client::ClientStates`]).
+    pub step0: u64,
+    pub mode: GradMode,
+    /// Fixed per-round variance-correction extras, one per low-rank
+    /// layer (empty slice = none).
+    pub vc_lr: &'a [Option<Matrix>],
+    /// Same for dense tensors.
+    pub vc_dense: &'a [Option<Matrix>],
+    /// Broadcast mean gradient `(lr, dense)`: when present, FedLin-style
+    /// extras `ḡ − g_c` are derived from the first local step's own
+    /// gradient (the async server's correction form; `Coeff` mode only).
+    pub g_bar: Option<(&'a [Matrix], &'a [Matrix])>,
+    /// Capture the first step's gradients in the outcome (`Coeff` mode
+    /// only).
+    pub capture_first_grad: bool,
+    /// Drift-correction strategy (normalize before passing — the driver
+    /// trusts `Correction::None` to mean structurally off).
+    pub correction: Correction,
+    /// The client's stored correction state, mapped into the local
+    /// training space by the coordinator.
+    pub drift_in: Option<&'a DriftState>,
+    /// Decoded SCAFFOLD server control variate, local space.
+    pub ctrl: Option<&'a DriftState>,
+    /// Fault injected into the upload (from the round plan).
+    pub fault: ClientFault,
+    /// Task RNG seed — the fault noise stream derives from it.
+    pub fault_seed: u64,
+}
+
+fn lr_param<'w>(w: &'w Weights, l: usize, mode: GradMode) -> &'w Matrix {
+    match mode {
+        GradMode::Coeff => &w.lr[l].as_factored().s,
+        GradMode::Dense => w.lr[l].as_dense(),
+    }
+}
+
+fn lr_param_mut<'w>(w: &'w mut Weights, l: usize, mode: GradMode) -> &'w mut Matrix {
+    match mode {
+        GradMode::Coeff => &mut w.lr[l].as_factored_mut().s,
+        GradMode::Dense => w.lr[l].as_dense_mut(),
+    }
+}
+
+/// Clone the trained tensors into a [`DriftState`]-shaped snapshot.
+fn snapshot(w: &Weights, mode: GradMode) -> DriftState {
+    DriftState {
+        lr: (0..w.lr.len()).map(|l| lr_param(w, l, mode).clone()).collect(),
+        dense: w.dense.clone(),
+    }
+}
+
+impl LocalUpdate<'_> {
+    /// Run the local loop against `w_c` (the client's decoded round
+    /// weights), mutating it in place and returning the side outputs.
+    pub fn run<P: FedProblem + ?Sized>(
+        &self,
+        problem: &P,
+        client: usize,
+        w_c: &mut Weights,
+    ) -> LocalOutcome {
+        let num_lr = w_c.lr.len();
+        let num_dense = w_c.dense.len();
+        let mut strat = make_strategy(self.correction, self.drift_in, self.ctrl);
+        let active = strat.active();
+        // Initial-weights snapshot: needed by proximal anchors,
+        // post-round state updates, and the byzantine fault.
+        let needs_w0 =
+            strat.needs_w0() || matches!(self.fault, ClientFault::Byzantine { .. });
+        let w0: Option<DriftState> = if needs_w0 { Some(snapshot(w_c, self.mode)) } else { None };
+        // Strategy scratch — one buffer per tensor, reused across
+        // steps. Never allocated on the inactive path.
+        let mut scratch_lr: Vec<Matrix> = if active {
+            (0..num_lr)
+                .map(|l| {
+                    let p = lr_param(w_c, l, self.mode);
+                    Matrix::zeros(p.rows(), p.cols())
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        let mut scratch_dense: Vec<Matrix> = if active {
+            w_c.dense.iter().map(|d| Matrix::zeros(d.rows(), d.cols())).collect()
+        } else {
+            Vec::new()
+        };
+        // Corrections derived from a broadcast mean gradient at s = 0
+        // (async path); all-`None` otherwise, so lookups fall through to
+        // the fixed `vc_*` slices.
+        let mut dyn_vc_lr: Vec<Option<Matrix>> = vec![None; num_lr];
+        let mut dyn_vc_dense: Vec<Option<Matrix>> = vec![None; num_dense];
+
+        let mut opt_s: Vec<ClientOptimizer> =
+            (0..num_lr).map(|_| ClientOptimizer::new(self.opt)).collect();
+        let mut opt_d: Vec<ClientOptimizer> =
+            (0..num_dense).map(|_| ClientOptimizer::new(self.opt)).collect();
+        let mut first_loss = 0.0;
+        let mut g_first: Option<(Vec<Matrix>, Vec<Matrix>)> = None;
+
+        match self.mode {
+            GradMode::Coeff => {
+                // Gradient buffers reused across all s* iterations (the
+                // allocation-free fast path writes into them).
+                let mut g_coeff: Vec<Matrix> = (0..num_lr)
+                    .map(|l| {
+                        let p = lr_param(w_c, l, GradMode::Coeff);
+                        Matrix::zeros(p.rows(), p.cols())
+                    })
+                    .collect();
+                let mut g_dense: Vec<Matrix> =
+                    w_c.dense.iter().map(|d| Matrix::zeros(d.rows(), d.cols())).collect();
+                for s in 0..self.iters {
+                    let step = self.step0 + s as u64;
+                    let loss = match problem.grad_coeff_into(
+                        client,
+                        w_c,
+                        step,
+                        &mut g_coeff,
+                        &mut g_dense,
+                    ) {
+                        Some(l0) => l0,
+                        None => {
+                            let g = problem.grad(client, w_c, LrWant::Coeff, step);
+                            for (buf, gl) in g_coeff.iter_mut().zip(&g.lr) {
+                                buf.copy_from(gl.coeff());
+                            }
+                            for (buf, gd) in g_dense.iter_mut().zip(&g.dense) {
+                                buf.copy_from(gd);
+                            }
+                            g.loss
+                        }
+                    };
+                    if s == 0 {
+                        first_loss = loss;
+                        if self.capture_first_grad {
+                            g_first = Some((g_coeff.clone(), g_dense.clone()));
+                        }
+                        if let Some((gb_lr, gb_dense)) = self.g_bar {
+                            for (slot, (gb, gc)) in
+                                dyn_vc_lr.iter_mut().zip(gb_lr.iter().zip(&g_coeff))
+                            {
+                                *slot = Some(gb.sub(gc));
+                            }
+                            for (slot, (gb, gc)) in
+                                dyn_vc_dense.iter_mut().zip(gb_dense.iter().zip(&g_dense))
+                            {
+                                *slot = Some(gb.sub(gc));
+                            }
+                        }
+                    }
+                    // Dense params first, then coefficients — the
+                    // FeDLRT family's historical step order.
+                    for (dl, gd) in g_dense.iter().enumerate() {
+                        let vc = dyn_vc_dense[dl]
+                            .as_ref()
+                            .or_else(|| self.vc_dense.get(dl).and_then(|o| o.as_ref()));
+                        let extra = if active
+                            && strat.dense_term(
+                                dl,
+                                &w_c.dense[dl],
+                                &w0.as_ref().unwrap().dense[dl],
+                                &mut scratch_dense[dl],
+                            ) {
+                            if let Some(v) = vc {
+                                scratch_dense[dl].axpy(1.0, v);
+                            }
+                            Some(&scratch_dense[dl])
+                        } else {
+                            vc
+                        };
+                        opt_d[dl].step(&mut w_c.dense[dl], gd, self.lr_t, extra);
+                    }
+                    for l in 0..num_lr {
+                        let vc = dyn_vc_lr[l]
+                            .as_ref()
+                            .or_else(|| self.vc_lr.get(l).and_then(|o| o.as_ref()));
+                        let extra = if active
+                            && strat.lr_term(
+                                l,
+                                &w_c.lr[l].as_factored().s,
+                                &w0.as_ref().unwrap().lr[l],
+                                &mut scratch_lr[l],
+                            ) {
+                            if let Some(v) = vc {
+                                scratch_lr[l].axpy(1.0, v);
+                            }
+                            Some(&scratch_lr[l])
+                        } else {
+                            vc
+                        };
+                        let fac_c = w_c.lr[l].as_factored_mut();
+                        opt_s[l].step(&mut fac_c.s, &g_coeff[l], self.lr_t, extra);
+                    }
+                }
+            }
+            GradMode::Dense => {
+                for s in 0..self.iters {
+                    let step = self.step0 + s as u64;
+                    let g = problem.grad(client, w_c, LrWant::Dense, step);
+                    if s == 0 {
+                        first_loss = g.loss;
+                    }
+                    // Low-rank layers first, then dense params — the
+                    // dense baselines' historical step order.
+                    for l in 0..num_lr {
+                        let vc = self.vc_lr.get(l).and_then(|o| o.as_ref());
+                        let extra = if active
+                            && strat.lr_term(
+                                l,
+                                w_c.lr[l].as_dense(),
+                                &w0.as_ref().unwrap().lr[l],
+                                &mut scratch_lr[l],
+                            ) {
+                            if let Some(v) = vc {
+                                scratch_lr[l].axpy(1.0, v);
+                            }
+                            Some(&scratch_lr[l])
+                        } else {
+                            vc
+                        };
+                        opt_s[l].step(
+                            w_c.lr[l].as_dense_mut(),
+                            g.lr[l].dense(),
+                            self.lr_t,
+                            extra,
+                        );
+                    }
+                    for (dl, gd) in g.dense.iter().enumerate() {
+                        let vc = self.vc_dense.get(dl).and_then(|o| o.as_ref());
+                        let extra = if active
+                            && strat.dense_term(
+                                dl,
+                                &w_c.dense[dl],
+                                &w0.as_ref().unwrap().dense[dl],
+                                &mut scratch_dense[dl],
+                            ) {
+                            if let Some(v) = vc {
+                                scratch_dense[dl].axpy(1.0, v);
+                            }
+                            Some(&scratch_dense[dl])
+                        } else {
+                            vc
+                        };
+                        opt_d[dl].step(&mut w_c.dense[dl], gd, self.lr_t, extra);
+                    }
+                }
+            }
+        }
+
+        // Fault injection: corrupt the trained tensors *before* the
+        // strategy's post-round update, so a compromised device also
+        // poisons its own variates (it uploads both).
+        self.apply_fault(w_c, w0.as_ref());
+
+        let (drift_out, ctrl_delta) = if strat.stateful() {
+            let end = snapshot(w_c, self.mode);
+            let upd = strat.finish(
+                w0.as_ref().expect("stateful strategies snapshot w0"),
+                &end,
+                self.iters,
+                self.lr_t,
+            );
+            (upd.state, upd.ctrl_delta)
+        } else {
+            (None, None)
+        };
+        LocalOutcome { first_loss, g_first, drift_out, ctrl_delta }
+    }
+
+    fn apply_fault(&self, w_c: &mut Weights, w0: Option<&DriftState>) {
+        match self.fault {
+            ClientFault::None => {}
+            ClientFault::Noisy { sigma } => {
+                let mut rng = Rng::new(self.fault_seed ^ SALT_FAULT_STREAM);
+                for l in 0..w_c.lr.len() {
+                    for x in lr_param_mut(w_c, l, self.mode).data_mut() {
+                        *x += sigma * rng.normal();
+                    }
+                }
+                for d in w_c.dense.iter_mut() {
+                    for x in d.data_mut() {
+                        *x += sigma * rng.normal();
+                    }
+                }
+            }
+            ClientFault::Byzantine { scale } => {
+                let w0 = w0.expect("byzantine fault snapshots w0");
+                for l in 0..w_c.lr.len() {
+                    let anchor = &w0.lr[l];
+                    for (x, &x0) in
+                        lr_param_mut(w_c, l, self.mode).data_mut().iter_mut().zip(anchor.data())
+                    {
+                        *x = x0 - scale * (*x - x0);
+                    }
+                }
+                for (d, anchor) in w_c.dense.iter_mut().zip(&w0.dense) {
+                    for (x, &x0) in d.data_mut().iter_mut().zip(anchor.data()) {
+                        *x = x0 - scale * (*x - x0);
+                    }
+                }
+            }
+        }
+    }
+}

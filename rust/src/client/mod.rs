@@ -1,0 +1,39 @@
+//! The client-update layer: one local training loop for all
+//! coordinators, with pluggable drift correction.
+//!
+//! FeDLRT's five coordinators (fedlrt, fedlrt_naive, fedlr,
+//! dense_baselines, async_server) used to each carry a hand-rolled copy
+//! of the client inner loop — the `s*` mini-batch iterations of eq. 7/8
+//! plus batch-cursor bookkeeping. This module factors that loop into
+//! three pieces:
+//!
+//! * [`LocalUpdate`] ([`local`]) — the driver: batch schedule,
+//!   `grad_coeff_into` fast path, per-tensor optimizer stepping in each
+//!   family's historical order, variance-correction extras, and the
+//!   [`crate::engine::ClientFault`] hook. With [`Correction::None`] it
+//!   reproduces every legacy loop bitwise.
+//! * [`DriftCorrection`] ([`drift`]) — the strategy family for
+//!   heterogeneous fleets: [`Correction::FedProx`] (proximal anchor),
+//!   [`Correction::FedDyn`] (per-client dynamic regularizer), and
+//!   [`Correction::Scaffold`] (control variates over real wire codecs,
+//!   so their byte cost shows up in `bytes_up`/`bytes_down`). All
+//!   corrections act in the space the client trains in — for FeDLRT
+//!   that is the augmented coefficient space — and persistent state is
+//!   carried across server basis refreshes by the r×r
+//!   change-of-coordinates projection ([`change_coords`]; see DESIGN.md
+//!   §Client update layer for the exact rule).
+//! * [`ClientStates`] ([`state`]) — cross-round client memory (batch
+//!   cursors + drift variates) over the sharded
+//!   [`crate::engine::ClientRegistry`], shared by all sync
+//!   coordinators.
+
+pub mod drift;
+pub mod local;
+pub mod state;
+
+pub use drift::{
+    change_coords, make_strategy, Correction, CorrectionEngine, CorrectionUpdate,
+    DriftCorrection, DriftState,
+};
+pub use local::{GradMode, LocalOutcome, LocalUpdate};
+pub use state::ClientStates;

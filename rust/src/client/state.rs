@@ -1,0 +1,116 @@
+//! Persistent per-client state for the synchronous coordinators.
+//!
+//! Every sync coordinator needs the same two pieces of cross-round
+//! client memory: the mini-batch schedule cursor (`next_step`, so a
+//! client's stochastic gradient stream resumes where its last
+//! participation stopped) and, with a stateful drift correction, its
+//! FedDyn/SCAFFOLD variate. Before this layer each coordinator carried
+//! its own `vec![0u64; c_num]` counter plus an identical
+//! post-aggregation advance loop; [`ClientStates`] replaces all four
+//! copies with one wrapper over the sharded [`ClientRegistry`] (the
+//! same store the async path uses), so sync and async client state
+//! live behind one abstraction and one byte-accounting regime.
+//!
+//! Bitwise note: a fresh record's `next_step` is `0`, exactly like the
+//! zero-initialized vectors it replaces, and [`ClientStates::advance`]
+//! walks the plan in task order, exactly like the legacy loops — the
+//! schedule every client sees is unchanged (pinned by
+//! `tests/client_layer.rs`).
+
+use crate::engine::{ClientRecord, ClientRegistry, RoundPlan};
+
+use super::drift::DriftState;
+
+/// Cross-round client state (batch cursors + drift variates) for the
+/// synchronous round loop.
+#[derive(Debug)]
+pub struct ClientStates {
+    reg: ClientRegistry,
+}
+
+impl ClientStates {
+    pub fn new(num_clients: usize) -> ClientStates {
+        ClientStates { reg: ClientRegistry::new(num_clients, ClientRegistry::DEFAULT_SHARD) }
+    }
+
+    fn blank(_c: usize) -> ClientRecord {
+        ClientRecord::default()
+    }
+
+    /// The client's first batch-schedule step for this round.
+    pub fn step0(&mut self, client: usize) -> u64 {
+        self.reg.get_or_init(client, Self::blank).next_step
+    }
+
+    /// Advance every participant's batch cursor by its local iteration
+    /// count — the single replacement for the per-coordinator
+    /// `next_step[c] += s*` loops (called once, after aggregation).
+    pub fn advance(&mut self, plan: &RoundPlan) {
+        for task in &plan.tasks {
+            self.reg.get_or_init(task.client_id, Self::blank).next_step +=
+                task.local_iters as u64;
+        }
+    }
+
+    /// Clone of the client's stored drift state, if any.
+    pub fn drift_cloned(&mut self, client: usize) -> Option<DriftState> {
+        self.reg.get_or_init(client, Self::blank).drift.as_deref().cloned()
+    }
+
+    /// Store (replace) the client's drift state.
+    pub fn set_drift(&mut self, client: usize, state: DriftState) {
+        self.reg.get_or_init(client, Self::blank).drift = Some(Box::new(state));
+    }
+
+    /// Visit every stored drift state in client-id order — how the
+    /// coordinators project *all* client variates through a server
+    /// basis change, participants or not (the state-across-refresh rule
+    /// in DESIGN.md §Client update layer).
+    pub fn for_each_drift(&mut self, mut f: impl FnMut(usize, &mut DriftState)) {
+        self.reg.for_each_materialized(|id, rec| {
+            if let Some(d) = rec.drift.as_deref_mut() {
+                f(id, d);
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Matrix;
+
+    #[test]
+    fn fresh_cursor_is_zero_and_advances_in_plan_order() {
+        use crate::coordinator::TrainConfig;
+        let cfg = TrainConfig { local_iters: 3, ..TrainConfig::default() };
+        let plan = RoundPlan::build(&cfg, 8, 0, |_| 1.0);
+        let mut st = ClientStates::new(8);
+        for t in &plan.tasks {
+            assert_eq!(st.step0(t.client_id), 0);
+        }
+        st.advance(&plan);
+        for t in &plan.tasks {
+            assert_eq!(st.step0(t.client_id), t.local_iters as u64);
+        }
+    }
+
+    #[test]
+    fn drift_state_round_trips_and_iterates_in_id_order() {
+        let mut st = ClientStates::new(600); // spans multiple shards
+        for &c in &[5usize, 300, 599] {
+            let mut d = DriftState::zeros(&[(2, 2)], &[]);
+            d.lr[0] = Matrix::from_vec(2, 2, vec![c as f64; 4]);
+            st.set_drift(c, d);
+        }
+        assert!(st.drift_cloned(7).is_none());
+        assert_eq!(st.drift_cloned(300).unwrap().lr[0][(0, 0)], 300.0);
+        let mut seen = Vec::new();
+        st.for_each_drift(|id, d| {
+            d.lr[0].scale_inplace(2.0);
+            seen.push(id);
+        });
+        assert_eq!(seen, vec![5, 300, 599]);
+        assert_eq!(st.drift_cloned(599).unwrap().lr[0][(0, 0)], 2.0 * 599.0);
+    }
+}

@@ -63,17 +63,19 @@
 
 use std::sync::Arc;
 
+use crate::client::{
+    change_coords, Correction, CorrectionEngine, DriftState, GradMode, LocalUpdate,
+};
 use crate::comm::Network;
 use crate::engine::{
-    task_seed, ClientExecutor, ClientRecord, ClientRegistry, ClientTask, EventQueue, Executor,
-    RoundPlan, TimingModel,
+    task_seed, ClientExecutor, ClientFault, ClientRecord, ClientRegistry, ClientTask, EventQueue,
+    Executor, RoundPlan, TimingModel,
 };
 use crate::lowrank::{truncate_ws, LowRank};
 use crate::metrics::{RoundMetrics, RunRecord};
-use crate::models::{FedProblem, LrWant, LrWeight, Weights};
+use crate::models::{FedProblem, LrWeight, Weights};
 use crate::obsv::{Phase, Recorder};
-use crate::opt::ClientOptimizer;
-use crate::tensor::{matmul, matmul_tn, Matrix, Workspace};
+use crate::tensor::{Matrix, Workspace};
 use crate::util::rng::Rng;
 use crate::util::Stopwatch;
 
@@ -122,6 +124,9 @@ struct Snapshot {
     /// `(per-layer ḡ_S, per-dense ḡ)` — present only when variance
     /// correction is on AND at least one aggregation has run.
     g_bar: Option<(Vec<Matrix>, Vec<Matrix>)>,
+    /// Decoded SCAFFOLD server control variate at dispatch time, in the
+    /// dispatch basis (`None` unless the run uses SCAFFOLD).
+    ctrl: Option<DriftState>,
 }
 
 /// One in-flight dispatch.
@@ -138,6 +143,10 @@ struct Flight {
     /// Per-dispatch RNG stream seed (same SplitMix derivation as sync
     /// tasks, keyed by dispatch number instead of round).
     seed: u64,
+    /// The client's stored drift state at dispatch time (FedDyn h_c /
+    /// SCAFFOLD c_c), in the dispatch basis — device semantics: a
+    /// concurrent re-dispatch of the same client sees the same state.
+    drift: Option<DriftState>,
     snapshot: Arc<Snapshot>,
 }
 
@@ -148,6 +157,10 @@ struct ClientUpdate {
     g_first: Vec<Matrix>,
     g_first_dense: Vec<Matrix>,
     first_loss: f64,
+    /// Updated drift state / SCAFFOLD delta, in the *snapshot* basis —
+    /// the server projects them into the current basis when stale.
+    drift_out: Option<DriftState>,
+    ctrl_delta: Option<DriftState>,
 }
 
 enum Ev {
@@ -190,17 +203,19 @@ pub fn run_async_traced<P: FedProblem + Sync>(
 }
 
 /// Change of coordinates for a tensor expressed in the dispatch-time
-/// basis: `(U_curᵀ U_disp) · X · (V_dispᵀ V_cur)`.
+/// basis: `(U_curᵀ U_disp) · X · (V_dispᵀ V_cur)`. Delegates to the
+/// shared [`change_coords`] map (the drift-correction layer uses the
+/// same projection to carry client state across basis refreshes).
 fn project_between_bases(cur: &LowRank, disp: &LowRank, x: &Matrix) -> Matrix {
-    let pu = matmul_tn(&cur.u, &disp.u);
-    let pv = matmul_tn(&disp.v, &cur.v);
-    matmul(&pu, &matmul(x, &pv))
+    change_coords(&cur.u, &cur.v, &disp.u, &disp.v, x)
 }
 
 /// One client's local run against a frozen snapshot: `iters`
-/// coefficient steps on S (and dense params) with the FedLin-style
-/// correction `ḡ − g_c` when the snapshot carries ḡ. Returns deltas
-/// relative to the snapshot plus the first-iteration gradients.
+/// coefficient steps on S (and dense params) driven by the shared
+/// [`LocalUpdate`] loop, with the FedLin-style correction `ḡ − g_c`
+/// when the snapshot carries ḡ. Returns deltas relative to the
+/// snapshot plus the first-iteration gradients.
+#[allow(clippy::too_many_arguments)]
 fn client_run<P: FedProblem>(
     problem: &P,
     cfg: &TrainConfig,
@@ -209,65 +224,39 @@ fn client_run<P: FedProblem>(
     step0: u64,
     iters: usize,
     lr_t: f64,
+    correction: Correction,
+    drift_in: Option<&DriftState>,
+    fault: ClientFault,
+    fault_seed: u64,
 ) -> ClientUpdate {
-    let num_lr = snap.factors.len();
     let vc_on = cfg.var_correction != VarCorrection::None;
     let mut w_c = Weights {
         dense: snap.dense.clone(),
         lr: snap.factors.iter().cloned().map(LrWeight::Factored).collect(),
     };
-    let mut g_coeff: Vec<Matrix> =
-        snap.factors.iter().map(|f| Matrix::zeros(f.rank(), f.rank())).collect();
-    let mut g_dense: Vec<Matrix> =
-        snap.dense.iter().map(|d| Matrix::zeros(d.rows(), d.cols())).collect();
-    let mut opt_s: Vec<ClientOptimizer> =
-        (0..num_lr).map(|_| ClientOptimizer::new(cfg.opt)).collect();
-    let mut opt_d: Vec<ClientOptimizer> =
-        (0..snap.dense.len()).map(|_| ClientOptimizer::new(cfg.opt)).collect();
-    let mut corrections: Vec<Option<Matrix>> = vec![None; num_lr];
-    let mut dense_corr: Vec<Option<Matrix>> = vec![None; snap.dense.len()];
-    let mut g_first: Vec<Matrix> = Vec::new();
-    let mut g_first_dense: Vec<Matrix> = Vec::new();
-    let mut first_loss = 0.0;
-    for s in 0..iters {
-        let step = step0 + s as u64;
-        let loss = match problem.grad_coeff_into(c, &w_c, step, &mut g_coeff, &mut g_dense) {
-            Some(l0) => l0,
-            None => {
-                let g = problem.grad(c, &w_c, LrWant::Coeff, step);
-                for (buf, gl) in g_coeff.iter_mut().zip(&g.lr) {
-                    buf.copy_from(gl.coeff());
-                }
-                for (buf, gd) in g_dense.iter_mut().zip(&g.dense) {
-                    buf.copy_from(gd);
-                }
-                g.loss
-            }
-        };
-        if s == 0 {
-            first_loss = loss;
-            g_first = g_coeff.clone();
-            g_first_dense = g_dense.clone();
-            if vc_on {
-                if let Some((gb_lr, gb_dense)) = &snap.g_bar {
-                    corrections =
-                        gb_lr.iter().zip(&g_first).map(|(gb, gc)| Some(gb.sub(gc))).collect();
-                    dense_corr = gb_dense
-                        .iter()
-                        .zip(&g_first_dense)
-                        .map(|(gb, gc)| Some(gb.sub(gc)))
-                        .collect();
-                }
-            }
-        }
-        for (dl, gd) in g_dense.iter().enumerate() {
-            opt_d[dl].step(&mut w_c.dense[dl], gd, lr_t, dense_corr[dl].as_ref());
-        }
-        for l in 0..num_lr {
-            let fac_c = w_c.lr[l].as_factored_mut();
-            opt_s[l].step(&mut fac_c.s, &g_coeff[l], lr_t, corrections[l].as_ref());
-        }
-    }
+    let g_bar_ref = if vc_on {
+        snap.g_bar.as_ref().map(|(gl, gd)| (gl.as_slice(), gd.as_slice()))
+    } else {
+        None
+    };
+    let driver = LocalUpdate {
+        opt: cfg.opt,
+        lr_t,
+        iters,
+        step0,
+        mode: GradMode::Coeff,
+        vc_lr: &[],
+        vc_dense: &[],
+        g_bar: g_bar_ref,
+        capture_first_grad: true,
+        correction,
+        drift_in,
+        ctrl: snap.ctrl.as_ref(),
+        fault,
+        fault_seed,
+    };
+    let out = driver.run(problem, c, &mut w_c);
+    let (g_first, g_first_dense) = out.g_first.unwrap_or_default();
     let d_s: Vec<Matrix> = w_c
         .lr
         .iter()
@@ -276,7 +265,15 @@ fn client_run<P: FedProblem>(
         .collect();
     let d_dense: Vec<Matrix> =
         w_c.dense.iter().zip(&snap.dense).map(|(d, d0)| d.sub(d0)).collect();
-    ClientUpdate { d_s, d_dense, g_first, g_first_dense, first_loss }
+    ClientUpdate {
+        d_s,
+        d_dense,
+        g_first,
+        g_first_dense,
+        first_loss: out.first_loss,
+        drift_out: out.drift_out,
+        ctrl_delta: out.ctrl_delta,
+    }
 }
 
 fn run_async_core<P: FedProblem + Sync>(
@@ -325,6 +322,20 @@ fn run_async_core<P: FedProblem + Sync>(
     let basis_every = acfg.basis_every.max(1) as u64;
     let vc_on = cfg.var_correction != VarCorrection::None;
 
+    // Drift-correction engine (see `run_fedlrt`); per-client state lives
+    // in the sharded registry records, in the current server coefficient
+    // basis at all times (projected at every basis refresh below).
+    let mut engine = CorrectionEngine::new(cfg.correction);
+    let correction = engine.kind();
+    let init_rec = |c: usize| ClientRecord {
+        seed: task_seed(cfg.seed, 0, c),
+        weight: problem.client_weight(c % c_num),
+        next_step: 0,
+        speed: timing.client_speed(cfg.seed, c),
+        residual: None,
+        drift: None,
+    };
+
     let mut registry = ClientRegistry::new(population, ClientRegistry::DEFAULT_SHARD);
     let mut queue: EventQueue<Ev> = EventQueue::new();
     let mut flights: Vec<Option<Flight>> = Vec::new();
@@ -361,18 +372,14 @@ fn run_async_core<P: FedProblem + Sync>(
                 let d = dispatch_count;
                 dispatch_count += 1;
                 let client = Rng::new(cfg.seed ^ SALT_PICK).split(d).below(population);
-                let run_seed = cfg.seed;
-                let rec_c = registry.get_or_init(client, |c| ClientRecord {
-                    seed: task_seed(run_seed, 0, c),
-                    weight: problem.client_weight(c % c_num),
-                    next_step: 0,
-                    speed: timing.client_speed(run_seed, c),
-                    residual: None,
-                });
+                let rec_c = registry.get_or_init(client, &init_rec);
                 let iters = cfg.local_iters.max(1);
                 let step0 = rec_c.next_step;
                 rec_c.next_step += iters as u64;
                 let weight = rec_c.weight;
+                // Device semantics: the flight carries the drift state
+                // as of dispatch time (in the dispatch basis).
+                let drift_c: Option<DriftState> = rec_c.drift.as_deref().cloned();
                 // Unicast downlink, billed per dispatch; the client
                 // computes on the decoded copies (decode-on-receive).
                 let bc_factors: Vec<LowRank> = factors
@@ -391,10 +398,18 @@ fn run_async_core<P: FedProblem + Sync>(
                         gd.iter().map(|g| net.broadcast_mat("g_bar_dense", g)).collect(),
                     )
                 });
+                // SCAFFOLD's server variate rides every unicast
+                // dispatch through the codec (billed per dispatch).
+                let bc_ctrl = engine.broadcast_ctrl(
+                    &mut net,
+                    &factors.iter().map(|f| (f.rank(), f.rank())).collect::<Vec<_>>(),
+                    &dense.iter().map(|m| m.shape()).collect::<Vec<_>>(),
+                );
                 let snapshot = Arc::new(Snapshot {
                     factors: bc_factors,
                     dense: bc_dense,
                     g_bar: bc_g_bar,
+                    ctrl: bc_ctrl,
                 });
                 let flight = Flight {
                     client,
@@ -405,6 +420,7 @@ fn run_async_core<P: FedProblem + Sync>(
                     step0,
                     weight,
                     seed: task_seed(cfg.seed, d as usize, client),
+                    drift: drift_c,
                     snapshot,
                 };
                 let done_t = queue.now()
@@ -483,10 +499,17 @@ fn run_async_core<P: FedProblem + Sync>(
                             local_iters: fl.iters,
                             weight: fl.weight,
                             seed: fl.seed,
+                            fault: cfg.scenario.fault_for(cfg.seed, fl.client),
                         }
                     })
                     .collect();
                 let plan = RoundPlan { round: agg, tasks };
+                // The flights' drift states move into the work items
+                // (they were cloned out of the registry at dispatch).
+                let drift_pre: Vec<Option<DriftState>> = consumed
+                    .iter()
+                    .map(|&fi| flights[fi].as_mut().unwrap().drift.take())
+                    .collect();
                 let snaps: Vec<Arc<Snapshot>> = consumed
                     .iter()
                     .map(|&fi| flights[fi].as_ref().unwrap().snapshot.clone())
@@ -502,6 +525,10 @@ fn run_async_core<P: FedProblem + Sync>(
                         steps0[task.ordinal],
                         task.local_iters,
                         lr_t,
+                        correction,
+                        drift_pre[task.ordinal].as_ref(),
+                        task.fault,
+                        task.seed,
                     )
                 });
                 obs.record_exec("async_local", &plan, &report.timing);
@@ -540,6 +567,8 @@ fn run_async_core<P: FedProblem + Sync>(
                 let mut gb_dense_new: Vec<Matrix> =
                     dense.iter().map(|m| Matrix::zeros(m.rows(), m.cols())).collect();
                 let mut local_loss_w = 0.0;
+                let mut drift_staged: Vec<(usize, DriftState)> = Vec::new();
+                let mut ctrl_delta_sum: Option<DriftState> = None;
                 for (i, &fi) in consumed.iter().enumerate() {
                     let fl = flights[fi].as_ref().unwrap();
                     let upd = &report.results[i];
@@ -604,8 +633,77 @@ fn run_async_core<P: FedProblem + Sync>(
                             );
                         }
                     }
+                    // Drift state comes back in the snapshot basis;
+                    // carry it into the current one when stale, then
+                    // stage it for the registry (written post-loop).
+                    if let Some(st) = &upd.drift_out {
+                        let mut st = st.clone();
+                        if stale_basis {
+                            for l in 0..num_lr {
+                                st.lr[l] = project_between_bases(
+                                    &factors[l],
+                                    &fl.snapshot.factors[l],
+                                    &st.lr[l],
+                                );
+                            }
+                        }
+                        drift_staged.push((fl.client, st));
+                    }
+                    // SCAFFOLD deltas bill real uplink bytes, project
+                    // like any stale coefficient tensor, and fold below.
+                    if let Some(delta) = &upd.ctrl_delta {
+                        let mut dec_lr: Vec<Matrix> = Vec::with_capacity(num_lr);
+                        for m in &delta.lr {
+                            let (bytes, decoded) = net.transcode_vec(m.data());
+                            net.note_upload("ctrl", m.data().len() as u64, bytes);
+                            let mut d = Matrix::from_vec(m.rows(), m.cols(), decoded);
+                            if stale_basis {
+                                let l = dec_lr.len();
+                                d = project_between_bases(
+                                    &factors[l],
+                                    &fl.snapshot.factors[l],
+                                    &d,
+                                );
+                            }
+                            dec_lr.push(d);
+                        }
+                        let mut dec_dense: Vec<Matrix> = Vec::with_capacity(delta.dense.len());
+                        for m in &delta.dense {
+                            let (bytes, decoded) = net.transcode_vec(m.data());
+                            net.note_upload("ctrl_dense", m.data().len() as u64, bytes);
+                            dec_dense.push(Matrix::from_vec(m.rows(), m.cols(), decoded));
+                        }
+                        let dec = DriftState { lr: dec_lr, dense: dec_dense };
+                        match ctrl_delta_sum.as_mut() {
+                            Some(sum) => {
+                                for (a, b) in sum.lr.iter_mut().zip(&dec.lr) {
+                                    a.axpy(1.0, b);
+                                }
+                                for (a, b) in sum.dense.iter_mut().zip(&dec.dense) {
+                                    a.axpy(1.0, b);
+                                }
+                            }
+                            None => ctrl_delta_sum = Some(dec),
+                        }
+                    }
                     flights[fi] = None;
                     free_flights.push(fi);
+                }
+                for (client, st) in drift_staged {
+                    registry.get_or_init(client, &init_rec).drift = Some(Box::new(st));
+                }
+                // SCAFFOLD server fold: c ← c + (1/N) Σ δ over the full
+                // registered population.
+                if let Some(sum) = ctrl_delta_sum {
+                    let inv = 1.0 / population as f64;
+                    let mut ctrl = engine.ctrl().expect("dispatch initialized ctrl").clone();
+                    for (a, b) in ctrl.lr.iter_mut().zip(&sum.lr) {
+                        a.axpy(inv, b);
+                    }
+                    for (a, b) in ctrl.dense.iter_mut().zip(&sum.dense) {
+                        a.axpy(inv, b);
+                    }
+                    engine.set_ctrl(ctrl);
                 }
                 // Apply the aggregated step to the server model.
                 for (l, buf) in ds_mean.into_iter().enumerate() {
@@ -636,6 +734,7 @@ fn run_async_core<P: FedProblem + Sync>(
                 // ḡ across to the new coordinates.
                 let sp_svd = obs.span(Phase::TruncateSvd);
                 if version % basis_every == 0 {
+                    let mut olds: Vec<LowRank> = Vec::with_capacity(num_lr);
                     for l in 0..num_lr {
                         let theta = cfg.rank.tau * factors[l].s.fro_norm();
                         let res = truncate_ws(
@@ -651,8 +750,42 @@ fn run_async_core<P: FedProblem + Sync>(
                         if let Some((gb_lr, _)) = g_bar.as_mut() {
                             gb_lr[l] = project_between_bases(&factors[l], &old, &gb_lr[l]);
                         }
+                        olds.push(old);
                     }
                     basis_version += 1;
+                    // Carry every stored drift state — and the server
+                    // control variate — into the refreshed basis, so
+                    // registry state is always in the current space.
+                    if engine.is_stateful() {
+                        registry.for_each_materialized(|_, rec| {
+                            if let Some(st) = rec.drift.as_deref_mut() {
+                                for l in 0..num_lr {
+                                    st.lr[l] = project_between_bases(
+                                        &factors[l],
+                                        &olds[l],
+                                        &st.lr[l],
+                                    );
+                                }
+                            }
+                        });
+                        if engine.is_scaffold() {
+                            if let Some(ctrl) = engine.ctrl() {
+                                let new_ctrl = DriftState {
+                                    lr: (0..num_lr)
+                                        .map(|l| {
+                                            project_between_bases(
+                                                &factors[l],
+                                                &olds[l],
+                                                &ctrl.lr[l],
+                                            )
+                                        })
+                                        .collect(),
+                                    dense: ctrl.dense.clone(),
+                                };
+                                engine.set_ctrl(new_ctrl);
+                            }
+                        }
+                    }
                 }
                 drop(sp_svd);
 
@@ -663,7 +796,7 @@ fn run_async_core<P: FedProblem + Sync>(
                     (comm.total_floats(), comm.per_client_floats());
                 let (bytes_down, bytes_up) = (comm.bytes_down, comm.bytes_up);
                 let comm_floats_lr = comm.floats_matching(|l| {
-                    !matches!(l, "dense_w" | "d_dense" | "g_first_dense" | "g_bar_dense")
+                    !matches!(l, "dense_w" | "d_dense" | "g_first_dense" | "g_bar_dense" | "ctrl_dense")
                 });
                 drop(sp_io);
                 let sp_eval = obs.span(Phase::Eval);

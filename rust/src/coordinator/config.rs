@@ -1,7 +1,8 @@
 //! Training configuration shared by all federated algorithms.
 
+use crate::client::Correction;
 use crate::comm::CodecKind;
-use crate::engine::{ExecutorKind, TimingModel};
+use crate::engine::{ExecutorKind, ScenarioConfig, TimingModel};
 use crate::opt::{LrSchedule, OptimizerKind, SgdConfig};
 use crate::util::json::Json;
 
@@ -182,6 +183,16 @@ pub struct TrainConfig {
     /// shards (clients map onto shards modulo `num_clients()`), which
     /// is how a 10-shard problem simulates 10^6 registered clients.
     pub population: usize,
+    /// Client drift-correction strategy layered on the local loop
+    /// (`--correction`; see [`crate::client::drift`]). Composes with
+    /// `var_correction` — FeDLRT's variance correction is a fixed
+    /// per-round gradient shift, this is a per-client strategy.
+    /// [`Correction::None`] keeps the legacy loop bitwise.
+    pub correction: Correction,
+    /// Hostile-scenario knobs (`--scenario`; churn, correlated
+    /// dropout, faults, label skew). The default `calm` preset is
+    /// structurally inactive.
+    pub scenario: ScenarioConfig,
 }
 
 impl Default for TrainConfig {
@@ -205,6 +216,8 @@ impl Default for TrainConfig {
             async_cfg: AsyncConfig::default(),
             timing: TimingModel::default(),
             population: 0,
+            correction: Correction::None,
+            scenario: ScenarioConfig::default(),
         }
     }
 }
@@ -233,7 +246,20 @@ impl TrainConfig {
             .set("executor", self.executor.label())
             .set("codec", self.codec.label())
             .set("kernel_threads", self.kernel_threads)
-            .set("schedule", self.schedule.label());
+            .set("schedule", self.schedule.label())
+            .set("correction", self.correction.label());
+        if self.correction.knob() != 0.0 {
+            o.set("correction_knob", self.correction.knob());
+        }
+        if self.scenario.is_active() {
+            o.set("scenario", self.scenario.name)
+                .set("churn", self.scenario.churn)
+                .set("correlated_dropout", self.scenario.correlated_dropout)
+                .set("fault_fraction", self.scenario.fault_fraction);
+            if let Some(alpha) = self.scenario.dirichlet_alpha {
+                o.set("dirichlet_alpha", alpha);
+            }
+        }
         if self.schedule != Schedule::Sync {
             o.set("buffer_k", self.async_cfg.buffer_k)
                 .set("concurrency", self.async_cfg.concurrency)
@@ -289,6 +315,22 @@ mod tests {
         assert_eq!(j.str_or("schedule", ""), "sync");
         // Async knobs stay out of sync-run config echoes.
         assert_eq!(j.usize_or("buffer_k", 777), 777);
+    }
+
+    #[test]
+    fn correction_and_scenario_echoes() {
+        // Defaults: correction label present, scenario knobs absent.
+        let j = TrainConfig::default().to_json();
+        assert_eq!(j.str_or("correction", ""), "none");
+        assert_eq!(j.str_or("scenario", "absent"), "absent");
+        let cfg = TrainConfig {
+            correction: Correction::FedProx { mu: 0.1 },
+            scenario: ScenarioConfig::parse("byzantine").unwrap(),
+            ..TrainConfig::default()
+        };
+        let j = cfg.to_json();
+        assert_eq!(j.str_or("correction", ""), "fedprox");
+        assert_eq!(j.str_or("scenario", ""), "byzantine");
     }
 
     #[test]

@@ -11,12 +11,12 @@
 //!          → s* corrected steps (∇L_c(W_c) + (G_W − G_W,c)) → aggregate
 //! ```
 
+use crate::client::{ClientStates, CorrectionEngine, DriftState, GradMode, LocalUpdate};
 use crate::comm::Network;
 use crate::engine::{ClientExecutor, Executor, RoundPlan};
 use crate::metrics::{RoundMetrics, RunRecord};
 use crate::models::{FedProblem, LrWant, LrWeight, Weights};
 use crate::obsv::{Phase, Recorder};
-use crate::opt::ClientOptimizer;
 use crate::tensor::Matrix;
 use crate::util::rng::Rng;
 use crate::util::Stopwatch;
@@ -78,9 +78,12 @@ pub fn run_dense_obs<P: FedProblem + Sync>(
     cfg.apply_kernel_threads();
     let mut record = RunRecord::new(algo.label(), experiment, c_num, cfg.seed);
     record.config = cfg.to_json();
-    // Per-client local-step counters (see `run_fedlrt`): straggler-
-    // shortened rounds resume their batch schedule instead of skipping.
-    let mut next_step: Vec<u64> = vec![0; c_num];
+    // Cross-round client state (batch cursors + drift variates) and the
+    // drift-correction engine — see `run_fedlrt`. Dense baselines train
+    // in the full matrix space, so drift states never need basis
+    // projection: they persist and fold as-is.
+    let mut states = ClientStates::new(c_num);
+    let mut engine = CorrectionEngine::new(cfg.correction);
 
     for t in 0..cfg.rounds {
         let watch = Stopwatch::start();
@@ -91,6 +94,10 @@ pub fn run_dense_obs<P: FedProblem + Sync>(
         let a_num = plan.len();
         net.set_active_clients(a_num);
         drop(sp_plan);
+        // Batch-schedule cursors for this round's participants, fetched
+        // once so the executor closures borrow immutably.
+        let steps0: Vec<u64> =
+            plan.tasks.iter().map(|task| states.step0(task.client_id)).collect();
         let mut client_wall_s = 0.0;
         let mut client_serial_s = 0.0;
 
@@ -100,20 +107,32 @@ pub fn run_dense_obs<P: FedProblem + Sync>(
         let lr_bc: Vec<Matrix> = lr_w.iter().map(|w| net.broadcast_mat("W_lr", w)).collect();
         let dense_bc: Vec<Matrix> =
             dense.iter().map(|w| net.broadcast_mat("W_dense", w)).collect();
+        // SCAFFOLD's server control variate rides the same broadcast —
+        // full-size here, so its byte cost shows the dense method's
+        // true 2× downlink overhead.
+        let ctrl_bc: Option<DriftState> = engine.broadcast_ctrl(
+            &mut net,
+            &lr_w.iter().map(|w| w.shape()).collect::<Vec<_>>(),
+            &dense.iter().map(|w| w.shape()).collect::<Vec<_>>(),
+        );
         drop(sp_bc);
 
         // FedLin: one extra round trip for the global gradient — the
         // whole correction block is the `variance_correction` phase.
         let sp_vc = obs.span(Phase::VarianceCorrection);
-        let corrections: Option<Vec<(Vec<Matrix>, Vec<Matrix>)>> = match algo {
-            DenseAlgo::FedAvg => None,
+        let (vc_lr_all, vc_dense_all): (Vec<Vec<Option<Matrix>>>, Vec<Vec<Option<Matrix>>>) =
+            match algo {
+            DenseAlgo::FedAvg => (
+                vec![vec![None; lr_w.len()]; a_num],
+                vec![vec![None; dense.len()]; a_num],
+            ),
             DenseAlgo::FedLin => {
                 let w_t = Weights {
                     dense: dense_bc.clone(),
                     lr: lr_bc.iter().cloned().map(LrWeight::Dense).collect(),
                 };
                 let report = executor.execute(&plan, |task| {
-                    problem.grad(task.client_id, &w_t, LrWant::Dense, next_step[task.client_id])
+                    problem.grad(task.client_id, &w_t, LrWant::Dense, steps0[task.ordinal])
                 });
                 obs.record_exec("vc_grad", &plan, &report.timing);
                 client_wall_s += report.wall_s;
@@ -139,61 +158,65 @@ pub fn run_dense_obs<P: FedProblem + Sync>(
                 let mean_d_bc: Vec<Matrix> =
                     mean_d.iter().map(|m| net.broadcast_mat("G_W_dense", m)).collect();
                 net.end_round_trip();
-                Some(
-                    (0..a_num)
-                        .map(|c| {
-                            let v_lr: Vec<Matrix> = mean_lr_bc
-                                .iter()
-                                .zip(&per_client[c].lr)
-                                .map(|(gm, gc)| gm.sub(gc.dense()))
-                                .collect();
-                            let v_d: Vec<Matrix> = mean_d_bc
-                                .iter()
-                                .zip(&per_client[c].dense)
-                                .map(|(gm, gc)| gm.sub(gc))
-                                .collect();
-                            (v_lr, v_d)
-                        })
-                        .collect(),
-                )
+                (0..a_num)
+                    .map(|c| {
+                        let v_lr: Vec<Option<Matrix>> = mean_lr_bc
+                            .iter()
+                            .zip(&per_client[c].lr)
+                            .map(|(gm, gc)| Some(gm.sub(gc.dense())))
+                            .collect();
+                        let v_d: Vec<Option<Matrix>> = mean_d_bc
+                            .iter()
+                            .zip(&per_client[c].dense)
+                            .map(|(gm, gc)| Some(gm.sub(gc)))
+                            .collect();
+                        (v_lr, v_d)
+                    })
+                    .unzip()
             }
         };
         drop(sp_vc);
 
         // Local iterations as executor work items, then aggregate the
         // weighted mean in plan order (executor-independent bitwise).
-        // The client's weight set is assembled once and trained in
-        // place — the seed re-cloned every n×n matrix into a fresh
-        // `Weights` on every local iteration.
+        // The loop itself lives in `client::LocalUpdate` (GradMode::Dense
+        // keeps the legacy lr-then-dense step order); drift states need
+        // no space mapping here, so stored clones pass straight through.
         let sp_local = obs.span(Phase::ClientTrain);
+        let correction = engine.kind();
+        let drift_pre: Vec<Option<DriftState>> = if engine.is_stateful() {
+            plan.tasks.iter().map(|task| states.drift_cloned(task.client_id)).collect()
+        } else {
+            vec![None; a_num]
+        };
         let report = executor.execute(&plan, |task| {
-            let c = task.client_id;
-            let step0_c = next_step[c];
             let mut w_c = Weights {
                 dense: dense_bc.clone(),
                 lr: lr_bc.iter().cloned().map(LrWeight::Dense).collect(),
             };
-            let mut opt_lr: Vec<ClientOptimizer> =
-                (0..w_c.lr.len()).map(|_| ClientOptimizer::new(cfg.opt)).collect();
-            let mut opt_d: Vec<ClientOptimizer> =
-                (0..w_c.dense.len()).map(|_| ClientOptimizer::new(cfg.opt)).collect();
-            for s in 0..task.local_iters {
-                let g = problem.grad(c, &w_c, LrWant::Dense, step0_c + s as u64);
-                for l in 0..w_c.lr.len() {
-                    let corr = corrections.as_ref().map(|cs| &cs[task.ordinal].0[l]);
-                    opt_lr[l].step(w_c.lr[l].as_dense_mut(), g.lr[l].dense(), lr_t, corr);
-                }
-                for (dl, w) in w_c.dense.iter_mut().enumerate() {
-                    let corr = corrections.as_ref().map(|cs| &cs[task.ordinal].1[dl]);
-                    opt_d[dl].step(w, &g.dense[dl], lr_t, corr);
-                }
-            }
+            let driver = LocalUpdate {
+                opt: cfg.opt,
+                lr_t,
+                iters: task.local_iters,
+                step0: steps0[task.ordinal],
+                mode: GradMode::Dense,
+                vc_lr: &vc_lr_all[task.ordinal],
+                vc_dense: &vc_dense_all[task.ordinal],
+                g_bar: None,
+                capture_first_grad: false,
+                correction,
+                drift_in: drift_pre[task.ordinal].as_ref(),
+                ctrl: ctrl_bc.as_ref(),
+                fault: task.fault,
+                fault_seed: task.seed,
+            };
+            let out = driver.run(problem, task.client_id, &mut w_c);
             let Weights { dense: dense_c, lr } = w_c;
             let lr_c: Vec<Matrix> = lr.into_iter().map(|lw| match lw {
                 LrWeight::Dense(m) => m,
                 LrWeight::Factored(_) => unreachable!("dense baseline weights"),
             }).collect();
-            (lr_c, dense_c)
+            (lr_c, dense_c, out.drift_out, out.ctrl_delta)
         });
         obs.record_exec("local", &plan, &report.timing);
         client_wall_s += report.wall_s;
@@ -205,21 +228,57 @@ pub fn run_dense_obs<P: FedProblem + Sync>(
         let mut dense_accum: Vec<Matrix> =
             dense.iter().map(|w| Matrix::zeros(w.rows(), w.cols())).collect();
         // Each client's trained weights upload through the codec; the
-        // server averages the decoded tensors in plan order.
-        for (task, (lr_c, dense_c)) in plan.tasks.iter().zip(&report.results) {
+        // server averages the decoded tensors in plan order. Drift
+        // states persist as-is (full matrix space, no basis to track);
+        // SCAFFOLD deltas bill uplink bytes and fold below.
+        let mut ctrl_delta_sum: Option<DriftState> = None;
+        for (task, (lr_c, dense_c, drift_out, ctrl_delta)) in
+            plan.tasks.iter().zip(&report.results)
+        {
             for (l, w) in lr_c.iter().enumerate() {
                 lr_accum[l].axpy(task.weight, &net.aggregate_mat("W_lr", w));
             }
             for (dl, w) in dense_c.iter().enumerate() {
                 dense_accum[dl].axpy(task.weight, &net.aggregate_mat("W_dense", w));
             }
+            if let Some(st) = drift_out {
+                states.set_drift(task.client_id, st.clone());
+            }
+            if let Some(delta) = ctrl_delta {
+                let lr: Vec<Matrix> =
+                    delta.lr.iter().map(|m| net.aggregate_mat("ctrl", m)).collect();
+                let dn: Vec<Matrix> =
+                    delta.dense.iter().map(|m| net.aggregate_mat("ctrl_dense", m)).collect();
+                match ctrl_delta_sum.as_mut() {
+                    Some(sum) => {
+                        for (a, b) in sum.lr.iter_mut().zip(&lr) {
+                            a.axpy(1.0, b);
+                        }
+                        for (a, b) in sum.dense.iter_mut().zip(&dn) {
+                            a.axpy(1.0, b);
+                        }
+                    }
+                    None => ctrl_delta_sum = Some(DriftState { lr, dense: dn }),
+                }
+            }
         }
         net.end_round_trip();
-        for task in &plan.tasks {
-            next_step[task.client_id] += task.local_iters as u64;
-        }
+        states.advance(&plan);
         lr_w = lr_accum;
         dense = dense_accum;
+        // SCAFFOLD server fold: c ← c + (1/N) Σ δ_c over the full
+        // population (non-participants contribute zero deltas).
+        if let Some(sum) = ctrl_delta_sum {
+            let inv = 1.0 / c_num as f64;
+            let mut ctrl = engine.ctrl().expect("broadcast initialized ctrl").clone();
+            for (a, b) in ctrl.lr.iter_mut().zip(&sum.lr) {
+                a.axpy(inv, b);
+            }
+            for (a, b) in ctrl.dense.iter_mut().zip(&sum.dense) {
+                a.axpy(inv, b);
+            }
+            engine.set_ctrl(ctrl);
+        }
         drop(sp_agg);
 
         // Metrics.

@@ -19,14 +19,14 @@
 //! the drift/accuracy gap FeDLRT's shared-basis design eliminates.
 //! This is the executable counterpart of Table 1's FeDLR row.
 
+use crate::client::{ClientStates, CorrectionEngine, DriftState, GradMode, LocalUpdate};
 use crate::comm::Network;
 use crate::engine::{ClientExecutor, Executor, RoundPlan};
 use crate::linalg::svd;
 use crate::lowrank::LowRank;
 use crate::metrics::{RoundMetrics, RunRecord};
-use crate::models::{FedProblem, LrWant, LrWeight, Weights};
+use crate::models::{FedProblem, LrWeight, Weights};
 use crate::obsv::{Phase, Recorder};
-use crate::opt::ClientOptimizer;
 use crate::tensor::Matrix;
 use crate::util::rng::Rng;
 use crate::util::Stopwatch;
@@ -67,9 +67,13 @@ pub fn run_fedlr_obs<P: FedProblem + Sync>(
     cfg.apply_kernel_threads();
     let mut record = RunRecord::new("fedlr", experiment, c_num, cfg.seed);
     record.config = cfg.to_json();
-    // Per-client local-step counters (see `run_fedlrt`): straggler-
-    // shortened rounds resume their batch schedule instead of skipping.
-    let mut next_step: Vec<u64> = vec![0; c_num];
+    // Cross-round client state (batch cursors + drift variates) and the
+    // drift-correction engine — see `run_fedlrt`. FeDLR clients train
+    // the reconstructed *dense* matrix, so drift states live in the
+    // fixed m×n space and never need basis projection (the per-round
+    // SVD compresses the weights, not the training space).
+    let mut states = ClientStates::new(c_num);
+    let mut engine = CorrectionEngine::new(cfg.correction);
 
     for t in 0..cfg.rounds {
         let watch = Stopwatch::start();
@@ -79,6 +83,10 @@ pub fn run_fedlr_obs<P: FedProblem + Sync>(
         let plan = RoundPlan::build(cfg, c_num, t, |c| problem.client_weight(c));
         net.set_active_clients(plan.len());
         drop(sp_plan);
+        // Batch-schedule cursors for this round's participants, fetched
+        // once so the executor closure borrows immutably.
+        let steps0: Vec<u64> =
+            plan.tasks.iter().map(|task| states.step0(task.client_id)).collect();
 
         // Server-side compression for the downlink (full n×n SVD!).
         let sp_svd = obs.span(Phase::TruncateSvd);
@@ -95,23 +103,46 @@ pub fn run_fedlr_obs<P: FedProblem + Sync>(
         let q_bc = net.broadcast_mat("Q", &q);
         let w_compressed =
             crate::tensor::matmul_nt(&crate::tensor::matmul(&p_bc, &Matrix::diag(&sig_bc)), &q_bc);
+        // SCAFFOLD's server control variate rides the downlink at full
+        // size (the clients train dense), erasing FeDLR's O(nr)
+        // communication advantage — measured, not assumed.
+        let ctrl_bc: Option<DriftState> =
+            engine.broadcast_ctrl(&mut net, &[(m, n)], &[]);
         drop(sp_bc);
 
         // Clients: reconstruct, dense local training, compress upload —
         // one hermetic work item per client.
         let sp_train = obs.span(Phase::ClientTrain);
+        let correction = engine.kind();
+        let drift_pre: Vec<Option<DriftState>> = if engine.is_stateful() {
+            plan.tasks.iter().map(|task| states.drift_cloned(task.client_id)).collect()
+        } else {
+            vec![None; plan.len()]
+        };
         let report = executor.execute(&plan, |task| {
-            // One weight set per client per round, trained in place —
-            // the seed cloned the full n×n matrix into a fresh
-            // `Weights` on every local iteration.
+            // One weight set per client per round, trained in place by
+            // the shared `client::LocalUpdate` driver (GradMode::Dense —
+            // the seed's loop bitwise). Faults corrupt the dense matrix
+            // *before* the on-device compression, like a real device.
             let mut wts =
                 Weights { dense: vec![], lr: vec![LrWeight::Dense(w_compressed.clone())] };
-            let mut opt = ClientOptimizer::new(cfg.opt);
-            let step0_c = next_step[task.client_id];
-            for s in 0..task.local_iters {
-                let g = problem.grad(task.client_id, &wts, LrWant::Dense, step0_c + s as u64);
-                opt.step(wts.lr[0].as_dense_mut(), g.lr[0].dense(), lr_t, None);
-            }
+            let driver = LocalUpdate {
+                opt: cfg.opt,
+                lr_t,
+                iters: task.local_iters,
+                step0: steps0[task.ordinal],
+                mode: GradMode::Dense,
+                vc_lr: &[],
+                vc_dense: &[],
+                g_bar: None,
+                capture_first_grad: false,
+                correction,
+                drift_in: drift_pre[task.ordinal].as_ref(),
+                ctrl: ctrl_bc.as_ref(),
+                fault: task.fault,
+                fault_seed: task.seed,
+            };
+            let out = driver.run(problem, task.client_id, &mut wts);
             let w_c = match wts.lr.pop() {
                 Some(LrWeight::Dense(m)) => m,
                 _ => unreachable!("dense client state"),
@@ -121,7 +152,7 @@ pub fn run_fedlr_obs<P: FedProblem + Sync>(
             let theta_c =
                 cfg.rank.tau * dec_c.sigma.iter().map(|x| x * x).sum::<f64>().sqrt();
             let r_up = dec_c.rank_for_tolerance(theta_c).clamp(1, cfg.rank.max_rank);
-            dec_c.truncate(r_up)
+            (dec_c.truncate(r_up), out.drift_out, out.ctrl_delta)
         });
         obs.record_exec("local", &plan, &report.timing);
         let client_wall_s = report.wall_s;
@@ -133,7 +164,10 @@ pub fn run_fedlr_obs<P: FedProblem + Sync>(
         // old accounting charged everyone a uniform upper bound); the
         // server reconstructs from the decoded factors in plan order.
         let mut w_next = Matrix::zeros(m, n);
-        for (task, (pc, sc, qc)) in plan.tasks.iter().zip(&report.results) {
+        let mut ctrl_delta_sum: Option<Matrix> = None;
+        for (task, ((pc, sc, qc), drift_out, ctrl_delta)) in
+            plan.tasks.iter().zip(&report.results)
+        {
             let mut parts = net
                 .aggregate_batch("factor_triple_c", &[pc.data(), sc.as_slice(), qc.data()])
                 .into_iter();
@@ -143,12 +177,30 @@ pub fn run_fedlr_obs<P: FedProblem + Sync>(
             let w_c_approx =
                 crate::tensor::matmul_nt(&crate::tensor::matmul(&pc_d, &Matrix::diag(&sc_d)), &qc_d);
             w_next.axpy(task.weight, &w_c_approx);
+            // Drift states persist as-is (fixed m×n space); SCAFFOLD
+            // deltas go up *uncompressed* — the variate is not low rank.
+            if let Some(st) = drift_out {
+                states.set_drift(task.client_id, st.clone());
+            }
+            if let Some(delta) = ctrl_delta {
+                let dec = net.aggregate_mat("ctrl", &delta.lr[0]);
+                match ctrl_delta_sum.as_mut() {
+                    Some(sum) => sum.axpy(1.0, &dec),
+                    None => ctrl_delta_sum = Some(dec),
+                }
+            }
         }
         net.end_round_trip();
-        for task in &plan.tasks {
-            next_step[task.client_id] += task.local_iters as u64;
-        }
+        states.advance(&plan);
         w = w_next;
+        // SCAFFOLD server fold: c ← c + (1/N) Σ δ_c over the full
+        // population (non-participants contribute zero deltas).
+        if let Some(sum) = ctrl_delta_sum {
+            let inv = 1.0 / c_num as f64;
+            let mut ctrl = engine.ctrl().expect("broadcast initialized ctrl").clone();
+            ctrl.lr[0].axpy(inv, &sum);
+            engine.set_ctrl(ctrl);
+        }
         drop(sp_agg);
 
         // Metrics — rank reported as the numerical rank of the average

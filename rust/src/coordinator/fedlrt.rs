@@ -24,13 +24,15 @@
 //! the paper trains "the fully connected head" with FeDLRT and the rest
 //! conventionally.
 
+use crate::client::{
+    change_coords, ClientStates, CorrectionEngine, DriftState, GradMode, LocalUpdate,
+};
 use crate::comm::Network;
 use crate::engine::{ClientExecutor, Executor, RoundPlan};
 use crate::lowrank::{augment_basis_ws, truncate_ws, AugmentedBasis, LowRank};
 use crate::metrics::{RoundMetrics, RunRecord};
 use crate::models::{FedProblem, LrGrad, LrWant, LrWeight, Weights};
 use crate::obsv::{Phase, Recorder};
-use crate::opt::ClientOptimizer;
 use crate::tensor::{Matrix, Workspace};
 use crate::util::rng::Rng;
 use crate::util::Stopwatch;
@@ -88,11 +90,16 @@ pub fn run_fedlrt_obs<P: FedProblem + Sync>(
     let algo = format!("fedlrt_{}", cfg.var_correction.label());
     let mut record = RunRecord::new(&algo, experiment, c_num, cfg.seed);
     record.config = cfg.to_json();
-    // Per-client local-step counters: each client's batch schedule
-    // continues where *it* left off, so straggler-shortened rounds and
-    // partial participation never skip mini-batches (with uniform full
-    // participation this is exactly the old `t · s*`).
-    let mut next_step: Vec<u64> = vec![0; c_num];
+    // Cross-round client state: batch-schedule cursors (each client's
+    // mini-batch stream resumes where *it* left off, so straggler-
+    // shortened rounds and partial participation never skip batches)
+    // plus FedDyn/SCAFFOLD drift variates, both behind the shared
+    // client-state layer.
+    let mut states = ClientStates::new(c_num);
+    // Drift-correction engine: normalized strategy kind + the SCAFFOLD
+    // server control variate. `Correction::None` keeps every hook
+    // structurally disabled (bitwise-legacy rounds).
+    let mut engine = CorrectionEngine::new(cfg.correction);
 
     for t in 0..cfg.rounds {
         let watch = Stopwatch::start();
@@ -106,6 +113,11 @@ pub fn run_fedlrt_obs<P: FedProblem + Sync>(
         let a_num = plan.len();
         net.set_active_clients(a_num);
         let weights: Vec<f64> = plan.tasks.iter().map(|task| task.weight).collect();
+        // Batch cursors fetched once per round (they only advance at
+        // round end), indexed by task ordinal — executor closures take
+        // immutable borrows only.
+        let steps0: Vec<u64> =
+            plan.tasks.iter().map(|task| states.step0(task.client_id)).collect();
         drop(sp_plan);
         let mut client_wall_s = 0.0;
         let mut client_serial_s = 0.0;
@@ -141,7 +153,7 @@ pub fn run_fedlrt_obs<P: FedProblem + Sync>(
             lr: bc.iter().cloned().map(LrWeight::Factored).collect(),
         };
         let report = executor.execute(&plan, |task| {
-            problem.grad(task.client_id, &w_t, LrWant::Factors, next_step[task.client_id])
+            problem.grad(task.client_id, &w_t, LrWant::Factors, steps0[task.ordinal])
         });
         obs.record_exec("grad", &plan, &report.timing);
         drop(sp_train);
@@ -239,6 +251,15 @@ pub fn run_fedlrt_obs<P: FedProblem + Sync>(
         } else {
             Vec::new()
         };
+        // SCAFFOLD only: the server control variate rides with the Ū,V̄
+        // broadcast, billed through the codec in the *non-augmented*
+        // r-space (r² floats per layer); the coordinator embeds the
+        // decoded copy into the augmented space clients train in.
+        let ctrl_bc: Option<DriftState> = engine.broadcast_ctrl(
+            &mut net,
+            &factors.iter().map(|f| (f.rank(), f.rank())).collect::<Vec<_>>(),
+            &dense.iter().map(|d| (d.rows(), d.cols())).collect::<Vec<_>>(),
+        );
         net.end_round_trip();
         for buf in g_s_mean {
             ws.give_mat(buf);
@@ -282,7 +303,7 @@ pub fn run_fedlrt_obs<P: FedProblem + Sync>(
                     lr: augs_c.iter().map(|a| LrWeight::Factored(a.as_factorization())).collect(),
                 };
                 let report = executor.execute(&plan, |task| {
-                    problem.grad(task.client_id, &w_aug, LrWant::Coeff, next_step[task.client_id])
+                    problem.grad(task.client_id, &w_aug, LrWant::Coeff, steps0[task.ordinal])
                 });
                 obs.record_exec("vc_grad", &plan, &report.timing);
                 client_wall_s += report.wall_s;
@@ -341,9 +362,31 @@ pub fn run_fedlrt_obs<P: FedProblem + Sync>(
         // same optimizer steps on either path — regression-tested by
         // `fast_path_trains_dense_params` below.
         let sp_local = obs.span(Phase::ClientTrain);
+        // Per-ordinal drift inputs, mapped into the augmented coefficient
+        // space before the executor takes its immutable borrows: stored
+        // states live in the current non-augmented r-space (see the
+        // truncation step below), so entering the round is a zero-padding
+        // embed — Lemma 1's free augmentation applies to the variates too.
+        let correction = engine.kind();
+        let embed_aug = |st: &DriftState| DriftState {
+            lr: st
+                .lr
+                .iter()
+                .enumerate()
+                .map(|(l, m)| m.embed(augs_c[l].rank(), augs_c[l].rank()))
+                .collect(),
+            dense: st.dense.clone(),
+        };
+        let drift_pre: Vec<Option<DriftState>> = if engine.is_stateful() {
+            plan.tasks
+                .iter()
+                .map(|task| states.drift_cloned(task.client_id).map(|st| embed_aug(&st)))
+                .collect()
+        } else {
+            vec![None; a_num]
+        };
+        let ctrl_aug: Option<DriftState> = ctrl_bc.as_ref().map(|c| embed_aug(c));
         let report = executor.execute(&plan, |task| {
-            let c = task.client_id;
-            let step0_c = next_step[c];
             let mut w_c = Weights {
                 dense: dense_bc.clone(),
                 lr: augs_c
@@ -357,55 +400,26 @@ pub fn run_fedlrt_obs<P: FedProblem + Sync>(
                     })
                     .collect(),
             };
-            let mut g_coeff: Vec<Matrix> =
-                augs_c.iter().map(|a| Matrix::zeros(a.rank(), a.rank())).collect();
-            let mut g_dense: Vec<Matrix> =
-                dense.iter().map(|d| Matrix::zeros(d.rows(), d.cols())).collect();
-            let mut opt_s: Vec<ClientOptimizer> =
-                (0..num_lr).map(|_| ClientOptimizer::new(cfg.opt)).collect();
-            let mut opt_d: Vec<ClientOptimizer> =
-                (0..dense.len()).map(|_| ClientOptimizer::new(cfg.opt)).collect();
-            let mut first_loss = 0.0;
-            for s in 0..task.local_iters {
-                let step = step0_c + s as u64;
-                let loss = match problem.grad_coeff_into(c, &w_c, step, &mut g_coeff, &mut g_dense)
-                {
-                    Some(l0) => l0,
-                    None => {
-                        let g = problem.grad(c, &w_c, LrWant::Coeff, step);
-                        for (buf, gl) in g_coeff.iter_mut().zip(&g.lr) {
-                            buf.copy_from(gl.coeff());
-                        }
-                        for (buf, gd) in g_dense.iter_mut().zip(&g.dense) {
-                            buf.copy_from(gd);
-                        }
-                        g.loss
-                    }
-                };
-                if s == 0 {
-                    first_loss = loss;
-                }
-                for (dl, gd) in g_dense.iter().enumerate() {
-                    opt_d[dl].step(
-                        &mut w_c.dense[dl],
-                        gd,
-                        lr_t,
-                        dense_corrections[task.ordinal][dl].as_ref(),
-                    );
-                }
-                for l in 0..num_lr {
-                    let fac_c = w_c.lr[l].as_factored_mut();
-                    opt_s[l].step(
-                        &mut fac_c.s,
-                        &g_coeff[l],
-                        lr_t,
-                        corrections[task.ordinal][l].as_ref(),
-                    );
-                }
-            }
+            let driver = LocalUpdate {
+                opt: cfg.opt,
+                lr_t,
+                iters: task.local_iters,
+                step0: steps0[task.ordinal],
+                mode: GradMode::Coeff,
+                vc_lr: &corrections[task.ordinal],
+                vc_dense: &dense_corrections[task.ordinal],
+                g_bar: None,
+                capture_first_grad: false,
+                correction,
+                drift_in: drift_pre[task.ordinal].as_ref(),
+                ctrl: ctrl_aug.as_ref(),
+                fault: task.fault,
+                fault_seed: task.seed,
+            };
+            let out = driver.run(problem, task.client_id, &mut w_c);
             let s_c: Vec<Matrix> =
                 w_c.lr.iter().map(|lw| lw.as_factored().s.clone()).collect();
-            (s_c, w_c.dense, first_loss)
+            (s_c, w_c.dense, out.first_loss, out.drift_out, out.ctrl_delta)
         });
         obs.record_exec("local", &plan, &report.timing);
         drop(sp_local);
@@ -426,7 +440,15 @@ pub fn run_fedlrt_obs<P: FedProblem + Sync>(
         // trajectory whenever `client_weight` is non-uniform (e.g.
         // Dirichlet-sized MLP shards).
         let mut local_loss_w = 0.0;
-        for (task, (s_c, dense_c, first_loss)) in plan.tasks.iter().zip(&report.results) {
+        // Stateful corrections: participants' post-round variates (in
+        // the augmented space — applied to the store only after the
+        // basis-change projection below), and the codec-decoded sum of
+        // SCAFFOLD control deltas.
+        let mut drift_staged: Vec<(usize, DriftState)> = Vec::new();
+        let mut ctrl_delta_sum: Option<DriftState> = None;
+        for (task, (s_c, dense_c, first_loss, drift_out, ctrl_delta)) in
+            plan.tasks.iter().zip(&report.results)
+        {
             local_loss_w += task.weight * *first_loss;
             for l in 0..num_lr {
                 s_accum[l].axpy(task.weight, &net.aggregate_mat("S_tilde_c", &s_c[l]));
@@ -434,20 +456,52 @@ pub fn run_fedlrt_obs<P: FedProblem + Sync>(
             for (dl, d) in dense_c.iter().enumerate() {
                 dense_accum[dl].axpy(task.weight, &net.aggregate_mat("dense_w", d));
             }
+            if let Some(st) = drift_out {
+                drift_staged.push((task.client_id, st.clone()));
+            }
+            if let Some(delta) = ctrl_delta {
+                // SCAFFOLD uplink: the delta travels through the codec
+                // like every other client→server tensor, so its byte
+                // cost lands in `bytes_up`.
+                let dec = DriftState {
+                    lr: delta.lr.iter().map(|m| net.aggregate_mat("ctrl", m)).collect(),
+                    dense: delta
+                        .dense
+                        .iter()
+                        .map(|m| net.aggregate_mat("ctrl_dense", m))
+                        .collect(),
+                };
+                match &mut ctrl_delta_sum {
+                    Some(acc) => {
+                        for (a, d) in acc.lr.iter_mut().zip(&dec.lr) {
+                            a.axpy(1.0, d);
+                        }
+                        for (a, d) in acc.dense.iter_mut().zip(&dec.dense) {
+                            a.axpy(1.0, d);
+                        }
+                    }
+                    None => ctrl_delta_sum = Some(dec),
+                }
+            }
         }
         net.end_round_trip();
         // Advance each participating client's batch schedule by the
         // iterations it actually ran (stragglers advance less; absentees
         // not at all) — the next round resumes where this one stopped.
-        for task in &plan.tasks {
-            next_step[task.client_id] += task.local_iters as u64;
-        }
+        states.advance(&plan);
         drop(sp_agg2);
 
         // (17)-(18) Automatic compression: 2r×2r SVD + truncation
         // (SVD scratch drawn from the cross-round workspace).
         let sp_svd = obs.span(Phase::TruncateSvd);
         let mut discarded_total = 0.0;
+        // Old r-space bases, kept only while stored drift state must be
+        // carried across this basis refresh.
+        let old_bases: Vec<(Matrix, Matrix)> = if engine.is_stateful() {
+            factors.iter().map(|f| (f.u.clone(), f.v.clone())).collect()
+        } else {
+            Vec::new()
+        };
         for l in 0..num_lr {
             let theta = cfg.rank.tau * s_accum[l].fro_norm();
             let res = truncate_ws(
@@ -466,6 +520,92 @@ pub fn run_fedlrt_obs<P: FedProblem + Sync>(
             ws.give_mat(buf);
         }
         dense = dense_accum;
+        // State-across-basis-refresh rule (DESIGN.md §Client update
+        // layer): stored drift variates always live in the *current*
+        // non-augmented server coefficient space. Project every stored
+        // state old → new, then overwrite participants with their
+        // post-round augmented-space outputs projected aug → new; the
+        // SCAFFOLD server variate absorbs the round's deltas in aug
+        // space and projects the same way.
+        if engine.is_stateful() {
+            states.for_each_drift(|_, st| {
+                for l in 0..num_lr {
+                    st.lr[l] = change_coords(
+                        &factors[l].u,
+                        &factors[l].v,
+                        &old_bases[l].0,
+                        &old_bases[l].1,
+                        &st.lr[l],
+                    );
+                }
+            });
+            for (id, st) in drift_staged {
+                let proj = DriftState {
+                    lr: st
+                        .lr
+                        .iter()
+                        .enumerate()
+                        .map(|(l, m)| {
+                            // Participants trained in the *decoded*
+                            // augmented basis — project out of it.
+                            change_coords(
+                                &factors[l].u,
+                                &factors[l].v,
+                                &augs_c[l].u_tilde,
+                                &augs_c[l].v_tilde,
+                                m,
+                            )
+                        })
+                        .collect(),
+                    dense: st.dense,
+                };
+                states.set_drift(id, proj);
+            }
+            if engine.is_scaffold() {
+                let old_ctrl =
+                    engine.ctrl().expect("ctrl is ensured by the round broadcast").clone();
+                let mut aug_ctrl = DriftState {
+                    lr: old_ctrl
+                        .lr
+                        .iter()
+                        .enumerate()
+                        .map(|(l, m)| m.embed(augs[l].rank(), augs[l].rank()))
+                        .collect(),
+                    dense: old_ctrl.dense,
+                };
+                if let Some(ds) = &ctrl_delta_sum {
+                    // c ← c + (1/N) Σ_{participants} δ_c, N the full
+                    // population (the textbook server update).
+                    let inv = 1.0 / c_num as f64;
+                    for (a, d) in aug_ctrl.lr.iter_mut().zip(&ds.lr) {
+                        a.axpy(inv, d);
+                    }
+                    for (a, d) in aug_ctrl.dense.iter_mut().zip(&ds.dense) {
+                        a.axpy(inv, d);
+                    }
+                }
+                let new_ctrl = DriftState {
+                    lr: aug_ctrl
+                        .lr
+                        .iter()
+                        .enumerate()
+                        .map(|(l, m)| {
+                            // The server variate is exact server state —
+                            // project through the server's exact bases.
+                            change_coords(
+                                &factors[l].u,
+                                &factors[l].v,
+                                &augs[l].u_tilde,
+                                &augs[l].v_tilde,
+                                m,
+                            )
+                        })
+                        .collect(),
+                    dense: aug_ctrl.dense,
+                };
+                engine.set_ctrl(new_ctrl);
+            }
+        }
         drop(sp_svd);
 
         // ---- Metrics ----
@@ -474,7 +614,7 @@ pub fn run_fedlrt_obs<P: FedProblem + Sync>(
         let (comm_floats, comm_per_client) = (comm.total_floats(), comm.per_client_floats());
         let (bytes_down, bytes_up) = (comm.bytes_down, comm.bytes_up);
         let comm_floats_lr =
-            comm.floats_matching(|l| !matches!(l, "dense_w" | "G_dense"));
+            comm.floats_matching(|l| !matches!(l, "dense_w" | "G_dense" | "ctrl_dense"));
         drop(sp_io);
         let sp_eval = obs.span(Phase::Eval);
         let should_eval = t % cfg.eval_every == 0 || t + 1 == cfg.rounds;

@@ -9,6 +9,9 @@
 //! Table 1 for FeDLR-style schemes). Communication also grows: full
 //! factor triples travel upstream instead of small coefficient matrices.
 
+use crate::client::{
+    change_coords, ClientStates, CorrectionEngine, DriftState, GradMode, LocalUpdate,
+};
 use crate::comm::Network;
 use crate::engine::{ClientExecutor, Executor, RoundPlan};
 use crate::linalg::svd;
@@ -16,7 +19,6 @@ use crate::lowrank::{augment_basis, LowRank};
 use crate::metrics::{RoundMetrics, RunRecord};
 use crate::models::{FedProblem, LrGrad, LrWant, LrWeight, Weights};
 use crate::obsv::{Phase, Recorder};
-use crate::opt::ClientOptimizer;
 use crate::tensor::Matrix;
 use crate::util::rng::Rng;
 use crate::util::Stopwatch;
@@ -58,9 +60,10 @@ pub fn run_fedlrt_naive_obs<P: FedProblem + Sync>(
     cfg.apply_kernel_threads();
     let mut record = RunRecord::new("fedlrt_naive", experiment, c_num, cfg.seed);
     record.config = cfg.to_json();
-    // Per-client local-step counters (see `run_fedlrt`): straggler-
-    // shortened rounds resume their batch schedule instead of skipping.
-    let mut next_step: Vec<u64> = vec![0; c_num];
+    // Cross-round client state (batch cursors + drift variates) and the
+    // drift-correction engine — see `run_fedlrt`.
+    let mut states = ClientStates::new(c_num);
+    let mut engine = CorrectionEngine::new(cfg.correction);
 
     for t in 0..cfg.rounds {
         let watch = Stopwatch::start();
@@ -80,25 +83,43 @@ pub fn run_fedlrt_naive_obs<P: FedProblem + Sync>(
         let s_diag: Vec<f64> = (0..fac.rank()).map(|i| fac.s[(i, i)]).collect();
         let s_bc = Matrix::diag(&net.broadcast_vec("S_diag", &s_diag));
         let fac_c = LowRank { u: u_bc, s: s_bc, v: v_bc };
+        // SCAFFOLD only: the server control variate rides with the
+        // factor broadcast, billed in the non-augmented r-space; each
+        // client embeds the decoded copy into its own local augmented
+        // space.
+        let ctrl_bc: Option<DriftState> =
+            engine.broadcast_ctrl(&mut net, &[(fac.rank(), fac.rank())], &[]);
         drop(sp_bc);
 
         // Per-client: local augmentation (own QR on own gradients) and
         // local coefficient iterations — no coordination until upload,
         // so each client is one hermetic work item.
         let sp_train = obs.span(Phase::ClientTrain);
+        let correction = engine.kind();
+        // Batch cursors and drift states pre-fetched per ordinal (the
+        // executor closure takes immutable borrows only); states are in
+        // the server r-space and get embedded into each client's *own*
+        // augmented space inside the task.
+        let steps0: Vec<u64> =
+            plan.tasks.iter().map(|task| states.step0(task.client_id)).collect();
+        let drift_pre: Vec<Option<DriftState>> = if engine.is_stateful() {
+            plan.tasks.iter().map(|task| states.drift_cloned(task.client_id)).collect()
+        } else {
+            vec![None; plan.len()]
+        };
         let report = executor.execute(&plan, |task| {
             let c = task.client_id;
-            let step0_c = next_step[c];
             let w_c = Weights { dense: vec![], lr: vec![LrWeight::Factored(fac_c.clone())] };
-            let g = problem.grad(c, &w_c, LrWant::Factors, step0_c);
+            let g = problem.grad(c, &w_c, LrWant::Factors, steps0[task.ordinal]);
             let (g_u, g_v) = match &g.lr[0] {
                 LrGrad::Factors { g_u, g_v, .. } => (g_u.clone(), g_v.clone()),
                 _ => unreachable!(),
             };
-            // Algorithm 6 lines 7–9: client-local augmentation. The
-            // local factorization is trained in place (only S̃ changes
-            // between iterations) through the allocation-free
-            // `grad_coeff_into` fast path where the problem offers one.
+            // Algorithm 6 lines 7–9: client-local augmentation, then the
+            // shared local-update driver on the local coefficients (the
+            // allocation-free `grad_coeff_into` fast path where the
+            // problem offers one). Drift inputs are zero-padded into the
+            // client's own augmented space.
             let aug = augment_basis(&fac_c, &g_u, &g_v, 2 * fac_c.rank());
             let r2 = aug.rank();
             let mut w_loc = Weights {
@@ -109,24 +130,36 @@ pub fn run_fedlrt_naive_obs<P: FedProblem + Sync>(
                     v: aug.v_tilde,
                 })],
             };
-            let mut g_coeff = vec![Matrix::zeros(r2, r2)];
-            let mut opt = ClientOptimizer::new(cfg.opt);
-            for s in 0..task.local_iters {
-                let step = step0_c + s as u64;
-                if problem.grad_coeff_into(c, &w_loc, step, &mut g_coeff, &mut []).is_none() {
-                    let gg = problem.grad(c, &w_loc, LrWant::Coeff, step);
-                    g_coeff[0].copy_from(gg.lr[0].coeff());
-                }
-                let fac_loc = w_loc.lr[0].as_factored_mut();
-                opt.step(&mut fac_loc.s, &g_coeff[0], lr_t, None);
-            }
+            let embed_loc = |st: &DriftState| DriftState {
+                lr: vec![st.lr[0].embed(r2, r2)],
+                dense: vec![],
+            };
+            let drift_loc = drift_pre[task.ordinal].as_ref().map(|st| embed_loc(st));
+            let ctrl_loc = ctrl_bc.as_ref().map(|ct| embed_loc(ct));
+            let driver = LocalUpdate {
+                opt: cfg.opt,
+                lr_t,
+                iters: task.local_iters,
+                step0: steps0[task.ordinal],
+                mode: GradMode::Coeff,
+                vc_lr: &[],
+                vc_dense: &[],
+                g_bar: None,
+                capture_first_grad: false,
+                correction,
+                drift_in: drift_loc.as_ref(),
+                ctrl: ctrl_loc.as_ref(),
+                fault: task.fault,
+                fault_seed: task.seed,
+            };
+            let out = driver.run(problem, c, &mut w_loc);
             // The client uploads its full factor triple — bases
             // diverged, so the server cannot reuse shared ones.
             let fac_out = match w_loc.lr.pop() {
                 Some(LrWeight::Factored(f)) => f,
                 _ => unreachable!("factored client state"),
             };
-            (fac_out.u, fac_out.s, fac_out.v)
+            (fac_out.u, fac_out.s, fac_out.v, out.drift_out, out.ctrl_delta)
         });
         obs.record_exec("local", &plan, &report.timing);
         let client_wall_s = report.wall_s;
@@ -139,31 +172,71 @@ pub fn run_fedlrt_naive_obs<P: FedProblem + Sync>(
         // *decoded* triples in plan order (executor-independent
         // bitwise).
         let mut w_star = Matrix::zeros(m, n);
-        for (task, (u_t, s_t, v_t)) in plan.tasks.iter().zip(&report.results) {
+        // Stateful corrections: outputs live in each client's local
+        // augmented space, so they carry their decoded basis along for
+        // the projection into the new server basis after the SVD.
+        let mut drift_staged: Vec<(usize, DriftState, Matrix, Matrix)> = Vec::new();
+        let mut ctrl_deltas: Vec<(Matrix, Matrix, Matrix)> = Vec::new();
+        for (task, (u_t, s_t, v_t, drift_out, ctrl_delta)) in
+            plan.tasks.iter().zip(&report.results)
+        {
             let mut parts = net
                 .aggregate_batch("factor_triple_c", &[u_t.data(), s_t.data(), v_t.data()])
                 .into_iter();
             let u_d = Matrix::from_vec(u_t.rows(), u_t.cols(), parts.next().unwrap());
             let s_d = Matrix::from_vec(s_t.rows(), s_t.cols(), parts.next().unwrap());
             let v_d = Matrix::from_vec(v_t.rows(), v_t.cols(), parts.next().unwrap());
+            if let Some(st) = drift_out {
+                drift_staged.push((task.client_id, st.clone(), u_d.clone(), v_d.clone()));
+            }
+            if let Some(delta) = ctrl_delta {
+                // SCAFFOLD uplink, billed through the codec.
+                let dec = net.aggregate_mat("ctrl", &delta.lr[0]);
+                ctrl_deltas.push((dec, u_d.clone(), v_d.clone()));
+            }
             let w_c_dense = LowRank { u: u_d, s: s_d, v: v_d }.to_dense();
             w_star.axpy(task.weight, &w_c_dense);
         }
         net.end_round_trip();
-        for task in &plan.tasks {
-            next_step[task.client_id] += task.local_iters as u64;
-        }
+        states.advance(&plan);
         drop(sp_agg);
 
         // Server: full n×n SVD to recover a low-rank factorization —
         // the O(n³) cost shared bases avoid.
         let sp_svd = obs.span(Phase::TruncateSvd);
+        let old_basis: Option<(Matrix, Matrix)> =
+            engine.is_stateful().then(|| (fac.u.clone(), fac.v.clone()));
         let dec = svd(&w_star);
         let theta = cfg.rank.tau
             * dec.sigma.iter().map(|x| x * x).sum::<f64>().sqrt();
         let r1 = dec.rank_for_tolerance(theta).clamp(1, cfg.rank.max_rank);
         let (u, sig, v) = dec.truncate(r1);
         fac = LowRank { u, s: Matrix::diag(&sig), v };
+        // Carry drift variates across the server's full-SVD basis
+        // refresh: stored states project old → new, participants'
+        // outputs project out of their own (decoded) local bases, and
+        // the SCAFFOLD variate folds per-client deltas the same way.
+        if engine.is_stateful() {
+            let (old_u, old_v) = old_basis.expect("saved above");
+            states.for_each_drift(|_, st| {
+                st.lr[0] = change_coords(&fac.u, &fac.v, &old_u, &old_v, &st.lr[0]);
+            });
+            for (id, st, u_d, v_d) in drift_staged {
+                let proj = change_coords(&fac.u, &fac.v, &u_d, &v_d, &st.lr[0]);
+                states.set_drift(id, DriftState { lr: vec![proj], dense: vec![] });
+            }
+            if engine.is_scaffold() {
+                let old_ctrl =
+                    engine.ctrl().expect("ctrl is ensured by the round broadcast").clone();
+                let mut new_ctrl =
+                    change_coords(&fac.u, &fac.v, &old_u, &old_v, &old_ctrl.lr[0]);
+                let inv = 1.0 / c_num as f64;
+                for (delta, u_d, v_d) in &ctrl_deltas {
+                    new_ctrl.axpy(inv, &change_coords(&fac.u, &fac.v, u_d, v_d, delta));
+                }
+                engine.set_ctrl(DriftState { lr: vec![new_ctrl], dense: vec![] });
+            }
+        }
         drop(sp_svd);
 
         // Metrics.

@@ -11,5 +11,5 @@ pub mod partition;
 pub mod schedule;
 pub mod vision;
 
-pub use partition::{dirichlet_partition, uniform_partition};
+pub use partition::{dirichlet_partition, uniform_partition, DIRICHLET_ALPHA_PRESETS};
 pub use vision::VisionDataset;

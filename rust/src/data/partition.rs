@@ -8,6 +8,11 @@
 
 use crate::util::rng::Rng;
 
+/// The heterogeneity-ablation α grid (extreme / moderate / mild label
+/// skew). `--scenario skew` uses the extreme end; the drift-correction
+/// bench sweeps the full grid.
+pub const DIRICHLET_ALPHA_PRESETS: [f64; 3] = [0.1, 0.3, 1.0];
+
 /// Shuffle indices and split into `c` equal shards (remainder dropped so
 /// all clients hold the same count, matching the paper's uniform setup).
 pub fn uniform_partition(n: usize, c: usize, rng: &mut Rng) -> Vec<Vec<usize>> {
@@ -151,6 +156,27 @@ mod tests {
         all.dedup();
         assert_eq!(all.len(), n, "duplicated indices");
         assert_eq!(n, 300);
+    }
+
+    #[test]
+    fn dirichlet_presets_cover_every_sample_without_dropping_the_tail() {
+        // 307 is deliberately not divisible by the client count: the
+        // uniform partitioner drops the tail, the Dirichlet one must
+        // not — every index appears exactly once at every preset α.
+        let labels: Vec<i32> = (0..307).map(|i| (i % 5) as i32).collect();
+        for &alpha in &DIRICHLET_ALPHA_PRESETS {
+            let mut rng = Rng::new(37);
+            let shards = dirichlet_partition(&labels, 5, 4, alpha, 5, &mut rng);
+            assert_eq!(shards.len(), 4, "α={alpha}");
+            let mut all: Vec<usize> = shards.iter().flatten().copied().collect();
+            assert_eq!(all.len(), 307, "α={alpha}: dropped samples");
+            all.sort_unstable();
+            all.dedup();
+            assert_eq!(all.len(), 307, "α={alpha}: duplicated samples");
+            for s in &shards {
+                assert!(s.len() >= 5, "α={alpha}: starved client ({} samples)", s.len());
+            }
+        }
     }
 
     #[test]

@@ -44,5 +44,8 @@ pub use executor::{
     ClientExecutor, ExecReport, ExecTiming, Executor, ExecutorKind, SerialExecutor, TaskTiming,
     ThreadPoolExecutor,
 };
-pub use plan::{local_iters_for, sample_active, task_seed, ClientTask, RoundPlan};
+pub use plan::{
+    local_iters_for, sample_active, task_seed, ClientFault, ClientTask, RoundPlan,
+    ScenarioConfig,
+};
 pub use registry::{ClientRecord, ClientRegistry};

@@ -12,6 +12,167 @@ use crate::coordinator::config::TrainConfig;
 use crate::engine::dist::Dist;
 use crate::util::rng::Rng;
 
+/// What a faulty client does to the update it uploads. Applied by the
+/// client-update driver (`crate::client::LocalUpdate`) after the local
+/// loop, so the fault corrupts exactly what travels on the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum ClientFault {
+    /// Honest client.
+    #[default]
+    None,
+    /// Additive Gaussian noise `σ·N(0,1)` on every trained entry
+    /// (flaky sensors, lossy local storage).
+    Noisy { sigma: f64 },
+    /// Sign-flip attack: uploads `w₀ − scale·(w − w₀)`, i.e. walks the
+    /// server *against* its own local progress.
+    Byzantine { scale: f64 },
+}
+
+/// Hostile-scenario knobs layered on top of the base participation /
+/// dropout / straggler model. The default (`calm`) is structurally
+/// inactive: every guard below early-returns and round plans are
+/// bitwise-identical to the pre-scenario builder.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScenarioConfig {
+    /// Preset label for config echoes and result rows.
+    pub name: &'static str,
+    /// Epoch-correlated churn: with this probability per
+    /// `(client, epoch)` — an epoch is [`CHURN_EPOCH_ROUNDS`]
+    /// consecutive rounds — the client leaves the fleet for the whole
+    /// epoch (device offline for days, not a per-round coin flip).
+    pub churn: f64,
+    /// Correlated dropout: clients are grouped into
+    /// [`NUM_COHORTS`] cohorts (`client_id % NUM_COHORTS`, e.g. a
+    /// shared cell tower); with this probability per `(round, cohort)`
+    /// the *entire cohort* drops after the broadcast.
+    pub correlated_dropout: f64,
+    /// Fraction of the population that is faulty (stable per client
+    /// across rounds — a compromised device stays compromised).
+    pub fault_fraction: f64,
+    /// What faulty clients do.
+    pub fault: ClientFault,
+    /// Dirichlet concentration for label-skew partitioning; consumed
+    /// by problem builders (`data::partition`), not the round plan.
+    /// `None` = uniform shards.
+    pub dirichlet_alpha: Option<f64>,
+}
+
+/// Rounds per churn epoch (see [`ScenarioConfig::churn`]).
+pub const CHURN_EPOCH_ROUNDS: usize = 5;
+/// Number of correlated-dropout cohorts (see
+/// [`ScenarioConfig::correlated_dropout`]).
+pub const NUM_COHORTS: usize = 8;
+
+const SALT_CHURN: u64 = 0xC4BB_A9E1;
+const SALT_COHORT: u64 = 0xC0C0_D07A;
+const SALT_FAULT: u64 = 0xFA17_717A;
+
+impl Default for ScenarioConfig {
+    fn default() -> Self {
+        ScenarioConfig {
+            name: "calm",
+            churn: 0.0,
+            correlated_dropout: 0.0,
+            fault_fraction: 0.0,
+            fault: ClientFault::None,
+            dirichlet_alpha: None,
+        }
+    }
+}
+
+impl ScenarioConfig {
+    /// Whether any knob is set (used to decide config echoing).
+    pub fn is_active(&self) -> bool {
+        self.churn > 0.0
+            || self.correlated_dropout > 0.0
+            || self.fault_fraction > 0.0
+            || self.dirichlet_alpha.is_some()
+    }
+
+    /// The named preset matrix driven by `--scenario` and the
+    /// drift-correction bench. `calm` is the inactive default.
+    pub fn presets() -> Vec<ScenarioConfig> {
+        let calm = ScenarioConfig::default();
+        vec![
+            calm,
+            // Extreme Dirichlet label skew (α = 0.1): most clients see
+            // one or two classes.
+            ScenarioConfig { name: "skew", dirichlet_alpha: Some(0.1), ..calm },
+            // Devices joining/leaving for whole epochs.
+            ScenarioConfig { name: "churn", churn: 0.3, ..calm },
+            // Whole cohorts vanish together after the broadcast.
+            ScenarioConfig { name: "blackout", correlated_dropout: 0.3, ..calm },
+            // A quarter of the fleet uploads sign-flipped updates.
+            ScenarioConfig {
+                name: "byzantine",
+                fault_fraction: 0.25,
+                fault: ClientFault::Byzantine { scale: 1.0 },
+                ..calm
+            },
+            // A third of the fleet uploads noise-corrupted updates.
+            ScenarioConfig {
+                name: "noisy",
+                fault_fraction: 0.3,
+                fault: ClientFault::Noisy { sigma: 0.3 },
+                ..calm
+            },
+            // Everything at once.
+            ScenarioConfig {
+                name: "hellscape",
+                churn: 0.2,
+                correlated_dropout: 0.2,
+                fault_fraction: 0.2,
+                fault: ClientFault::Byzantine { scale: 1.0 },
+                dirichlet_alpha: Some(0.1),
+            },
+        ]
+    }
+
+    /// Look a preset up by name (the `--scenario` parser).
+    pub fn parse(s: &str) -> Result<ScenarioConfig, String> {
+        Self::presets().into_iter().find(|p| p.name == s).ok_or_else(|| {
+            let names: Vec<&str> = Self::presets().iter().map(|p| p.name).collect();
+            format!("unknown scenario '{s}' (expected one of: {})", names.join("|"))
+        })
+    }
+
+    /// Whether client `c` is faulty, and how. Deterministic per
+    /// `(seed, client)` and stable across rounds.
+    pub fn fault_for(&self, seed: u64, client: usize) -> ClientFault {
+        if self.fault_fraction <= 0.0 {
+            return ClientFault::None;
+        }
+        let mut rng = Rng::new(seed ^ SALT_FAULT).split(client as u64);
+        if rng.uniform() < self.fault_fraction.clamp(0.0, 1.0) {
+            self.fault
+        } else {
+            ClientFault::None
+        }
+    }
+
+    /// Whether client `c` has churned out for the epoch containing
+    /// round `t`.
+    fn churned_out(&self, seed: u64, round: usize, client: usize) -> bool {
+        if self.churn <= 0.0 {
+            return false;
+        }
+        let epoch = (round / CHURN_EPOCH_ROUNDS) as u64;
+        let mut rng = Rng::new(seed ^ SALT_CHURN).split(epoch << 32 | client as u64);
+        rng.uniform() < self.churn.clamp(0.0, 1.0)
+    }
+
+    /// Whether client `c`'s cohort suffers a correlated blackout in
+    /// round `t`.
+    fn cohort_drops(&self, seed: u64, round: usize, client: usize) -> bool {
+        if self.correlated_dropout <= 0.0 {
+            return false;
+        }
+        let cohort = (client % NUM_COHORTS) as u64;
+        let mut rng = Rng::new(seed ^ SALT_COHORT).split((round as u64) << 16 | cohort);
+        rng.uniform() < self.correlated_dropout.clamp(0.0, 1.0)
+    }
+}
+
 /// The clients participating in round `t`: a uniformly random subset of
 /// size `max(1, ⌈fraction·C⌉)`, sorted for deterministic iteration.
 pub fn sample_active(c_num: usize, fraction: f64, seed: u64, round: usize) -> Vec<usize> {
@@ -84,6 +245,9 @@ pub struct ClientTask {
     pub weight: f64,
     /// Per-(run, round, client) RNG stream seed.
     pub seed: u64,
+    /// Fault injected into this client's upload
+    /// ([`ClientFault::None`] for honest clients — the default).
+    pub fault: ClientFault,
 }
 
 impl ClientTask {
@@ -119,19 +283,51 @@ impl RoundPlan {
         client_weight: impl Fn(usize) -> f64,
     ) -> RoundPlan {
         let sampled = sample_active(c_num, cfg.participation, cfg.seed, round);
-        let survivors: Vec<usize> = if cfg.dropout <= 0.0 {
-            sampled
-        } else {
+        // Epoch-correlated churn thins the roster *before* dropout —
+        // churned-out devices never saw the broadcast. Inactive
+        // scenarios skip the filter entirely (bitwise-legacy plans).
+        let present: Vec<usize> = if cfg.scenario.churn > 0.0 {
             let kept: Vec<usize> = sampled
                 .iter()
                 .copied()
-                .filter(|&c| !drops_out(cfg.seed, round, c, cfg.dropout))
+                .filter(|&c| !cfg.scenario.churned_out(cfg.seed, round, c))
                 .collect();
             if kept.is_empty() {
                 vec![sampled[0]]
             } else {
                 kept
             }
+        } else {
+            sampled
+        };
+        let survivors: Vec<usize> = if cfg.dropout <= 0.0 {
+            present
+        } else {
+            let kept: Vec<usize> = present
+                .iter()
+                .copied()
+                .filter(|&c| !drops_out(cfg.seed, round, c, cfg.dropout))
+                .collect();
+            if kept.is_empty() {
+                vec![present[0]]
+            } else {
+                kept
+            }
+        };
+        // Correlated blackout: whole cohorts vanish together.
+        let survivors: Vec<usize> = if cfg.scenario.correlated_dropout > 0.0 {
+            let kept: Vec<usize> = survivors
+                .iter()
+                .copied()
+                .filter(|&c| !cfg.scenario.cohort_drops(cfg.seed, round, c))
+                .collect();
+            if kept.is_empty() {
+                vec![survivors[0]]
+            } else {
+                kept
+            }
+        } else {
+            survivors
         };
         let raw: Vec<f64> = survivors.iter().map(|&c| client_weight(c)).collect();
         let total: f64 = raw.iter().sum();
@@ -144,6 +340,7 @@ impl RoundPlan {
                 local_iters: local_iters_for(cfg, round, c),
                 weight: raw[ordinal] / total,
                 seed: task_seed(cfg.seed, round, c),
+                fault: cfg.scenario.fault_for(cfg.seed, c),
             })
             .collect();
         RoundPlan { round, tasks }
@@ -259,6 +456,140 @@ mod tests {
         // jitter = 0 keeps the untouched early return (no .max(1)).
         let cfg = TrainConfig { straggler_jitter: 0.0, local_iters: 0, ..TrainConfig::default() };
         assert_eq!(local_iters_for(&cfg, 0, 0), 0);
+    }
+
+    #[test]
+    fn default_scenario_leaves_plans_bitwise_unchanged() {
+        // The calm scenario must be structurally inert: same roster,
+        // same weights (bitwise), no fault draws.
+        let cfg = TrainConfig {
+            seed: 11,
+            participation: 0.6,
+            dropout: 0.3,
+            straggler_jitter: 0.5,
+            local_iters: 9,
+            ..TrainConfig::default()
+        };
+        assert_eq!(cfg.scenario, ScenarioConfig::default());
+        for round in 0..10 {
+            let plan = RoundPlan::build(&cfg, 12, round, |c| (c + 1) as f64);
+            // Reproduce the legacy builder by hand: sample + dropout.
+            let sampled = sample_active(12, cfg.participation, cfg.seed, round);
+            let kept: Vec<usize> = sampled
+                .iter()
+                .copied()
+                .filter(|&c| {
+                    let mut rng = Rng::new(cfg.seed ^ 0xD809_0FF1)
+                        .split((round as u64) << 20 | c as u64);
+                    !(rng.uniform() < cfg.dropout)
+                })
+                .collect();
+            let want = if kept.is_empty() { vec![sampled[0]] } else { kept };
+            assert_eq!(plan.client_ids(), want);
+            let total: f64 = want.iter().map(|&c| (c + 1) as f64).sum();
+            for (i, t) in plan.tasks.iter().enumerate() {
+                assert_eq!(t.fault, ClientFault::None);
+                assert_eq!(t.weight.to_bits(), ((want[i] + 1) as f64 / total).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn churn_is_epoch_correlated() {
+        let scenario = ScenarioConfig { churn: 0.4, ..ScenarioConfig::default() };
+        let cfg = TrainConfig { seed: 7, scenario, ..TrainConfig::default() };
+        // Within one epoch a client's presence never flickers.
+        for client in 0..16 {
+            for epoch in 0..6 {
+                let r0 = epoch * CHURN_EPOCH_ROUNDS;
+                let first = scenario.churned_out(cfg.seed, r0, client);
+                for dr in 1..CHURN_EPOCH_ROUNDS {
+                    assert_eq!(first, scenario.churned_out(cfg.seed, r0 + dr, client));
+                }
+            }
+        }
+        // Plans exclude churned clients; some epoch actually churns.
+        let mut saw_churn = false;
+        for round in 0..30 {
+            let plan = RoundPlan::build(&cfg, 16, round, |_| 1.0);
+            for t in &plan.tasks {
+                assert!(!scenario.churned_out(cfg.seed, round, t.client_id));
+            }
+            if plan.len() < 16 {
+                saw_churn = true;
+            }
+        }
+        assert!(saw_churn, "churn 0.4 over 30 rounds must thin some roster");
+    }
+
+    #[test]
+    fn correlated_dropout_removes_whole_cohorts() {
+        let scenario =
+            ScenarioConfig { correlated_dropout: 0.5, ..ScenarioConfig::default() };
+        let cfg = TrainConfig { seed: 13, scenario, ..TrainConfig::default() };
+        let c_num = 4 * NUM_COHORTS;
+        let mut saw_blackout = false;
+        for round in 0..20 {
+            let plan = RoundPlan::build(&cfg, c_num, round, |_| 1.0);
+            let ids = plan.client_ids();
+            // A cohort is either fully present or fully absent (modulo
+            // the keep-one fallback, which only fires on empty rosters).
+            if ids.len() > 1 {
+                let present: Vec<bool> = (0..NUM_COHORTS)
+                    .map(|k| ids.iter().any(|&c| c % NUM_COHORTS == k))
+                    .collect();
+                for &c in &ids {
+                    assert!(present[c % NUM_COHORTS]);
+                }
+                for k in 0..NUM_COHORTS {
+                    let members = (0..c_num).filter(|c| c % NUM_COHORTS == k);
+                    let got: Vec<usize> =
+                        ids.iter().copied().filter(|c| c % NUM_COHORTS == k).collect();
+                    if present[k] {
+                        assert_eq!(got, members.collect::<Vec<_>>());
+                    } else {
+                        assert!(got.is_empty());
+                    }
+                }
+            }
+            if ids.len() < c_num {
+                saw_blackout = true;
+            }
+        }
+        assert!(saw_blackout);
+    }
+
+    #[test]
+    fn fault_assignment_is_stable_and_fractional() {
+        let scenario = ScenarioConfig {
+            fault_fraction: 0.25,
+            fault: ClientFault::Byzantine { scale: 1.0 },
+            ..ScenarioConfig::default()
+        };
+        let faulty: Vec<usize> = (0..400)
+            .filter(|&c| scenario.fault_for(42, c) != ClientFault::None)
+            .collect();
+        // Stable across repeated queries (and hence across rounds).
+        for &c in &faulty {
+            assert_eq!(scenario.fault_for(42, c), ClientFault::Byzantine { scale: 1.0 });
+        }
+        // Roughly a quarter of the fleet (generous tolerance).
+        assert!((60..=140).contains(&faulty.len()), "faulty {}", faulty.len());
+        // Different run seeds compromise different devices.
+        let other: Vec<usize> = (0..400)
+            .filter(|&c| scenario.fault_for(43, c) != ClientFault::None)
+            .collect();
+        assert_ne!(faulty, other);
+    }
+
+    #[test]
+    fn scenario_presets_parse_and_roundtrip() {
+        for p in ScenarioConfig::presets() {
+            assert_eq!(ScenarioConfig::parse(p.name).unwrap(), p);
+        }
+        assert!(ScenarioConfig::parse("nope").is_err());
+        assert!(!ScenarioConfig::default().is_active());
+        assert!(ScenarioConfig::parse("hellscape").unwrap().is_active());
     }
 
     #[test]

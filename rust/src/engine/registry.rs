@@ -36,6 +36,12 @@ pub struct ClientRecord {
     /// current stateless codecs; reserved so codec state has a home
     /// that survives between a client's dispatches).
     pub residual: Option<Vec<f64>>,
+    /// Drift-correction state (FedDyn's `h_c`, SCAFFOLD's `c_c`), boxed
+    /// so honest-majority fleets with no correction pay one pointer per
+    /// record. Lives here — not in coordinator-local maps — so it
+    /// survives lazy materialization at large C and is dropped with the
+    /// shard (see `crate::client::drift`).
+    pub drift: Option<Box<crate::client::DriftState>>,
 }
 
 /// Registry of `population` client records in lazily materialized
@@ -119,6 +125,24 @@ impl ClientRegistry {
             .as_ref()
             .map(|s| &s[id % self.shard_size])
     }
+
+    /// Visit every materialized record in client-id order (tail padding
+    /// excluded). Used by the drift-correction layer to project stored
+    /// client state through a server basis change — only clients that
+    /// ever materialized can hold state, so this is O(touched), not
+    /// O(population).
+    pub fn for_each_materialized(&mut self, mut f: impl FnMut(usize, &mut ClientRecord)) {
+        for (si, slot) in self.shards.iter_mut().enumerate() {
+            if let Some(records) = slot {
+                let lo = si * self.shard_size;
+                for (i, rec) in records.iter_mut().enumerate() {
+                    if lo + i < self.population {
+                        f(lo + i, rec);
+                    }
+                }
+            }
+        }
+    }
 }
 
 impl Drop for ClientRegistry {
@@ -137,9 +161,8 @@ mod tests {
         ClientRecord {
             seed: c as u64 * 7 + 1,
             weight: 1.0 + c as f64,
-            next_step: 0,
             speed: 1.0,
-            residual: None,
+            ..ClientRecord::default()
         }
     }
 

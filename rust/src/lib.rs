@@ -27,6 +27,7 @@
 //! JSONL files the `benches/` drivers emit under `results/`.
 
 pub mod bench;
+pub mod client;
 pub mod comm;
 pub mod coordinator;
 pub mod costmodel;

@@ -26,12 +26,13 @@
 //! ```
 
 use anyhow::Result;
+use fedlrt::client::Correction;
 use fedlrt::comm::CodecKind;
 use fedlrt::coordinator::{
     run_async_obs, run_dense_obs, run_fedlrt_obs, DenseAlgo, RankConfig, Schedule, TrainConfig,
     VarCorrection,
 };
-use fedlrt::engine::{Dist, ExecutorKind, TimingModel};
+use fedlrt::engine::{Dist, ExecutorKind, ScenarioConfig, TimingModel};
 use fedlrt::obsv::Recorder;
 use fedlrt::models::least_squares::LeastSquares;
 use fedlrt::nn::experiment::{print_rows, run_mlp_sweep};
@@ -207,6 +208,20 @@ fn parse_codec(s: &str) -> CodecKind {
     })
 }
 
+fn parse_correction(s: &str) -> Correction {
+    Correction::parse(s).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    })
+}
+
+fn parse_scenario(s: &str) -> ScenarioConfig {
+    ScenarioConfig::parse(s).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    })
+}
+
 fn parse_vc(s: &str) -> VarCorrection {
     match s {
         "none" => VarCorrection::None,
@@ -285,6 +300,16 @@ fn cmd_train(rest: &[String]) -> Result<()> {
         .opt("alpha", "0", "Dirichlet label-skew α (0 = uniform shards)")
         .opt("participation", "1.0", "fraction of clients sampled per round")
         .opt("dropout", "0.0", "per-round client dropout probability")
+        .opt(
+            "correction",
+            "none",
+            "client drift correction: none|fedprox[:mu]|feddyn[:alpha]|scaffold[:strength]",
+        )
+        .opt(
+            "scenario",
+            "calm",
+            "hostile preset: calm|skew|churn|blackout|byzantine|noisy|hellscape",
+        )
         .opt("executor", "serial", "client execution engine: serial|threads|threads:N")
         .opt("codec", "dense", "wire codec: dense|f16|q8")
         .opt(
@@ -301,7 +326,11 @@ fn cmd_train(rest: &[String]) -> Result<()> {
     });
 
     let mut rt = Runtime::new(Runtime::default_dir())?;
+    let scenario = parse_scenario(a.str("scenario"));
+    // Explicit --alpha overrides the scenario's label-skew preset.
     let alpha = a.f64("alpha");
+    let dirichlet_alpha =
+        if alpha > 0.0 { Some(alpha) } else { scenario.dirichlet_alpha };
     let problem = NnProblem::new(
         &mut rt,
         NnOptions {
@@ -312,7 +341,7 @@ fn cmd_train(rest: &[String]) -> Result<()> {
             eval_cap: 1024,
             seed: a.u64("seed"),
             augment: true,
-            dirichlet_alpha: if alpha > 0.0 { Some(alpha) } else { None },
+            dirichlet_alpha,
         },
     )?;
     let rounds = a.usize("rounds");
@@ -335,6 +364,8 @@ fn cmd_train(rest: &[String]) -> Result<()> {
         executor: parse_executor(a.str("executor")),
         codec: parse_codec(a.str("codec")),
         kernel_threads: a.usize("kernel-threads"),
+        correction: parse_correction(a.str("correction")),
+        scenario,
         ..TrainConfig::default()
     };
     apply_async_opts(&mut cfg, &a);
@@ -392,6 +423,16 @@ fn cmd_lsq(rest: &[String]) -> Result<()> {
         .opt("tau", "0.1", "truncation tolerance")
         .opt("seed", "0", "random seed")
         .opt("dropout", "0.0", "per-round client dropout probability")
+        .opt(
+            "correction",
+            "none",
+            "client drift correction: none|fedprox[:mu]|feddyn[:alpha]|scaffold[:strength]",
+        )
+        .opt(
+            "scenario",
+            "calm",
+            "hostile preset: calm|skew|churn|blackout|byzantine|noisy|hellscape",
+        )
         .opt("executor", "serial", "client execution engine: serial|threads|threads:N")
         .opt("codec", "dense", "wire codec: dense|f16|q8")
         .opt(
@@ -437,6 +478,8 @@ fn cmd_lsq(rest: &[String]) -> Result<()> {
         executor: parse_executor(a.str("executor")),
         codec: parse_codec(a.str("codec")),
         kernel_threads: a.usize("kernel-threads"),
+        correction: parse_correction(a.str("correction")),
+        scenario: parse_scenario(a.str("scenario")),
         ..TrainConfig::default()
     };
     apply_async_opts(&mut cfg, &a);

@@ -1,0 +1,420 @@
+//! Regression and property tests for the client-update layer.
+//!
+//! The refactor's contract is bitwise: with `Correction::None` the
+//! shared [`LocalUpdate`] driver must reproduce every coordinator's
+//! pre-refactor hand-rolled loop exactly, and a strategy at its
+//! neutral knob (μ = 0, α = 0, strength = 0) must be structurally
+//! indistinguishable from `none` — across executors and wire codecs.
+//! These tests pin that contract with inline copies of the legacy
+//! loops, plus the SCAFFOLD byte-visibility and hostile-scenario
+//! determinism guarantees from the issue.
+
+use fedlrt::client::{ClientStates, Correction, GradMode, LocalUpdate};
+use fedlrt::comm::{CodecKind, ALL_CODECS};
+use fedlrt::coordinator::{
+    run_async, run_dense, run_fedlr, run_fedlrt, run_fedlrt_naive, DenseAlgo, RankConfig,
+    Schedule, TrainConfig, VarCorrection,
+};
+use fedlrt::engine::{ClientFault, ExecutorKind, RoundPlan, ScenarioConfig};
+use fedlrt::lowrank::LowRank;
+use fedlrt::metrics::RunRecord;
+use fedlrt::models::quadratic::Quadratic;
+use fedlrt::models::{FedProblem, LrWant, LrWeight, Weights};
+use fedlrt::opt::{ClientOptimizer, LrSchedule, OptimizerKind, SgdConfig};
+use fedlrt::tensor::Matrix;
+use fedlrt::util::rng::Rng;
+
+fn sgd() -> OptimizerKind {
+    OptimizerKind::Sgd(SgdConfig::default())
+}
+
+fn neutral_local_update<'a>(
+    mode: GradMode,
+    iters: usize,
+    step0: u64,
+    vc_lr: &'a [Option<Matrix>],
+) -> LocalUpdate<'a> {
+    LocalUpdate {
+        opt: sgd(),
+        lr_t: 2e-2,
+        iters,
+        step0,
+        mode,
+        vc_lr,
+        vc_dense: &[],
+        g_bar: None,
+        capture_first_grad: false,
+        correction: Correction::None,
+        drift_in: None,
+        ctrl: None,
+        fault: ClientFault::None,
+        fault_seed: 0,
+    }
+}
+
+/// The pre-refactor dense-mode client loop (FedAvg/FedLin/FeDLR),
+/// verbatim: one `grad(Dense)` per step, low-rank layers step first.
+fn legacy_dense_loop<P: FedProblem>(
+    problem: &P,
+    client: usize,
+    w_c: &mut Weights,
+    iters: usize,
+    step0: u64,
+    lr_t: f64,
+    vc_lr: &[Option<Matrix>],
+) -> f64 {
+    let mut opts: Vec<ClientOptimizer> =
+        (0..w_c.lr.len()).map(|_| ClientOptimizer::new(sgd())).collect();
+    let mut first_loss = 0.0;
+    for s in 0..iters {
+        let g = problem.grad(client, w_c, LrWant::Dense, step0 + s as u64);
+        if s == 0 {
+            first_loss = g.loss;
+        }
+        for l in 0..w_c.lr.len() {
+            let extra = vc_lr.get(l).and_then(|o| o.as_ref());
+            opts[l].step(w_c.lr[l].as_dense_mut(), g.lr[l].dense(), lr_t, extra);
+        }
+    }
+    first_loss
+}
+
+/// The pre-refactor coefficient-mode client loop (FeDLRT family),
+/// verbatim: `grad_coeff_into` fast path with a `grad(Coeff)` fallback,
+/// dense params step first, then the coefficients.
+fn legacy_coeff_loop<P: FedProblem>(
+    problem: &P,
+    client: usize,
+    w_c: &mut Weights,
+    iters: usize,
+    step0: u64,
+    lr_t: f64,
+    vc_lr: &[Option<Matrix>],
+) -> f64 {
+    let num_lr = w_c.lr.len();
+    let mut g_coeff: Vec<Matrix> = (0..num_lr)
+        .map(|l| {
+            let s = &w_c.lr[l].as_factored().s;
+            Matrix::zeros(s.rows(), s.cols())
+        })
+        .collect();
+    let mut g_dense: Vec<Matrix> =
+        w_c.dense.iter().map(|d| Matrix::zeros(d.rows(), d.cols())).collect();
+    let mut opt_s: Vec<ClientOptimizer> =
+        (0..num_lr).map(|_| ClientOptimizer::new(sgd())).collect();
+    let mut opt_d: Vec<ClientOptimizer> =
+        (0..w_c.dense.len()).map(|_| ClientOptimizer::new(sgd())).collect();
+    let mut first_loss = 0.0;
+    for s in 0..iters {
+        let step = step0 + s as u64;
+        let loss =
+            match problem.grad_coeff_into(client, w_c, step, &mut g_coeff, &mut g_dense) {
+                Some(l0) => l0,
+                None => {
+                    let g = problem.grad(client, w_c, LrWant::Coeff, step);
+                    for (buf, gl) in g_coeff.iter_mut().zip(&g.lr) {
+                        buf.copy_from(gl.coeff());
+                    }
+                    for (buf, gd) in g_dense.iter_mut().zip(&g.dense) {
+                        buf.copy_from(gd);
+                    }
+                    g.loss
+                }
+            };
+        if s == 0 {
+            first_loss = loss;
+        }
+        for (dl, gd) in g_dense.iter().enumerate() {
+            opt_d[dl].step(&mut w_c.dense[dl], gd, lr_t, None);
+        }
+        for l in 0..num_lr {
+            let extra = vc_lr.get(l).and_then(|o| o.as_ref());
+            let fac = w_c.lr[l].as_factored_mut();
+            opt_s[l].step(&mut fac.s, &g_coeff[l], lr_t, extra);
+        }
+    }
+    first_loss
+}
+
+fn assert_weights_eq(a: &Weights, b: &Weights, ctx: &str) {
+    assert_eq!(a.lr.len(), b.lr.len(), "{ctx}: layer count");
+    for (l, (wa, wb)) in a.lr.iter().zip(&b.lr).enumerate() {
+        let (ma, mb) = match (wa, wb) {
+            (LrWeight::Dense(x), LrWeight::Dense(y)) => (x, y),
+            (LrWeight::Factored(x), LrWeight::Factored(y)) => (&x.s, &y.s),
+            _ => panic!("{ctx}: weight kind mismatch at layer {l}"),
+        };
+        for (x, y) in ma.data().iter().zip(mb.data()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: layer {l} diverged");
+        }
+    }
+    for (d, (xa, xb)) in a.dense.iter().zip(&b.dense).enumerate() {
+        for (x, y) in xa.data().iter().zip(xb.data()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: dense {d} diverged");
+        }
+    }
+}
+
+#[test]
+fn local_update_dense_mode_matches_inline_legacy_loop() {
+    let mut rng = Rng::new(101);
+    let prob = Quadratic::random(8, 2, 3, &mut rng);
+    for (&client, &step0) in [0usize, 1, 2].iter().zip(&[0u64, 7, 31]) {
+        // With and without a FedLin-style fixed extra.
+        for vc in [vec![None], vec![Some(Matrix::randn(8, 8, &mut rng))]] {
+            let w0 = Matrix::randn(8, 8, &mut rng);
+            let mut w_legacy =
+                Weights { dense: vec![], lr: vec![LrWeight::Dense(w0.clone())] };
+            let mut w_new = Weights { dense: vec![], lr: vec![LrWeight::Dense(w0)] };
+            let fl_legacy =
+                legacy_dense_loop(&prob, client, &mut w_legacy, 5, step0, 2e-2, &vc);
+            let upd = neutral_local_update(GradMode::Dense, 5, step0, &vc);
+            let out = upd.run(&prob, client, &mut w_new);
+            assert_eq!(fl_legacy.to_bits(), out.first_loss.to_bits());
+            assert!(out.drift_out.is_none() && out.ctrl_delta.is_none());
+            assert_weights_eq(&w_legacy, &w_new, "dense mode");
+        }
+    }
+}
+
+#[test]
+fn local_update_coeff_mode_matches_inline_legacy_loop() {
+    let mut rng = Rng::new(103);
+    let prob = Quadratic::random(8, 2, 3, &mut rng);
+    for (&client, &step0) in [0usize, 2].iter().zip(&[0u64, 13]) {
+        for vc in [vec![None], vec![Some(Matrix::randn(3, 3, &mut rng))]] {
+            let f0 = LowRank::random_init(8, 8, 3, &mut rng);
+            let mut w_legacy =
+                Weights { dense: vec![], lr: vec![LrWeight::Factored(f0.clone())] };
+            let mut w_new = Weights { dense: vec![], lr: vec![LrWeight::Factored(f0)] };
+            let fl_legacy =
+                legacy_coeff_loop(&prob, client, &mut w_legacy, 4, step0, 2e-2, &vc);
+            let upd = neutral_local_update(GradMode::Coeff, 4, step0, &vc);
+            let out = upd.run(&prob, client, &mut w_new);
+            assert_eq!(fl_legacy.to_bits(), out.first_loss.to_bits());
+            assert_weights_eq(&w_legacy, &w_new, "coeff mode");
+        }
+    }
+}
+
+#[test]
+fn client_states_pin_legacy_next_step_counters() {
+    // The refactor replaced each coordinator's `vec![0u64; c]` cursor
+    // array with ClientStates over the sharded registry. Replay the
+    // legacy bookkeeping side by side through plans with sampling,
+    // dropout, and stragglers: every client's step0 must agree at every
+    // round.
+    let c_num = 12;
+    let cfg = TrainConfig {
+        local_iters: 7,
+        participation: 0.6,
+        dropout: 0.2,
+        straggler_jitter: 0.5,
+        seed: 9,
+        ..TrainConfig::default()
+    };
+    let mut legacy = vec![0u64; c_num];
+    let mut states = ClientStates::new(c_num);
+    for round in 0..8 {
+        let plan = RoundPlan::build(&cfg, c_num, round, |_| 1.0);
+        for task in &plan.tasks {
+            assert_eq!(
+                states.step0(task.client_id),
+                legacy[task.client_id],
+                "round {round}, client {}",
+                task.client_id
+            );
+        }
+        // Legacy loops advanced after aggregation, in task order.
+        for task in &plan.tasks {
+            legacy[task.client_id] += task.local_iters as u64;
+        }
+        states.advance(&plan);
+    }
+}
+
+fn quick_cfg(codec: CodecKind, executor: ExecutorKind, correction: Correction) -> TrainConfig {
+    TrainConfig {
+        rounds: 3,
+        local_iters: 3,
+        lr: LrSchedule::Constant(2e-2),
+        var_correction: VarCorrection::Simplified,
+        rank: RankConfig { initial_rank: 2, max_rank: 4, tau: 0.05 },
+        seed: 5,
+        codec,
+        executor,
+        correction,
+        ..TrainConfig::default()
+    }
+}
+
+fn assert_records_identical(a: &RunRecord, b: &RunRecord, ctx: &str) {
+    assert_eq!(a.rounds.len(), b.rounds.len(), "{ctx}: round count");
+    for (x, y) in a.rounds.iter().zip(&b.rounds) {
+        assert_eq!(
+            x.global_loss.to_bits(),
+            y.global_loss.to_bits(),
+            "{ctx}: loss diverged at round {}",
+            x.round
+        );
+        assert_eq!(x.ranks, y.ranks, "{ctx}: ranks diverged at round {}", x.round);
+        assert_eq!(x.comm_floats, y.comm_floats, "{ctx}: floats diverged at {}", x.round);
+        assert_eq!(x.bytes_down, y.bytes_down, "{ctx}: bytes_down diverged at {}", x.round);
+        assert_eq!(x.bytes_up, y.bytes_up, "{ctx}: bytes_up diverged at {}", x.round);
+    }
+}
+
+#[test]
+#[allow(clippy::type_complexity)]
+fn neutral_corrections_are_bitwise_noops_across_coordinators_executors_codecs() {
+    // μ = 0 / α = 0 / strength = 0 must collapse structurally to the
+    // `none` path: identical loss, rank, float, and byte trajectories —
+    // for every coordinator, under both executors, through every codec.
+    let mut rng = Rng::new(201);
+    let prob = Quadratic::random(8, 2, 3, &mut rng);
+    let runners: Vec<(&str, Box<dyn Fn(&TrainConfig) -> RunRecord + '_>)> = vec![
+        ("fedlrt", Box::new(|c: &TrainConfig| run_fedlrt(&prob, c, "noop"))),
+        ("fedlrt_naive", Box::new(|c: &TrainConfig| run_fedlrt_naive(&prob, c, "noop"))),
+        ("fedlr", Box::new(|c: &TrainConfig| run_fedlr(&prob, c, "noop"))),
+        ("fedavg", Box::new(|c: &TrainConfig| run_dense(&prob, c, DenseAlgo::FedAvg, "noop"))),
+        ("fedlin", Box::new(|c: &TrainConfig| run_dense(&prob, c, DenseAlgo::FedLin, "noop"))),
+        ("async", Box::new(|c: &TrainConfig| {
+            let mut c = c.clone();
+            c.schedule = Schedule::FedBuff;
+            c.async_cfg.buffer_k = 3;
+            c.async_cfg.concurrency = 4;
+            run_async(&prob, &c, "noop")
+        })),
+    ];
+    let neutrals = [
+        Correction::FedProx { mu: 0.0 },
+        Correction::FedDyn { alpha: 0.0 },
+        Correction::Scaffold { strength: 0.0 },
+    ];
+    for (name, run) in &runners {
+        for codec in ALL_CODECS {
+            let baseline = run(&quick_cfg(codec, ExecutorKind::Serial, Correction::None));
+            for executor in [ExecutorKind::Serial, ExecutorKind::ThreadPool { threads: 0 }] {
+                for correction in neutrals {
+                    let rec = run(&quick_cfg(codec, executor, correction));
+                    let ctx = format!(
+                        "{name}/{:?}/{:?}/{}",
+                        codec,
+                        executor,
+                        correction.label()
+                    );
+                    assert_records_identical(&baseline, &rec, &ctx);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn active_corrections_change_heterogeneous_trajectories() {
+    // Guard against a strategy silently compiling to a no-op: on a
+    // heterogeneous problem every active correction must move the
+    // trajectory (and still converge to something finite).
+    let mut rng = Rng::new(301);
+    let prob = Quadratic::random(8, 2, 4, &mut rng);
+    let base_cfg = |correction| TrainConfig {
+        rounds: 6,
+        local_iters: 5,
+        lr: LrSchedule::Constant(2e-2),
+        var_correction: VarCorrection::None,
+        rank: RankConfig { initial_rank: 2, max_rank: 4, tau: 0.05 },
+        seed: 11,
+        correction,
+        ..TrainConfig::default()
+    };
+    let none = run_fedlrt(&prob, &base_cfg(Correction::None), "active");
+    for correction in [
+        Correction::FedProx { mu: 0.5 },
+        Correction::FedDyn { alpha: 0.5 },
+        Correction::Scaffold { strength: 1.0 },
+    ] {
+        let rec = run_fedlrt(&prob, &base_cfg(correction), "active");
+        assert!(rec.final_loss().is_finite(), "{} diverged", correction.label());
+        assert_ne!(
+            rec.final_loss().to_bits(),
+            none.final_loss().to_bits(),
+            "{} left the trajectory untouched",
+            correction.label()
+        );
+    }
+}
+
+#[test]
+fn scaffold_control_variates_are_billed_on_the_wire() {
+    // SCAFFOLD's broadcast `c` and uplink `Δc_c` ride the same codecs
+    // as the model payloads, so its overhead must be visible in the
+    // measured byte totals — both directions, sync and async.
+    let mut rng = Rng::new(401);
+    let prob = Quadratic::random(8, 2, 3, &mut rng);
+    let sync_none = run_fedlrt(&prob, &quick_cfg(CodecKind::DenseF32, ExecutorKind::Serial, Correction::None), "bytes");
+    let sync_scaf = run_fedlrt(
+        &prob,
+        &quick_cfg(CodecKind::DenseF32, ExecutorKind::Serial, Correction::Scaffold { strength: 1.0 }),
+        "bytes",
+    );
+    assert!(
+        sync_scaf.total_bytes_down() > sync_none.total_bytes_down(),
+        "scaffold broadcast bytes invisible: {} vs {}",
+        sync_scaf.total_bytes_down(),
+        sync_none.total_bytes_down()
+    );
+    assert!(
+        sync_scaf.total_bytes_up() > sync_none.total_bytes_up(),
+        "scaffold uplink bytes invisible: {} vs {}",
+        sync_scaf.total_bytes_up(),
+        sync_none.total_bytes_up()
+    );
+
+    let async_cfg = |correction| {
+        let mut c = quick_cfg(CodecKind::DenseF32, ExecutorKind::Serial, correction);
+        c.schedule = Schedule::FedBuff;
+        c.async_cfg.buffer_k = 3;
+        c.async_cfg.concurrency = 4;
+        c
+    };
+    let as_none = run_async(&prob, &async_cfg(Correction::None), "bytes");
+    let as_scaf = run_async(&prob, &async_cfg(Correction::Scaffold { strength: 1.0 }), "bytes");
+    assert!(as_scaf.total_bytes_down() > as_none.total_bytes_down());
+    assert!(as_scaf.total_bytes_up() > as_none.total_bytes_up());
+}
+
+#[test]
+fn hostile_scenarios_are_deterministic_and_fault_assignment_is_stable() {
+    // Scenario presets must not break the engine's determinism
+    // contract: identical seeds reproduce bitwise, serial ≡ thread
+    // pool, and a client's fault assignment is a pure function of the
+    // run seed.
+    let scenario = ScenarioConfig::parse("byzantine").unwrap();
+    for client in 0..16 {
+        assert_eq!(
+            scenario.fault_for(7, client),
+            scenario.fault_for(7, client),
+            "fault_for must be stable per (seed, client)"
+        );
+    }
+    assert!(
+        (0..64).any(|c| scenario.fault_for(7, c) != ClientFault::None),
+        "byzantine preset assigned no faults in 64 clients"
+    );
+    let mut rng = Rng::new(501);
+    let prob = Quadratic::random(8, 2, 4, &mut rng);
+    for name in ["skew", "churn", "blackout", "byzantine", "noisy", "hellscape"] {
+        let cfg = |executor| {
+            let mut c = quick_cfg(CodecKind::DenseF32, executor, Correction::None);
+            c.rounds = 4;
+            c.scenario = ScenarioConfig::parse(name).unwrap();
+            c
+        };
+        let a = run_fedlrt(&prob, &cfg(ExecutorKind::Serial), "hostile");
+        let b = run_fedlrt(&prob, &cfg(ExecutorKind::Serial), "hostile");
+        let c = run_fedlrt(&prob, &cfg(ExecutorKind::ThreadPool { threads: 0 }), "hostile");
+        assert_records_identical(&a, &b, &format!("{name}: rerun"));
+        assert_records_identical(&a, &c, &format!("{name}: thread pool"));
+        assert!(a.final_loss().is_finite(), "{name}: loss diverged");
+    }
+}
