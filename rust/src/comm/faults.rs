@@ -1,0 +1,613 @@
+//! Unreliable-transport fault injection: message loss, checksum-detected
+//! corruption, duplication, delay jitter, and the timeout/retry/quorum
+//! policy layered on top.
+//!
+//! The paper's descent guarantees (Thm. 3.2–3.6) assume a lossless,
+//! synchronous transport; this module simulates the regimes where that
+//! assumption breaks while keeping the engine's determinism contract:
+//! every fault decision is a pure function of
+//! `(run seed, round-or-dispatch, client, attempt)` through a salted
+//! RNG stream disjoint from every scheduling/timing stream, so the set
+//! of lost/corrupt/duplicated messages — and therefore the event
+//! timeline and the surviving roster — is identical under any executor
+//! or kernel-thread setting.
+//!
+//! Structure:
+//!
+//! * [`FaultModel`] — the per-link Bernoulli loss / corruption /
+//!   duplication probabilities plus a delay-jitter [`Dist`]. The
+//!   default is structurally inactive: no draws, no wire framing, no
+//!   plan filtering — bitwise-legacy everything.
+//! * [`NetPolicy`] — the server's response: per-round upload deadline
+//!   (`timeout`), bounded retransmission with exponential backoff
+//!   (`retries`), and the sync-round quorum (`quorum` = min surviving
+//!   uploads; below it the round is skipped with state untouched).
+//! * CRC-32 wire framing ([`frame`]/[`verify`]) — the checksum header
+//!   that detects corrupted payloads. CRC-32 detects **every** burst
+//!   error of ≤ 32 bits, in particular any single flipped byte
+//!   (property-tested in `tests/coordinator_props.rs`), so a corrupt
+//!   draw and a checksum rejection are the same event: the Bernoulli
+//!   `corrupt_prob` draw *is* the verify outcome, and the simulation
+//!   can decide fates at plan time without materializing the frame.
+//!   When the fault model is active every transcoded message pays
+//!   [`CHECKSUM_BYTES`] of header on the wire; when inactive the wire
+//!   format (and every byte count) is bitwise-legacy.
+//! * [`sync_gate`] — the sync coordinators' per-round hook: decides
+//!   each participating client's delivery outcome, filters the
+//!   [`RoundPlan`] to the delivered roster (weights renormalized,
+//!   ordinals reassigned), books the drop/corrupt/retransmission
+//!   counters into the [`Network`], and reports whether the round falls
+//!   below quorum. Returns `None` when the transport is structurally
+//!   inactive — the zero-code-path-change legacy gate.
+
+use crate::engine::dist::Dist;
+use crate::engine::plan::{ClientTask, RoundPlan};
+use crate::util::rng::Rng;
+
+use super::{Network, RoundComm};
+
+/// Message-fate RNG salt. Disjoint from every other purpose salt in the
+/// tree (`0x5E1E_C700` sampling, `0x57A6_6000` stragglers, `0xD809_0FF1`
+/// dropout, `0xA11D_A7E5`/`0xC0FF_EE00`/`0x11CC_4A7B`/`0x4E7E_0561`
+/// async timing, `0xD15C_A7C4` client pick, `0xC4BB_A9E1` churn,
+/// `0xC0C0_D07A` cohorts, `0xFA17_717A` fault assignment, `0xFA01_7557`
+/// fault noise) so transport fates never alias a scheduling draw.
+const SALT_NET_FAULT: u64 = 0xBAD0_C0DE;
+
+/// Per-link unreliable-transport model. All probabilities are
+/// per-*attempt* (each retransmission redraws its fate); the default is
+/// structurally inactive.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultModel {
+    /// Bernoulli probability an upload attempt is lost in transit.
+    pub loss_prob: f64,
+    /// Bernoulli probability an attempt arrives with a corrupted
+    /// payload (always detected — see the CRC-32 framing above — and
+    /// treated like a loss by the retry policy, but counted separately).
+    pub corrupt_prob: f64,
+    /// Bernoulli probability a delivered attempt arrives twice (the
+    /// duplicate is deduplicated server-side but its bytes ride the
+    /// wire and are billed as retransmitted traffic).
+    pub dup_prob: f64,
+    /// Extra per-attempt delivery delay in virtual seconds
+    /// (`constant:0` draws nothing).
+    pub delay: Dist,
+}
+
+impl Default for FaultModel {
+    fn default() -> Self {
+        FaultModel {
+            loss_prob: 0.0,
+            corrupt_prob: 0.0,
+            dup_prob: 0.0,
+            delay: Dist::Constant(0.0),
+        }
+    }
+}
+
+impl FaultModel {
+    /// Whether any fault knob is set. `false` = the structurally
+    /// inactive legacy path: no fate draws, no checksum framing, no
+    /// byte-count change anywhere.
+    pub fn is_active(&self) -> bool {
+        self.loss_prob > 0.0
+            || self.corrupt_prob > 0.0
+            || self.dup_prob > 0.0
+            || !matches!(self.delay, Dist::Constant(v) if v == 0.0)
+    }
+
+    /// Draw one attempt's fate from `rng` in a fixed order (loss,
+    /// corruption, duplication, delay) — the stream is message-scoped,
+    /// so the draw order is a per-message contract and enabling one
+    /// knob never shifts another knob's draws across messages.
+    pub fn attempt_fate(&self, rng: &mut Rng) -> AttemptFate {
+        let lost = rng.uniform() < self.loss_prob;
+        let corrupt = rng.uniform() < self.corrupt_prob;
+        let duplicated = rng.uniform() < self.dup_prob;
+        let delay_s = self.delay.sample(rng).max(0.0);
+        AttemptFate { lost, corrupt, duplicated, delay_s }
+    }
+
+    /// One client's delivery outcome for a sync round under `policy`:
+    /// attempts are made until one arrives intact, the retry budget is
+    /// exhausted, or the round deadline passes. `latency` is the link's
+    /// per-message latency (the backoff unit). Pure function of
+    /// `(seed, round, client)` — see [`attempt_rng`].
+    pub fn deliver(
+        &self,
+        policy: &NetPolicy,
+        seed: u64,
+        round: u64,
+        client: u64,
+        latency: f64,
+    ) -> DeliveryOutcome {
+        let mut out = DeliveryOutcome {
+            delivered: false,
+            attempts: 0,
+            wire_copies: 0,
+            lost: 0,
+            corrupt: 0,
+            elapsed_s: 0.0,
+        };
+        for attempt in 0..=policy.retries {
+            if attempt > 0 {
+                // Failure detection + exponential backoff before each
+                // retransmission: latency · 2^(attempt−1).
+                out.elapsed_s += latency * (1u64 << (attempt - 1).min(62)) as f64;
+            }
+            let mut rng = attempt_rng(seed, round, client, attempt);
+            let fate = self.attempt_fate(&mut rng);
+            out.attempts += 1;
+            out.wire_copies += 1 + fate.duplicated as u32;
+            out.elapsed_s += latency + fate.delay_s;
+            if policy.timeout > 0.0 && out.elapsed_s > policy.timeout {
+                // Round deadline passed while this attempt was in
+                // flight: the server has stopped listening.
+                return out;
+            }
+            if fate.lost {
+                out.lost += 1;
+                continue;
+            }
+            if fate.corrupt {
+                out.corrupt += 1;
+                continue;
+            }
+            out.delivered = true;
+            return out;
+        }
+        out
+    }
+}
+
+/// The fate of one delivery attempt.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AttemptFate {
+    pub lost: bool,
+    pub corrupt: bool,
+    pub duplicated: bool,
+    /// Extra delivery delay of this attempt (virtual seconds, ≥ 0).
+    pub delay_s: f64,
+}
+
+/// The message-scoped fate stream for `(seed, round-or-dispatch,
+/// client, attempt)`. The async server draws its retransmission link
+/// time from the same stream *after* the fate (fixed order), so retry
+/// scheduling stays a pure function of metadata.
+pub fn attempt_rng(seed: u64, round: u64, client: u64, attempt: u32) -> Rng {
+    Rng::new(seed ^ SALT_NET_FAULT).split(round).split(client).split(attempt as u64)
+}
+
+/// Everything known about one client's upload delivery in a round.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeliveryOutcome {
+    /// Did any attempt arrive intact before the deadline?
+    pub delivered: bool,
+    /// Transmission attempts made (each is charged one link latency in
+    /// `estimated_comm_time`).
+    pub attempts: u32,
+    /// Payload copies that rode the wire (attempts + duplicates) —
+    /// the billing multiplier for `bytes_retx`.
+    pub wire_copies: u32,
+    /// Attempts lost in transit.
+    pub lost: u32,
+    /// Attempts rejected by the wire checksum.
+    pub corrupt: u32,
+    /// Virtual seconds from first send to the final attempt's arrival
+    /// (backoffs included).
+    pub elapsed_s: f64,
+}
+
+impl DeliveryOutcome {
+    /// Upload messages that never reached the server usefully: lost
+    /// attempts, plus — for an undelivered client — the late/abandoned
+    /// final attempt that was neither lost nor corrupt.
+    pub fn dropped_msgs(&self) -> u64 {
+        let base = self.lost as u64;
+        if self.delivered {
+            base
+        } else {
+            base + (self.attempts - self.lost - self.corrupt) as u64
+        }
+    }
+}
+
+/// Server-side transport policy: deadline, retry budget, sync quorum.
+/// The default is structurally inactive (no deadline, no retries, no
+/// quorum).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct NetPolicy {
+    /// Per-round upload deadline in virtual seconds (0 = none). A sync
+    /// client whose winning attempt lands after the deadline is
+    /// dropped; an async upload attempt slower than the deadline is
+    /// retransmitted.
+    pub timeout: f64,
+    /// Retransmissions allowed after the first attempt, with
+    /// exponential backoff.
+    pub retries: u32,
+    /// Minimum surviving uploads for a sync round to aggregate; below
+    /// it the round is skipped with basis/state untouched. 0 = no
+    /// quorum (but a zero-survivor round is always skipped — averaging
+    /// nothing would zero the model).
+    pub quorum: usize,
+}
+
+impl NetPolicy {
+    /// Whether any policy knob is set (config-echo gate).
+    pub fn is_active(&self) -> bool {
+        self.timeout > 0.0 || self.retries > 0 || self.quorum > 0
+    }
+}
+
+/// Whether the transport layer does anything at all this run: fault
+/// draws happen, frames carry checksums, and sync rounds route through
+/// [`sync_gate`]'s filter. Quorum alone activates it (a quorum check
+/// needs the delivery bookkeeping even over a lossless link).
+pub fn transport_active(fault: &FaultModel, policy: &NetPolicy) -> bool {
+    fault.is_active() || policy.timeout > 0.0 || policy.quorum > 0
+}
+
+// ---------------------------------------------------------------------
+// CRC-32 wire framing (the checksum header).
+// ---------------------------------------------------------------------
+
+/// Wire checksum header length prepended to every framed payload when
+/// the fault model is active.
+pub const CHECKSUM_BYTES: u64 = 4;
+
+/// CRC-32 (IEEE 802.3, reflected polynomial `0xEDB88320`), bitwise
+/// table-free implementation — only fault-path frames pay for it.
+/// Detects every burst error of ≤ 32 bits, hence any single flipped
+/// byte.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc: u32 = !0;
+    for &b in bytes {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+/// Prepend the 4-byte little-endian CRC-32 header.
+pub fn frame(payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(payload.len() + CHECKSUM_BYTES as usize);
+    out.extend_from_slice(&crc32(payload).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Check the header; `Some(payload)` iff the frame is intact.
+pub fn verify(framed: &[u8]) -> Option<&[u8]> {
+    if framed.len() < CHECKSUM_BYTES as usize {
+        return None;
+    }
+    let (hdr, payload) = framed.split_at(CHECKSUM_BYTES as usize);
+    let want = u32::from_le_bytes([hdr[0], hdr[1], hdr[2], hdr[3]]);
+    (crc32(payload) == want).then_some(payload)
+}
+
+// ---------------------------------------------------------------------
+// Per-round stats surfaced in RoundMetrics.
+// ---------------------------------------------------------------------
+
+/// Fault/skip counters of one aggregation round, copied into
+/// [`crate::metrics::RoundMetrics`] (all-default when the transport is
+/// clean, and then omitted from the JSON row).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultRoundStats {
+    /// True when a sync round was skipped below the upload quorum (or
+    /// on total blackout); the model/basis/state were left untouched.
+    pub skipped: bool,
+    /// Upload messages lost in transit or abandoned past the deadline.
+    pub msgs_dropped: u64,
+    /// Upload arrivals rejected by the wire checksum.
+    pub msgs_corrupt: u64,
+    /// Retransmitted/duplicate bytes beyond each consumed upload's
+    /// first copy.
+    pub bytes_retx: u64,
+}
+
+impl FaultRoundStats {
+    /// Lift the round's comm counters (skip flag stays false).
+    pub fn from_comm(c: &RoundComm) -> FaultRoundStats {
+        FaultRoundStats {
+            skipped: false,
+            msgs_dropped: c.msgs_dropped,
+            msgs_corrupt: c.msgs_corrupt,
+            bytes_retx: c.bytes_retx,
+        }
+    }
+
+    /// Same, for a round recorded as skipped.
+    pub fn skipped_from_comm(c: &RoundComm) -> FaultRoundStats {
+        FaultRoundStats { skipped: true, ..FaultRoundStats::from_comm(c) }
+    }
+
+    /// Anything worth emitting in the JSON row?
+    pub fn any(&self) -> bool {
+        self.skipped || self.msgs_dropped > 0 || self.msgs_corrupt > 0 || self.bytes_retx > 0
+    }
+}
+
+// ---------------------------------------------------------------------
+// The sync coordinators' per-round gate.
+// ---------------------------------------------------------------------
+
+/// Outcome of [`sync_gate`] for one round.
+#[derive(Debug, Clone)]
+pub struct SyncGate {
+    /// Below quorum (or zero survivors): skip the round, state
+    /// untouched.
+    pub skip: bool,
+    /// Wire copies per surviving task ordinal — the coordinators pass
+    /// `copies[task.ordinal]` to [`Network::set_upload_copies`] around
+    /// each survivor's uploads so retransmitted bytes are billed.
+    pub copies: Vec<u64>,
+    pub msgs_dropped: u64,
+    pub msgs_corrupt: u64,
+    /// Transmission attempts beyond each client's first (latency
+    /// charges in `estimated_comm_time`).
+    pub retx_attempts: u64,
+}
+
+/// Decide every participating client's delivery outcome for a sync
+/// round, filter `plan` to the delivered roster (weights renormalized
+/// over the survivors, ordinals reassigned), book the counters into
+/// `net`, and report the quorum decision.
+///
+/// Returns `None` when the transport is structurally inactive — the
+/// plan, the network, and every downstream byte/float count are then
+/// bitwise-identical to the legacy path.
+///
+/// The delivery unit is the client's whole round: FeDLRT's multiple
+/// round trips share one fate sequence per `(round, client)` (a client
+/// that cannot reach the server in round `t` contributes to none of the
+/// round's aggregations), and a survivor's retransmission multiplier
+/// applies to each of its uploaded tensors.
+pub fn sync_gate(
+    fault: &FaultModel,
+    policy: &NetPolicy,
+    seed: u64,
+    round: u64,
+    plan: &mut RoundPlan,
+    net: &mut Network,
+) -> Option<SyncGate> {
+    if !transport_active(fault, policy) {
+        return None;
+    }
+    let latency = net.link.latency;
+    let mut dropped = 0u64;
+    let mut corrupt = 0u64;
+    let mut retx = 0u64;
+    let mut survivors: Vec<ClientTask> = Vec::with_capacity(plan.tasks.len());
+    let mut copies: Vec<u64> = Vec::with_capacity(plan.tasks.len());
+    for task in plan.tasks.drain(..) {
+        let out = fault.deliver(policy, seed, round, task.client_id as u64, latency);
+        dropped += out.dropped_msgs();
+        corrupt += out.corrupt as u64;
+        retx += (out.attempts - 1) as u64;
+        if out.delivered {
+            copies.push(out.wire_copies as u64);
+            survivors.push(task);
+        }
+    }
+    net.note_faults(dropped, corrupt, retx);
+    let wsum: f64 = survivors.iter().map(|t| t.weight).sum();
+    for (i, t) in survivors.iter_mut().enumerate() {
+        t.ordinal = i;
+        if wsum > 0.0 {
+            t.weight /= wsum;
+        }
+    }
+    let n = survivors.len();
+    plan.tasks = survivors;
+    Some(SyncGate {
+        skip: n < policy.quorum.max(1),
+        copies,
+        msgs_dropped: dropped,
+        msgs_corrupt: corrupt,
+        retx_attempts: retx,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::TrainConfig;
+
+    fn lossy() -> FaultModel {
+        FaultModel { loss_prob: 0.3, ..FaultModel::default() }
+    }
+
+    #[test]
+    fn default_model_is_structurally_inactive() {
+        assert!(!FaultModel::default().is_active());
+        assert!(!NetPolicy::default().is_active());
+        assert!(!transport_active(&FaultModel::default(), &NetPolicy::default()));
+        // Any knob activates.
+        assert!(lossy().is_active());
+        assert!(FaultModel { corrupt_prob: 0.1, ..FaultModel::default() }.is_active());
+        assert!(FaultModel { dup_prob: 0.1, ..FaultModel::default() }.is_active());
+        assert!(FaultModel {
+            delay: Dist::Uniform { lo: 0.0, hi: 1.0 },
+            ..FaultModel::default()
+        }
+        .is_active());
+        assert!(transport_active(
+            &FaultModel::default(),
+            &NetPolicy { quorum: 2, ..NetPolicy::default() }
+        ));
+    }
+
+    #[test]
+    fn crc32_known_vector_and_flip_detection() {
+        // IEEE CRC-32 of "123456789" is the classic check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        let payload: Vec<u8> = (0u16..300).map(|i| (i % 251) as u8).collect();
+        let framed = frame(&payload);
+        assert_eq!(framed.len() as u64, payload.len() as u64 + CHECKSUM_BYTES);
+        assert_eq!(verify(&framed), Some(payload.as_slice()));
+        // Flip every byte position (header included): always caught.
+        for i in 0..framed.len() {
+            let mut bad = framed.clone();
+            bad[i] ^= 0x5A;
+            assert!(verify(&bad).is_none(), "flip at {i} undetected");
+        }
+        assert!(verify(&[1, 2, 3]).is_none(), "short frame rejected");
+    }
+
+    #[test]
+    fn fates_are_deterministic_and_attempt_varying() {
+        let fm = FaultModel {
+            loss_prob: 0.4,
+            corrupt_prob: 0.2,
+            dup_prob: 0.1,
+            delay: Dist::Uniform { lo: 0.0, hi: 0.5 },
+        };
+        let f1 = fm.attempt_fate(&mut attempt_rng(7, 3, 5, 0));
+        let f2 = fm.attempt_fate(&mut attempt_rng(7, 3, 5, 0));
+        assert_eq!(f1, f2, "same (seed, round, client, attempt) → same fate");
+        // Across attempts/clients/rounds the fates vary (almost surely
+        // over enough draws).
+        let varies = (0..64).any(|a| {
+            fm.attempt_fate(&mut attempt_rng(7, 3, 5, a)) != f1
+        });
+        assert!(varies);
+    }
+
+    #[test]
+    fn retries_recover_lost_uploads_and_bill_attempts() {
+        let fm = lossy();
+        let none = NetPolicy::default();
+        let many = NetPolicy { retries: 6, ..NetPolicy::default() };
+        let mut lost_without = 0;
+        let mut lost_with = 0;
+        let mut saw_retx = false;
+        for c in 0..200u64 {
+            let a = fm.deliver(&none, 11, 0, c, 0.02);
+            let b = fm.deliver(&many, 11, 0, c, 0.02);
+            lost_without += !a.delivered as u32;
+            lost_with += !b.delivered as u32;
+            if b.delivered && b.attempts > 1 {
+                saw_retx = true;
+                assert_eq!(b.lost + b.corrupt, b.attempts - 1);
+            }
+        }
+        assert!(lost_without > 20, "p=0.3 should drop many ({lost_without})");
+        assert!(lost_with < lost_without / 4, "retries must recover most");
+        assert!(saw_retx);
+    }
+
+    #[test]
+    fn deadline_drops_slow_deliveries() {
+        // Loss forces retries; a tight deadline cuts them off.
+        let fm = FaultModel { loss_prob: 0.9, ..FaultModel::default() };
+        let tight = NetPolicy { timeout: 0.03, retries: 5, ..NetPolicy::default() };
+        let loose = NetPolicy { timeout: 1e6, retries: 5, ..NetPolicy::default() };
+        let mut fewer = 0;
+        for c in 0..100u64 {
+            let a = fm.deliver(&tight, 5, 1, c, 0.02);
+            let b = fm.deliver(&loose, 5, 1, c, 0.02);
+            assert!(a.attempts <= b.attempts);
+            if a.attempts < b.attempts {
+                fewer += 1;
+            }
+            if !a.delivered {
+                assert!(a.dropped_msgs() + a.corrupt as u64 == a.attempts as u64);
+            }
+        }
+        assert!(fewer > 0, "the deadline must cut some retry sequences short");
+    }
+
+    #[test]
+    fn duplicates_add_wire_copies() {
+        let fm = FaultModel { dup_prob: 0.5, ..FaultModel::default() };
+        let pol = NetPolicy::default();
+        let copies: u32 =
+            (0..100u64).map(|c| fm.deliver(&pol, 3, 0, c, 0.0).wire_copies).sum();
+        // 100 attempts, ~50 duplicated.
+        assert!(copies > 110 && copies < 190, "copies {copies}");
+    }
+
+    #[test]
+    fn sync_gate_inactive_returns_none_and_leaves_plan_untouched() {
+        let cfg = TrainConfig::default();
+        let mut plan = RoundPlan::build(&cfg, 4, 0, |_| 1.0);
+        let before: Vec<(usize, u64)> =
+            plan.tasks.iter().map(|t| (t.client_id, t.weight.to_bits())).collect();
+        let mut net = Network::new(4);
+        let gate =
+            sync_gate(&FaultModel::default(), &NetPolicy::default(), 0, 0, &mut plan, &mut net);
+        assert!(gate.is_none());
+        let after: Vec<(usize, u64)> =
+            plan.tasks.iter().map(|t| (t.client_id, t.weight.to_bits())).collect();
+        assert_eq!(before, after);
+    }
+
+    #[test]
+    fn sync_gate_filters_renormalizes_and_books_counters() {
+        let cfg = TrainConfig { seed: 17, ..TrainConfig::default() };
+        let mut net = Network::new(12);
+        let fm = FaultModel { loss_prob: 0.4, corrupt_prob: 0.1, ..FaultModel::default() };
+        let pol = NetPolicy { retries: 1, ..NetPolicy::default() };
+        let mut saw_filter = false;
+        for t in 0..10 {
+            let mut plan = RoundPlan::build(&cfg, 12, t, |c| (c + 1) as f64);
+            let full = plan.len();
+            let gate = sync_gate(&fm, &pol, cfg.seed, t as u64, &mut plan, &mut net)
+                .expect("active transport");
+            assert_eq!(gate.copies.len(), plan.len());
+            if plan.len() < full {
+                saw_filter = true;
+            }
+            if !plan.is_empty() {
+                let wsum: f64 = plan.tasks.iter().map(|t| t.weight).sum();
+                assert!((wsum - 1.0).abs() < 1e-12, "renormalized weights");
+            }
+            for (i, task) in plan.tasks.iter().enumerate() {
+                assert_eq!(task.ordinal, i, "ordinals reassigned");
+                assert!(gate.copies[i] >= 1);
+            }
+            assert_eq!(gate.skip, plan.is_empty(), "no quorum: skip only on blackout");
+            net.end_round();
+        }
+        assert!(saw_filter, "p=0.4 over 10 rounds must drop someone");
+        let dropped: u64 = net.rounds.iter().map(|r| r.msgs_dropped).sum();
+        assert!(dropped > 0, "drop counters must reach RoundComm");
+    }
+
+    #[test]
+    fn quorum_miss_flags_skip() {
+        let cfg = TrainConfig { seed: 23, ..TrainConfig::default() };
+        let mut net = Network::new(6);
+        // Heavy loss, no retries, quorum of 5: most rounds must skip.
+        let fm = FaultModel { loss_prob: 0.7, ..FaultModel::default() };
+        let pol = NetPolicy { quorum: 5, ..NetPolicy::default() };
+        let mut skips = 0;
+        for t in 0..10 {
+            let mut plan = RoundPlan::build(&cfg, 6, t, |_| 1.0);
+            let gate =
+                sync_gate(&fm, &pol, cfg.seed, t as u64, &mut plan, &mut net).unwrap();
+            assert_eq!(gate.skip, plan.len() < 5);
+            skips += gate.skip as u32;
+            net.end_round();
+        }
+        assert!(skips > 0, "p=0.7 against quorum 5 of 6 must skip rounds");
+        // Quorum over a lossless link with a full roster never skips.
+        let mut plan = RoundPlan::build(&cfg, 6, 0, |_| 1.0);
+        let gate = sync_gate(
+            &FaultModel::default(),
+            &NetPolicy { quorum: 6, ..NetPolicy::default() },
+            cfg.seed,
+            0,
+            &mut plan,
+            &mut net,
+        )
+        .unwrap();
+        assert!(!gate.skip);
+        assert_eq!(plan.len(), 6);
+    }
+}

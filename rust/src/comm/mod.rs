@@ -11,9 +11,14 @@
 //! to wall-clock estimates under a bandwidth/latency model (the Fig 3
 //! cost curves).
 
+pub mod faults;
 pub mod message;
 pub mod wire;
 
+pub use faults::{
+    sync_gate, AttemptFate, DeliveryOutcome, FaultModel, FaultRoundStats, NetPolicy, SyncGate,
+    CHECKSUM_BYTES,
+};
 pub use message::Payload;
 pub use wire::{Codec, CodecKind, ALL_CODECS};
 
@@ -63,6 +68,19 @@ pub struct RoundComm {
     /// [`Network::end_round`]) — the divisor for a participating
     /// client's upload share.
     pub participants: usize,
+    /// Upload messages lost in transit or abandoned past the round
+    /// deadline (fault injection — 0 on a clean transport).
+    pub msgs_dropped: u64,
+    /// Upload arrivals rejected by the wire checksum (fault injection).
+    pub msgs_corrupt: u64,
+    /// Bytes beyond each consumed upload's first wire copy
+    /// (retransmissions + duplicates). Kept out of `bytes_up` so the
+    /// Table-1 per-client volumes stay first-copy-exact; the comm-time
+    /// estimate charges them separately.
+    pub bytes_retx: u64,
+    /// Transmission attempts beyond each upload's first — each one
+    /// pays a link latency in [`Network::estimated_comm_time`].
+    pub retx_attempts: u64,
     /// Per-message log (direction, label, floats, bytes) for debugging
     /// and the footnote-6 label-based accounting splits.
     pub log: Vec<(Direction, &'static str, u64, u64)>,
@@ -124,6 +142,15 @@ pub struct Network {
     pub link: LinkModel,
     /// Wire codec all payloads are serialized with.
     pub codec: CodecKind,
+    /// Per-link fault model. When active, every framed message pays
+    /// [`CHECKSUM_BYTES`] of wire header (per payload part — each part
+    /// already carries its own codec header); when inactive (the
+    /// default) the wire format is bitwise-legacy.
+    pub fault: FaultModel,
+    /// Wire copies each upload currently bills (1 = clean transport;
+    /// coordinators raise it around a retransmitting client's uploads —
+    /// copies beyond the first accrue to `bytes_retx`).
+    upload_copies: u64,
     current: RoundComm,
     /// Completed rounds.
     pub rounds: Vec<RoundComm>,
@@ -141,6 +168,8 @@ impl Network {
             active_clients: num_clients,
             link: LinkModel::default(),
             codec,
+            fault: FaultModel::default(),
+            upload_copies: 1,
             current: RoundComm::default(),
             rounds: Vec::new(),
         }
@@ -153,12 +182,16 @@ impl Network {
     /// (asserted byte-identical to the encoder in the wire tests), so
     /// the hot path skips the per-entry encode.
     fn transcode(&self, values: &[f64]) -> (u64, Vec<f64>) {
+        // An active fault model frames every payload with a CRC-32
+        // checksum header (see [`faults`]); an inactive one leaves the
+        // wire format — and every byte count — bitwise-legacy.
+        let hdr = if self.fault.is_active() { CHECKSUM_BYTES } else { 0 };
         let codec = self.codec.codec();
         if codec.transparent() {
-            return (self.codec.wire_bytes(values.len() as u64), values.to_vec());
+            return (self.codec.wire_bytes(values.len() as u64) + hdr, values.to_vec());
         }
         let bytes = codec.encode(values);
-        let n = bytes.len() as u64;
+        let n = bytes.len() as u64 + hdr;
         let decoded = codec.decode(&bytes);
         debug_assert_eq!(decoded.len(), values.len(), "codec changed message length");
         (n, decoded)
@@ -186,6 +219,7 @@ impl Network {
         let (bytes, decoded) = self.transcode(values);
         self.current.aggregate_floats += values.len() as u64;
         self.current.bytes_up += bytes;
+        self.current.bytes_retx += bytes * (self.upload_copies - 1);
         self.current.log.push((Direction::Aggregate, label, values.len() as u64, bytes));
         decoded
     }
@@ -215,6 +249,7 @@ impl Network {
     pub fn note_upload(&mut self, label: &'static str, floats: u64, bytes: u64) {
         self.current.aggregate_floats += floats;
         self.current.bytes_up += bytes;
+        self.current.bytes_retx += bytes * (self.upload_copies - 1);
         self.current.log.push((Direction::Aggregate, label, floats, bytes));
     }
 
@@ -238,6 +273,7 @@ impl Network {
         }
         self.current.aggregate_floats += floats;
         self.current.bytes_up += bytes;
+        self.current.bytes_retx += bytes * (self.upload_copies - 1);
         self.current.log.push((Direction::Aggregate, label, floats, bytes));
         out
     }
@@ -246,24 +282,46 @@ impl Network {
     /// metadata payloads): bytes are the codec's exact wire size for
     /// that entry count.
     pub fn broadcast(&mut self, label: &'static str, payload: &Payload) {
+        let hdr = if self.fault.is_active() { CHECKSUM_BYTES } else { 0 };
         let f = payload.floats();
-        let bytes = self.codec.wire_bytes(f);
+        let bytes = self.codec.wire_bytes(f) + hdr;
         self.current.broadcast_floats += f;
         self.current.bytes_down += bytes;
         self.current.log.push((Direction::Broadcast, label, f, bytes));
     }
 
-    /// Set the number of participating clients for this round.
+    /// Set the number of participating clients for this round. `0` is
+    /// legal — a quorum-missed/total-blackout round aggregates nobody
+    /// and must stamp `participants = 0` rather than leak a stale or
+    /// fabricated participation count (legacy callers always pass ≥ 1,
+    /// so the old lower clamp was unreachable).
     pub fn set_active_clients(&mut self, n: usize) {
-        self.active_clients = n.clamp(1, self.num_clients);
+        self.active_clients = n.min(self.num_clients);
+    }
+
+    /// Bill each subsequent upload as `copies` wire copies (first copy
+    /// into `bytes_up`, the rest into `bytes_retx`). Coordinators set
+    /// this around a retransmitting client's uploads and must reset it
+    /// to 1 afterwards; [`Network::end_round`] also resets it so a
+    /// stale multiplier cannot leak across rounds.
+    pub fn set_upload_copies(&mut self, copies: u64) {
+        self.upload_copies = copies.max(1);
+    }
+
+    /// Book transport-fault counters into the current round.
+    pub fn note_faults(&mut self, dropped: u64, corrupt: u64, retx_attempts: u64) {
+        self.current.msgs_dropped += dropped;
+        self.current.msgs_corrupt += corrupt;
+        self.current.retx_attempts += retx_attempts;
     }
 
     /// Descriptor-only aggregation accounting: *each participating*
     /// client uploads one message of `payload`'s size.
     pub fn aggregate(&mut self, label: &'static str, payload: &Payload) {
+        let hdr = if self.fault.is_active() { CHECKSUM_BYTES } else { 0 };
         let c = self.active_clients as u64;
         let f = payload.floats() * c;
-        let bytes = self.codec.wire_bytes(payload.floats()) * c;
+        let bytes = (self.codec.wire_bytes(payload.floats()) + hdr) * c;
         self.current.aggregate_floats += f;
         self.current.bytes_up += bytes;
         self.current.log.push((Direction::Aggregate, label, f, bytes));
@@ -281,6 +339,7 @@ impl Network {
     pub fn end_round(&mut self) -> &RoundComm {
         self.current.participants = self.active_clients;
         self.active_clients = self.num_clients;
+        self.upload_copies = 1;
         let done = std::mem::take(&mut self.current);
         self.rounds.push(done);
         self.rounds.last().unwrap()
@@ -302,17 +361,21 @@ impl Network {
     }
 
     /// Wall-clock estimate of all communication under the link model:
-    /// serialization time per direction (measured bytes over bandwidth)
-    /// plus link latency charged exactly once per synchronous round
-    /// trip. (The latency is a property of the round trip, not of each
+    /// serialization time per direction (measured bytes over bandwidth,
+    /// retransmitted copies included) plus link latency charged exactly
+    /// once per synchronous round trip *and once per retransmission
+    /// attempt* — a retried upload is a real extra message on the wire.
+    /// (The latency is a property of the round trip, not of each
     /// direction's transfer — charging it per direction *and* per round
-    /// trip would triple-count it.)
+    /// trip would triple-count it.) With a clean transport both fault
+    /// terms are exactly zero (u64 adds), reproducing the legacy
+    /// estimate bitwise.
     pub fn estimated_comm_time(&self) -> f64 {
         self.rounds
             .iter()
             .map(|r| {
-                (r.bytes_down + r.bytes_up) as f64 / self.link.bandwidth
-                    + self.link.latency * r.round_trips as f64
+                (r.bytes_down + r.bytes_up + r.bytes_retx) as f64 / self.link.bandwidth
+                    + self.link.latency * (r.round_trips + r.retx_attempts) as f64
             })
             .sum()
     }
@@ -514,6 +577,119 @@ mod tests {
         net2.end_round_trip();
         net2.end_round();
         assert!((net2.estimated_comm_time() - (2000.0 / 1e6 + 10.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_participant_round_is_well_defined() {
+        // Satellite regression: a quorum-missed / total-blackout round
+        // aggregates nobody — participation must stamp as 0 (not a
+        // fabricated 1), per-client volume must not divide by zero, and
+        // no stale state may leak into the next round.
+        let mut net = Network::new(4);
+        net.broadcast_vec("w", &[1.0; 8]); // broadcast went out before the blackout
+        net.set_active_clients(0);
+        net.end_round_trip();
+        {
+            let r = net.end_round();
+            assert_eq!(r.participants, 0);
+            assert_eq!(r.bytes_up, 0);
+            // Divisor guard: the (hypothetical) participant pays only
+            // the download.
+            assert!((r.per_client_floats() - 8.0).abs() < 1e-12);
+            assert!(r.per_client_floats().is_finite());
+        }
+        // Next round: participation resets to full.
+        net.aggregate("g", &Payload::Floats(10));
+        net.end_round_trip();
+        let r2 = net.end_round();
+        assert_eq!(r2.participants, 4);
+        assert_eq!(r2.aggregate_floats, 40);
+    }
+
+    #[test]
+    fn retransmissions_bill_retx_bytes_not_bytes_up() {
+        // A client that needed 3 wire copies (2 retransmissions or
+        // duplicates): bytes_up keeps the first copy only, the extra
+        // copies accrue to bytes_retx, and end_round resets the
+        // multiplier.
+        let mut net = Network::new(2);
+        net.set_upload_copies(3);
+        net.aggregate_vec("dS", &[1.0; 10]); // 40 B first copy
+        net.set_upload_copies(1);
+        net.aggregate_vec("dS", &[1.0; 10]);
+        net.end_round_trip();
+        {
+            let r = net.end_round();
+            assert_eq!(r.bytes_up, 80);
+            assert_eq!(r.bytes_retx, 80); // 2 extra copies × 40 B
+            assert_eq!(r.aggregate_floats, 20);
+        }
+        // Buffered path bills copies identically, and end_round cleared
+        // the multiplier even without an explicit reset.
+        let mut net = Network::new(2);
+        net.set_upload_copies(2);
+        let (bytes, _) = net.transcode_vec(&[1.0; 10]);
+        net.note_upload("dS", 10, bytes);
+        net.end_round_trip();
+        net.end_round();
+        assert_eq!(net.rounds[0].bytes_retx, 40);
+        net.aggregate_vec("dS", &[1.0; 10]);
+        net.end_round();
+        assert_eq!(net.rounds[1].bytes_retx, 0, "multiplier must not leak");
+    }
+
+    #[test]
+    fn comm_time_charges_latency_per_attempt_and_is_legacy_with_no_retries() {
+        // Satellite regression: retransmission attempts each pay one
+        // link latency and their bytes ride the bandwidth term; with
+        // retries = 0 the estimate reproduces the legacy value bitwise.
+        let mut clean = Network::new(2);
+        clean.link = LinkModel { bandwidth: 1e6, latency: 5.0 };
+        clean.broadcast_vec("w", &[0.0; 250]);
+        clean.aggregate_vec("g", &[0.0; 250]);
+        clean.end_round_trip();
+        clean.end_round();
+        let legacy = 2000.0 / 1e6 + 5.0;
+        assert_eq!(
+            clean.estimated_comm_time().to_bits(),
+            legacy.to_bits(),
+            "clean transport must be bitwise-legacy"
+        );
+
+        let mut faulty = Network::new(2);
+        faulty.link = LinkModel { bandwidth: 1e6, latency: 5.0 };
+        faulty.broadcast_vec("w", &[0.0; 250]);
+        faulty.set_upload_copies(2);
+        faulty.aggregate_vec("g", &[0.0; 250]);
+        faulty.set_upload_copies(1);
+        faulty.note_faults(1, 0, 1); // the lost first attempt, retried once
+        faulty.end_round_trip();
+        faulty.end_round();
+        let want = (2000.0 + 1000.0) / 1e6 + 5.0 * 2.0;
+        assert!((faulty.estimated_comm_time() - want).abs() < 1e-12);
+        assert_eq!(faulty.rounds[0].msgs_dropped, 1);
+        assert_eq!(faulty.rounds[0].retx_attempts, 1);
+    }
+
+    #[test]
+    fn active_fault_model_adds_checksum_header_bytes() {
+        let vals = [1.0; 10];
+        let mut clean = Network::new(2);
+        let mut faulty = Network::new(2);
+        faulty.fault = FaultModel { loss_prob: 0.1, ..FaultModel::default() };
+        clean.broadcast_vec("w", &vals);
+        clean.aggregate_vec("g", &vals);
+        clean.broadcast("hdr", &Payload::Floats(3));
+        faulty.broadcast_vec("w", &vals);
+        faulty.aggregate_vec("g", &vals);
+        faulty.broadcast("hdr", &Payload::Floats(3));
+        clean.end_round();
+        faulty.end_round();
+        let (c, f) = (&clean.rounds[0], &faulty.rounds[0]);
+        // +4 B per framed message, floats unchanged.
+        assert_eq!(f.bytes_down, c.bytes_down + 2 * CHECKSUM_BYTES);
+        assert_eq!(f.bytes_up, c.bytes_up + CHECKSUM_BYTES);
+        assert_eq!(f.total_floats(), c.total_floats());
     }
 
     #[test]

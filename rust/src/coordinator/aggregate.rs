@@ -1,0 +1,377 @@
+//! Pluggable server-side aggregation: the trusting weighted mean of the
+//! paper's eq. (10), plus the classical robust alternatives that keep
+//! descent alive when some uploads are poisoned (byzantine clients,
+//! undetected corruption).
+//!
+//! The aggregators operate **in coefficient space** — they combine the
+//! clients' uploaded low-rank coefficient updates (and dense deltas)
+//! *before* the variance-correction refresh and the augmentation/
+//! truncation steps, so the basis pipeline downstream is untouched.
+//!
+//! Contracts (property-tested in `tests/coordinator_props.rs`):
+//!
+//! * **Bitwise-legacy mean.** [`Aggregator::Mean`] routes through the
+//!   exact `acc.axpy(weight, x)` fold the coordinators have always
+//!   used — same arithmetic, same order, zero staging — so faults-off
+//!   mean runs reproduce pre-PR trajectories bitwise.
+//! * **Reduction to the mean.** On outlier-free inputs (all updates
+//!   equal) every aggregator returns the weighted mean to floating-point
+//!   accuracy.
+//! * **Permutation invariance.** Client order does not change a robust
+//!   aggregate (sorting keys break value ties by nothing — equal values
+//!   are interchangeable in the statistics below).
+//! * **Self-normalization.** The robust variants divide by the
+//!   *surviving* weight mass (trim/clip discard or shrink mass), so the
+//!   caller must hand them the same normalized weights it would hand
+//!   the mean, and the result lives on the same scale.
+//!
+//! Robustness rationale: with a `fault_fraction` ≤ the trim fraction,
+//! the trimmed mean and the weighted median have bounded sensitivity to
+//! arbitrarily-corrupted uploads (breakdown point α resp. 1/2), while
+//! norm-clipping bounds each client's pull by a multiple of the typical
+//! update norm — the three standard points on the robustness/efficiency
+//! trade-off curve.
+
+use crate::tensor::Matrix;
+
+/// Server-side aggregation rule for client coefficient updates.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum Aggregator {
+    /// Weighted arithmetic mean (the paper's eq. 10) — bitwise-legacy
+    /// default.
+    #[default]
+    Mean,
+    /// Coordinate-wise α-trimmed weighted mean: per coordinate, drop the
+    /// ⌊α·K⌋ smallest and largest values (capped so at least one
+    /// survives), then take the weighted mean of the survivors.
+    TrimmedMean {
+        /// Fraction trimmed from *each* tail, in [0, 0.5).
+        trim: f64,
+    },
+    /// Coordinate-wise weighted median (lower weighted median: the
+    /// smallest value whose cumulative weight reaches half the total).
+    Median,
+    /// Weighted mean of norm-clipped updates: each update's Frobenius
+    /// norm is capped at `mult` × the weighted-median norm.
+    NormClip {
+        /// Clip radius as a multiple of the weighted-median norm.
+        mult: f64,
+    },
+}
+
+impl Aggregator {
+    /// The bitwise-legacy path?
+    pub fn is_mean(&self) -> bool {
+        matches!(self, Aggregator::Mean)
+    }
+
+    /// Stable identifier used in config echo, JSONL rows, and the CLI.
+    pub fn label(&self) -> String {
+        match self {
+            Aggregator::Mean => "mean".to_string(),
+            Aggregator::TrimmedMean { trim } => format!("trimmed:{trim}"),
+            Aggregator::Median => "median".to_string(),
+            Aggregator::NormClip { mult } => format!("clip:{mult}"),
+        }
+    }
+
+    /// Parse a CLI spec: `mean` | `trimmed[:α]` | `median` | `clip[:c]`
+    /// (defaults α = 0.2, c = 2).
+    pub fn parse(s: &str) -> Result<Aggregator, String> {
+        let (name, knob) = match s.split_once(':') {
+            Some((n, k)) => (n, Some(k)),
+            None => (s, None),
+        };
+        let num = |default: f64| -> Result<f64, String> {
+            match knob {
+                None => Ok(default),
+                Some(k) => k.parse::<f64>().map_err(|_| format!("bad aggregator knob '{k}'")),
+            }
+        };
+        match name {
+            "mean" => {
+                if knob.is_some() {
+                    return Err("mean takes no knob".to_string());
+                }
+                Ok(Aggregator::Mean)
+            }
+            "trimmed" => {
+                let trim = num(0.2)?;
+                if !(0.0..0.5).contains(&trim) {
+                    return Err(format!("trim fraction {trim} outside [0, 0.5)"));
+                }
+                Ok(Aggregator::TrimmedMean { trim })
+            }
+            "median" => {
+                if knob.is_some() {
+                    return Err("median takes no knob".to_string());
+                }
+                Ok(Aggregator::Median)
+            }
+            "clip" => {
+                let mult = num(2.0)?;
+                if !mult.is_finite() || mult <= 0.0 {
+                    return Err(format!("clip multiple {mult} must be > 0"));
+                }
+                Ok(Aggregator::NormClip { mult })
+            }
+            _ => Err(format!(
+                "unknown aggregator '{s}' (want mean | trimmed[:a] | median | clip[:c])"
+            )),
+        }
+    }
+}
+
+/// Accumulator for one round's aggregation over a fixed set of `slots`
+/// (parallel tensors — e.g. FeDLRT's per-layer coefficient updates plus
+/// the dense head).
+///
+/// Usage mirrors the legacy fold exactly:
+///
+/// ```text
+/// let mut robust = RobustAccum::new(cfg.aggregator, accs.len());
+/// for client { for slot { robust.push(slot, &mut accs[slot], w_c, &x_c); } }
+/// robust.finish(&mut accs);
+/// ```
+///
+/// For [`Aggregator::Mean`], `push` performs the legacy
+/// `acc.axpy(w, x)` immediately and `finish` is a no-op — bitwise
+/// identity with pre-PR code. The robust variants stage `(w, x)` per
+/// slot and reduce in `finish`, **adding** the aggregate into each
+/// slot's accumulator (so callers that pre-seed the accumulator — e.g.
+/// with a server term — keep working).
+pub struct RobustAccum {
+    agg: Aggregator,
+    staged: Vec<Vec<(f64, Matrix)>>,
+}
+
+impl RobustAccum {
+    pub fn new(agg: Aggregator, slots: usize) -> RobustAccum {
+        let staged = if agg.is_mean() { Vec::new() } else { vec![Vec::new(); slots] };
+        RobustAccum { agg, staged }
+    }
+
+    /// Fold one client's update for `slot` with aggregation weight
+    /// `weight` (normalized over the surviving roster, as for the mean).
+    pub fn push(&mut self, slot: usize, acc: &mut Matrix, weight: f64, x: &Matrix) {
+        if self.agg.is_mean() {
+            acc.axpy(weight, x);
+        } else {
+            self.staged[slot].push((weight, x.clone()));
+        }
+    }
+
+    /// Reduce all staged updates into their accumulators (no-op for the
+    /// mean, which already folded in `push`).
+    pub fn finish(self, accs: &mut [Matrix]) {
+        if self.agg.is_mean() {
+            return;
+        }
+        debug_assert_eq!(self.staged.len(), accs.len(), "slot count mismatch");
+        for (staged, acc) in self.staged.into_iter().zip(accs.iter_mut()) {
+            reduce_into(self.agg, staged, acc);
+        }
+    }
+}
+
+/// Reduce one slot's staged `(weight, update)` pairs under `agg`,
+/// adding the aggregate into `acc`.
+fn reduce_into(agg: Aggregator, staged: Vec<(f64, Matrix)>, acc: &mut Matrix) {
+    if staged.is_empty() {
+        return;
+    }
+    match agg {
+        Aggregator::Mean => {
+            for (w, x) in &staged {
+                acc.axpy(*w, x);
+            }
+        }
+        Aggregator::TrimmedMean { trim } => {
+            let k = staged.len();
+            // Cap so at least one value survives the two-sided cut.
+            let cut = ((trim * k as f64).floor() as usize).min((k - 1) / 2);
+            let mut col: Vec<(f64, f64)> = Vec::with_capacity(k);
+            for i in 0..acc.data().len() {
+                col.clear();
+                col.extend(staged.iter().map(|(w, x)| (x.data()[i], *w)));
+                col.sort_by(|a, b| a.0.total_cmp(&b.0));
+                let kept = &col[cut..k - cut];
+                let wsum: f64 = kept.iter().map(|(_, w)| w).sum();
+                if wsum > 0.0 {
+                    let s: f64 = kept.iter().map(|(v, w)| v * w).sum();
+                    acc.data_mut()[i] += s / wsum;
+                }
+            }
+        }
+        Aggregator::Median => {
+            let k = staged.len();
+            let mut col: Vec<(f64, f64)> = Vec::with_capacity(k);
+            for i in 0..acc.data().len() {
+                col.clear();
+                col.extend(staged.iter().map(|(w, x)| (x.data()[i], *w)));
+                acc.data_mut()[i] += weighted_median(&mut col);
+            }
+        }
+        Aggregator::NormClip { mult } => {
+            // Clip radius: mult × weighted-median Frobenius norm.
+            let mut norms: Vec<(f64, f64)> = staged
+                .iter()
+                .map(|(w, x)| (frob(x), *w))
+                .collect();
+            let radius = mult * weighted_median(&mut norms);
+            let wsum: f64 = staged.iter().map(|(w, _)| w).sum();
+            if wsum <= 0.0 {
+                return;
+            }
+            for (w, x) in &staged {
+                let n = frob(x);
+                let s = if n > radius && n > 0.0 { radius / n } else { 1.0 };
+                acc.axpy(w * s / wsum, x);
+            }
+        }
+    }
+}
+
+/// Lower weighted median of `(value, weight)` pairs: the smallest value
+/// whose cumulative weight reaches half the total. Sorts in place.
+fn weighted_median(pairs: &mut [(f64, f64)]) -> f64 {
+    pairs.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let total: f64 = pairs.iter().map(|(_, w)| w).sum();
+    let mut cum = 0.0;
+    for (v, w) in pairs.iter() {
+        cum += w;
+        if cum >= total / 2.0 {
+            return *v;
+        }
+    }
+    pairs.last().map(|(v, _)| *v).unwrap_or(0.0)
+}
+
+fn frob(m: &Matrix) -> f64 {
+    m.data().iter().map(|v| v * v).sum::<f64>().sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const ALL: [Aggregator; 4] = [
+        Aggregator::Mean,
+        Aggregator::TrimmedMean { trim: 0.25 },
+        Aggregator::Median,
+        Aggregator::NormClip { mult: 2.0 },
+    ];
+
+    fn run(agg: Aggregator, updates: &[(f64, Matrix)]) -> Matrix {
+        let mut acc = Matrix::zeros(updates[0].1.rows(), updates[0].1.cols());
+        let mut r = RobustAccum::new(agg, 1);
+        for (w, x) in updates {
+            r.push(0, &mut acc, *w, x);
+        }
+        r.finish(std::slice::from_mut(&mut acc));
+        acc
+    }
+
+    fn mat(vals: &[f64]) -> Matrix {
+        Matrix::from_vec(1, vals.len(), vals.to_vec())
+    }
+
+    #[test]
+    fn parse_round_trips_and_rejects_garbage() {
+        assert_eq!(Aggregator::parse("mean").unwrap(), Aggregator::Mean);
+        assert_eq!(
+            Aggregator::parse("trimmed").unwrap(),
+            Aggregator::TrimmedMean { trim: 0.2 }
+        );
+        assert_eq!(
+            Aggregator::parse("trimmed:0.3").unwrap(),
+            Aggregator::TrimmedMean { trim: 0.3 }
+        );
+        assert_eq!(Aggregator::parse("median").unwrap(), Aggregator::Median);
+        assert_eq!(Aggregator::parse("clip").unwrap(), Aggregator::NormClip { mult: 2.0 });
+        assert_eq!(Aggregator::parse("clip:3.5").unwrap(), Aggregator::NormClip { mult: 3.5 });
+        for bad in ["", "avg", "trimmed:0.6", "trimmed:x", "clip:0", "mean:1", "median:2"] {
+            assert!(Aggregator::parse(bad).is_err(), "'{bad}' must be rejected");
+        }
+        for agg in ALL {
+            assert_eq!(Aggregator::parse(&agg.label()).unwrap(), agg);
+        }
+    }
+
+    #[test]
+    fn mean_path_is_the_legacy_axpy_fold_bitwise() {
+        let updates: Vec<(f64, Matrix)> = (0..5)
+            .map(|c| (0.1 + 0.05 * c as f64, mat(&[c as f64 * 0.3, -(c as f64), 1.0 / (c + 1) as f64])))
+            .collect();
+        // Legacy fold.
+        let mut legacy = Matrix::zeros(1, 3);
+        for (w, x) in &updates {
+            legacy.axpy(*w, x);
+        }
+        let got = run(Aggregator::Mean, &updates);
+        for (a, b) in legacy.data().iter().zip(got.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn robust_aggregators_resist_a_poisoned_update() {
+        // 4 honest clients around 1.0, one adversary at 1000.
+        let updates = vec![
+            (0.2, mat(&[1.0])),
+            (0.2, mat(&[1.1])),
+            (0.2, mat(&[0.9])),
+            (0.2, mat(&[1.0])),
+            (0.2, mat(&[1000.0])),
+        ];
+        let mean = run(Aggregator::Mean, &updates).data()[0];
+        assert!(mean > 100.0, "undefended mean is dragged away");
+        for agg in [
+            Aggregator::TrimmedMean { trim: 0.25 },
+            Aggregator::Median,
+            Aggregator::NormClip { mult: 2.0 },
+        ] {
+            let v = run(agg, &updates).data()[0];
+            assert!(
+                (v - 1.0).abs() < 2.0,
+                "{} must stay near the honest cluster, got {v}",
+                agg.label()
+            );
+        }
+    }
+
+    #[test]
+    fn robust_finish_adds_into_a_preseeded_accumulator() {
+        let updates = vec![(0.5, mat(&[2.0, 4.0])), (0.5, mat(&[2.0, 4.0]))];
+        let mut acc = mat(&[10.0, 20.0]);
+        let mut r = RobustAccum::new(Aggregator::Median, 1);
+        for (w, x) in &updates {
+            r.push(0, &mut acc, *w, x);
+        }
+        r.finish(std::slice::from_mut(&mut acc));
+        assert!((acc.data()[0] - 12.0).abs() < 1e-12);
+        assert!((acc.data()[1] - 24.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weighted_median_respects_weights() {
+        let mut pairs = vec![(0.0, 0.1), (1.0, 0.8), (5.0, 0.1)];
+        assert_eq!(weighted_median(&mut pairs), 1.0);
+        let mut heavy_tail = vec![(0.0, 0.2), (10.0, 0.8)];
+        assert_eq!(weighted_median(&mut heavy_tail), 10.0);
+        let mut single = vec![(3.0, 1.0)];
+        assert_eq!(weighted_median(&mut single), 3.0);
+    }
+
+    #[test]
+    fn trim_cap_keeps_at_least_one_value() {
+        // K = 2 with trim 0.45: ⌊0.9⌋ = 0 cut; K = 3 with trim 0.4:
+        // ⌊1.2⌋ = 1 cut per side leaves exactly the median.
+        let two = vec![(0.5, mat(&[1.0])), (0.5, mat(&[3.0]))];
+        let v = run(Aggregator::TrimmedMean { trim: 0.45 }, &two).data()[0];
+        assert!((v - 2.0).abs() < 1e-12);
+        let three = vec![(1.0 / 3.0, mat(&[1.0])), (1.0 / 3.0, mat(&[2.0])), (1.0 / 3.0, mat(&[900.0]))];
+        let v = run(Aggregator::TrimmedMean { trim: 0.4 }, &three).data()[0];
+        assert!((v - 2.0).abs() < 1e-12);
+    }
+}

@@ -66,7 +66,7 @@ use std::sync::Arc;
 use crate::client::{
     change_coords, Correction, CorrectionEngine, DriftState, GradMode, LocalUpdate,
 };
-use crate::comm::Network;
+use crate::comm::{faults, FaultRoundStats, Network};
 use crate::engine::{
     task_seed, ClientExecutor, ClientFault, ClientRecord, ClientRegistry, ClientTask, EventQueue,
     Executor, RoundPlan, TimingModel,
@@ -79,6 +79,7 @@ use crate::tensor::{Matrix, Workspace};
 use crate::util::rng::Rng;
 use crate::util::Stopwatch;
 
+use super::aggregate::RobustAccum;
 use super::config::{Schedule, TrainConfig, VarCorrection};
 
 /// Salt for the client-pick stream (disjoint from the sync sampling /
@@ -100,7 +101,8 @@ pub struct EventTraceRow {
     pub client: usize,
     /// Server model version when the row was written.
     pub version: u64,
-    /// Staleness (upload/discard rows; 0 elsewhere).
+    /// Staleness (upload/discard rows; for [`EventKind::Retry`] the
+    /// retransmission's attempt number; 0 elsewhere).
     pub staleness: u64,
 }
 
@@ -110,10 +112,15 @@ pub enum EventKind {
     Dispatch,
     /// A client upload arrived and entered the buffer.
     Upload,
-    /// A FedBuff upload exceeded `max_staleness` and was dropped.
+    /// A FedBuff upload exceeded `max_staleness` and was dropped — or,
+    /// under an active fault model, an upload exhausted its retry
+    /// budget / upload deadline and was abandoned.
     Discard,
     /// The buffer reached K and an aggregation ran.
     Aggregate,
+    /// An upload attempt was lost/corrupted and a retransmission was
+    /// scheduled with exponential backoff (fault model active).
+    Retry,
 }
 
 /// The frozen model a dispatch hands its client: the decoded
@@ -147,6 +154,17 @@ struct Flight {
     /// SCAFFOLD c_c), in the dispatch basis — device semantics: a
     /// concurrent re-dispatch of the same client sees the same state.
     drift: Option<DriftState>,
+    /// Current upload attempt number (0 = first transmission); bumped
+    /// by each fault-path retransmission.
+    attempt: u32,
+    /// Payload copies that rode the wire so far (attempts +
+    /// duplicates) — billed as `bytes_retx` beyond the first copy when
+    /// the update is consumed.
+    wire_copies: u64,
+    /// Virtual time the upload transmission started (post-compute);
+    /// the [`crate::comm::NetPolicy::timeout`] upload deadline counts
+    /// from here, mirroring the sync path's network-time-only clock.
+    sent_at: f64,
     snapshot: Arc<Snapshot>,
 }
 
@@ -308,6 +326,7 @@ fn run_async_core<P: FedProblem + Sync>(
     let num_lr = factors.len();
 
     let mut net = Network::with_codec(population, cfg.codec);
+    net.fault = cfg.fault;
     let executor = Executor::from_kind(cfg.executor);
     cfg.apply_kernel_threads();
     let mut ws = Workspace::new();
@@ -411,6 +430,7 @@ fn run_async_core<P: FedProblem + Sync>(
                     g_bar: bc_g_bar,
                     ctrl: bc_ctrl,
                 });
+                let compute_t = timing.compute_time(cfg.seed, client, d);
                 let flight = Flight {
                     client,
                     dispatch: d,
@@ -421,11 +441,19 @@ fn run_async_core<P: FedProblem + Sync>(
                     weight,
                     seed: task_seed(cfg.seed, d as usize, client),
                     drift: drift_c,
+                    attempt: 0,
+                    wire_copies: 1,
+                    sent_at: queue.now() + compute_t,
                     snapshot,
                 };
-                let done_t = queue.now()
-                    + timing.compute_time(cfg.seed, client, d)
-                    + timing.link_time(cfg.seed, client, d);
+                let mut done_t =
+                    queue.now() + compute_t + timing.link_time(cfg.seed, client, d);
+                if cfg.fault.is_active() {
+                    // First-attempt delay jitter from the message-scoped
+                    // fate stream (the pop re-derives the same fate).
+                    let mut arng = faults::attempt_rng(cfg.seed, d, client as u64, 0);
+                    done_t += cfg.fault.attempt_fate(&mut arng).delay_s;
+                }
                 let idx = free_flights.pop().unwrap_or_else(|| {
                     flights.push(None);
                     flights.len() - 1
@@ -445,6 +473,98 @@ fn run_async_core<P: FedProblem + Sync>(
                 drop(sp);
             }
             Ev::Upload { flight: idx } => {
+                // Unreliable transport: each arrival is an *attempt*
+                // whose fate is a pure function of
+                // (seed, dispatch, client, attempt) — nothing here
+                // reads training results, so the event timeline stays
+                // executor-independent. Inactive fault model = this
+                // whole block is skipped (bitwise-legacy).
+                if cfg.fault.is_active() {
+                    let (fl_client, fl_dispatch, fl_attempt, fl_sent, fl_version) = {
+                        let fl = flights[idx].as_ref().expect("attempt for freed flight");
+                        (fl.client, fl.dispatch, fl.attempt, fl.sent_at, fl.version)
+                    };
+                    let mut arng =
+                        faults::attempt_rng(cfg.seed, fl_dispatch, fl_client as u64, fl_attempt);
+                    let fate = cfg.fault.attempt_fate(&mut arng);
+                    if fate.duplicated {
+                        // Deduplicated server-side; the copy's bytes
+                        // still ride the wire and bill as retx below.
+                        flights[idx].as_mut().unwrap().wire_copies += 1;
+                    }
+                    let late = cfg.net_policy.timeout > 0.0
+                        && ev.time - fl_sent > cfg.net_policy.timeout;
+                    if fate.lost || fate.corrupt || late {
+                        // Book the failure the way the sync gate does:
+                        // checksum rejections count as corrupt; lost and
+                        // deadline-abandoned attempts count as dropped.
+                        if !fate.lost && fate.corrupt {
+                            net.note_faults(0, 1, 0);
+                        } else {
+                            net.note_faults(1, 0, 0);
+                        }
+                        if !late && fl_attempt < cfg.net_policy.retries {
+                            // Retransmit: derive the next attempt's fate
+                            // stream now for arrival shaping — delay
+                            // jitter plus a fresh link-time draw AFTER
+                            // the fate (fixed order) — with exponential
+                            // backoff on the redrawn link time, mirroring
+                            // `FaultModel::deliver`.
+                            let next_attempt = {
+                                let fl = flights[idx].as_mut().unwrap();
+                                fl.attempt += 1;
+                                fl.wire_copies += 1;
+                                fl.attempt
+                            };
+                            let mut nrng = faults::attempt_rng(
+                                cfg.seed,
+                                fl_dispatch,
+                                fl_client as u64,
+                                next_attempt,
+                            );
+                            let nfate = cfg.fault.attempt_fate(&mut nrng);
+                            let retx_link = timing.link.sample(&mut nrng).max(0.0);
+                            let backoff =
+                                retx_link * (1u64 << (next_attempt - 1).min(62)) as f64;
+                            net.note_faults(0, 0, 1);
+                            queue.push(
+                                queue.now() + backoff + retx_link + nfate.delay_s,
+                                Ev::Upload { flight: idx },
+                            );
+                            if let Some(tr) = trace.as_deref_mut() {
+                                tr.push(EventTraceRow {
+                                    time_bits: ev.time.to_bits(),
+                                    seq: ev.seq,
+                                    kind: EventKind::Retry,
+                                    client: fl_client,
+                                    version,
+                                    staleness: next_attempt as u64,
+                                });
+                            }
+                            continue; // slot stays occupied until the retry lands
+                        }
+                        // Retry budget exhausted or past the deadline:
+                        // the update is lost for good — free the slot
+                        // and redispatch.
+                        flights[idx] = None;
+                        free_flights.push(idx);
+                        let gap = timing.arrival_gap(cfg.seed, gap_count);
+                        gap_count += 1;
+                        queue.push(queue.now() + gap, Ev::Dispatch);
+                        if let Some(tr) = trace.as_deref_mut() {
+                            tr.push(EventTraceRow {
+                                time_bits: ev.time.to_bits(),
+                                seq: ev.seq,
+                                kind: EventKind::Discard,
+                                client: fl_client,
+                                version,
+                                staleness: version - fl_version,
+                            });
+                        }
+                        continue;
+                    }
+                }
+
                 // Free the slot: its next client arrives after a gap.
                 let gap = timing.arrival_gap(cfg.seed, gap_count);
                 gap_count += 1;
@@ -562,6 +682,12 @@ fn run_async_core<P: FedProblem + Sync>(
                     factors.iter().map(|f| ws.take_mat(f.rank(), f.rank())).collect();
                 let mut dd_mean: Vec<Matrix> =
                     dense.iter().map(|m| Matrix::zeros(m.rows(), m.cols())).collect();
+                // Robust aggregation applies to the model deltas only;
+                // the ḡ variance-correction folds below stay weighted
+                // means (they are control signals, not the update).
+                // Mean keeps the legacy axpy fold, bitwise.
+                let mut robust_s = RobustAccum::new(cfg.aggregator, num_lr);
+                let mut robust_d = RobustAccum::new(cfg.aggregator, dense.len());
                 let mut gb_lr_new: Vec<Matrix> =
                     factors.iter().map(|f| Matrix::zeros(f.rank(), f.rank())).collect();
                 let mut gb_dense_new: Vec<Matrix> =
@@ -575,6 +701,11 @@ fn run_async_core<P: FedProblem + Sync>(
                     let wt = raw_w[i] / total_w;
                     local_loss_w += wt * upd.first_loss;
                     obs.record_staleness(fl.dispatch, sigmas[i]);
+                    if cfg.fault.is_active() {
+                        // Bill this update's retransmitted/duplicate
+                        // wire copies beyond the first.
+                        net.set_upload_copies(fl.wire_copies);
+                    }
                     let stale_basis = fl.basis_version != basis_version;
                     for l in 0..num_lr {
                         let (bytes, decoded) = net.transcode_vec(upd.d_s[l].data());
@@ -591,7 +722,7 @@ fn run_async_core<P: FedProblem + Sync>(
                                 &ds,
                             );
                         }
-                        ds_mean[l].axpy(wt, &ds);
+                        robust_s.push(l, &mut ds_mean[l], wt, &ds);
                         if vc_on {
                             let gf_raw = &upd.g_first[l];
                             let (bytes, decoded) = net.transcode_vec(gf_raw.data());
@@ -611,14 +742,12 @@ fn run_async_core<P: FedProblem + Sync>(
                     for dl in 0..dense.len() {
                         let (bytes, decoded) = net.transcode_vec(upd.d_dense[dl].data());
                         net.note_upload("d_dense", upd.d_dense[dl].data().len() as u64, bytes);
-                        dd_mean[dl].axpy(
-                            wt,
-                            &Matrix::from_vec(
-                                upd.d_dense[dl].rows(),
-                                upd.d_dense[dl].cols(),
-                                decoded,
-                            ),
+                        let dd = Matrix::from_vec(
+                            upd.d_dense[dl].rows(),
+                            upd.d_dense[dl].cols(),
+                            decoded,
                         );
+                        robust_d.push(dl, &mut dd_mean[dl], wt, &dd);
                         if vc_on {
                             let gd_raw = &upd.g_first_dense[dl];
                             let (bytes, decoded) = net.transcode_vec(gd_raw.data());
@@ -689,6 +818,11 @@ fn run_async_core<P: FedProblem + Sync>(
                     flights[fi] = None;
                     free_flights.push(fi);
                 }
+                if cfg.fault.is_active() {
+                    net.set_upload_copies(1);
+                }
+                robust_s.finish(&mut ds_mean);
+                robust_d.finish(&mut dd_mean);
                 for (client, st) in drift_staged {
                     registry.get_or_init(client, &init_rec).drift = Some(Box::new(st));
                 }
@@ -798,6 +932,7 @@ fn run_async_core<P: FedProblem + Sync>(
                 let comm_floats_lr = comm.floats_matching(|l| {
                     !matches!(l, "dense_w" | "d_dense" | "g_first_dense" | "g_bar_dense" | "ctrl_dense")
                 });
+                let fault = FaultRoundStats::from_comm(comm);
                 drop(sp_io);
                 let sp_eval = obs.span(Phase::Eval);
                 let should_eval = agg % cfg.eval_every == 0 || agg + 1 == cfg.rounds;
@@ -831,6 +966,7 @@ fn run_async_core<P: FedProblem + Sync>(
                     latency: round_obs.latency,
                     staleness: round_obs.staleness,
                     virtual_s: queue.now(),
+                    fault,
                 });
                 agg += 1;
                 if agg < cfg.rounds {
@@ -995,6 +1131,40 @@ mod tests {
         assert_eq!(rec.rounds.len(), 5);
         assert_eq!(rec.num_clients, 1_000_000);
         assert!(rec.final_loss().is_finite());
+    }
+
+    #[test]
+    fn lossy_async_transport_retries_and_stays_deterministic() {
+        // Loss/corruption/duplication with a retry budget: the event
+        // timeline (retries included) and the trajectory must be
+        // bitwise-identical across executors, and the fault counters
+        // must actually book traffic.
+        let prob = quad(908);
+        let mut cfg_serial = async_cfg(Schedule::FedBuff, 19);
+        cfg_serial.rounds = 10;
+        cfg_serial.fault = crate::comm::FaultModel {
+            loss_prob: 0.25,
+            corrupt_prob: 0.1,
+            dup_prob: 0.1,
+            ..crate::comm::FaultModel::default()
+        };
+        cfg_serial.net_policy =
+            crate::comm::NetPolicy { retries: 2, ..crate::comm::NetPolicy::default() };
+        let mut cfg_pool = cfg_serial.clone();
+        cfg_pool.executor = crate::engine::ExecutorKind::ThreadPool { threads: 3 };
+        let (ra, ta) = run_async_traced(&prob, &cfg_serial, "t", &Recorder::disabled());
+        let (rb, tb) = run_async_traced(&prob, &cfg_pool, "t", &Recorder::disabled());
+        assert_eq!(ta, tb, "fault-path event traces diverged");
+        assert!(ta.iter().any(|r| r.kind == EventKind::Retry), "p=0.25 must retry");
+        for (x, y) in ra.rounds.iter().zip(&rb.rounds) {
+            assert_eq!(x.global_loss.to_bits(), y.global_loss.to_bits());
+            assert_eq!(x.fault, y.fault);
+            assert_eq!(x.bytes_up, y.bytes_up);
+        }
+        let dropped: u64 = ra.rounds.iter().map(|r| r.fault.msgs_dropped).sum();
+        let retx: u64 = ra.rounds.iter().map(|r| r.fault.bytes_retx).sum();
+        assert!(dropped + retx > 0, "faults must surface in the counters");
+        assert!(ra.final_loss().is_finite());
     }
 
     #[test]

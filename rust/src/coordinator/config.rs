@@ -1,7 +1,8 @@
 //! Training configuration shared by all federated algorithms.
 
 use crate::client::Correction;
-use crate::comm::CodecKind;
+use crate::comm::{CodecKind, FaultModel, NetPolicy};
+use crate::coordinator::aggregate::Aggregator;
 use crate::engine::{ExecutorKind, ScenarioConfig, TimingModel};
 use crate::opt::{LrSchedule, OptimizerKind, SgdConfig};
 use crate::util::json::Json;
@@ -193,6 +194,17 @@ pub struct TrainConfig {
     /// dropout, faults, label skew). The default `calm` preset is
     /// structurally inactive.
     pub scenario: ScenarioConfig,
+    /// Unreliable-transport model (`--loss-prob`, `--corrupt-prob`,
+    /// `--dup-prob`, `--net-delay`; see [`crate::comm::faults`]). The
+    /// default is structurally inactive: no fate draws, no checksum
+    /// framing, bitwise-legacy wire bytes.
+    pub fault: FaultModel,
+    /// Server transport policy (`--timeout`, `--retries`, `--quorum`).
+    /// Inactive by default.
+    pub net_policy: NetPolicy,
+    /// Server-side aggregation rule (`--aggregator`). The default
+    /// [`Aggregator::Mean`] is the legacy axpy fold, bitwise.
+    pub aggregator: Aggregator,
 }
 
 impl Default for TrainConfig {
@@ -218,6 +230,9 @@ impl Default for TrainConfig {
             population: 0,
             correction: Correction::None,
             scenario: ScenarioConfig::default(),
+            fault: FaultModel::default(),
+            net_policy: NetPolicy::default(),
+            aggregator: Aggregator::Mean,
         }
     }
 }
@@ -259,6 +274,21 @@ impl TrainConfig {
             if let Some(alpha) = self.scenario.dirichlet_alpha {
                 o.set("dirichlet_alpha", alpha);
             }
+        }
+        // Transport faults/policy echo only when active; the aggregator
+        // key only when not the legacy mean — default runs keep the
+        // legacy echo byte-identical.
+        if self.fault.is_active() || self.net_policy.is_active() {
+            o.set("loss_prob", self.fault.loss_prob)
+                .set("corrupt_prob", self.fault.corrupt_prob)
+                .set("dup_prob", self.fault.dup_prob)
+                .set("net_delay", self.fault.delay.label())
+                .set("timeout", self.net_policy.timeout)
+                .set("retries", self.net_policy.retries as usize)
+                .set("quorum", self.net_policy.quorum);
+        }
+        if !self.aggregator.is_mean() {
+            o.set("aggregator", self.aggregator.label());
         }
         if self.schedule != Schedule::Sync {
             o.set("buffer_k", self.async_cfg.buffer_k)
@@ -331,6 +361,33 @@ mod tests {
         let j = cfg.to_json();
         assert_eq!(j.str_or("correction", ""), "fedprox");
         assert_eq!(j.str_or("scenario", ""), "byzantine");
+    }
+
+    #[test]
+    fn fault_and_aggregator_echoes_stay_out_of_default_configs() {
+        // Legacy echo: none of the new keys appear on a default config.
+        let j = TrainConfig::default().to_json();
+        assert_eq!(j.str_or("aggregator", "absent"), "absent");
+        assert!((j.f64_or("loss_prob", -1.0) - -1.0).abs() < 1e-12);
+        assert_eq!(j.usize_or("quorum", 777), 777);
+        // Active transport: the whole fault/policy block appears.
+        let cfg = TrainConfig {
+            fault: FaultModel { loss_prob: 0.1, ..FaultModel::default() },
+            net_policy: NetPolicy { retries: 2, quorum: 3, ..NetPolicy::default() },
+            aggregator: Aggregator::TrimmedMean { trim: 0.2 },
+            ..TrainConfig::default()
+        };
+        let j = cfg.to_json();
+        assert!((j.f64_or("loss_prob", 0.0) - 0.1).abs() < 1e-12);
+        assert_eq!(j.usize_or("retries", 0), 2);
+        assert_eq!(j.usize_or("quorum", 0), 3);
+        assert_eq!(j.str_or("aggregator", ""), "trimmed:0.2");
+        // Policy-only activation echoes the block too.
+        let cfg = TrainConfig {
+            net_policy: NetPolicy { timeout: 5.0, ..NetPolicy::default() },
+            ..TrainConfig::default()
+        };
+        assert!((cfg.to_json().f64_or("timeout", 0.0) - 5.0).abs() < 1e-12);
     }
 
     #[test]

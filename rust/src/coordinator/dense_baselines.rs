@@ -12,7 +12,7 @@
 //! ```
 
 use crate::client::{ClientStates, CorrectionEngine, DriftState, GradMode, LocalUpdate};
-use crate::comm::Network;
+use crate::comm::{sync_gate, FaultRoundStats, Network};
 use crate::engine::{ClientExecutor, Executor, RoundPlan};
 use crate::metrics::{RoundMetrics, RunRecord};
 use crate::models::{FedProblem, LrWant, LrWeight, Weights};
@@ -21,6 +21,7 @@ use crate::tensor::Matrix;
 use crate::util::rng::Rng;
 use crate::util::Stopwatch;
 
+use super::aggregate::RobustAccum;
 use super::config::TrainConfig;
 
 /// Which dense baseline to run.
@@ -74,6 +75,7 @@ pub fn run_dense_obs<P: FedProblem + Sync>(
         .collect();
 
     let mut net = Network::with_codec(c_num, cfg.codec);
+    net.fault = cfg.fault;
     let executor = Executor::from_kind(cfg.executor);
     cfg.apply_kernel_threads();
     let mut record = RunRecord::new(algo.label(), experiment, c_num, cfg.seed);
@@ -90,7 +92,52 @@ pub fn run_dense_obs<P: FedProblem + Sync>(
         obs.begin_round(t);
         let lr_t = cfg.lr.at(t);
         let sp_plan = obs.span(Phase::Io);
-        let plan = RoundPlan::build(cfg, c_num, t, |c| problem.client_weight(c));
+        let mut plan = RoundPlan::build(cfg, c_num, t, |c| problem.client_weight(c));
+        // Unreliable-transport gate: drop/corrupt/retry uploads and
+        // enforce the round quorum (DESIGN.md §Fault model). `None`
+        // whenever faults and the net policy are both inactive.
+        let gate = sync_gate(&cfg.fault, &cfg.net_policy, cfg.seed, t as u64, &mut plan, &mut net);
+        if gate.as_ref().is_some_and(|g| g.skip) {
+            drop(sp_plan);
+            // Quorum miss: record the round (evaluated on the untouched
+            // server weights) and move on without updating any state.
+            net.set_active_clients(0);
+            let fault = FaultRoundStats::skipped_from_comm(net.end_round());
+            let sp_eval = obs.span(Phase::Eval);
+            let should_eval = t % cfg.eval_every == 0 || t + 1 == cfg.rounds;
+            let w_eval = Weights {
+                dense: dense.clone(),
+                lr: lr_w.iter().cloned().map(LrWeight::Dense).collect(),
+            };
+            let global_loss =
+                if should_eval { problem.global_loss(&w_eval) } else { f64::NAN };
+            let dist_to_opt =
+                if should_eval { problem.distance_to_optimum(&w_eval) } else { None };
+            let eval_metric = if should_eval { problem.eval_metric(&w_eval) } else { None };
+            drop(sp_eval);
+            let round_obs = obs.end_round();
+            record.rounds.push(RoundMetrics {
+                round: t,
+                global_loss,
+                ranks: lr_w.iter().map(|w| w.rows().min(w.cols())).collect(),
+                comm_floats: 0,
+                comm_floats_lr: 0,
+                bytes_down: 0,
+                bytes_up: 0,
+                comm_floats_per_client: 0,
+                dist_to_opt,
+                eval_metric,
+                wall_s: watch.elapsed_s(),
+                client_wall_s: 0.0,
+                client_serial_s: 0.0,
+                phase_s: round_obs.phase_s,
+                latency: round_obs.latency,
+                staleness: round_obs.staleness,
+                virtual_s: 0.0,
+                fault,
+            });
+            continue;
+        }
         let a_num = plan.len();
         net.set_active_clients(a_num);
         drop(sp_plan);
@@ -145,13 +192,22 @@ pub fn run_dense_obs<P: FedProblem + Sync>(
                     lr_w.iter().map(|w| Matrix::zeros(w.rows(), w.cols())).collect();
                 let mut mean_d: Vec<Matrix> =
                     dense.iter().map(|w| Matrix::zeros(w.rows(), w.cols())).collect();
+                // The global-gradient fold stays a weighted mean even
+                // under robust aggregation (it is a control signal, not
+                // the model update); retransmitted copies still bill.
                 for (task, g) in plan.tasks.iter().zip(&per_client) {
+                    if let Some(gt) = &gate {
+                        net.set_upload_copies(gt.copies[task.ordinal]);
+                    }
                     for (acc, gl) in mean_lr.iter_mut().zip(&g.lr) {
                         acc.axpy(task.weight, &net.aggregate_mat("G_W_lr", gl.dense()));
                     }
                     for (acc, gd) in mean_d.iter_mut().zip(&g.dense) {
                         acc.axpy(task.weight, &net.aggregate_mat("G_W_dense", gd));
                     }
+                }
+                if gate.is_some() {
+                    net.set_upload_copies(1);
                 }
                 let mean_lr_bc: Vec<Matrix> =
                     mean_lr.iter().map(|m| net.broadcast_mat("G_W_lr", m)).collect();
@@ -231,15 +287,24 @@ pub fn run_dense_obs<P: FedProblem + Sync>(
         // server averages the decoded tensors in plan order. Drift
         // states persist as-is (full matrix space, no basis to track);
         // SCAFFOLD deltas bill uplink bytes and fold below.
+        // Robust aggregation over the decoded client weights; Mean
+        // stays the legacy axpy fold, bitwise.
+        let mut robust_lr = RobustAccum::new(cfg.aggregator, lr_w.len());
+        let mut robust_d = RobustAccum::new(cfg.aggregator, dense.len());
         let mut ctrl_delta_sum: Option<DriftState> = None;
         for (task, (lr_c, dense_c, drift_out, ctrl_delta)) in
             plan.tasks.iter().zip(&report.results)
         {
+            if let Some(gt) = &gate {
+                net.set_upload_copies(gt.copies[task.ordinal]);
+            }
             for (l, w) in lr_c.iter().enumerate() {
-                lr_accum[l].axpy(task.weight, &net.aggregate_mat("W_lr", w));
+                let dec = net.aggregate_mat("W_lr", w);
+                robust_lr.push(l, &mut lr_accum[l], task.weight, &dec);
             }
             for (dl, w) in dense_c.iter().enumerate() {
-                dense_accum[dl].axpy(task.weight, &net.aggregate_mat("W_dense", w));
+                let dec = net.aggregate_mat("W_dense", w);
+                robust_d.push(dl, &mut dense_accum[dl], task.weight, &dec);
             }
             if let Some(st) = drift_out {
                 states.set_drift(task.client_id, st.clone());
@@ -262,6 +327,11 @@ pub fn run_dense_obs<P: FedProblem + Sync>(
                 }
             }
         }
+        if gate.is_some() {
+            net.set_upload_copies(1);
+        }
+        robust_lr.finish(&mut lr_accum);
+        robust_d.finish(&mut dense_accum);
         net.end_round_trip();
         states.advance(&plan);
         lr_w = lr_accum;
@@ -287,6 +357,7 @@ pub fn run_dense_obs<P: FedProblem + Sync>(
         let (comm_floats, comm_per_client) = (comm.total_floats(), comm.per_client_floats());
         let (bytes_down, bytes_up) = (comm.bytes_down, comm.bytes_up);
         let comm_floats_lr = comm.floats_matching(|l| l.ends_with("_lr"));
+        let fault = FaultRoundStats::from_comm(comm);
         drop(sp_io);
         let sp_eval = obs.span(Phase::Eval);
         let should_eval = t % cfg.eval_every == 0 || t + 1 == cfg.rounds;
@@ -318,6 +389,7 @@ pub fn run_dense_obs<P: FedProblem + Sync>(
             latency: round_obs.latency,
             staleness: round_obs.staleness,
             virtual_s: 0.0,
+            fault,
         });
     }
 

@@ -20,7 +20,7 @@
 //! This is the executable counterpart of Table 1's FeDLR row.
 
 use crate::client::{ClientStates, CorrectionEngine, DriftState, GradMode, LocalUpdate};
-use crate::comm::Network;
+use crate::comm::{sync_gate, FaultRoundStats, Network};
 use crate::engine::{ClientExecutor, Executor, RoundPlan};
 use crate::linalg::svd;
 use crate::lowrank::LowRank;
@@ -31,6 +31,7 @@ use crate::tensor::Matrix;
 use crate::util::rng::Rng;
 use crate::util::Stopwatch;
 
+use super::aggregate::RobustAccum;
 use super::config::TrainConfig;
 
 /// Run the FeDLR-style dual-side-compression baseline. Single low-rank
@@ -63,6 +64,7 @@ pub fn run_fedlr_obs<P: FedProblem + Sync>(
     let mut w = Matrix::randn(m, n, &mut rng).scale((1.0 / m as f64).sqrt());
 
     let mut net = Network::with_codec(c_num, cfg.codec);
+    net.fault = cfg.fault;
     let executor = Executor::from_kind(cfg.executor);
     cfg.apply_kernel_threads();
     let mut record = RunRecord::new("fedlr", experiment, c_num, cfg.seed);
@@ -80,7 +82,46 @@ pub fn run_fedlr_obs<P: FedProblem + Sync>(
         obs.begin_round(t);
         let lr_t = cfg.lr.at(t);
         let sp_plan = obs.span(Phase::Io);
-        let plan = RoundPlan::build(cfg, c_num, t, |c| problem.client_weight(c));
+        let mut plan = RoundPlan::build(cfg, c_num, t, |c| problem.client_weight(c));
+        // Unreliable-transport gate: drop/corrupt/retry uploads and
+        // enforce the round quorum (DESIGN.md §Fault model). `None`
+        // whenever faults and the net policy are both inactive.
+        let gate = sync_gate(&cfg.fault, &cfg.net_policy, cfg.seed, t as u64, &mut plan, &mut net);
+        if gate.as_ref().is_some_and(|g| g.skip) {
+            drop(sp_plan);
+            // Quorum miss: record the round (evaluated on the untouched
+            // server weights) and move on without updating any state.
+            net.set_active_clients(0);
+            let fault = FaultRoundStats::skipped_from_comm(net.end_round());
+            let sp_eval = obs.span(Phase::Eval);
+            let w_eval = Weights { dense: vec![], lr: vec![LrWeight::Dense(w.clone())] };
+            let global_loss = problem.global_loss(&w_eval);
+            let dist_to_opt = problem.distance_to_optimum(&w_eval);
+            let eval_metric = problem.eval_metric(&w_eval);
+            drop(sp_eval);
+            let round_obs = obs.end_round();
+            record.rounds.push(RoundMetrics {
+                round: t,
+                global_loss,
+                ranks: vec![0], // no compression ran this round
+                comm_floats: 0,
+                comm_floats_lr: 0,
+                bytes_down: 0,
+                bytes_up: 0,
+                comm_floats_per_client: 0,
+                dist_to_opt,
+                eval_metric,
+                wall_s: watch.elapsed_s(),
+                client_wall_s: 0.0,
+                client_serial_s: 0.0,
+                phase_s: round_obs.phase_s,
+                latency: round_obs.latency,
+                staleness: round_obs.staleness,
+                virtual_s: 0.0,
+                fault,
+            });
+            continue;
+        }
         net.set_active_clients(plan.len());
         drop(sp_plan);
         // Batch-schedule cursors for this round's participants, fetched
@@ -164,10 +205,16 @@ pub fn run_fedlr_obs<P: FedProblem + Sync>(
         // old accounting charged everyone a uniform upper bound); the
         // server reconstructs from the decoded factors in plan order.
         let mut w_next = Matrix::zeros(m, n);
+        // Robust aggregation over the reconstructed per-client dense
+        // matrices; Mean stays the legacy axpy fold, bitwise.
+        let mut robust = RobustAccum::new(cfg.aggregator, 1);
         let mut ctrl_delta_sum: Option<Matrix> = None;
         for (task, ((pc, sc, qc), drift_out, ctrl_delta)) in
             plan.tasks.iter().zip(&report.results)
         {
+            if let Some(gt) = &gate {
+                net.set_upload_copies(gt.copies[task.ordinal]);
+            }
             let mut parts = net
                 .aggregate_batch("factor_triple_c", &[pc.data(), sc.as_slice(), qc.data()])
                 .into_iter();
@@ -176,7 +223,7 @@ pub fn run_fedlr_obs<P: FedProblem + Sync>(
             let qc_d = Matrix::from_vec(qc.rows(), qc.cols(), parts.next().unwrap());
             let w_c_approx =
                 crate::tensor::matmul_nt(&crate::tensor::matmul(&pc_d, &Matrix::diag(&sc_d)), &qc_d);
-            w_next.axpy(task.weight, &w_c_approx);
+            robust.push(0, &mut w_next, task.weight, &w_c_approx);
             // Drift states persist as-is (fixed m×n space); SCAFFOLD
             // deltas go up *uncompressed* — the variate is not low rank.
             if let Some(st) = drift_out {
@@ -190,6 +237,10 @@ pub fn run_fedlr_obs<P: FedProblem + Sync>(
                 }
             }
         }
+        if gate.is_some() {
+            net.set_upload_copies(1);
+        }
+        robust.finish(std::slice::from_mut(&mut w_next));
         net.end_round_trip();
         states.advance(&plan);
         w = w_next;
@@ -210,6 +261,7 @@ pub fn run_fedlr_obs<P: FedProblem + Sync>(
         let comm = net.end_round();
         let (comm_floats, comm_per_client) = (comm.total_floats(), comm.per_client_floats());
         let (bytes_down, bytes_up) = (comm.bytes_down, comm.bytes_up);
+        let fault = FaultRoundStats::from_comm(comm);
         drop(sp_io);
         let sp_eval = obs.span(Phase::Eval);
         let w_eval = Weights { dense: vec![], lr: vec![LrWeight::Dense(w.clone())] };
@@ -236,6 +288,7 @@ pub fn run_fedlr_obs<P: FedProblem + Sync>(
             latency: round_obs.latency,
             staleness: round_obs.staleness,
             virtual_s: 0.0,
+            fault,
         });
     }
 

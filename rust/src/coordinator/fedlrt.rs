@@ -27,7 +27,7 @@
 use crate::client::{
     change_coords, ClientStates, CorrectionEngine, DriftState, GradMode, LocalUpdate,
 };
-use crate::comm::Network;
+use crate::comm::{sync_gate, FaultRoundStats, Network};
 use crate::engine::{ClientExecutor, Executor, RoundPlan};
 use crate::lowrank::{augment_basis_ws, truncate_ws, AugmentedBasis, LowRank};
 use crate::metrics::{RoundMetrics, RunRecord};
@@ -37,6 +37,7 @@ use crate::tensor::{Matrix, Workspace};
 use crate::util::rng::Rng;
 use crate::util::Stopwatch;
 
+use super::aggregate::RobustAccum;
 use super::config::{TrainConfig, VarCorrection};
 
 /// Run FeDLRT on `problem` under `cfg`; returns the full run record
@@ -81,6 +82,7 @@ pub fn run_fedlrt_obs<P: FedProblem + Sync>(
         .collect();
 
     let mut net = Network::with_codec(c_num, cfg.codec);
+    net.fault = cfg.fault;
     let executor = Executor::from_kind(cfg.executor);
     cfg.apply_kernel_threads();
     // Server-side scratch, reused across all rounds: mean-gradient
@@ -109,7 +111,53 @@ pub fn run_fedlrt_obs<P: FedProblem + Sync>(
         // iteration counts, and normalized aggregation weights, all in
         // one deterministic plan.
         let sp_plan = obs.span(Phase::Io);
-        let plan = RoundPlan::build(cfg, c_num, t, |c| problem.client_weight(c));
+        let mut plan = RoundPlan::build(cfg, c_num, t, |c| problem.client_weight(c));
+        // Unreliable transport: decide each participant's delivery fate
+        // up front (loss/corruption/retries against the round deadline),
+        // filter the roster to the delivered clients, and skip the
+        // round entirely — state untouched — below the upload quorum.
+        // `None` (clean transport) leaves the plan bitwise-untouched.
+        let gate =
+            sync_gate(&cfg.fault, &cfg.net_policy, cfg.seed, t as u64, &mut plan, &mut net);
+        if gate.as_ref().is_some_and(|g| g.skip) {
+            drop(sp_plan);
+            net.set_active_clients(0);
+            let fault = {
+                let comm = net.end_round();
+                FaultRoundStats::skipped_from_comm(comm)
+            };
+            let sp_eval = obs.span(Phase::Eval);
+            let w_eval = Weights {
+                dense: dense.clone(),
+                lr: factors.iter().cloned().map(LrWeight::Factored).collect(),
+            };
+            let global_loss = problem.global_loss(&w_eval);
+            let dist_to_opt = problem.distance_to_optimum(&w_eval);
+            let eval_metric = problem.eval_metric(&w_eval);
+            drop(sp_eval);
+            let round_obs = obs.end_round();
+            record.rounds.push(RoundMetrics {
+                round: t,
+                global_loss,
+                ranks: factors.iter().map(|f| f.rank()).collect(),
+                comm_floats: 0,
+                comm_floats_lr: 0,
+                bytes_down: 0,
+                bytes_up: 0,
+                comm_floats_per_client: 0.0,
+                dist_to_opt,
+                eval_metric,
+                wall_s: watch.elapsed_s(),
+                client_wall_s: 0.0,
+                client_serial_s: 0.0,
+                phase_s: round_obs.phase_s,
+                latency: round_obs.latency,
+                staleness: round_obs.staleness,
+                virtual_s: 0.0,
+                fault,
+            });
+            continue;
+        }
         let a_num = plan.len();
         net.set_active_clients(a_num);
         let weights: Vec<f64> = plan.tasks.iter().map(|task| task.weight).collect();
@@ -172,7 +220,11 @@ pub fn run_fedlrt_obs<P: FedProblem + Sync>(
             factors.iter().map(|f| ws.take_mat(f.rank(), f.rank())).collect();
         let mut g_dense_mean: Vec<Matrix> =
             dense.iter().map(|d| ws.take_mat(d.rows(), d.cols())).collect();
-        for (g, &wt) in per_client.iter().zip(&weights) {
+        for (ordinal, (g, &wt)) in per_client.iter().zip(&weights).enumerate() {
+            // Retransmitting clients bill every wire copy of each upload.
+            if let Some(gt) = &gate {
+                net.set_upload_copies(gt.copies[ordinal]);
+            }
             for l in 0..num_lr {
                 match &g.lr[l] {
                     LrGrad::Factors { g_u, g_v, g_s } => {
@@ -198,6 +250,9 @@ pub fn run_fedlrt_obs<P: FedProblem + Sync>(
                     acc.axpy(wt, gd);
                 }
             }
+        }
+        if gate.is_some() {
+            net.set_upload_copies(1);
         }
         net.end_round_trip();
         drop(sp_agg);
@@ -311,10 +366,16 @@ pub fn run_fedlrt_obs<P: FedProblem + Sync>(
                 let grads_aug = report.results;
                 let mut mean: Vec<Matrix> =
                     augs.iter().map(|a| Matrix::zeros(a.rank(), a.rank())).collect();
-                for (g, &wt) in grads_aug.iter().zip(&weights) {
+                for (ordinal, (g, &wt)) in grads_aug.iter().zip(&weights).enumerate() {
+                    if let Some(gt) = &gate {
+                        net.set_upload_copies(gt.copies[ordinal]);
+                    }
                     for (l, m) in mean.iter_mut().enumerate() {
                         m.axpy(wt, &net.aggregate_mat("G_S_tilde", g.lr[l].coeff()));
                     }
+                }
+                if gate.is_some() {
+                    net.set_upload_copies(1);
                 }
                 let mean_bc: Vec<Matrix> =
                     mean.iter().map(|m| net.broadcast_mat("G_S_tilde", m)).collect();
@@ -426,14 +487,19 @@ pub fn run_fedlrt_obs<P: FedProblem + Sync>(
         client_wall_s += report.wall_s;
         client_serial_s += report.serial_s;
         // (16) Each client uploads its S̃_c^{s*} (+ dense params) through
-        // the codec; the server averages the *decoded* tensors, weighted
-        // (eq. 10 with non-uniform weights) — reduced in plan order so
-        // the trajectory is bitwise independent of the executor.
+        // the codec; the server combines the *decoded* tensors under the
+        // configured aggregator — the weighted mean (eq. 10 with
+        // non-uniform weights, the bitwise-legacy axpy fold) or a robust
+        // rule in coefficient space, applied *before* the truncation
+        // refresh — reduced in plan order so the trajectory is bitwise
+        // independent of the executor.
         let sp_agg2 = obs.span(Phase::Aggregate);
         let mut s_accum: Vec<Matrix> =
             augs.iter().map(|a| ws.take_mat(a.rank(), a.rank())).collect();
         let mut dense_accum: Vec<Matrix> =
             dense.iter().map(|d| Matrix::zeros(d.rows(), d.cols())).collect();
+        let mut robust_s = RobustAccum::new(cfg.aggregator, num_lr);
+        let mut robust_d = RobustAccum::new(cfg.aggregator, dense.len());
         // Between-eval loss estimate: the *weighted* mean of the
         // first-iteration client losses, using the plan's normalized
         // weights — an unweighted mean would bias the recorded
@@ -450,11 +516,16 @@ pub fn run_fedlrt_obs<P: FedProblem + Sync>(
             plan.tasks.iter().zip(&report.results)
         {
             local_loss_w += task.weight * *first_loss;
+            if let Some(gt) = &gate {
+                net.set_upload_copies(gt.copies[task.ordinal]);
+            }
             for l in 0..num_lr {
-                s_accum[l].axpy(task.weight, &net.aggregate_mat("S_tilde_c", &s_c[l]));
+                let dec = net.aggregate_mat("S_tilde_c", &s_c[l]);
+                robust_s.push(l, &mut s_accum[l], task.weight, &dec);
             }
             for (dl, d) in dense_c.iter().enumerate() {
-                dense_accum[dl].axpy(task.weight, &net.aggregate_mat("dense_w", d));
+                let dec = net.aggregate_mat("dense_w", d);
+                robust_d.push(dl, &mut dense_accum[dl], task.weight, &dec);
             }
             if let Some(st) = drift_out {
                 drift_staged.push((task.client_id, st.clone()));
@@ -484,6 +555,11 @@ pub fn run_fedlrt_obs<P: FedProblem + Sync>(
                 }
             }
         }
+        if gate.is_some() {
+            net.set_upload_copies(1);
+        }
+        robust_s.finish(&mut s_accum);
+        robust_d.finish(&mut dense_accum);
         net.end_round_trip();
         // Advance each participating client's batch schedule by the
         // iterations it actually ran (stragglers advance less; absentees
@@ -615,6 +691,7 @@ pub fn run_fedlrt_obs<P: FedProblem + Sync>(
         let (bytes_down, bytes_up) = (comm.bytes_down, comm.bytes_up);
         let comm_floats_lr =
             comm.floats_matching(|l| !matches!(l, "dense_w" | "G_dense" | "ctrl_dense"));
+        let fault = FaultRoundStats::from_comm(comm);
         drop(sp_io);
         let sp_eval = obs.span(Phase::Eval);
         let should_eval = t % cfg.eval_every == 0 || t + 1 == cfg.rounds;
@@ -650,6 +727,7 @@ pub fn run_fedlrt_obs<P: FedProblem + Sync>(
             latency: round_obs.latency,
             staleness: round_obs.staleness,
             virtual_s: 0.0,
+            fault,
         });
         let _ = discarded_total;
     }
@@ -914,6 +992,83 @@ mod tests {
         // the loss to ~0 (the target term dominates the initial loss).
         assert!(last < 0.1 * first, "dense params frozen? {first} -> {last}");
         assert!(last.is_finite());
+    }
+
+    #[test]
+    fn lossy_transport_with_retries_is_deterministic_and_counted() {
+        let mut rng = Rng::new(815);
+        let prob = Quadratic::random(10, 2, 4, &mut rng);
+        let mut cfg = quick_cfg(8, 3, VarCorrection::Simplified);
+        cfg.fault = crate::comm::FaultModel {
+            loss_prob: 0.25,
+            corrupt_prob: 0.1,
+            ..crate::comm::FaultModel::default()
+        };
+        cfg.net_policy = crate::comm::NetPolicy { retries: 2, ..crate::comm::NetPolicy::default() };
+        let a = run_fedlrt(&prob, &cfg, "t");
+        let mut cfg_pool = cfg.clone();
+        cfg_pool.executor = crate::engine::ExecutorKind::ThreadPool { threads: 3 };
+        let b = run_fedlrt(&prob, &cfg_pool, "t");
+        for (x, y) in a.rounds.iter().zip(&b.rounds) {
+            assert_eq!(x.global_loss.to_bits(), y.global_loss.to_bits());
+            assert_eq!(x.fault, y.fault, "fault counters must be executor-independent");
+            assert_eq!(x.comm_floats, y.comm_floats);
+        }
+        // p=0.25 over 8 rounds × 4 clients: some attempt must fail.
+        let failed: u64 = a
+            .rounds
+            .iter()
+            .map(|r| r.fault.msgs_dropped + r.fault.msgs_corrupt)
+            .sum();
+        assert!(failed > 0, "lossy transport produced no failures");
+        assert!(a.final_loss().is_finite());
+    }
+
+    #[test]
+    fn quorum_miss_skips_rounds_without_touching_state() {
+        // Total blackout (p = 1, no retries): every round skips with the
+        // model untouched — the recorded loss stays bitwise at init.
+        let mut rng = Rng::new(816);
+        let prob = Quadratic::random(10, 2, 4, &mut rng);
+        let mut cfg = quick_cfg(5, 3, VarCorrection::Full);
+        cfg.fault = crate::comm::FaultModel {
+            loss_prob: 1.0,
+            ..crate::comm::FaultModel::default()
+        };
+        let rec = run_fedlrt(&prob, &cfg, "t");
+        assert_eq!(rec.skipped_rounds(), 5);
+        let l0 = rec.rounds[0].global_loss;
+        for r in &rec.rounds {
+            assert!(r.fault.skipped);
+            assert!(r.fault.msgs_dropped > 0);
+            assert_eq!(r.global_loss.to_bits(), l0.to_bits(), "state must stay untouched");
+            assert_eq!(r.comm_floats, 0, "a skipped round moves no traffic");
+        }
+    }
+
+    #[test]
+    fn robust_aggregators_preserve_descent_on_homogeneous_clients() {
+        // Identical clients ⇒ identical uploads ⇒ every robust rule
+        // reduces to the mean, so descent must match the mean run's.
+        let mut rng = Rng::new(817);
+        let base = Quadratic::random(12, 2, 1, &mut rng);
+        let prob = Quadratic {
+            targets: vec![base.targets[0].clone(); 4],
+            alphas: vec![1.0; 4],
+            n: 12,
+        };
+        for agg in [
+            crate::coordinator::Aggregator::TrimmedMean { trim: 0.25 },
+            crate::coordinator::Aggregator::Median,
+            crate::coordinator::Aggregator::NormClip { mult: 2.0 },
+        ] {
+            let mut cfg = quick_cfg(40, 5, VarCorrection::None);
+            cfg.aggregator = agg;
+            let rec = run_fedlrt(&prob, &cfg, "t");
+            let first = rec.rounds.first().unwrap().global_loss;
+            let last = rec.final_loss();
+            assert!(last < first * 0.05, "{}: {first} -> {last}", agg.label());
+        }
     }
 
     #[test]

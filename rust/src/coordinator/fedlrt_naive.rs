@@ -12,7 +12,7 @@
 use crate::client::{
     change_coords, ClientStates, CorrectionEngine, DriftState, GradMode, LocalUpdate,
 };
-use crate::comm::Network;
+use crate::comm::{sync_gate, FaultRoundStats, Network};
 use crate::engine::{ClientExecutor, Executor, RoundPlan};
 use crate::linalg::svd;
 use crate::lowrank::{augment_basis, LowRank};
@@ -23,6 +23,7 @@ use crate::tensor::Matrix;
 use crate::util::rng::Rng;
 use crate::util::Stopwatch;
 
+use super::aggregate::RobustAccum;
 use super::config::TrainConfig;
 
 /// Run Algorithm 6. Only supports problems whose trainables are a single
@@ -56,6 +57,7 @@ pub fn run_fedlrt_naive_obs<P: FedProblem + Sync>(
     fac.s.scale_inplace((1.0 / m as f64).sqrt());
 
     let mut net = Network::with_codec(c_num, cfg.codec);
+    net.fault = cfg.fault;
     let executor = Executor::from_kind(cfg.executor);
     cfg.apply_kernel_threads();
     let mut record = RunRecord::new("fedlrt_naive", experiment, c_num, cfg.seed);
@@ -70,7 +72,44 @@ pub fn run_fedlrt_naive_obs<P: FedProblem + Sync>(
         obs.begin_round(t);
         let lr_t = cfg.lr.at(t);
         let sp_plan = obs.span(Phase::Io);
-        let plan = RoundPlan::build(cfg, c_num, t, |c| problem.client_weight(c));
+        let mut plan = RoundPlan::build(cfg, c_num, t, |c| problem.client_weight(c));
+        // Transport gate: filter to delivered clients, skip below quorum
+        // (see `run_fedlrt`); `None` leaves the plan bitwise-untouched.
+        let gate =
+            sync_gate(&cfg.fault, &cfg.net_policy, cfg.seed, t as u64, &mut plan, &mut net);
+        if gate.as_ref().is_some_and(|g| g.skip) {
+            drop(sp_plan);
+            net.set_active_clients(0);
+            let fault = FaultRoundStats::skipped_from_comm(net.end_round());
+            let sp_eval = obs.span(Phase::Eval);
+            let w_eval = Weights { dense: vec![], lr: vec![LrWeight::Factored(fac.clone())] };
+            let global_loss = problem.global_loss(&w_eval);
+            let dist_to_opt = problem.distance_to_optimum(&w_eval);
+            let eval_metric = problem.eval_metric(&w_eval);
+            drop(sp_eval);
+            let round_obs = obs.end_round();
+            record.rounds.push(RoundMetrics {
+                round: t,
+                global_loss,
+                ranks: vec![fac.rank()],
+                comm_floats: 0,
+                comm_floats_lr: 0,
+                bytes_down: 0,
+                bytes_up: 0,
+                comm_floats_per_client: 0.0,
+                dist_to_opt,
+                eval_metric,
+                wall_s: watch.elapsed_s(),
+                client_wall_s: 0.0,
+                client_serial_s: 0.0,
+                phase_s: round_obs.phase_s,
+                latency: round_obs.latency,
+                staleness: round_obs.staleness,
+                virtual_s: 0.0,
+                fault,
+            });
+            continue;
+        }
         net.set_active_clients(plan.len());
         drop(sp_plan);
 
@@ -172,6 +211,10 @@ pub fn run_fedlrt_naive_obs<P: FedProblem + Sync>(
         // *decoded* triples in plan order (executor-independent
         // bitwise).
         let mut w_star = Matrix::zeros(m, n);
+        // Robust aggregation operates on the reconstructed per-client
+        // dense matrices (this baseline has no shared coefficient
+        // space); Mean stays the legacy axpy fold, bitwise.
+        let mut robust = RobustAccum::new(cfg.aggregator, 1);
         // Stateful corrections: outputs live in each client's local
         // augmented space, so they carry their decoded basis along for
         // the projection into the new server basis after the SVD.
@@ -180,6 +223,9 @@ pub fn run_fedlrt_naive_obs<P: FedProblem + Sync>(
         for (task, (u_t, s_t, v_t, drift_out, ctrl_delta)) in
             plan.tasks.iter().zip(&report.results)
         {
+            if let Some(gt) = &gate {
+                net.set_upload_copies(gt.copies[task.ordinal]);
+            }
             let mut parts = net
                 .aggregate_batch("factor_triple_c", &[u_t.data(), s_t.data(), v_t.data()])
                 .into_iter();
@@ -195,8 +241,12 @@ pub fn run_fedlrt_naive_obs<P: FedProblem + Sync>(
                 ctrl_deltas.push((dec, u_d.clone(), v_d.clone()));
             }
             let w_c_dense = LowRank { u: u_d, s: s_d, v: v_d }.to_dense();
-            w_star.axpy(task.weight, &w_c_dense);
+            robust.push(0, &mut w_star, task.weight, &w_c_dense);
         }
+        if gate.is_some() {
+            net.set_upload_copies(1);
+        }
+        robust.finish(std::slice::from_mut(&mut w_star));
         net.end_round_trip();
         states.advance(&plan);
         drop(sp_agg);
@@ -245,6 +295,7 @@ pub fn run_fedlrt_naive_obs<P: FedProblem + Sync>(
         let (comm_floats, comm_per_client) = (comm.total_floats(), comm.per_client_floats());
         let (bytes_down, bytes_up) = (comm.bytes_down, comm.bytes_up);
         let comm_floats_lr = comm_floats; // single-layer problems only
+        let fault = FaultRoundStats::from_comm(comm);
         drop(sp_io);
         let sp_eval = obs.span(Phase::Eval);
         let w_eval = Weights { dense: vec![], lr: vec![LrWeight::Factored(fac.clone())] };
@@ -271,6 +322,7 @@ pub fn run_fedlrt_naive_obs<P: FedProblem + Sync>(
             latency: round_obs.latency,
             staleness: round_obs.staleness,
             virtual_s: 0.0,
+            fault,
         });
     }
 

@@ -22,6 +22,7 @@
 //! default (phases + latency, no trace). Telemetry is observe-only —
 //! see DESIGN.md §Observability for the determinism argument.
 
+pub mod aggregate;
 pub mod async_server;
 pub mod config;
 pub mod dense_baselines;
@@ -31,6 +32,7 @@ pub mod fedlrt_naive;
 pub mod presets;
 pub mod sampling;
 
+pub use aggregate::{Aggregator, RobustAccum};
 pub use async_server::{run_async, run_async_obs, run_async_traced, EventKind, EventTraceRow};
 pub use config::{AsyncConfig, RankConfig, Schedule, TrainConfig, VarCorrection};
 pub use dense_baselines::{run_dense, run_dense_obs, DenseAlgo};

@@ -27,10 +27,10 @@
 
 use anyhow::Result;
 use fedlrt::client::Correction;
-use fedlrt::comm::CodecKind;
+use fedlrt::comm::{CodecKind, FaultModel, NetPolicy};
 use fedlrt::coordinator::{
-    run_async_obs, run_dense_obs, run_fedlrt_obs, DenseAlgo, RankConfig, Schedule, TrainConfig,
-    VarCorrection,
+    run_async_obs, run_dense_obs, run_fedlrt_obs, Aggregator, DenseAlgo, RankConfig, Schedule,
+    TrainConfig, VarCorrection,
 };
 use fedlrt::engine::{Dist, ExecutorKind, ScenarioConfig, TimingModel};
 use fedlrt::obsv::Recorder;
@@ -260,6 +260,39 @@ fn parse_dist(a: &Args, name: &str) -> Dist {
     })
 }
 
+/// The unreliable-transport and robust-aggregation options shared by
+/// `train` and `lsq` (see `comm::faults` and `coordinator::aggregate`;
+/// all defaults are structurally inactive / bitwise-legacy).
+fn fault_opts(cli: Cli) -> Cli {
+    cli.opt("loss-prob", "0", "per-attempt upload loss probability")
+        .opt("corrupt-prob", "0", "per-attempt payload corruption probability (checksum-detected)")
+        .opt("dup-prob", "0", "per-attempt duplicate-delivery probability")
+        .opt("net-delay", "constant:0", "per-attempt delivery delay-jitter distribution")
+        .opt("timeout", "0", "upload deadline in virtual seconds (0 = none)")
+        .opt("retries", "0", "retransmissions after the first attempt (exponential backoff)")
+        .opt("quorum", "0", "sync: min surviving uploads per round, else the round is skipped")
+        .opt("aggregator", "mean", "robust aggregation: mean|trimmed[:frac]|median|clip[:mult]")
+}
+
+/// Fold the parsed fault/aggregation options into `cfg`.
+fn apply_fault_opts(cfg: &mut TrainConfig, a: &Args) {
+    cfg.fault = FaultModel {
+        loss_prob: a.f64("loss-prob"),
+        corrupt_prob: a.f64("corrupt-prob"),
+        dup_prob: a.f64("dup-prob"),
+        delay: parse_dist(a, "net-delay"),
+    };
+    cfg.net_policy = NetPolicy {
+        timeout: a.f64("timeout"),
+        retries: a.u64("retries") as u32,
+        quorum: a.usize("quorum"),
+    };
+    cfg.aggregator = Aggregator::parse(a.str("aggregator")).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+}
+
 /// Fold the parsed async options into `cfg`.
 fn apply_async_opts(cfg: &mut TrainConfig, a: &Args) {
     cfg.schedule = Schedule::parse(a.str("schedule")).unwrap_or_else(|e| {
@@ -319,7 +352,7 @@ fn cmd_train(rest: &[String]) -> Result<()> {
         )
         .opt("trace", "", "write a Chrome trace-event JSON (Perfetto-loadable) to this path")
         .opt("out", "results/train.jsonl", "JSONL output path");
-    let cli = async_opts(cli);
+    let cli = fault_opts(async_opts(cli));
     let a = cli.parse(rest).unwrap_or_else(|e| {
         eprintln!("{e}");
         std::process::exit(2)
@@ -369,6 +402,7 @@ fn cmd_train(rest: &[String]) -> Result<()> {
         ..TrainConfig::default()
     };
     apply_async_opts(&mut cfg, &a);
+    apply_fault_opts(&mut cfg, &a);
     let obs = recorder_for(a.str("trace"));
     let rec = if cfg.schedule != Schedule::Sync {
         if a.str("algo") != "fedlrt" {
@@ -441,7 +475,7 @@ fn cmd_lsq(rest: &[String]) -> Result<()> {
             "matmul kernel worker threads (0 = env FEDLRT_KERNEL_THREADS or 1)",
         )
         .opt("trace", "", "write a Chrome trace-event JSON (Perfetto-loadable) to this path");
-    let cli = async_opts(cli);
+    let cli = fault_opts(async_opts(cli));
     let a = cli.parse(rest).unwrap_or_else(|e| {
         eprintln!("{e}");
         std::process::exit(2)
@@ -483,6 +517,7 @@ fn cmd_lsq(rest: &[String]) -> Result<()> {
         ..TrainConfig::default()
     };
     apply_async_opts(&mut cfg, &a);
+    apply_fault_opts(&mut cfg, &a);
     let obs = recorder_for(a.str("trace"));
     let rec = if cfg.schedule != Schedule::Sync {
         if matches!(a.str("algo"), "fedavg" | "fedlin") {

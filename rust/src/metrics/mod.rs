@@ -68,6 +68,10 @@ pub struct RoundMetrics {
     /// event simulator's clock); `0.0` for sync runs, whose notion of
     /// time is the round index.
     pub virtual_s: f64,
+    /// Transport-fault counters of the round (drops, checksum rejects,
+    /// retransmitted bytes, quorum skip). All-default — and omitted
+    /// from the JSON line — on a clean transport.
+    pub fault: crate::comm::FaultRoundStats,
 }
 
 /// A full training run.
@@ -164,6 +168,21 @@ impl RunRecord {
         self.rounds.iter().find(|r| r.global_loss <= eps).map(|r| r.round)
     }
 
+    /// Rounds skipped below the upload quorum (0 on a clean transport).
+    pub fn skipped_rounds(&self) -> usize {
+        self.rounds.iter().filter(|r| r.fault.skipped).count()
+    }
+
+    /// Cumulative upload messages lost or abandoned across the run.
+    pub fn total_msgs_dropped(&self) -> u64 {
+        self.rounds.iter().map(|r| r.fault.msgs_dropped).sum()
+    }
+
+    /// Cumulative retransmitted/duplicate bytes across the run.
+    pub fn total_bytes_retx(&self) -> u64 {
+        self.rounds.iter().map(|r| r.fault.bytes_retx).sum()
+    }
+
     pub fn to_json(&self) -> Json {
         let mut o = Json::obj();
         o.set("algorithm", self.algorithm.as_str())
@@ -203,6 +222,12 @@ impl RunRecord {
                 }
                 if r.virtual_s > 0.0 {
                     ro.set("virtual_s", r.virtual_s);
+                }
+                if r.fault.any() {
+                    ro.set("skipped", r.fault.skipped)
+                        .set("msgs_dropped", r.fault.msgs_dropped)
+                        .set("msgs_corrupt", r.fault.msgs_corrupt)
+                        .set("bytes_retx", r.fault.bytes_retx);
                 }
                 if let Some(d) = r.dist_to_opt {
                     ro.set("dist_to_opt", d);
@@ -301,6 +326,7 @@ mod tests {
                 latency: crate::obsv::LatencySummary::default(),
                 staleness: crate::obsv::StalenessSummary::default(),
                 virtual_s: 0.0,
+                fault: crate::comm::FaultRoundStats::default(),
             });
         }
         r
@@ -397,5 +423,30 @@ mod tests {
         assert_eq!(rounds[0].get("stale_p95").unwrap().as_f64().unwrap(), 3.0);
         assert_eq!(rounds[0].get("stale_n").unwrap().as_usize().unwrap(), 5);
         assert_eq!(rounds[0].get("virtual_s").unwrap().as_f64().unwrap(), 12.5);
+    }
+
+    #[test]
+    fn fault_counters_gated_out_of_clean_rounds() {
+        let mut r = record(&[1.0]);
+        let j = r.to_json();
+        let rounds = j.get("rounds").unwrap().as_arr().unwrap();
+        assert!(rounds[0].get("msgs_dropped").is_none(), "clean rounds stay legacy");
+        assert!(rounds[0].get("skipped").is_none());
+        assert_eq!(r.skipped_rounds(), 0);
+        r.rounds[0].fault = crate::comm::FaultRoundStats {
+            skipped: true,
+            msgs_dropped: 3,
+            msgs_corrupt: 1,
+            bytes_retx: 160,
+        };
+        let j = r.to_json();
+        let rounds = j.get("rounds").unwrap().as_arr().unwrap();
+        assert!(rounds[0].get("skipped").is_some());
+        assert_eq!(rounds[0].get("msgs_dropped").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(rounds[0].get("msgs_corrupt").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(rounds[0].get("bytes_retx").unwrap().as_usize().unwrap(), 160);
+        assert_eq!(r.skipped_rounds(), 1);
+        assert_eq!(r.total_msgs_dropped(), 3);
+        assert_eq!(r.total_bytes_retx(), 160);
     }
 }

@@ -5,9 +5,10 @@
 //! accounting against Table 1's formulas, robustness to adversarial
 //! clients, and long-run invariants.
 
-use fedlrt::comm::{Network, Payload};
+use fedlrt::comm::{faults, Network, Payload};
 use fedlrt::coordinator::{
-    run_dense, run_fedlrt, DenseAlgo, RankConfig, TrainConfig, VarCorrection,
+    run_dense, run_fedlrt, Aggregator, DenseAlgo, RankConfig, RobustAccum, TrainConfig,
+    VarCorrection,
 };
 use fedlrt::lowrank::LowRank;
 use fedlrt::models::quadratic::Quadratic;
@@ -90,6 +91,152 @@ fn comm_volume_matches_table1_formula() {
         );
         r_prev = round.ranks[0] as u64;
     }
+}
+
+/// Run one slot of updates through a [`RobustAccum`] and return the
+/// aggregate (accumulator starts at zero).
+fn reduce(agg: Aggregator, updates: &[(f64, Matrix)]) -> Matrix {
+    let mut acc = Matrix::zeros(updates[0].1.rows(), updates[0].1.cols());
+    let mut robust = RobustAccum::new(agg, 1);
+    for (w, x) in updates {
+        robust.push(0, &mut acc, *w, x);
+    }
+    robust.finish(std::slice::from_mut(&mut acc));
+    acc
+}
+
+fn all_aggregators() -> [Aggregator; 4] {
+    [
+        Aggregator::Mean,
+        Aggregator::TrimmedMean { trim: 0.25 },
+        Aggregator::Median,
+        Aggregator::NormClip { mult: 2.0 },
+    ]
+}
+
+#[test]
+fn prop_aggregators_reduce_to_weighted_mean_without_outliers() {
+    // Contract 1 (see aggregate.rs): on outlier-free inputs every
+    // aggregator returns the weighted mean. Two regimes:
+    //  * zero spread (all clients upload the same update): every rule
+    //    must return exactly that update;
+    //  * genuine spread but inactive defenses (trim cuts nobody, clip
+    //    radius never binds): the robust fold must match the mean fold
+    //    to floating-point reassociation accuracy.
+    prop::check(
+        "aggregators reduce to weighted mean",
+        10,
+        |rng, size| {
+            let k = 2 + rng.below(5);
+            let (r, c) = (1 + rng.below(3), 1 + size.min(4));
+            let raw: Vec<f64> = (0..k).map(|_| rng.uniform_in(0.1, 1.0)).collect();
+            let wsum: f64 = raw.iter().sum();
+            let updates: Vec<(f64, Matrix)> =
+                raw.iter().map(|w| (w / wsum, Matrix::randn(r, c, rng))).collect();
+            updates
+        },
+        |updates| {
+            // Zero-spread roster: everyone uploads the first update.
+            let same: Vec<(f64, Matrix)> =
+                updates.iter().map(|(w, _)| (*w, updates[0].1.clone())).collect();
+            for agg in all_aggregators() {
+                let diff = reduce(agg, &same).sub(&same[0].1).max_abs();
+                if diff > 1e-9 {
+                    return Err(format!("{} off identical uploads by {diff}", agg.label()));
+                }
+            }
+            // Heterogeneous roster, defenses configured to be inactive.
+            let mean = reduce(Aggregator::Mean, updates);
+            for agg in
+                [Aggregator::TrimmedMean { trim: 0.0 }, Aggregator::NormClip { mult: 1e12 }]
+            {
+                let diff = reduce(agg, updates).sub(&mean).max_abs();
+                if diff > 1e-9 {
+                    return Err(format!("inactive {} off the mean by {diff}", agg.label()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_robust_aggregators_are_permutation_invariant() {
+    // Contract 2: client upload order must not change the aggregate.
+    prop::check(
+        "aggregation permutation invariance",
+        10,
+        |rng, size| {
+            let k = 2 + rng.below(6);
+            let (r, c) = (1 + rng.below(3), 1 + size.min(4));
+            let updates: Vec<(f64, Matrix)> = (0..k)
+                .map(|_| (rng.uniform_in(0.05, 1.0), Matrix::randn(r, c, rng)))
+                .collect();
+            // A Fisher–Yates shuffle of 0..k, derived from the same rng.
+            let mut perm: Vec<usize> = (0..k).collect();
+            for i in (1..k).rev() {
+                perm.swap(i, rng.below(i + 1));
+            }
+            (updates, perm)
+        },
+        |(updates, perm)| {
+            let shuffled: Vec<(f64, Matrix)> =
+                perm.iter().map(|&i| updates[i].clone()).collect();
+            for agg in all_aggregators() {
+                let a = reduce(agg, updates);
+                let b = reduce(agg, &shuffled);
+                let diff = a.sub(&b).max_abs();
+                if diff > 1e-9 {
+                    return Err(format!(
+                        "{} not permutation-invariant: diff {diff} under {perm:?}",
+                        agg.label()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_checksum_frame_catches_every_single_byte_flip() {
+    // CRC-32 detects every burst error of ≤ 32 bits, so corrupting any
+    // single byte of the frame — header or payload — must fail verify,
+    // while the intact frame round-trips.
+    prop::check(
+        "crc32 framing vs single-byte corruption",
+        8,
+        |rng, size| {
+            let len = 1 + rng.below(32 * (1 + size));
+            let payload: Vec<u8> = (0..len).map(|_| (rng.next_u64() & 0xFF) as u8).collect();
+            // One random nonzero XOR mask per byte position (a zero mask
+            // would be no corruption at all).
+            let masks: Vec<u8> =
+                (0..payload.len() + faults::CHECKSUM_BYTES as usize)
+                    .map(|_| 1 + (rng.next_u64() % 255) as u8)
+                    .collect();
+            (payload, masks)
+        },
+        |(payload, masks)| {
+            let framed = faults::frame(payload);
+            match faults::verify(&framed) {
+                Some(got) if got == &payload[..] => {}
+                _ => return Err("intact frame failed to verify".into()),
+            }
+            for (pos, mask) in masks.iter().enumerate() {
+                let mut bad = framed.clone();
+                bad[pos] ^= mask;
+                if faults::verify(&bad).is_some() {
+                    return Err(format!("flip of byte {pos} (mask {mask:#04x}) undetected"));
+                }
+            }
+            // Truncated frames (shorter than the header) must also fail.
+            if faults::verify(&framed[..faults::CHECKSUM_BYTES as usize - 1]).is_some() {
+                return Err("truncated frame verified".into());
+            }
+            Ok(())
+        },
+    );
 }
 
 /// A problem wrapper that makes one client adversarial.

@@ -45,6 +45,7 @@ fn assert_trajectories_identical(a: &RunRecord, b: &RunRecord, what: &str) {
         );
         assert_eq!(x.bytes_down, y.bytes_down, "{what}: bytes_down differs at round {}", x.round);
         assert_eq!(x.bytes_up, y.bytes_up, "{what}: bytes_up differs at round {}", x.round);
+        assert_eq!(x.fault, y.fault, "{what}: fault counters differ at round {}", x.round);
         match (x.dist_to_opt, y.dist_to_opt) {
             (Some(dx), Some(dy)) => assert_eq!(
                 dx.to_bits(),
@@ -422,6 +423,115 @@ fn async_population_exceeding_shards_stays_deterministic() {
     let b = run_async(&prob, &cfg_pool, "det");
     assert_trajectories_identical(&a, &b, "async-population-50k");
     assert!(a.final_loss().is_finite());
+}
+
+#[test]
+fn faulty_transport_serial_equals_thread_pool_across_seeds() {
+    // The robustness layer's determinism contract: fault fates are drawn
+    // from per-(round, client, attempt) streams on the coordinator, so
+    // loss/corruption/duplication/retries/quorum skips must reproduce
+    // bitwise — trajectories AND per-round fault counters — at any
+    // executor, across ≥3 seeds.
+    use fedlrt::comm::{FaultModel, NetPolicy};
+    use fedlrt::engine::Dist;
+    let cases: [(&str, FaultModel, NetPolicy); 3] = [
+        (
+            "loss+retry",
+            FaultModel { loss_prob: 0.3, ..FaultModel::default() },
+            NetPolicy { retries: 2, ..NetPolicy::default() },
+        ),
+        (
+            "loss+corrupt+dup+jitter",
+            FaultModel {
+                loss_prob: 0.2,
+                corrupt_prob: 0.15,
+                dup_prob: 0.1,
+                delay: Dist::Uniform { lo: 0.0, hi: 0.05 },
+            },
+            NetPolicy { retries: 3, ..NetPolicy::default() },
+        ),
+        (
+            "blackout+quorum",
+            FaultModel { loss_prob: 0.6, ..FaultModel::default() },
+            NetPolicy { quorum: 3, ..NetPolicy::default() },
+        ),
+    ];
+    for seed in [131u64, 132, 133] {
+        let mut rng = Rng::new(seed);
+        let prob = LeastSquares::heterogeneous(8, 320, 6, &mut rng);
+        for (name, fault, policy) in &cases {
+            let mut cfg_serial = lsq_cfg(seed, ExecutorKind::Serial);
+            cfg_serial.fault = *fault;
+            cfg_serial.net_policy = *policy;
+            if policy.quorum > 0 {
+                // Enough rounds that "some round skips" and "some round
+                // survives" both hold with overwhelming probability at
+                // 60% loss over 6 clients.
+                cfg_serial.rounds = 16;
+            }
+            let mut cfg_pool = cfg_serial.clone();
+            cfg_pool.executor = ExecutorKind::ThreadPool { threads: 3 };
+            let what = format!("fedlrt-fault/{name}/seed{seed}");
+            let a = run_fedlrt(&prob, &cfg_serial, "det");
+            let b = run_fedlrt(&prob, &cfg_pool, "det");
+            assert_trajectories_identical(&a, &b, &what);
+            // The injected fault rates make silence statistically
+            // impossible over 6 clients × 8 rounds.
+            assert!(a.total_msgs_dropped() > 0, "{what}: no drops booked");
+            if fault.corrupt_prob > 0.0 {
+                let corrupt: u64 = a.rounds.iter().map(|r| r.fault.msgs_corrupt).sum();
+                assert!(corrupt > 0, "{what}: no checksum rejections booked");
+            }
+            if policy.retries > 0 {
+                assert!(a.total_bytes_retx() > 0, "{what}: no retransmitted bytes billed");
+            }
+            if policy.quorum > 0 {
+                assert!(a.skipped_rounds() > 0, "{what}: 70% loss never broke quorum");
+                assert!(a.skipped_rounds() < a.rounds.len(), "{what}: every round skipped");
+            }
+            assert!(a.final_loss().is_finite(), "{what}: diverged");
+        }
+    }
+}
+
+#[test]
+fn async_faulty_transport_serial_equals_thread_pool_with_traces() {
+    // Same contract for the event-driven server: retransmissions are
+    // ordinary queue events, so the full event trace — including Retry
+    // rows — must be identical between executors, seed by seed.
+    use fedlrt::comm::{FaultModel, NetPolicy};
+    use fedlrt::coordinator::{run_async_traced, EventKind, Schedule};
+    use fedlrt::obsv::Recorder;
+    for seed in [141u64, 142, 143] {
+        let mut rng = Rng::new(seed);
+        let prob = LeastSquares::heterogeneous(8, 320, 6, &mut rng);
+        for schedule in [Schedule::FedBuff, Schedule::AsyncStale] {
+            let mut cfg_serial = async_cfg(seed, schedule);
+            cfg_serial.fault = FaultModel {
+                loss_prob: 0.25,
+                corrupt_prob: 0.1,
+                dup_prob: 0.1,
+                ..FaultModel::default()
+            };
+            cfg_serial.net_policy = NetPolicy { retries: 2, ..NetPolicy::default() };
+            let mut cfg_pool = cfg_serial.clone();
+            cfg_pool.executor = ExecutorKind::ThreadPool { threads: 3 };
+            let what = format!("async-fault/{}/seed{seed}", schedule.label());
+            let (a, trace_a) = run_async_traced(&prob, &cfg_serial, "det", &Recorder::new());
+            let (b, trace_b) = run_async_traced(&prob, &cfg_pool, "det", &Recorder::new());
+            assert_eq!(trace_a, trace_b, "{what}: event traces diverged");
+            assert_trajectories_identical(&a, &b, &what);
+            assert!(
+                trace_a.iter().any(|row| row.kind == EventKind::Retry),
+                "{what}: 25% loss with a retry budget produced no Retry events"
+            );
+            assert!(
+                a.total_msgs_dropped() + a.total_bytes_retx() > 0,
+                "{what}: no fault traffic booked"
+            );
+            assert!(a.final_loss().is_finite(), "{what}: diverged");
+        }
+    }
 }
 
 #[test]
