@@ -477,9 +477,11 @@ fn run_async_core<P: FedProblem + Sync>(
                 // whose fate is a pure function of
                 // (seed, dispatch, client, attempt) — nothing here
                 // reads training results, so the event timeline stays
-                // executor-independent. Inactive fault model = this
-                // whole block is skipped (bitwise-legacy).
-                if cfg.fault.is_active() {
+                // executor-independent. Same activation rule as the
+                // sync gate: an active fault model OR a policy-only
+                // config (e.g. a bare --timeout) enters; fully
+                // inactive transport skips the block (bitwise-legacy).
+                if faults::transport_active(&cfg.fault, &cfg.net_policy) {
                     let (fl_client, fl_dispatch, fl_attempt, fl_sent, fl_version) = {
                         let fl = flights[idx].as_ref().expect("attempt for freed flight");
                         (fl.client, fl.dispatch, fl.attempt, fl.sent_at, fl.version)

@@ -108,7 +108,7 @@ pub fn run_fedlr_obs<P: FedProblem + Sync>(
                 comm_floats_lr: 0,
                 bytes_down: 0,
                 bytes_up: 0,
-                comm_floats_per_client: 0,
+                comm_floats_per_client: 0.0,
                 dist_to_opt,
                 eval_metric,
                 wall_s: watch.elapsed_s(),
