@@ -278,6 +278,20 @@ impl Network {
         out
     }
 
+    /// Arity-preserving form of [`Network::aggregate_batch`]: N parts
+    /// in, exactly N decoded parts out, so decode sites destructure
+    /// with `let [u, s, v] = …` instead of `parts.next().unwrap()`
+    /// chains that hide which part went missing (fedlint rule D6).
+    pub fn aggregate_batch_n<const N: usize>(
+        &mut self,
+        label: &'static str,
+        parts: [&[f64]; N],
+    ) -> [Vec<f64>; N] {
+        self.aggregate_batch(label, &parts)
+            .try_into()
+            .expect("aggregate_batch returns exactly one decoded vec per input part")
+    }
+
     /// Descriptor-only broadcast accounting (no tensor data — scalar or
     /// metadata payloads): bytes are the codec's exact wire size for
     /// that entry count.
@@ -342,7 +356,8 @@ impl Network {
         self.upload_copies = 1;
         let done = std::mem::take(&mut self.current);
         self.rounds.push(done);
-        self.rounds.last().unwrap()
+        let idx = self.rounds.len() - 1;
+        &self.rounds[idx]
     }
 
     /// Cumulative floats over all completed rounds.

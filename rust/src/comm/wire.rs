@@ -61,12 +61,12 @@ impl CodecKind {
     }
 
     /// Parse a CLI spelling.
-    pub fn parse(s: &str) -> Result<CodecKind, String> {
+    pub fn parse(s: &str) -> anyhow::Result<CodecKind> {
         match s {
             "dense" | "f32" => Ok(CodecKind::DenseF32),
             "f16" | "half" => Ok(CodecKind::F16Cast),
             "q8" | "int8" => Ok(CodecKind::QuantizeInt8),
-            other => Err(format!("unknown codec '{other}' (expected dense|f16|q8)")),
+            other => Err(anyhow::anyhow!("unknown codec '{other}' (expected dense|f16|q8)")),
         }
     }
 

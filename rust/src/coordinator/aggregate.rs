@@ -77,49 +77,63 @@ impl Aggregator {
 
     /// Parse a CLI spec: `mean` | `trimmed[:α]` | `median` | `clip[:c]`
     /// (defaults α = 0.2, c = 2).
-    pub fn parse(s: &str) -> Result<Aggregator, String> {
+    pub fn parse(s: &str) -> anyhow::Result<Aggregator> {
         let (name, knob) = match s.split_once(':') {
             Some((n, k)) => (n, Some(k)),
             None => (s, None),
         };
-        let num = |default: f64| -> Result<f64, String> {
+        let num = |default: f64| -> anyhow::Result<f64> {
             match knob {
                 None => Ok(default),
-                Some(k) => k.parse::<f64>().map_err(|_| format!("bad aggregator knob '{k}'")),
+                Some(k) => k
+                    .parse::<f64>()
+                    .map_err(|_| anyhow::anyhow!("bad aggregator knob '{k}'")),
             }
         };
         match name {
             "mean" => {
-                if knob.is_some() {
-                    return Err("mean takes no knob".to_string());
-                }
+                anyhow::ensure!(knob.is_none(), "mean takes no knob");
                 Ok(Aggregator::Mean)
             }
             "trimmed" => {
                 let trim = num(0.2)?;
-                if !(0.0..0.5).contains(&trim) {
-                    return Err(format!("trim fraction {trim} outside [0, 0.5)"));
-                }
+                anyhow::ensure!(
+                    (0.0..0.5).contains(&trim),
+                    "trim fraction {trim} outside [0, 0.5)"
+                );
                 Ok(Aggregator::TrimmedMean { trim })
             }
             "median" => {
-                if knob.is_some() {
-                    return Err("median takes no knob".to_string());
-                }
+                anyhow::ensure!(knob.is_none(), "median takes no knob");
                 Ok(Aggregator::Median)
             }
             "clip" => {
                 let mult = num(2.0)?;
-                if !mult.is_finite() || mult <= 0.0 {
-                    return Err(format!("clip multiple {mult} must be > 0"));
-                }
+                anyhow::ensure!(
+                    mult.is_finite() && mult > 0.0,
+                    "clip multiple {mult} must be > 0"
+                );
                 Ok(Aggregator::NormClip { mult })
             }
-            _ => Err(format!(
+            _ => anyhow::bail!(
                 "unknown aggregator '{s}' (want mean | trimmed[:a] | median | clip[:c])"
-            )),
+            ),
         }
     }
+}
+
+/// Sum `xs` left to right — the blessed plan-order float reduction for
+/// aggregation code. Bitwise identical to `xs.iter().sum::<f64>()`
+/// today; the point of the named helper is that the reduction *order*
+/// is part of its contract (fedlint rule D3 flags ad-hoc sums, whose
+/// order silently reorders under refactors and breaks trajectory
+/// reproducibility).
+pub fn plan_order_sum(xs: &[f64]) -> f64 {
+    let mut acc = 0.0;
+    for &x in xs {
+        acc += x;
+    }
+    acc
 }
 
 /// Accumulator for one round's aggregation over a fixed set of `slots`

@@ -79,7 +79,7 @@ use crate::tensor::{Matrix, Workspace};
 use crate::util::rng::Rng;
 use crate::util::Stopwatch;
 
-use super::aggregate::RobustAccum;
+use super::aggregate::{plan_order_sum, RobustAccum};
 use super::config::{Schedule, TrainConfig, VarCorrection};
 
 /// Salt for the client-pick stream (disjoint from the sync sampling /
@@ -492,7 +492,7 @@ fn run_async_core<P: FedProblem + Sync>(
                     if fate.duplicated {
                         // Deduplicated server-side; the copy's bytes
                         // still ride the wire and bill as retx below.
-                        flights[idx].as_mut().unwrap().wire_copies += 1;
+                        flights[idx].as_mut().expect("attempt for freed flight").wire_copies += 1;
                     }
                     let late = cfg.net_policy.timeout > 0.0
                         && ev.time - fl_sent > cfg.net_policy.timeout;
@@ -513,7 +513,7 @@ fn run_async_core<P: FedProblem + Sync>(
                             // backoff on the redrawn link time, mirroring
                             // `FaultModel::deliver`.
                             let next_attempt = {
-                                let fl = flights[idx].as_mut().unwrap();
+                                let fl = flights[idx].as_mut().expect("attempt for freed flight");
                                 fl.attempt += 1;
                                 fl.wire_copies += 1;
                                 fl.attempt
@@ -614,7 +614,7 @@ fn run_async_core<P: FedProblem + Sync>(
                     .iter()
                     .enumerate()
                     .map(|(ordinal, &fi)| {
-                        let fl = flights[fi].as_ref().unwrap();
+                        let fl = flights[fi].as_ref().expect("consumed flight is occupied");
                         ClientTask {
                             client_id: fl.client,
                             ordinal,
@@ -630,14 +630,14 @@ fn run_async_core<P: FedProblem + Sync>(
                 // (they were cloned out of the registry at dispatch).
                 let drift_pre: Vec<Option<DriftState>> = consumed
                     .iter()
-                    .map(|&fi| flights[fi].as_mut().unwrap().drift.take())
+                    .map(|&fi| flights[fi].as_mut().expect("consumed flight is occupied").drift.take())
                     .collect();
                 let snaps: Vec<Arc<Snapshot>> = consumed
                     .iter()
-                    .map(|&fi| flights[fi].as_ref().unwrap().snapshot.clone())
+                    .map(|&fi| flights[fi].as_ref().expect("consumed flight is occupied").snapshot.clone())
                     .collect();
                 let steps0: Vec<u64> =
-                    consumed.iter().map(|&fi| flights[fi].as_ref().unwrap().step0).collect();
+                    consumed.iter().map(|&fi| flights[fi].as_ref().expect("consumed flight is occupied").step0).collect();
                 let report = executor.execute(&plan, |task| {
                     client_run(
                         problem,
@@ -664,13 +664,13 @@ fn run_async_core<P: FedProblem + Sync>(
                 let sp_agg = obs.span(Phase::Aggregate);
                 let sigmas: Vec<u64> = consumed
                     .iter()
-                    .map(|&fi| version - flights[fi].as_ref().unwrap().version)
+                    .map(|&fi| version - flights[fi].as_ref().expect("consumed flight is occupied").version)
                     .collect();
                 let raw_w: Vec<f64> = consumed
                     .iter()
                     .zip(&sigmas)
                     .map(|(&fi, &s)| {
-                        let w = flights[fi].as_ref().unwrap().weight;
+                        let w = flights[fi].as_ref().expect("consumed flight is occupied").weight;
                         match cfg.schedule {
                             Schedule::AsyncStale => {
                                 w / (1.0 + s as f64).powf(acfg.staleness_p)
@@ -679,7 +679,7 @@ fn run_async_core<P: FedProblem + Sync>(
                         }
                     })
                     .collect();
-                let total_w: f64 = raw_w.iter().sum();
+                let total_w = plan_order_sum(&raw_w);
                 let mut ds_mean: Vec<Matrix> =
                     factors.iter().map(|f| ws.take_mat(f.rank(), f.rank())).collect();
                 let mut dd_mean: Vec<Matrix> =
@@ -698,7 +698,7 @@ fn run_async_core<P: FedProblem + Sync>(
                 let mut drift_staged: Vec<(usize, DriftState)> = Vec::new();
                 let mut ctrl_delta_sum: Option<DriftState> = None;
                 for (i, &fi) in consumed.iter().enumerate() {
-                    let fl = flights[fi].as_ref().unwrap();
+                    let fl = flights[fi].as_ref().expect("consumed flight is occupied");
                     let upd = &report.results[i];
                     let wt = raw_w[i] / total_w;
                     local_loss_w += wt * upd.first_loss;

@@ -54,12 +54,12 @@ impl Schedule {
         }
     }
 
-    pub fn parse(s: &str) -> Result<Schedule, String> {
+    pub fn parse(s: &str) -> anyhow::Result<Schedule> {
         match s {
             "sync" => Ok(Schedule::Sync),
             "fedbuff" => Ok(Schedule::FedBuff),
             "async" | "stale" | "async_stale" => Ok(Schedule::AsyncStale),
-            other => Err(format!("unknown schedule '{other}' (sync|fedbuff|async)")),
+            other => Err(anyhow::anyhow!("unknown schedule '{other}' (sync|fedbuff|async)")),
         }
     }
 }

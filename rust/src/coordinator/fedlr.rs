@@ -132,7 +132,7 @@ pub fn run_fedlr_obs<P: FedProblem + Sync>(
         // Server-side compression for the downlink (full n×n SVD!).
         let sp_svd = obs.span(Phase::TruncateSvd);
         let dec = svd(&w);
-        let theta = cfg.rank.tau * dec.sigma.iter().map(|x| x * x).sum::<f64>().sqrt();
+        let theta = cfg.rank.tau * dec.sigma_fro();
         let r_dn = dec.rank_for_tolerance(theta).clamp(1, cfg.rank.max_rank);
         let (p, sig, q) = dec.truncate(r_dn);
         drop(sp_svd);
@@ -190,8 +190,7 @@ pub fn run_fedlr_obs<P: FedProblem + Sync>(
             };
             // Client-side compression (another full SVD, on-device).
             let dec_c = svd(&w_c);
-            let theta_c =
-                cfg.rank.tau * dec_c.sigma.iter().map(|x| x * x).sum::<f64>().sqrt();
+            let theta_c = cfg.rank.tau * dec_c.sigma_fro();
             let r_up = dec_c.rank_for_tolerance(theta_c).clamp(1, cfg.rank.max_rank);
             (dec_c.truncate(r_up), out.drift_out, out.ctrl_delta)
         });
@@ -215,12 +214,10 @@ pub fn run_fedlr_obs<P: FedProblem + Sync>(
             if let Some(gt) = &gate {
                 net.set_upload_copies(gt.copies[task.ordinal]);
             }
-            let mut parts = net
-                .aggregate_batch("factor_triple_c", &[pc.data(), sc.as_slice(), qc.data()])
-                .into_iter();
-            let pc_d = Matrix::from_vec(pc.rows(), pc.cols(), parts.next().unwrap());
-            let sc_d = parts.next().unwrap();
-            let qc_d = Matrix::from_vec(qc.rows(), qc.cols(), parts.next().unwrap());
+            let [pc_dec, sc_d, qc_dec] = net
+                .aggregate_batch_n("factor_triple_c", [pc.data(), sc.as_slice(), qc.data()]);
+            let pc_d = Matrix::from_vec(pc.rows(), pc.cols(), pc_dec);
+            let qc_d = Matrix::from_vec(qc.rows(), qc.cols(), qc_dec);
             let w_c_approx =
                 crate::tensor::matmul_nt(&crate::tensor::matmul(&pc_d, &Matrix::diag(&sc_d)), &qc_d);
             robust.push(0, &mut w_next, task.weight, &w_c_approx);

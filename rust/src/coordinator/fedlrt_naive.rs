@@ -226,12 +226,11 @@ pub fn run_fedlrt_naive_obs<P: FedProblem + Sync>(
             if let Some(gt) = &gate {
                 net.set_upload_copies(gt.copies[task.ordinal]);
             }
-            let mut parts = net
-                .aggregate_batch("factor_triple_c", &[u_t.data(), s_t.data(), v_t.data()])
-                .into_iter();
-            let u_d = Matrix::from_vec(u_t.rows(), u_t.cols(), parts.next().unwrap());
-            let s_d = Matrix::from_vec(s_t.rows(), s_t.cols(), parts.next().unwrap());
-            let v_d = Matrix::from_vec(v_t.rows(), v_t.cols(), parts.next().unwrap());
+            let [u_dec, s_dec, v_dec] = net
+                .aggregate_batch_n("factor_triple_c", [u_t.data(), s_t.data(), v_t.data()]);
+            let u_d = Matrix::from_vec(u_t.rows(), u_t.cols(), u_dec);
+            let s_d = Matrix::from_vec(s_t.rows(), s_t.cols(), s_dec);
+            let v_d = Matrix::from_vec(v_t.rows(), v_t.cols(), v_dec);
             if let Some(st) = drift_out {
                 drift_staged.push((task.client_id, st.clone(), u_d.clone(), v_d.clone()));
             }
@@ -257,8 +256,7 @@ pub fn run_fedlrt_naive_obs<P: FedProblem + Sync>(
         let old_basis: Option<(Matrix, Matrix)> =
             engine.is_stateful().then(|| (fac.u.clone(), fac.v.clone()));
         let dec = svd(&w_star);
-        let theta = cfg.rank.tau
-            * dec.sigma.iter().map(|x| x * x).sum::<f64>().sqrt();
+        let theta = cfg.rank.tau * dec.sigma_fro();
         let r1 = dec.rank_for_tolerance(theta).clamp(1, cfg.rank.max_rank);
         let (u, sig, v) = dec.truncate(r1);
         fac = LowRank { u, s: Matrix::diag(&sig), v };

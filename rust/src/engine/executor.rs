@@ -78,6 +78,37 @@ pub struct TaskTiming {
     pub worker: usize,
 }
 
+/// The executor call's single monotonic epoch — the one place in the
+/// engine that reads the wall clock (fedlint rule D2 allowlists exactly
+/// this file for `Instant::now`). Both executors stamp every task
+/// through [`ExecClock::timed`], so serial and thread-pool paths share
+/// one capture site and one clock by construction.
+#[derive(Debug, Clone, Copy)]
+struct ExecClock {
+    started: Instant,
+}
+
+impl ExecClock {
+    fn start() -> ExecClock {
+        ExecClock { started: Instant::now() }
+    }
+
+    /// Seconds elapsed since the call epoch.
+    fn offset_s(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Run `work`, stamping its start/duration offsets on this clock
+    /// (same clock as `wall_s`/`serial_s`, so the per-task durations
+    /// and the latency histograms built from them are comparable).
+    fn timed<R>(&self, worker: usize, work: impl FnOnce() -> R) -> (R, TaskTiming) {
+        let t0 = self.offset_s();
+        let r = work();
+        let t1 = self.offset_s();
+        (r, TaskTiming { start_s: t0, dur_s: t1 - t0, worker })
+    }
+}
+
 /// Per-task timings of one executor call, all offsets from one
 /// `Instant` read at call entry.
 #[derive(Debug)]
@@ -125,21 +156,20 @@ fn run_serial<R, F>(plan: &RoundPlan, work: &F) -> ExecReport<R>
 where
     F: Fn(&ClientTask) -> R,
 {
-    let started = Instant::now();
+    let clock = ExecClock::start();
     let mut results = Vec::with_capacity(plan.tasks.len());
     let mut tasks = Vec::with_capacity(plan.tasks.len());
     for task in &plan.tasks {
-        let t0 = started.elapsed().as_secs_f64();
-        results.push(work(task));
-        let t1 = started.elapsed().as_secs_f64();
-        tasks.push(TaskTiming { start_s: t0, dur_s: t1 - t0, worker: 0 });
+        let (r, t) = clock.timed(0, || work(task));
+        results.push(r);
+        tasks.push(t);
     }
     let serial_s = tasks.iter().map(|t| t.dur_s).sum();
     ExecReport {
         results,
-        wall_s: started.elapsed().as_secs_f64(),
+        wall_s: clock.offset_s(),
         serial_s,
-        timing: ExecTiming { started, tasks },
+        timing: ExecTiming { started: clock.started, tasks },
     }
 }
 
@@ -213,7 +243,7 @@ impl ClientExecutor for ThreadPoolExecutor {
         if workers <= 1 || n <= 1 {
             return run_serial(plan, &work);
         }
-        let started = Instant::now();
+        let clock = ExecClock::start();
         let chunk = (n + workers - 1) / workers;
         let work_ref = &work;
         let per_chunk: Vec<Vec<(R, TaskTiming)>> = std::thread::scope(|scope| {
@@ -225,15 +255,7 @@ impl ClientExecutor for ThreadPoolExecutor {
                     scope.spawn(move || {
                         tasks
                             .iter()
-                            .map(|task| {
-                                // Offsets on the shared call epoch: the
-                                // per-task durations land on the same
-                                // monotonic clock as wall_s/serial_s.
-                                let t0 = started.elapsed().as_secs_f64();
-                                let r = work_ref(task);
-                                let t1 = started.elapsed().as_secs_f64();
-                                (r, TaskTiming { start_s: t0, dur_s: t1 - t0, worker })
-                            })
+                            .map(|task| clock.timed(worker, || work_ref(task)))
                             .collect::<Vec<_>>()
                     })
                 })
@@ -250,7 +272,12 @@ impl ClientExecutor for ThreadPoolExecutor {
                 tasks.push(t);
             }
         }
-        ExecReport { results, wall_s: started.elapsed().as_secs_f64(), serial_s, timing: ExecTiming { started, tasks } }
+        ExecReport {
+            results,
+            wall_s: clock.offset_s(),
+            serial_s,
+            timing: ExecTiming { started: clock.started, tasks },
+        }
     }
 }
 

@@ -26,6 +26,12 @@
 //! substitutions, and the experiment index; measured results are the
 //! JSONL files the `benches/` drivers emit under `results/`.
 
+// Unsafe code is quarantined: the only legitimate site is the counting
+// global allocator (`obsv::alloc`), which opts back in with a scoped
+// `#[allow(unsafe_code)]`. fedlint rule D5 enforces the same policy
+// structurally (SAFETY comments, file allowlist in fedlint.toml).
+#![deny(unsafe_code)]
+
 pub mod bench;
 pub mod client;
 pub mod comm;

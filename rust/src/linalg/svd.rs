@@ -260,6 +260,26 @@ impl Svd {
         let r = r.min(self.sigma.len());
         (self.u.first_cols(r), self.sigma[..r].to_vec(), self.v.first_cols(r))
     }
+
+    /// Frobenius norm of the factorization, `‖σ‖₂ = √(Σ σᵢ²)` —
+    /// equivalently `‖U diag(σ) Vᵀ‖_F`. The blessed spelling for the
+    /// paper's `‖S‖_F` terms: the reduction runs in index order, so
+    /// coordinators that compare norms across rounds stay bitwise
+    /// reproducible (fedlint rule D3 flags ad-hoc `σ²` sums).
+    pub fn sigma_fro(&self) -> f64 {
+        self.sigma_fro_tail(0)
+    }
+
+    /// Tail Frobenius norm `‖[σ_{from+1}, …]‖₂` (0-based `from`): the
+    /// quantity the truncation rule compares against `ϑ`. Index-order
+    /// reduction, same reproducibility contract as [`Svd::sigma_fro`].
+    pub fn sigma_fro_tail(&self, from: usize) -> f64 {
+        let mut acc = 0.0;
+        for &s in &self.sigma[from.min(self.sigma.len())..] {
+            acc += s * s;
+        }
+        acc.sqrt()
+    }
 }
 
 /// Solve `A x = b` in the least-squares sense via the SVD pseudo-inverse,

@@ -65,7 +65,7 @@ pub fn truncate_ws(
     let dec = svd_ws(s_star, ws);
     let r1 = dec.rank_for_tolerance(theta).clamp(min_rank.max(1), max_rank);
     let (p, sig, q) = dec.truncate(r1);
-    let discarded = dec.sigma[r1..].iter().map(|x| x * x).sum::<f64>().sqrt();
+    let discarded = dec.sigma_fro_tail(r1);
 
     // Project the bases: U' = Ũ P, V' = Ṽ Q — still orthonormal because
     // P, Q have orthonormal columns.

@@ -415,6 +415,7 @@ impl LeastSquares {
             }
         }
         if scr.asb.len() != n_rows * r {
+            // fedlint: allow(d4) — cold path: first call / rank change
             scr.asb.resize(n_rows * r, 0.0);
         }
         let proj = scr.proj.as_ref().expect("cache entry just written");

@@ -70,6 +70,24 @@ macro_rules! anyhow {
     };
 }
 
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
 /// Attach human-readable context to errors (and `None`s).
 pub trait Context<T> {
     fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
@@ -109,6 +127,20 @@ mod tests {
         let e = anyhow!("bad value {}", 7);
         assert_eq!(e.to_string(), "bad value 7");
         assert_eq!(format!("{e:?}"), "bad value 7");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            if x > 10 {
+                bail!("x too large: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(0).unwrap_err().to_string(), "x must be positive, got 0");
+        assert_eq!(f(11).unwrap_err().to_string(), "x too large: 11");
     }
 
     #[test]

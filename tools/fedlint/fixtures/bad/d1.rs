@@ -1,0 +1,7 @@
+//! D1 bad fixture: HashMap in a trajectory-affecting module — its
+//! iteration order is salted per process and breaks reproducibility.
+
+pub fn pick_bucket(id: u64) -> u64 {
+    let buckets = std::collections::HashMap::from([(0u64, 1u64)]);
+    *buckets.get(&(id % 1)).unwrap_or(&0)
+}

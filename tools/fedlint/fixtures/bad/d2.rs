@@ -1,0 +1,6 @@
+//! D2 bad fixture: ambient wall-clock read feeding a numeric path.
+
+pub fn jitter_scale() -> f64 {
+    let t = std::time::Instant::now();
+    t.elapsed().as_secs_f64().fract()
+}

@@ -1,0 +1,5 @@
+//! D3 bad fixture: unordered float reduction in aggregation code.
+
+pub fn total_weight(w: &[f64]) -> f64 {
+    w.iter().sum::<f64>()
+}

@@ -1,0 +1,6 @@
+//! D4 bad fixture: heap allocation inside a manifest hot-path function.
+
+pub fn hot_fixture_kernel(xs: &[f64], out: &mut [f64]) {
+    let scaled: Vec<f64> = xs.iter().map(|x| x * 2.0).collect();
+    out[..scaled.len()].copy_from_slice(&scaled);
+}

@@ -1,0 +1,6 @@
+//! D5 bad fixture: unsafe without a SAFETY comment, in a file that is
+//! on the allow_unsafe list (so only the missing comment is the error).
+
+pub fn first_byte(p: *const u8) -> u8 {
+    unsafe { *p }
+}

@@ -1,0 +1,7 @@
+//! D5 bad fixture: unsafe outside the allowlisted modules — a SAFETY
+//! comment does not excuse it; the file itself must be allowlisted.
+
+pub fn read_raw(p: *const u8) -> u8 {
+    // SAFETY: commented, but this file is not on the allow_unsafe list.
+    unsafe { *p }
+}

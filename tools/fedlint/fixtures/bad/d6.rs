@@ -1,0 +1,5 @@
+//! D6 bad fixture: bare unwrap in protocol code hides failure context.
+
+pub fn parse_round(s: &str) -> u32 {
+    s.parse().unwrap()
+}

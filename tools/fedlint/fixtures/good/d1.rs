@@ -1,0 +1,8 @@
+//! D1 good fixture: BTreeMap has a deterministic iteration order.
+
+use std::collections::BTreeMap;
+
+pub fn tally(ids: &[u32]) -> usize {
+    let seen: BTreeMap<u32, u32> = ids.iter().map(|&i| (i, 1)).collect();
+    seen.len()
+}

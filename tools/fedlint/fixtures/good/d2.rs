@@ -1,0 +1,21 @@
+//! D2 good fixture: deterministic jitter from a seeded splitmix step;
+//! the #[cfg(test)] module may read the wall clock (test regions are
+//! exempt from every rule).
+
+pub fn jitter_scale(seed: u64) -> f64 {
+    let mut x = seed.wrapping_add(0x9e3779b97f4a7c15);
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xbf58476d1ce4e5b9);
+    x ^= x >> 27;
+    (x >> 11) as f64 / (1u64 << 53) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn in_unit_interval() {
+        let started = std::time::Instant::now();
+        assert!(super::jitter_scale(1) < 1.0);
+        assert!(started.elapsed().as_secs() < 60);
+    }
+}

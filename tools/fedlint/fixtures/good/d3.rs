@@ -1,0 +1,10 @@
+//! D3 good fixture: explicit accumulation loop — the reduction order
+//! is the slice order, pinned by construction.
+
+pub fn total_weight(w: &[f64]) -> f64 {
+    let mut acc = 0.0;
+    for &x in w {
+        acc += x;
+    }
+    acc
+}

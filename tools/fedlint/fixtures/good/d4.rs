@@ -1,0 +1,7 @@
+//! D4 good fixture: the hot path writes into a caller-provided buffer.
+
+pub fn hot_fixture_kernel(xs: &[f64], out: &mut [f64]) {
+    for (o, x) in out.iter_mut().zip(xs) {
+        *o = x * 2.0;
+    }
+}

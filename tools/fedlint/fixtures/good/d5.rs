@@ -1,0 +1,7 @@
+//! D5 good fixture: unsafe under a SAFETY comment in an allowlisted
+//! file.
+
+pub fn first_byte(p: *const u8) -> u8 {
+    // SAFETY: callers pass a pointer to at least one initialized byte.
+    unsafe { *p }
+}

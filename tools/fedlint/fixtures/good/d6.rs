@@ -1,0 +1,5 @@
+//! D6 good fixture: the invariant is documented with expect.
+
+pub fn parse_round(s: &str) -> u32 {
+    s.parse().expect("round ids are formatted by the coordinator")
+}

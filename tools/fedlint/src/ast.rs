@@ -1,0 +1,334 @@
+//! Structure pass over the token stream: function boundaries, test
+//! regions, `unsafe` sites, and inline `fedlint: allow(…)` escapes.
+//!
+//! This is deliberately AST-*lite*: brace matching plus a handful of
+//! token-pattern recognizers give the rules exactly the structure they
+//! need (which function am I in? is this test code? is this line
+//! allowlisted?) without a full parser. The known approximations are
+//! documented on each recognizer; all of them fail *loud* (over-flag,
+//! fixable via allowlist) rather than silent (under-flag).
+
+use crate::lexer::{Comment, Lexed, Tok, TokKind};
+
+/// A function body: `name`, the half-open token range of its body
+/// (inside the braces, braces excluded), and the line of its `fn`.
+#[derive(Debug, Clone)]
+pub struct FnSpan {
+    pub name: String,
+    pub body: (usize, usize),
+    pub line: u32,
+}
+
+/// Everything the rules need to know about one file.
+#[derive(Debug)]
+pub struct FileModel {
+    /// Path relative to the scan root, `/`-separated.
+    pub rel_path: String,
+    pub toks: Vec<Tok>,
+    pub comments: Vec<Comment>,
+    pub fns: Vec<FnSpan>,
+    /// Half-open token ranges under `#[cfg(test)]` / `#[test]` items.
+    pub test_regions: Vec<(usize, usize)>,
+    /// `(rule_id_lowercase, line)` pairs from `// fedlint: allow(…)`
+    /// comments; a pair suppresses that rule on the comment's line and
+    /// the line after it.
+    pub allows: Vec<(String, u32)>,
+}
+
+impl FileModel {
+    pub fn build(rel_path: String, lexed: Lexed) -> FileModel {
+        let Lexed { toks, comments } = lexed;
+        let fns = find_fns(&toks);
+        let test_regions = find_test_regions(&toks);
+        let allows = find_allows(&comments);
+        FileModel { rel_path, toks, comments, fns, test_regions, allows }
+    }
+
+    /// Is token index `i` inside test-only code?
+    pub fn in_test(&self, i: usize) -> bool {
+        self.test_regions.iter().any(|&(a, b)| i >= a && i < b)
+    }
+
+    /// Is `rule` suppressed on `line` by an inline allow?
+    pub fn allowed(&self, rule: &str, line: u32) -> bool {
+        let rule = rule.to_ascii_lowercase();
+        self.allows.iter().any(|(r, l)| *r == rule && (*l == line || *l + 1 == line))
+    }
+
+    /// The innermost manifest-relevant function containing token `i`
+    /// (functions are recorded outermost-first, so the last match is
+    /// the innermost).
+    pub fn enclosing_fn(&self, i: usize) -> Option<&FnSpan> {
+        self.fns.iter().rev().find(|f| i >= f.body.0 && i < f.body.1)
+    }
+}
+
+/// Find `fn name … { body }` spans. Approximations: a `fn` without a
+/// body (`fn f();` in a trait) is skipped; generics/args are crossed by
+/// bracket counting (`(`/`[` nesting), so the first `{` outside them
+/// starts the body. Closures have no `fn` token and are attributed to
+/// their enclosing function — exactly what the hot-path rule wants.
+fn find_fns(toks: &[Tok]) -> Vec<FnSpan> {
+    let mut fns = Vec::new();
+    let mut i = 0;
+    while i < toks.len() {
+        if toks[i].kind == TokKind::Ident && toks[i].text == "fn" {
+            let Some(name_tok) = toks.get(i + 1) else { break };
+            if name_tok.kind != TokKind::Ident {
+                i += 1;
+                continue;
+            }
+            let name = name_tok.text.clone();
+            let line = toks[i].line;
+            // Scan to the body's `{` (paren/bracket depth 0) or a `;`.
+            let mut j = i + 2;
+            let mut paren = 0i32;
+            let mut bracket = 0i32;
+            let mut body_start = None;
+            while j < toks.len() {
+                let t = &toks[j];
+                if t.kind == TokKind::Punct {
+                    match t.text.as_str() {
+                        "(" => paren += 1,
+                        ")" => paren -= 1,
+                        "[" => bracket += 1,
+                        "]" => bracket -= 1,
+                        "{" if paren == 0 && bracket == 0 => {
+                            body_start = Some(j + 1);
+                            break;
+                        }
+                        ";" if paren == 0 && bracket == 0 => break,
+                        _ => {}
+                    }
+                }
+                j += 1;
+            }
+            if let Some(start) = body_start {
+                let end = matching_brace(toks, j);
+                fns.push(FnSpan { name, body: (start, end), line });
+            }
+            i = j.max(i + 2);
+            continue;
+        }
+        i += 1;
+    }
+    fns
+}
+
+/// Index of the token *after* the `}` matching the `{` at `open`
+/// (assumed to be a `{`); saturates at the end of the stream.
+fn matching_brace(toks: &[Tok], open: usize) -> usize {
+    let mut depth = 0i32;
+    let mut i = open;
+    while i < toks.len() {
+        if toks[i].kind == TokKind::Punct {
+            match toks[i].text.as_str() {
+                "{" => depth += 1,
+                "}" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return i;
+                    }
+                }
+                _ => {}
+            }
+        }
+        i += 1;
+    }
+    toks.len()
+}
+
+/// Find the token ranges covered by `#[cfg(test)]` / `#[test]` items —
+/// the attribute, then the following item through its `{…}` block (or
+/// its `;` for block-less items like `#[cfg(test)] use …;`).
+///
+/// Recognized attribute shapes: `#[test]`, `#[cfg(test)]`, and any
+/// `#[cfg(…test…)]` combination (e.g. `all(test, feature = "x")`).
+/// Inner attributes (`#![…]`) never mark test regions.
+fn find_test_regions(toks: &[Tok]) -> Vec<(usize, usize)> {
+    let mut regions: Vec<(usize, usize)> = Vec::new();
+    let mut i = 0;
+    while i < toks.len() {
+        if toks[i].kind == TokKind::Punct
+            && toks[i].text == "#"
+            && toks.get(i + 1).is_some_and(|t| t.kind == TokKind::Punct && t.text == "[")
+        {
+            let attr_start = i;
+            // Cross to the matching `]`.
+            let mut depth = 0i32;
+            let mut j = i + 1;
+            let mut saw_test = false;
+            let mut saw_not = false;
+            let mut first_ident: Option<&str> = None;
+            while j < toks.len() {
+                let t = &toks[j];
+                match (t.kind, t.text.as_str()) {
+                    (TokKind::Punct, "[") => depth += 1,
+                    (TokKind::Punct, "]") => {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    (TokKind::Ident, id) => {
+                        if first_ident.is_none() {
+                            first_ident = Some(&t.text);
+                        }
+                        saw_test |= id == "test";
+                        saw_not |= id == "not";
+                    }
+                    _ => {}
+                }
+                j += 1;
+            }
+            // `#[test]` or `#[cfg(…test…)]` — but never `cfg(not(test))`,
+            // which marks *non*-test code.
+            let is_test =
+                saw_test && !saw_not && matches!(first_ident, Some("cfg" | "test"));
+            if is_test {
+                // Skip any further attributes, then take the item.
+                let mut k = j + 1;
+                while k < toks.len()
+                    && toks[k].kind == TokKind::Punct
+                    && toks[k].text == "#"
+                    && toks.get(k + 1).is_some_and(|t| t.text == "[")
+                {
+                    let mut d = 0i32;
+                    let mut m = k + 1;
+                    while m < toks.len() {
+                        match toks[m].text.as_str() {
+                            "[" => d += 1,
+                            "]" => {
+                                d -= 1;
+                                if d == 0 {
+                                    break;
+                                }
+                            }
+                            _ => {}
+                        }
+                        m += 1;
+                    }
+                    k = m + 1;
+                }
+                // Item body: first `{` at paren depth 0, or `;`.
+                let mut paren = 0i32;
+                let mut end = toks.len();
+                let mut m = k;
+                while m < toks.len() {
+                    let t = &toks[m];
+                    if t.kind == TokKind::Punct {
+                        match t.text.as_str() {
+                            "(" => paren += 1,
+                            ")" => paren -= 1,
+                            "{" if paren == 0 => {
+                                end = matching_brace(toks, m) + 1;
+                                break;
+                            }
+                            ";" if paren == 0 => {
+                                end = m + 1;
+                                break;
+                            }
+                            _ => {}
+                        }
+                    }
+                    m += 1;
+                }
+                regions.push((attr_start, end));
+                i = end;
+                continue;
+            }
+            i = j + 1;
+            continue;
+        }
+        i += 1;
+    }
+    regions
+}
+
+/// Parse `fedlint: allow(d1, d4)`-style escapes out of comments.
+fn find_allows(comments: &[Comment]) -> Vec<(String, u32)> {
+    let mut out = Vec::new();
+    for c in comments {
+        let lower = c.text.to_ascii_lowercase();
+        let Some(pos) = lower.find("fedlint: allow(") else { continue };
+        let rest = &lower[pos + "fedlint: allow(".len()..];
+        let Some(close) = rest.find(')') else { continue };
+        for rule in rest[..close].split(',') {
+            let rule = rule.trim().to_string();
+            if !rule.is_empty() {
+                out.push((rule, c.line));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::lex;
+
+    fn model(src: &str) -> FileModel {
+        FileModel::build("test.rs".to_string(), lex(src))
+    }
+
+    #[test]
+    fn fn_spans_cover_bodies() {
+        let m = model("fn a() { inner(); }\nfn b<T: Fn(usize) -> usize>(x: T) -> usize { x(1) }");
+        assert_eq!(m.fns.len(), 2);
+        assert_eq!(m.fns[0].name, "a");
+        assert_eq!(m.fns[1].name, "b");
+        // `inner` falls inside a's body.
+        let inner_idx = m.toks.iter().position(|t| t.text == "inner").expect("inner");
+        assert_eq!(m.enclosing_fn(inner_idx).map(|f| f.name.as_str()), Some("a"));
+    }
+
+    #[test]
+    fn trait_decl_without_body_is_skipped() {
+        let m = model("trait T { fn no_body(&self); fn with_body(&self) -> usize { 1 } }");
+        assert_eq!(m.fns.len(), 1);
+        assert_eq!(m.fns[0].name, "with_body");
+    }
+
+    #[test]
+    fn cfg_test_mod_is_a_test_region() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn helper() { bad(); }\n}";
+        let m = model(src);
+        let bad_idx = m.toks.iter().position(|t| t.text == "bad").expect("bad");
+        assert!(m.in_test(bad_idx));
+        let live_idx = m.toks.iter().position(|t| t.text == "live").expect("live");
+        assert!(!m.in_test(live_idx));
+    }
+
+    #[test]
+    fn test_attr_fn_is_a_test_region() {
+        let m = model("#[test]\nfn check() { probe(); }\nfn live() {}");
+        let probe = m.toks.iter().position(|t| t.text == "probe").expect("probe");
+        assert!(m.in_test(probe));
+        let live = m.toks.iter().position(|t| t.text == "live").expect("live");
+        assert!(!m.in_test(live));
+    }
+
+    #[test]
+    fn cfg_all_test_combination_counts() {
+        let m = model("#[cfg(all(test, feature = \"x\"))]\nmod t { fn f() { probe(); } }");
+        let probe = m.toks.iter().position(|t| t.text == "probe").expect("probe");
+        assert!(m.in_test(probe));
+    }
+
+    #[test]
+    fn inner_attr_is_not_a_test_region() {
+        let m = model("#![allow(dead_code)]\nfn live() { probe(); }");
+        let probe = m.toks.iter().position(|t| t.text == "probe").expect("probe");
+        assert!(!m.in_test(probe));
+    }
+
+    #[test]
+    fn allows_cover_own_and_next_line() {
+        let m = model("// fedlint: allow(d4) — cold path\nlet x = v.clone();");
+        assert!(m.allowed("D4", 1));
+        assert!(m.allowed("d4", 2));
+        assert!(!m.allowed("d4", 3));
+        assert!(!m.allowed("d1", 2));
+    }
+}

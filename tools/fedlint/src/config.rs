@@ -1,0 +1,238 @@
+//! `fedlint.toml` loader — a minimal TOML subset parser (sections,
+//! string values, string arrays; `#` comments), since the offline build
+//! image has no `toml` crate. The schema is small and fixed:
+//!
+//! ```toml
+//! [d1]
+//! modules = ["coordinator/", "engine/"]   # scanned path prefixes
+//! allow   = []                            # file-scoped exemptions
+//! [d4]
+//! functions = ["micro_kernel"]            # the hot-path manifest
+//! [d5]
+//! allow_unsafe = ["obsv/alloc.rs"]
+//! ```
+//!
+//! Path entries are matched as prefixes of the path *relative to the
+//! scan root* (`cargo run -p fedlint -- rust/src` makes
+//! `coordinator/fedlrt.rs` the relative path); an entry ending in `/`
+//! scopes a directory, otherwise it names a file. An empty entry
+//! matches everything (used by the fixture tests).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context};
+
+/// A rule scoped to a module list with a file allowlist.
+#[derive(Debug, Clone, Default)]
+pub struct ScopedRule {
+    pub modules: Vec<String>,
+    pub allow: Vec<String>,
+}
+
+/// The full lint configuration, one field per rule.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    /// D1: no HashMap/HashSet in trajectory-affecting modules.
+    pub d1: ScopedRule,
+    /// D2: no wall-clock/ambient randomness outside `allow` (scanned
+    /// tree-wide; `modules` is unused).
+    pub d2: ScopedRule,
+    /// D3: no unordered float reductions in aggregation modules.
+    pub d3: ScopedRule,
+    /// D4: no allocating calls inside manifest functions.
+    pub d4_functions: Vec<String>,
+    pub d4_allow: Vec<String>,
+    /// D5: `unsafe` only in these files, and only under `// SAFETY:`.
+    pub d5_allow_unsafe: Vec<String>,
+    /// D6 (warn): no bare `.unwrap()` in these modules.
+    pub d6: ScopedRule,
+}
+
+/// Does `rel` (scan-root-relative, `/`-separated) match any entry?
+pub fn path_in(rel: &str, entries: &[String]) -> bool {
+    entries.iter().any(|e| rel.starts_with(e.as_str()))
+}
+
+impl Config {
+    pub fn load(path: &Path) -> anyhow::Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading lint config {}", path.display()))?;
+        Config::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn parse(text: &str) -> anyhow::Result<Config> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        let mut lines = text.lines().enumerate().peekable();
+        while let Some((ln, raw)) = lines.next() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (key, mut value) = line
+                .split_once('=')
+                .map(|(k, v)| (k.trim().to_string(), v.trim().to_string()))
+                .ok_or_else(|| anyhow!("line {}: expected `key = value`", ln + 1))?;
+            // Multi-line arrays: accumulate until brackets balance.
+            while value.starts_with('[') && !brackets_balanced(&value) {
+                let (_, next) = lines
+                    .next()
+                    .ok_or_else(|| anyhow!("line {}: unterminated array", ln + 1))?;
+                value.push(' ');
+                value.push_str(strip_comment(next).trim());
+            }
+            let values = parse_value(&value)
+                .with_context(|| format!("line {}: bad value for `{key}`", ln + 1))?;
+            match (section.as_str(), key.as_str()) {
+                ("d1", "modules") => cfg.d1.modules = values,
+                ("d1", "allow") => cfg.d1.allow = values,
+                ("d2", "allow") => cfg.d2.allow = values,
+                ("d3", "modules") => cfg.d3.modules = values,
+                ("d3", "allow") => cfg.d3.allow = values,
+                ("d4", "functions") => cfg.d4_functions = values,
+                ("d4", "allow") => cfg.d4_allow = values,
+                ("d5", "allow_unsafe") => cfg.d5_allow_unsafe = values,
+                ("d6", "modules") => cfg.d6.modules = values,
+                ("d6", "allow") => cfg.d6.allow = values,
+                (s, k) => return Err(anyhow!("unknown config key [{s}] {k}")),
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+/// Strip a `#` comment that is not inside a quoted string.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn brackets_balanced(s: &str) -> bool {
+    let mut depth = 0i32;
+    let mut in_str = false;
+    for c in s.chars() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth -= 1,
+            _ => {}
+        }
+    }
+    depth == 0
+}
+
+/// Parse `"str"` or `["a", "b"]` into a list of strings.
+fn parse_value(v: &str) -> anyhow::Result<Vec<String>> {
+    let v = v.trim();
+    if let Some(inner) = v.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+        let mut out = Vec::new();
+        for item in split_top_level(inner) {
+            let item = item.trim();
+            if item.is_empty() {
+                continue;
+            }
+            out.push(unquote(item)?);
+        }
+        return Ok(out);
+    }
+    Ok(vec![unquote(v)?])
+}
+
+/// Split on commas outside quotes.
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut in_str = false;
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            ',' if !in_str => {
+                out.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+fn unquote(s: &str) -> anyhow::Result<String> {
+    s.strip_prefix('"')
+        .and_then(|s| s.strip_suffix('"'))
+        .map(|s| s.to_string())
+        .ok_or_else(|| anyhow!("expected a quoted string, got `{s}`"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_shipped_schema() {
+        let cfg = Config::parse(
+            r#"
+# top comment
+[d1]
+modules = ["coordinator/", "engine/"]  # trailing comment
+allow = []
+
+[d3]
+modules = [
+    "coordinator/",
+    "client/",
+]
+allow = ["coordinator/aggregate.rs"]
+
+[d4]
+functions = ["micro_kernel", "pack_a"]
+
+[d5]
+allow_unsafe = ["obsv/alloc.rs"]
+
+[d6]
+modules = ["comm/"]
+"#,
+        )
+        .expect("valid config");
+        assert_eq!(cfg.d1.modules, vec!["coordinator/", "engine/"]);
+        assert!(cfg.d1.allow.is_empty());
+        assert_eq!(cfg.d3.modules.len(), 2);
+        assert_eq!(cfg.d3.allow, vec!["coordinator/aggregate.rs"]);
+        assert_eq!(cfg.d4_functions, vec!["micro_kernel", "pack_a"]);
+        assert_eq!(cfg.d5_allow_unsafe, vec!["obsv/alloc.rs"]);
+        assert_eq!(cfg.d6.modules, vec!["comm/"]);
+    }
+
+    #[test]
+    fn rejects_unknown_keys() {
+        assert!(Config::parse("[d9]\nmodules = []").is_err());
+        assert!(Config::parse("[d1]\ntypo = []").is_err());
+    }
+
+    #[test]
+    fn path_matching_is_prefix_based() {
+        let entries = vec!["coordinator/".to_string(), "util/mod.rs".to_string()];
+        assert!(path_in("coordinator/fedlrt.rs", &entries));
+        assert!(path_in("util/mod.rs", &entries));
+        assert!(!path_in("util/rng.rs", &entries));
+        assert!(!path_in("engine/plan.rs", &entries));
+        // The empty entry matches everything (fixture-test scoping).
+        assert!(path_in("anything.rs", &["".to_string()]));
+    }
+}

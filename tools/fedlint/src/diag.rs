@@ -1,0 +1,124 @@
+//! Diagnostics: the finding record, human rendering, and the
+//! machine-readable JSON emission CI uses for annotations.
+
+use std::fmt;
+
+/// Severity: `Deny` fails the run (exit 1); `Warn` is reported only.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Level {
+    Deny,
+    Warn,
+}
+
+impl Level {
+    pub fn label(self) -> &'static str {
+        match self {
+            Level::Deny => "deny",
+            Level::Warn => "warn",
+        }
+    }
+}
+
+/// One lint finding, anchored to a file position.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    /// Rule id, e.g. `D1`.
+    pub rule: &'static str,
+    pub level: Level,
+    /// Path as shown to the user (scan path + relative file).
+    pub file: String,
+    pub line: u32,
+    pub col: u32,
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}:{} [{}/{}] {}",
+            self.file,
+            self.line,
+            self.col,
+            self.rule,
+            self.level.label(),
+            self.message
+        )
+    }
+}
+
+/// JSON-escape a string (quotes, backslashes, control characters).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render the diagnostics as one JSON document:
+/// `{"diagnostics": […], "counts": {"deny": N, "warn": M}}`.
+pub fn to_json(diags: &[Diagnostic]) -> String {
+    let mut out = String::from("{\"diagnostics\":[");
+    for (i, d) in diags.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "{{\"rule\":\"{}\",\"level\":\"{}\",\"file\":\"{}\",\"line\":{},\"col\":{},\"message\":\"{}\"}}",
+            d.rule,
+            d.level.label(),
+            json_escape(&d.file),
+            d.line,
+            d.col,
+            json_escape(&d.message)
+        ));
+    }
+    let deny = diags.iter().filter(|d| d.level == Level::Deny).count();
+    let warn = diags.len() - deny;
+    out.push_str(&format!("],\"counts\":{{\"deny\":{deny},\"warn\":{warn}}}}}"));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_is_well_formed_and_escaped() {
+        let diags = vec![Diagnostic {
+            rule: "D1",
+            level: Level::Deny,
+            file: "a \"b\".rs".to_string(),
+            line: 3,
+            col: 7,
+            message: "bad\nthing\t\"quoted\"".to_string(),
+        }];
+        let j = to_json(&diags);
+        assert!(j.contains("\\\"b\\\""));
+        assert!(j.contains("bad\\nthing\\t"));
+        assert!(j.contains("\"counts\":{\"deny\":1,\"warn\":0}"));
+        assert!(j.starts_with('{') && j.ends_with('}'));
+    }
+
+    #[test]
+    fn display_is_grep_friendly() {
+        let d = Diagnostic {
+            rule: "D5",
+            level: Level::Warn,
+            file: "x.rs".to_string(),
+            line: 1,
+            col: 2,
+            message: "m".to_string(),
+        };
+        assert_eq!(d.to_string(), "x.rs:1:2 [D5/warn] m");
+    }
+}

@@ -1,0 +1,409 @@
+//! Minimal Rust lexer: identifiers, punctuation, literals, comments.
+//!
+//! This is not a full Rust grammar — it is exactly enough tokenization
+//! for the contract rules: comments and string/char literals are
+//! stripped out of the token stream (so a banned name inside a doc
+//! comment or a log message never trips a rule), while identifier and
+//! punctuation tokens keep precise line/column spans for diagnostics.
+//! Raw strings (`r"…"`, `r#"…"#`), byte strings, nested block
+//! comments, lifetimes vs. char literals, and raw identifiers
+//! (`r#type`) are all handled.
+
+/// What a token is; `text` carries the identifier spelling, the single
+/// punctuation character, or the numeric literal's digits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`fn`, `unsafe`, `HashMap`, …).
+    Ident,
+    /// One punctuation character (`.`, `:`, `<`, `{`, …).
+    Punct,
+    /// String or byte-string literal (content dropped).
+    Str,
+    /// Char literal (content dropped).
+    Char,
+    /// Numeric literal (text kept: rules inspect `0.0` vs `0`).
+    Num,
+    /// Lifetime (`'a`, `'static`; text is the name without the quote).
+    Lifetime,
+}
+
+/// One token with its 1-based source position.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+    pub col: u32,
+}
+
+/// One comment (line or block) with the line it starts on. Rules scan
+/// these for `SAFETY:` justifications and `fedlint: allow(…)` escapes.
+#[derive(Debug, Clone)]
+pub struct Comment {
+    pub line: u32,
+    pub text: String,
+}
+
+/// The lexer's output: code tokens plus the comment side-channel.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub comments: Vec<Comment>,
+}
+
+struct Cursor {
+    chars: Vec<char>,
+    i: usize,
+    line: u32,
+    col: u32,
+}
+
+impl Cursor {
+    fn peek(&self) -> Option<char> {
+        self.chars.get(self.i).copied()
+    }
+
+    fn peek_at(&self, ahead: usize) -> Option<char> {
+        self.chars.get(self.i + ahead).copied()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.peek()?;
+        self.i += 1;
+        if c == '\n' {
+            self.line += 1;
+            self.col = 1;
+        } else {
+            self.col += 1;
+        }
+        Some(c)
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Tokenize `src`. Never fails: unrecognized bytes are skipped (the
+/// linter must keep scanning a tree that may not even compile yet).
+pub fn lex(src: &str) -> Lexed {
+    let mut cur = Cursor { chars: src.chars().collect(), i: 0, line: 1, col: 1 };
+    let mut out = Lexed::default();
+    while let Some(c) = cur.peek() {
+        let (line, col) = (cur.line, cur.col);
+        if c.is_whitespace() {
+            cur.bump();
+            continue;
+        }
+        if c == '/' && cur.peek_at(1) == Some('/') {
+            let mut text = String::new();
+            while let Some(ch) = cur.peek() {
+                if ch == '\n' {
+                    break;
+                }
+                text.push(ch);
+                cur.bump();
+            }
+            out.comments.push(Comment { line, text });
+            continue;
+        }
+        if c == '/' && cur.peek_at(1) == Some('*') {
+            let mut text = String::new();
+            let mut depth = 0usize;
+            while let Some(ch) = cur.peek() {
+                if ch == '/' && cur.peek_at(1) == Some('*') {
+                    depth += 1;
+                    text.push_str("/*");
+                    cur.bump();
+                    cur.bump();
+                } else if ch == '*' && cur.peek_at(1) == Some('/') {
+                    depth -= 1;
+                    text.push_str("*/");
+                    cur.bump();
+                    cur.bump();
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    text.push(ch);
+                    cur.bump();
+                }
+            }
+            out.comments.push(Comment { line, text });
+            continue;
+        }
+        if c == '"' {
+            lex_string(&mut cur);
+            out.toks.push(Tok { kind: TokKind::Str, text: String::new(), line, col });
+            continue;
+        }
+        if c == '\'' {
+            lex_quote(&mut cur, &mut out, line, col);
+            continue;
+        }
+        if is_ident_start(c) {
+            let mut text = String::new();
+            while let Some(ch) = cur.peek() {
+                if !is_ident_continue(ch) {
+                    break;
+                }
+                text.push(ch);
+                cur.bump();
+            }
+            // String-ish prefixes: r"…", r#"…"#, b"…", br#"…"#, and the
+            // raw-identifier form r#name.
+            if (text == "r" || text == "b" || text == "br") && matches!(cur.peek(), Some('"' | '#'))
+            {
+                if text != "b" && cur.peek() == Some('#') && cur.peek_at(1).is_some_and(is_ident_start) {
+                    // Raw identifier r#type: emit the identifier itself.
+                    cur.bump(); // '#'
+                    let mut raw = String::new();
+                    while let Some(ch) = cur.peek() {
+                        if !is_ident_continue(ch) {
+                            break;
+                        }
+                        raw.push(ch);
+                        cur.bump();
+                    }
+                    out.toks.push(Tok { kind: TokKind::Ident, text: raw, line, col });
+                } else {
+                    lex_raw_or_plain_string(&mut cur);
+                    out.toks.push(Tok { kind: TokKind::Str, text: String::new(), line, col });
+                }
+                continue;
+            }
+            out.toks.push(Tok { kind: TokKind::Ident, text, line, col });
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let text = lex_number(&mut cur);
+            out.toks.push(Tok { kind: TokKind::Num, text, line, col });
+            continue;
+        }
+        // Single punctuation character.
+        cur.bump();
+        out.toks.push(Tok { kind: TokKind::Punct, text: c.to_string(), line, col });
+    }
+    out
+}
+
+/// Consume a plain `"…"` string (cursor on the opening quote).
+fn lex_string(cur: &mut Cursor) {
+    cur.bump(); // opening quote
+    while let Some(ch) = cur.bump() {
+        if ch == '\\' {
+            cur.bump();
+        } else if ch == '"' {
+            break;
+        }
+    }
+}
+
+/// Consume a raw/byte string after its prefix identifier was read:
+/// cursor sits on `"` (plain/byte) or on the first `#` of `r#"…"#`.
+fn lex_raw_or_plain_string(cur: &mut Cursor) {
+    let mut hashes = 0usize;
+    while cur.peek() == Some('#') {
+        hashes += 1;
+        cur.bump();
+    }
+    if cur.peek() != Some('"') {
+        return; // not actually a string; nothing sensible to consume
+    }
+    cur.bump(); // opening quote
+    if hashes == 0 {
+        // b"…" still processes escapes; r"…" does not, but r"…" cannot
+        // contain an unescaped quote either, so escape-skipping is safe
+        // only for non-raw. Raw strings with zero hashes end at the
+        // first quote regardless.
+        while let Some(ch) = cur.bump() {
+            if ch == '"' {
+                break;
+            }
+            if ch == '\\' && cur.peek() == Some('"') {
+                // Escaped quote in b"…"; raw strings cannot contain one.
+                cur.bump();
+            }
+        }
+        return;
+    }
+    // r#"…"# with N hashes: scan for `"` followed by N `#`.
+    while let Some(ch) = cur.bump() {
+        if ch == '"' {
+            let mut seen = 0usize;
+            while seen < hashes && cur.peek() == Some('#') {
+                seen += 1;
+                cur.bump();
+            }
+            if seen == hashes {
+                break;
+            }
+        }
+    }
+}
+
+/// Disambiguate `'a` (lifetime) from `'x'` / `'\n'` (char literal);
+/// cursor on the opening quote.
+fn lex_quote(cur: &mut Cursor, out: &mut Lexed, line: u32, col: u32) {
+    cur.bump(); // the quote
+    match cur.peek() {
+        Some('\\') => {
+            // Escaped char literal: consume through the closing quote.
+            cur.bump();
+            cur.bump(); // the escaped character (enough for \n, \', \\, \0; \x.. and \u{..} end at ' below)
+            while let Some(ch) = cur.bump() {
+                if ch == '\'' {
+                    break;
+                }
+            }
+            out.toks.push(Tok { kind: TokKind::Char, text: String::new(), line, col });
+        }
+        Some(c0) if is_ident_start(c0) || c0.is_ascii_digit() => {
+            if cur.peek_at(1) == Some('\'') {
+                // 'x' — a char literal.
+                cur.bump();
+                cur.bump();
+                out.toks.push(Tok { kind: TokKind::Char, text: String::new(), line, col });
+            } else {
+                // 'name — a lifetime.
+                let mut name = String::new();
+                while let Some(ch) = cur.peek() {
+                    if !is_ident_continue(ch) {
+                        break;
+                    }
+                    name.push(ch);
+                    cur.bump();
+                }
+                out.toks.push(Tok { kind: TokKind::Lifetime, text: name, line, col });
+            }
+        }
+        Some(_) => {
+            // Punctuation char literal like '(' or ' '.
+            cur.bump();
+            if cur.peek() == Some('\'') {
+                cur.bump();
+            }
+            out.toks.push(Tok { kind: TokKind::Char, text: String::new(), line, col });
+        }
+        None => {}
+    }
+}
+
+/// Consume a numeric literal: integer, float (`1.5`, `1e-3`, `1.5e2`),
+/// hex/oct/bin, underscores, and type suffixes. Careful not to eat the
+/// `..` of a range expression after an integer.
+fn lex_number(cur: &mut Cursor) -> String {
+    let mut text = String::new();
+    while let Some(ch) = cur.peek() {
+        if ch.is_ascii_alphanumeric() || ch == '_' {
+            text.push(ch);
+            cur.bump();
+        } else {
+            break;
+        }
+    }
+    if cur.peek() == Some('.') && cur.peek_at(1).is_some_and(|c| c.is_ascii_digit()) {
+        text.push('.');
+        cur.bump();
+        while let Some(ch) = cur.peek() {
+            if ch.is_ascii_alphanumeric() || ch == '_' {
+                text.push(ch);
+                cur.bump();
+            } else {
+                break;
+            }
+        }
+        // 1.5e-3 / 1.5e+3: the sign is not alphanumeric, splice it in.
+        if text.ends_with(['e', 'E']) && matches!(cur.peek(), Some('+' | '-')) {
+            text.push(cur.bump().expect("peeked sign"));
+            while let Some(ch) = cur.peek() {
+                if ch.is_ascii_digit() || ch == '_' {
+                    text.push(ch);
+                    cur.bump();
+                } else {
+                    break;
+                }
+            }
+        }
+    } else if cur.peek() == Some('.')
+        && !cur.peek_at(1).is_some_and(|c| c == '.' || is_ident_start(c))
+    {
+        // `1.` trailing-dot float (not `1..n`, not `1.method()`).
+        text.push('.');
+        cur.bump();
+    }
+    text
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .toks
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn comments_and_strings_are_not_tokens() {
+        let src = r##"
+            // HashMap in a comment is fine
+            /* Instant::now() in /* nested */ block */
+            fn f() { let s = "HashMap Instant::now"; }
+        "##;
+        let ids = idents(src);
+        assert_eq!(ids, vec!["fn", "f", "let", "s"]);
+        let lx = lex(src);
+        assert_eq!(lx.comments.len(), 2);
+        assert!(lx.comments[0].text.contains("HashMap"));
+    }
+
+    #[test]
+    fn raw_strings_and_raw_idents() {
+        let ids = idents(r###"let x = r#"unsafe { HashMap }"#; let r#type = 1;"###);
+        assert_eq!(ids, vec!["let", "x", "let", "type"]);
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let lx = lex("fn f<'a>(x: &'a str) -> char { 'x' }");
+        let lifetimes: Vec<_> =
+            lx.toks.iter().filter(|t| t.kind == TokKind::Lifetime).collect();
+        assert_eq!(lifetimes.len(), 2);
+        assert!(lx.toks.iter().any(|t| t.kind == TokKind::Char));
+    }
+
+    #[test]
+    fn escaped_char_literal() {
+        let lx = lex(r"let nl = '\n'; let q = '\''; let u = '\u{41}'; done");
+        assert_eq!(lx.toks.iter().filter(|t| t.kind == TokKind::Char).count(), 3);
+        assert!(lx.toks.iter().any(|t| t.text == "done"));
+    }
+
+    #[test]
+    fn numbers_and_ranges() {
+        let lx = lex("for i in 0..10 { let x = 1.5e-3 + 0.0; }");
+        let nums: Vec<_> = lx
+            .toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Num)
+            .map(|t| t.text.clone())
+            .collect();
+        assert_eq!(nums, vec!["0", "10", "1.5e-3", "0.0"]);
+    }
+
+    #[test]
+    fn positions_are_one_based() {
+        let lx = lex("fn f() {\n    unsafe {}\n}");
+        let uns = lx.toks.iter().find(|t| t.text == "unsafe").expect("unsafe token");
+        assert_eq!((uns.line, uns.col), (2, 5));
+    }
+}

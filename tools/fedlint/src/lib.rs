@@ -1,0 +1,129 @@
+//! fedlint — the repo's determinism/hot-path contract linter.
+//!
+//! The engine's reproducibility guarantees (fixed seed ⇒ bitwise-equal
+//! trajectories, serial ≡ threaded) and the kernel layer's
+//! allocation-free steady state are *contracts*, not conventions; this
+//! tool machine-checks them as rules D1–D6 (see `rules`) configured by
+//! `fedlint.toml` at the repo root. Run it as
+//! `cargo run -p fedlint -- rust/src`; CI runs it blocking.
+//!
+//! Implementation note: the build image used for development has no
+//! crates.io access, so instead of `syn` this crate carries a small
+//! self-contained Rust lexer (`lexer`) plus a structure pass (`ast`)
+//! that recovers exactly the shape the rules need — function bodies,
+//! test regions, comments. DESIGN.md §Static analysis records the
+//! trade-off.
+
+pub mod ast;
+pub mod config;
+pub mod diag;
+pub mod lexer;
+pub mod rules;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Context;
+
+pub use config::Config;
+pub use diag::{Diagnostic, Level};
+
+/// Lint one file's source text. `rel_path` is the path reported in
+/// diagnostics and matched against the config's module/allow lists.
+pub fn scan_source(rel_path: &str, src: &str, cfg: &Config) -> Vec<Diagnostic> {
+    let model = ast::FileModel::build(rel_path.to_string(), lexer::lex(src));
+    rules::check_file(&model, cfg)
+}
+
+/// Lint a file or directory tree. For a directory, every `*.rs` file
+/// under it is scanned in sorted order (deterministic output); config
+/// paths are matched relative to `root` itself.
+pub fn scan_path(root: &Path, cfg: &Config) -> anyhow::Result<Vec<Diagnostic>> {
+    let mut files = Vec::new();
+    collect_rs_files(root, &mut files)
+        .with_context(|| format!("walking {}", root.display()))?;
+    files.sort();
+    let mut diags = Vec::new();
+    for file in &files {
+        let rel = rel_path(root, file);
+        let src = std::fs::read_to_string(file)
+            .with_context(|| format!("reading {}", file.display()))?;
+        diags.extend(scan_source(&rel, &src, cfg));
+    }
+    Ok(diags)
+}
+
+/// Lint several roots, concatenating diagnostics in argument order.
+pub fn scan_paths(roots: &[PathBuf], cfg: &Config) -> anyhow::Result<Vec<Diagnostic>> {
+    let mut diags = Vec::new();
+    for root in roots {
+        diags.extend(scan_path(root, cfg)?);
+    }
+    Ok(diags)
+}
+
+/// Path of `file` relative to the scan root, `/`-separated. A root that
+/// is itself a file reports its file name.
+fn rel_path(root: &Path, file: &Path) -> String {
+    let rel = file.strip_prefix(root).unwrap_or(file);
+    let s: Vec<String> = rel
+        .components()
+        .map(|c| c.as_os_str().to_string_lossy().into_owned())
+        .collect();
+    if s.is_empty() {
+        // root was the file itself
+        file.file_name().map(|n| n.to_string_lossy().into_owned()).unwrap_or_default()
+    } else {
+        s.join("/")
+    }
+}
+
+fn collect_rs_files(path: &Path, out: &mut Vec<PathBuf>) -> anyhow::Result<()> {
+    let meta = std::fs::metadata(path)
+        .with_context(|| format!("stat {}", path.display()))?;
+    if meta.is_file() {
+        if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path.to_path_buf());
+        }
+        return Ok(());
+    }
+    for entry in std::fs::read_dir(path).with_context(|| format!("read_dir {}", path.display()))? {
+        let entry = entry?;
+        let p = entry.path();
+        if entry.file_type()?.is_dir() {
+            collect_rs_files(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scan_source_ties_the_pipeline_together() {
+        let mut cfg = Config::default();
+        cfg.d1.modules = vec!["coordinator/".to_string()];
+        let diags = scan_source(
+            "coordinator/x.rs",
+            "use std::collections::HashMap;\nfn f() {}",
+            &cfg,
+        );
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].rule, "D1");
+        assert_eq!(diags[0].file, "coordinator/x.rs");
+        // Outside the scoped module the same source is clean.
+        assert!(scan_source("util/x.rs", "use std::collections::HashMap;", &cfg).is_empty());
+    }
+
+    #[test]
+    fn rel_path_is_root_relative() {
+        assert_eq!(
+            rel_path(Path::new("rust/src"), Path::new("rust/src/comm/mod.rs")),
+            "comm/mod.rs"
+        );
+        assert_eq!(rel_path(Path::new("a.rs"), Path::new("a.rs")), "a.rs");
+    }
+}

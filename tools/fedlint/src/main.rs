@@ -1,0 +1,74 @@
+//! CLI: `fedlint [--config fedlint.toml] [--json] <path>...`
+//!
+//! Paths may be files or directories (directories are walked for
+//! `*.rs`). Exit status is 1 iff any deny-level diagnostic fired —
+//! warns never fail the run. `--json` replaces the human output with
+//! one JSON document (`diag::to_json` schema) for CI annotation.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use fedlint::{scan_paths, Config, Level};
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("fedlint: error: {e:#}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn run() -> anyhow::Result<ExitCode> {
+    let mut json = false;
+    let mut config_path = PathBuf::from("fedlint.toml");
+    let mut roots: Vec<PathBuf> = Vec::new();
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--json" => json = true,
+            "--config" => {
+                config_path = PathBuf::from(
+                    args.next().ok_or_else(|| anyhow::anyhow!("--config needs a path"))?,
+                );
+            }
+            "--help" | "-h" => {
+                println!(
+                    "usage: fedlint [--config fedlint.toml] [--json] <path>...\n\
+                     Lints determinism/hot-path contracts D1-D6 over the given files or\n\
+                     directory trees. Exits 1 if any deny-level rule fires."
+                );
+                return Ok(ExitCode::SUCCESS);
+            }
+            other if other.starts_with('-') => {
+                anyhow::bail!("unknown flag `{other}` (see --help)");
+            }
+            other => roots.push(PathBuf::from(other)),
+        }
+    }
+    if roots.is_empty() {
+        anyhow::bail!("no paths given (try `fedlint rust/src`)");
+    }
+
+    let cfg = Config::load(&config_path)?;
+    let diags = scan_paths(&roots, &cfg)?;
+
+    let deny = diags.iter().filter(|d| d.level == Level::Deny).count();
+    let warn = diags.len() - deny;
+
+    if json {
+        println!("{}", fedlint::diag::to_json(&diags));
+    } else {
+        for d in &diags {
+            println!("{d}");
+        }
+        if diags.is_empty() {
+            eprintln!("fedlint: clean ({} path(s))", roots.len());
+        } else {
+            eprintln!("fedlint: {deny} deny, {warn} warn");
+        }
+    }
+
+    Ok(if deny > 0 { ExitCode::FAILURE } else { ExitCode::SUCCESS })
+}

@@ -1,0 +1,456 @@
+//! The contract rules D1–D6. Each rule documents the repo contract it
+//! guards (DESIGN.md §Static analysis maps them to the design docs) and
+//! the approximation it makes; all rules skip `#[cfg(test)]`/`#[test]`
+//! regions and honor inline `// fedlint: allow(dN)` escapes.
+
+use crate::ast::FileModel;
+use crate::config::{path_in, Config};
+use crate::diag::{Diagnostic, Level};
+use crate::lexer::{Tok, TokKind};
+
+/// Run every rule over one file model.
+pub fn check_file(m: &FileModel, cfg: &Config) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    d1_hash_collections(m, cfg, &mut diags);
+    d2_ambient_time_randomness(m, cfg, &mut diags);
+    d3_unordered_float_reductions(m, cfg, &mut diags);
+    d4_hotpath_allocations(m, cfg, &mut diags);
+    d5_unsafe_hygiene(m, cfg, &mut diags);
+    d6_bare_unwrap(m, cfg, &mut diags);
+    diags.sort_by(|a, b| (a.line, a.col, a.rule).cmp(&(b.line, b.col, b.rule)));
+    diags
+}
+
+fn push(
+    diags: &mut Vec<Diagnostic>,
+    m: &FileModel,
+    rule: &'static str,
+    level: Level,
+    tok: &Tok,
+    message: String,
+) {
+    if m.allowed(rule, tok.line) {
+        return;
+    }
+    diags.push(Diagnostic {
+        rule,
+        level,
+        file: m.rel_path.clone(),
+        line: tok.line,
+        col: tok.col,
+        message,
+    });
+}
+
+fn is_ident(t: &Tok, s: &str) -> bool {
+    t.kind == TokKind::Ident && t.text == s
+}
+
+fn is_punct(t: &Tok, s: &str) -> bool {
+    t.kind == TokKind::Punct && t.text == s
+}
+
+/// Does the token window starting at `i` spell out `pat` (idents match
+/// by text, punctuation by char)?
+fn seq_matches(toks: &[Tok], i: usize, pat: &[&str]) -> bool {
+    if i + pat.len() > toks.len() {
+        return false;
+    }
+    pat.iter().enumerate().all(|(k, p)| {
+        let t = &toks[i + k];
+        (t.kind == TokKind::Ident || t.kind == TokKind::Punct) && t.text == *p
+    })
+}
+
+/// D1 — contract: bitwise serial≡threaded executor trajectories
+/// (DESIGN.md §Engine). `HashMap`/`HashSet` have a salted, run-varying
+/// iteration order; one stray iteration in a trajectory-affecting
+/// module breaks fixed-seed reproducibility. The rule bans the *types*
+/// in those modules outright (iteration-site detection would need type
+/// inference): use `BTreeMap`, a sorted `Vec`, or the `KeyedHist`
+/// order-independent merge, or allowlist a file that provably never
+/// iterates.
+fn d1_hash_collections(m: &FileModel, cfg: &Config, diags: &mut Vec<Diagnostic>) {
+    if !path_in(&m.rel_path, &cfg.d1.modules) || path_in(&m.rel_path, &cfg.d1.allow) {
+        return;
+    }
+    for (i, t) in m.toks.iter().enumerate() {
+        if m.in_test(i) {
+            continue;
+        }
+        if t.kind == TokKind::Ident && (t.text == "HashMap" || t.text == "HashSet") {
+            push(
+                diags,
+                m,
+                "D1",
+                Level::Deny,
+                t,
+                format!(
+                    "{} in a trajectory-affecting module: iteration order is salted per \
+                     process and breaks the serial≡threaded bitwise contract — use BTreeMap, \
+                     a sorted Vec, or KeyedHist's order-independent merge",
+                    t.text
+                ),
+            );
+        }
+    }
+}
+
+/// D2 — contract: fixed seed ⇒ fixed trajectory and fixed event order
+/// (DESIGN.md §Engine, §Async simulation). Numeric paths must draw
+/// from the salted per-client `Rng` streams; wall-clock reads live only
+/// in the observability layer, `util::Stopwatch`, and the executor's
+/// single `ExecClock` capture helper (all allowlisted in fedlint.toml).
+fn d2_ambient_time_randomness(m: &FileModel, cfg: &Config, diags: &mut Vec<Diagnostic>) {
+    if path_in(&m.rel_path, &cfg.d2.allow) {
+        return;
+    }
+    const AMBIENT: &[&str] =
+        &["SystemTime", "UNIX_EPOCH", "thread_rng", "from_entropy", "getrandom", "RandomState"];
+    for (i, t) in m.toks.iter().enumerate() {
+        if m.in_test(i) {
+            continue;
+        }
+        if seq_matches(&m.toks, i, &["Instant", ":", ":", "now"]) {
+            push(
+                diags,
+                m,
+                "D2",
+                Level::Deny,
+                t,
+                "Instant::now() outside the telemetry allowlist: timing may not feed \
+                 numeric paths — draw from the per-client Rng streams, or route timing \
+                 through obsv/, util::Stopwatch, or engine::executor's ExecClock"
+                    .to_string(),
+            );
+        } else if t.kind == TokKind::Ident && AMBIENT.contains(&t.text.as_str()) {
+            push(
+                diags,
+                m,
+                "D2",
+                Level::Deny,
+                t,
+                format!(
+                    "{} is an ambient time/randomness source: fixed-seed reproducibility \
+                     requires the salted per-client Rng streams (engine::plan) instead",
+                    t.text
+                ),
+            );
+        }
+    }
+}
+
+/// D3 — contract: aggregation reduces in plan order (DESIGN.md
+/// §Engine, §Fault model). In aggregation modules, float reductions
+/// must go through `RobustAccum` or the plan-order reduce helpers so
+/// reduction order is pinned by construction. Detected shapes:
+/// `.sum::<f64>()` / `.sum::<f32>()` turbofish, `let x: f64 = … .sum()`
+/// annotated bindings, and `.fold(` seeded with a float.
+fn d3_unordered_float_reductions(m: &FileModel, cfg: &Config, diags: &mut Vec<Diagnostic>) {
+    if !path_in(&m.rel_path, &cfg.d3.modules) || path_in(&m.rel_path, &cfg.d3.allow) {
+        return;
+    }
+    let toks = &m.toks;
+    const MSG: &str = "float reduction in aggregation code: reduce through RobustAccum or \
+                       the plan-order helpers (coordinator::aggregate::plan_order_sum) so \
+                       the fold order is pinned — ad-hoc sums silently reorder under \
+                       refactors and break bitwise trajectory equality";
+    for i in 0..toks.len() {
+        if m.in_test(i) {
+            continue;
+        }
+        // `.sum::<f64>()` / `.sum::<f32>()`
+        if is_punct(&toks[i], ".")
+            && (seq_matches(toks, i, &[".", "sum", ":", ":", "<", "f64", ">"])
+                || seq_matches(toks, i, &[".", "sum", ":", ":", "<", "f32", ">"]))
+        {
+            push(diags, m, "D3", Level::Deny, &toks[i + 1], MSG.to_string());
+            continue;
+        }
+        // `.fold(0.0, …)` / `.fold(f64::…, …)`
+        if is_punct(&toks[i], ".") && i + 2 < toks.len() && is_ident(&toks[i + 1], "fold") {
+            if let Some(arg0) = toks.get(i + 3) {
+                let float_seed = (arg0.kind == TokKind::Num && arg0.text.contains('.'))
+                    || is_ident(arg0, "f64")
+                    || is_ident(arg0, "f32");
+                if is_punct(&toks[i + 2], "(") && float_seed {
+                    push(diags, m, "D3", Level::Deny, &toks[i + 1], MSG.to_string());
+                    continue;
+                }
+            }
+        }
+        // `let [mut] name: f64 = … .sum() …;`
+        if is_ident(&toks[i], "let") {
+            let mut j = i + 1;
+            if toks.get(j).is_some_and(|t| is_ident(t, "mut")) {
+                j += 1;
+            }
+            let annotated_float = toks.get(j).is_some_and(|t| t.kind == TokKind::Ident)
+                && toks.get(j + 1).is_some_and(|t| is_punct(t, ":"))
+                && toks
+                    .get(j + 2)
+                    .is_some_and(|t| is_ident(t, "f64") || is_ident(t, "f32"))
+                && toks.get(j + 3).is_some_and(|t| is_punct(t, "="));
+            if !annotated_float {
+                continue;
+            }
+            // Scan the initializer to its `;` (brace-depth 0 relative
+            // to the statement) for a bare `.sum()`.
+            let mut k = j + 4;
+            let mut depth = 0i32;
+            while k < toks.len() {
+                let t = &toks[k];
+                if t.kind == TokKind::Punct {
+                    match t.text.as_str() {
+                        "{" => depth += 1,
+                        "}" => depth -= 1,
+                        ";" if depth <= 0 => break,
+                        _ => {}
+                    }
+                }
+                if seq_matches(toks, k, &[".", "sum", "(", ")"]) {
+                    push(diags, m, "D3", Level::Deny, &toks[k + 1], MSG.to_string());
+                    break;
+                }
+                k += 1;
+            }
+        }
+    }
+}
+
+/// D4 — contract: the steady-state gradient/kernel path performs zero
+/// heap allocations (DESIGN.md §Kernel layer; runtime complement:
+/// `micro_hotpath`'s counting-allocator gate). Functions named in the
+/// fedlint.toml `[d4] functions` manifest must contain no allocating
+/// calls; cold paths (cache builds, first-call growth) carry an inline
+/// `// fedlint: allow(d4)` with a justification.
+fn d4_hotpath_allocations(m: &FileModel, cfg: &Config, diags: &mut Vec<Diagnostic>) {
+    if cfg.d4_functions.is_empty() || path_in(&m.rel_path, &cfg.d4_allow) {
+        return;
+    }
+    const ALLOC_METHODS: &[&str] = &[
+        "to_vec", "collect", "clone", "to_string", "to_owned", "resize", "reserve", "push_str",
+        "into_iter",
+    ];
+    for f in &m.fns {
+        if !cfg.d4_functions.iter().any(|n| n == &f.name) {
+            continue;
+        }
+        let (a, b) = f.body;
+        let mut i = a;
+        while i < b.min(m.toks.len()) {
+            if m.in_test(i) {
+                i += 1;
+                continue;
+            }
+            let t = &m.toks[i];
+            let hit: Option<String> = if seq_matches(&m.toks, i, &["Vec", ":", ":", "new"])
+                || seq_matches(&m.toks, i, &["Vec", ":", ":", "with_capacity"])
+                || seq_matches(&m.toks, i, &["Box", ":", ":", "new"])
+                || seq_matches(&m.toks, i, &["String", ":", ":", "new"])
+                || seq_matches(&m.toks, i, &["String", ":", ":", "from"])
+            {
+                Some(format!("{}::{}", t.text, m.toks[i + 3].text))
+            } else if (is_ident(t, "vec") || is_ident(t, "format"))
+                && m.toks.get(i + 1).is_some_and(|n| is_punct(n, "!"))
+            {
+                Some(format!("{}!", t.text))
+            } else if is_punct(t, ".")
+                && m.toks.get(i + 1).is_some_and(|n| {
+                    n.kind == TokKind::Ident && ALLOC_METHODS.contains(&n.text.as_str())
+                })
+            {
+                Some(format!(".{}()", m.toks[i + 1].text))
+            } else {
+                None
+            };
+            if let Some(what) = hit {
+                let anchor = if is_punct(t, ".") { &m.toks[i + 1] } else { t };
+                push(
+                    diags,
+                    m,
+                    "D4",
+                    Level::Deny,
+                    anchor,
+                    format!(
+                        "{what} inside hot-path function `{}` (fedlint.toml [d4] manifest): \
+                         the steady-state path must be allocation-free — write into \
+                         workspace/_into buffers, or mark a cold path with \
+                         `// fedlint: allow(d4)` and a justification",
+                        f.name
+                    ),
+                );
+            }
+            i += 1;
+        }
+    }
+}
+
+/// D5 — contract: unsafe code is quarantined (DESIGN.md §Observability
+/// for the one legitimate site, the counting global allocator). Outside
+/// the `[d5] allow_unsafe` files any `unsafe` is an error; inside them,
+/// every `unsafe` block/fn/impl needs a `// SAFETY:` comment on one of
+/// the three lines above it (or its own line).
+fn d5_unsafe_hygiene(m: &FileModel, cfg: &Config, diags: &mut Vec<Diagnostic>) {
+    let allowed_file = path_in(&m.rel_path, &cfg.d5_allow_unsafe);
+    for (i, t) in m.toks.iter().enumerate() {
+        if !is_ident(t, "unsafe") || m.in_test(i) {
+            continue;
+        }
+        if !allowed_file {
+            push(
+                diags,
+                m,
+                "D5",
+                Level::Deny,
+                t,
+                "unsafe code outside the allowlisted modules (fedlint.toml [d5] \
+                 allow_unsafe): the crate is #![deny(unsafe_code)] by policy — move the \
+                 code behind a safe abstraction or extend the allowlist deliberately"
+                    .to_string(),
+            );
+            continue;
+        }
+        let covered = m
+            .comments
+            .iter()
+            .any(|c| c.text.contains("SAFETY:") && c.line + 3 >= t.line && c.line <= t.line);
+        if !covered {
+            push(
+                diags,
+                m,
+                "D5",
+                Level::Deny,
+                t,
+                "unsafe without a `// SAFETY:` comment: state the invariant that makes \
+                 this sound on the line(s) directly above"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+/// D6 (warn) — contract: library errors carry context (anyhow). Bare
+/// `.unwrap()` in the protocol/coordination modules hides failure
+/// provenance; use `?` with `anyhow::Context`, or `.expect("invariant…")`
+/// documenting why failure is impossible.
+fn d6_bare_unwrap(m: &FileModel, cfg: &Config, diags: &mut Vec<Diagnostic>) {
+    if !path_in(&m.rel_path, &cfg.d6.modules) || path_in(&m.rel_path, &cfg.d6.allow) {
+        return;
+    }
+    for i in 0..m.toks.len() {
+        if m.in_test(i) {
+            continue;
+        }
+        if seq_matches(&m.toks, i, &[".", "unwrap", "(", ")"]) {
+            push(
+                diags,
+                m,
+                "D6",
+                Level::Warn,
+                &m.toks[i + 1],
+                "bare .unwrap() in library code: propagate with `?` + anyhow::Context, \
+                 or document the invariant with .expect(\"…\")"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ast::FileModel;
+    use crate::lexer::lex;
+
+    fn cfg_all() -> Config {
+        Config {
+            d1: crate::config::ScopedRule { modules: vec![String::new()], allow: vec![] },
+            d2: Default::default(),
+            d3: crate::config::ScopedRule { modules: vec![String::new()], allow: vec![] },
+            d4_functions: vec!["hot".to_string()],
+            d4_allow: vec![],
+            d5_allow_unsafe: vec![],
+            d6: crate::config::ScopedRule { modules: vec![String::new()], allow: vec![] },
+        }
+    }
+
+    fn run(src: &str) -> Vec<Diagnostic> {
+        let m = FileModel::build("x.rs".to_string(), lex(src));
+        check_file(&m, &cfg_all())
+    }
+
+    #[test]
+    fn d3_catches_turbofish_annotated_let_and_float_fold() {
+        let hits = run("fn f(v: &[f64]) -> f64 { v.iter().sum::<f64>() }");
+        assert_eq!(hits.iter().filter(|d| d.rule == "D3").count(), 1);
+        let hits = run("fn f(v: &[f64]) { let t: f64 = v.iter().sum(); let _ = t; }");
+        assert_eq!(hits.iter().filter(|d| d.rule == "D3").count(), 1);
+        let hits = run("fn f(v: &[f64]) -> f64 { v.iter().fold(0.0, |a, b| a + b) }");
+        assert_eq!(hits.iter().filter(|d| d.rule == "D3").count(), 1);
+        // Integer reductions are not float reductions.
+        let hits = run("fn f(v: &[u64]) -> u64 { let n: u64 = v.iter().sum(); n }");
+        assert!(hits.iter().all(|d| d.rule != "D3"));
+    }
+
+    #[test]
+    fn d4_only_fires_inside_manifest_functions() {
+        let hits = run("fn hot(v: &[f64]) -> Vec<f64> { v.to_vec() }");
+        assert_eq!(hits.iter().filter(|d| d.rule == "D4").count(), 1);
+        let hits = run("fn cold(v: &[f64]) -> Vec<f64> { v.to_vec() }");
+        assert!(hits.iter().all(|d| d.rule != "D4"));
+    }
+
+    #[test]
+    fn d4_inline_allow_suppresses() {
+        let hits = run(
+            "fn hot(v: &[f64]) -> Vec<f64> {\n    // fedlint: allow(d4) — cold path\n    v.to_vec()\n}",
+        );
+        assert!(hits.iter().all(|d| d.rule != "D4"));
+    }
+
+    #[test]
+    fn d5_unsafe_forbidden_by_default_and_needs_safety_when_allowed() {
+        let hits = run("fn f(p: *const u8) -> u8 { unsafe { *p } }");
+        assert_eq!(hits.iter().filter(|d| d.rule == "D5").count(), 1);
+        let mut cfg = cfg_all();
+        cfg.d5_allow_unsafe = vec!["x.rs".to_string()];
+        let m = FileModel::build(
+            "x.rs".to_string(),
+            lex("fn f(p: *const u8) -> u8 {\n    // SAFETY: caller guarantees p is valid\n    unsafe { *p }\n}"),
+        );
+        assert!(check_file(&m, &cfg).iter().all(|d| d.rule != "D5"));
+        let m = FileModel::build(
+            "x.rs".to_string(),
+            lex("fn f(p: *const u8) -> u8 { unsafe { *p } }"),
+        );
+        let hits = check_file(&m, &cfg);
+        assert_eq!(hits.iter().filter(|d| d.rule == "D5").count(), 1);
+        assert!(hits[0].message.contains("SAFETY"));
+    }
+
+    #[test]
+    fn d6_flags_unwrap_not_expect() {
+        let hits = run("fn f(x: Option<u32>) -> u32 { x.unwrap() }");
+        assert_eq!(hits.iter().filter(|d| d.rule == "D6").count(), 1);
+        assert_eq!(hits[0].level, Level::Warn);
+        let hits = run("fn f(x: Option<u32>) -> u32 { x.expect(\"set by caller\") }");
+        assert!(hits.iter().all(|d| d.rule != "D6"));
+    }
+
+    #[test]
+    fn test_regions_are_exempt_across_rules() {
+        let src = "#[cfg(test)]\nmod tests {\n    use std::collections::HashMap;\n    fn f() { let t: f64 = [1.0].iter().sum(); let _ = (t, HashMap::<u8, u8>::new()); }\n}";
+        assert!(run(src).is_empty());
+    }
+
+    #[test]
+    fn d1_and_d2_fire_on_the_obvious() {
+        let hits = run("use std::collections::HashMap;\nfn f() {}");
+        assert_eq!(hits.iter().filter(|d| d.rule == "D1").count(), 1);
+        let hits = run("fn f() -> std::time::Instant { std::time::Instant::now() }");
+        // Only the `Instant::now` *call* fires, not the type mention.
+        assert_eq!(hits.iter().filter(|d| d.rule == "D2").count(), 1);
+        assert_eq!(hits[0].line, 1);
+    }
+}

@@ -1,0 +1,86 @@
+//! Fixture corpus contract: every known-bad file triggers exactly its
+//! rule at the expected span; every good twin is clean under the same
+//! configuration.
+
+use std::path::PathBuf;
+
+use fedlint::{scan_path, Config, Level};
+
+/// The fixture config scopes every path-scoped rule to "everything"
+/// (an empty prefix matches all paths) so each fixture file exercises
+/// its rule regardless of file name, and names the one manifest
+/// function / allowlisted-unsafe file the fixtures use.
+fn fixture_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.d1.modules = vec![String::new()];
+    cfg.d3.modules = vec![String::new()];
+    cfg.d4_functions = vec!["hot_fixture_kernel".to_string()];
+    cfg.d5_allow_unsafe = vec!["d5.rs".to_string()];
+    cfg.d6.modules = vec![String::new()];
+    cfg
+}
+
+fn fixture(kind: &str, name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("fixtures").join(kind).join(name)
+}
+
+fn scan_fixture(kind: &str, name: &str) -> Vec<fedlint::Diagnostic> {
+    scan_path(&fixture(kind, name), &fixture_cfg())
+        .unwrap_or_else(|e| panic!("scanning {kind}/{name}: {e:#}"))
+}
+
+#[test]
+fn bad_fixtures_trigger_exactly_their_rule() {
+    // (file, rule, level, line, col)
+    let cases = [
+        ("d1.rs", "D1", Level::Deny, 5, 37),
+        ("d2.rs", "D2", Level::Deny, 4, 24),
+        ("d3.rs", "D3", Level::Deny, 4, 14),
+        ("d4.rs", "D4", Level::Deny, 4, 55),
+        ("d5.rs", "D5", Level::Deny, 5, 5),
+        ("d5_forbidden.rs", "D5", Level::Deny, 6, 5),
+        ("d6.rs", "D6", Level::Warn, 4, 15),
+    ];
+    for (file, rule, level, line, col) in cases {
+        let diags = scan_fixture("bad", file);
+        assert_eq!(
+            diags.len(),
+            1,
+            "bad/{file} must yield exactly one diagnostic, got: {diags:?}"
+        );
+        let d = &diags[0];
+        assert_eq!(d.rule, rule, "bad/{file}");
+        assert_eq!(d.level, level, "bad/{file}");
+        assert_eq!((d.line, d.col), (line, col), "bad/{file} span: {d}");
+    }
+}
+
+#[test]
+fn d5_messages_distinguish_forbidden_from_undocumented() {
+    let allowed = scan_fixture("bad", "d5.rs");
+    assert!(allowed[0].message.contains("SAFETY"), "{}", allowed[0]);
+    let forbidden = scan_fixture("bad", "d5_forbidden.rs");
+    assert!(forbidden[0].message.contains("outside"), "{}", forbidden[0]);
+}
+
+#[test]
+fn good_fixtures_are_clean() {
+    for file in ["d1.rs", "d2.rs", "d3.rs", "d4.rs", "d5.rs", "d6.rs"] {
+        let diags = scan_fixture("good", file);
+        assert!(diags.is_empty(), "good/{file} must be clean, got: {diags:?}");
+    }
+}
+
+#[test]
+fn whole_fixture_dirs_scan_deterministically() {
+    // Scanning the directory (not single files) exercises the sorted
+    // walk and the rel-path reporting.
+    let diags = scan_path(&fixture("bad", ""), &fixture_cfg()).expect("scan bad/");
+    let files: Vec<&str> = diags.iter().map(|d| d.file.as_str()).collect();
+    assert_eq!(
+        files,
+        vec!["d1.rs", "d2.rs", "d3.rs", "d4.rs", "d5.rs", "d5_forbidden.rs", "d6.rs"]
+    );
+    let denies = diags.iter().filter(|d| d.level == Level::Deny).count();
+    assert_eq!((denies, diags.len()), (6, 7));
+}

@@ -1,0 +1,20 @@
+//! The head-of-tree contract: `rust/src` is clean under the shipped
+//! `fedlint.toml` — zero denies *and* zero warns. If this test fails,
+//! either fix the violation or (deliberately, with a reviewable diff)
+//! extend the allowlist in fedlint.toml.
+
+use std::path::PathBuf;
+
+use fedlint::{scan_path, Config};
+
+#[test]
+fn rust_src_is_clean_under_the_shipped_config() {
+    let repo = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../..");
+    let cfg = Config::load(&repo.join("fedlint.toml")).expect("load fedlint.toml");
+    let diags = scan_path(&repo.join("rust/src"), &cfg).expect("scan rust/src");
+    assert!(
+        diags.is_empty(),
+        "rust/src must be fedlint-clean; violations:\n{}",
+        diags.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("\n")
+    );
+}
